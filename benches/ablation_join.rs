@@ -1,0 +1,103 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * hash vs sort-merge local join across key-uniqueness levels;
+//! * shuffle join vs broadcast join as the right side shrinks;
+//! * distributed group-by: shuffle-all-rows vs partial-aggregate
+//!   (combiner) as group count varies;
+//! * BSP synchronisation cost: barrier-per-op vs none.
+
+use hptmt::bench::{measure, scaled, Report};
+use hptmt::comm::{Communicator, LinkProfile};
+use hptmt::exec::bsp::{run_bsp, BspConfig};
+use hptmt::ops::dist::{broadcast_join, dist_groupby, dist_groupby_partial, dist_join};
+use hptmt::ops::local::{self, Agg, AggSpec, JoinAlgorithm, JoinType};
+use hptmt::table::{Array, Table};
+use hptmt::util::rng::Rng;
+
+fn keyed(rows: usize, key_domain: usize, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let keys: Vec<i64> = (0..rows).map(|_| rng.gen_range(key_domain.max(1) as u64) as i64).collect();
+    let vals: Vec<f64> = (0..rows).map(|_| rng.f64()).collect();
+    Table::from_columns(vec![("k", Array::from_i64(keys)), ("v", Array::from_f64(vals))]).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = scaled(100_000);
+
+    // ---- hash vs sort-merge across uniqueness -------------------------
+    let mut r1 = Report::new("ablation_join_algorithm", &["uniqueness", "hash_s", "merge_s"]);
+    for uniq in [0.01, 0.10, 0.50] {
+        let domain = ((rows as f64) * uniq) as usize;
+        let l = keyed(rows, domain, 1);
+        let r = keyed(rows, domain, 2);
+        let h = measure(1, 3, || {
+            let sw = hptmt::util::time::CpuStopwatch::start();
+            std::hint::black_box(local::join(&l, &r, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?);
+            Ok(sw.elapsed().as_secs_f64())
+        })?;
+        let m = measure(1, 3, || {
+            let sw = hptmt::util::time::CpuStopwatch::start();
+            std::hint::black_box(local::join(&l, &r, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::SortMerge)?);
+            Ok(sw.elapsed().as_secs_f64())
+        })?;
+        r1.row(&[format!("{uniq:.2}"), format!("{:.4}", h.median), format!("{:.4}", m.median)]);
+    }
+    r1.finish()?;
+
+    // ---- shuffle vs broadcast join as right side shrinks ----------------
+    let mut r2 = Report::new("ablation_broadcast_join", &["right_rows", "shuffle_s", "broadcast_s"]);
+    let w = 4usize;
+    for right_rows in [rows / 2, rows / 10, rows / 100] {
+        let sh = measure(0, 3, || {
+            let run = run_bsp(&BspConfig::new(w).with_profile(LinkProfile::cluster(16)), move |rank, comm| {
+                let l = keyed(rows / w, rows / 10, 10 + rank as u64);
+                let r = keyed(right_rows / w, rows / 10, 20 + rank as u64);
+                comm.reset_stats();
+                let sw = hptmt::util::time::CpuStopwatch::start();
+                std::hint::black_box(dist_join(comm, &l, &r, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?);
+                Ok(sw.elapsed().as_secs_f64() + comm.stats().sim_comm_seconds)
+            })?;
+            Ok(run.results.iter().cloned().fold(0.0, f64::max))
+        })?;
+        let bc = measure(0, 3, || {
+            let run = run_bsp(&BspConfig::new(w).with_profile(LinkProfile::cluster(16)), move |rank, comm| {
+                let l = keyed(rows / w, rows / 10, 10 + rank as u64);
+                let r = keyed(right_rows / w, rows / 10, 20 + rank as u64);
+                comm.reset_stats();
+                let sw = hptmt::util::time::CpuStopwatch::start();
+                std::hint::black_box(broadcast_join(comm, &l, &r, &["k"], &["k"], JoinType::Inner)?);
+                Ok(sw.elapsed().as_secs_f64() + comm.stats().sim_comm_seconds)
+            })?;
+            Ok(run.results.iter().cloned().fold(0.0, f64::max))
+        })?;
+        r2.row(&[right_rows.to_string(), format!("{:.4}", sh.median), format!("{:.4}", bc.median)]);
+    }
+    r2.finish()?;
+
+    // ---- distributed group-by: full shuffle vs combiner ------------------
+    let mut r3 = Report::new("ablation_groupby_combiner", &["groups", "shuffle_s", "partial_s"]);
+    for groups in [100usize, 10_000, rows / 2] {
+        let sh = measure(0, 3, || {
+            let run = run_bsp(&BspConfig::new(w).with_profile(LinkProfile::cluster(16)), move |rank, comm| {
+                let t = keyed(rows / w, groups, 30 + rank as u64);
+                comm.reset_stats();
+                let sw = hptmt::util::time::CpuStopwatch::start();
+                std::hint::black_box(dist_groupby(comm, &t, &["k"], &[AggSpec::new("v", Agg::Sum)])?);
+                Ok(sw.elapsed().as_secs_f64() + comm.stats().sim_comm_seconds)
+            })?;
+            Ok(run.results.iter().cloned().fold(0.0, f64::max))
+        })?;
+        let pa = measure(0, 3, || {
+            let run = run_bsp(&BspConfig::new(w).with_profile(LinkProfile::cluster(16)), move |rank, comm| {
+                let t = keyed(rows / w, groups, 30 + rank as u64);
+                comm.reset_stats();
+                let sw = hptmt::util::time::CpuStopwatch::start();
+                std::hint::black_box(dist_groupby_partial(comm, &t, &["k"], &[AggSpec::new("v", Agg::Sum)])?);
+                Ok(sw.elapsed().as_secs_f64() + comm.stats().sim_comm_seconds)
+            })?;
+            Ok(run.results.iter().cloned().fold(0.0, f64::max))
+        })?;
+        r3.row(&[groups.to_string(), format!("{:.4}", sh.median), format!("{:.4}", pa.median)]);
+    }
+    r3.finish()
+}

@@ -1,0 +1,62 @@
+//! Fig 12 — Sequential (single-core) data engineering.
+//!
+//! Paper setup: the UNOMT drug-response preprocessing workload, one
+//! process: Pandas ≈ PyCylon, Modin much slower. Paper explanation:
+//! Modin cannot hand off to third-party (sklearn-style) libraries
+//! without leaving its partitioned format, and pays object-store /
+//! partition overheads even on one core.
+//!
+//! Here: the columnar sequential engine (Pandas/PyCylon role, the SAME
+//! operator kernels) vs the async engine at one worker (Modin role:
+//! central scheduler + per-task object store on the same kernels).
+//! Also prints the per-stage breakdown of the sequential run.
+
+use hptmt::bench::{measure, scaled, Report};
+use hptmt::exec::asynch::{run_async, AsyncCost};
+use hptmt::exec::seq::run_seq;
+use hptmt::unomt::{pipeline, UnomtConfig};
+
+fn main() -> anyhow::Result<()> {
+    let rows = scaled(40_000);
+    let cfg = UnomtConfig::default().with_rows(rows);
+    println!("# Fig 12: UNOMT preprocessing, {rows} response rows, single core");
+
+    // Sequential columnar engine (Pandas / PyCylon-1-core role).
+    let cfg_a = cfg.clone();
+    let seq = measure(1, 3, move || {
+        let run = run_seq(|| pipeline::run_local(&cfg_a))?;
+        Ok(run.cpu_seconds)
+    })?;
+
+    // Async engine, 1 worker (Modin role). Modin partitions even on one
+    // core (default = CPU count of the paper's node: 16).
+    let cfg_b = cfg.clone();
+    let modin_role = measure(1, 3, move || {
+        let (mut g, _) = pipeline::build_taskgraph(&cfg_b, 16)?;
+        let run = run_async(&mut g, 1, &AsyncCost::modin())?;
+        Ok(run.sim.wall_seconds)
+    })?;
+
+    let mut report = Report::new("fig12_seq_pipeline", &["engine", "seconds", "vs_seq"]);
+    report.row(&["columnar-seq (pandas/pycylon role)".into(), format!("{:.4}", seq.median), "1.00x".into()]);
+    report.row(&[
+        "async-1worker (modin role)".into(),
+        format!("{:.4}", modin_role.median),
+        format!("{:.2}x", modin_role.median / seq.median),
+    ]);
+    report.finish()?;
+
+    // Stage breakdown (paper discusses loading / dedup / null / search
+    // costs separately).
+    let (_, stats) = pipeline::run_local(&cfg)?;
+    let mut stages = Report::new("fig12_stage_breakdown", &["stage", "rows_in", "rows_out", "cpu_s"]);
+    for s in &stats.stages {
+        stages.row(&[
+            s.name.to_string(),
+            s.rows_in.to_string(),
+            s.rows_out.to_string(),
+            format!("{:.4}", s.cpu_seconds),
+        ]);
+    }
+    stages.finish()
+}

@@ -1,0 +1,60 @@
+//! Figs 13 & 14 — Single-node multi-core data-parallel data
+//! engineering (time) and the derived relative speed-up.
+//!
+//! Paper setup: the UNOMT preprocessing workload on one node,
+//! 1→16 processes: PyCylon scales well, Modin poorly. Fig 14 is the
+//! same data as relative speed-up.
+//!
+//! Here: BSP `run_dist` vs the async task-graph engine at matching
+//! worker counts (single-node link profile), simulated seconds.
+
+use hptmt::bench::{measure, scaled, Report};
+use hptmt::comm::LinkProfile;
+use hptmt::exec::asynch::{run_async, AsyncCost};
+use hptmt::exec::bsp::{run_bsp, BspConfig};
+use hptmt::unomt::{pipeline, UnomtConfig};
+
+fn bsp_seconds(cfg: &UnomtConfig, w: usize) -> anyhow::Result<f64> {
+    let cfg = cfg.clone();
+    let run = run_bsp(
+        &BspConfig::new(w).with_profile(LinkProfile::single_node()),
+        move |_, comm| {
+            pipeline::run_dist(comm, &cfg)?;
+            Ok(())
+        },
+    )?;
+    Ok(run.sim_wall_seconds)
+}
+
+fn async_seconds(cfg: &UnomtConfig, w: usize) -> anyhow::Result<f64> {
+    // Modin partitions by CPU count regardless of workers used.
+    let (mut g, _) = pipeline::build_taskgraph(cfg, 16.max(w))?;
+    let run = run_async(&mut g, w, &AsyncCost::modin())?;
+    Ok(run.sim.wall_seconds)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = scaled(40_000);
+    let cfg = UnomtConfig::default().with_rows(rows);
+    let workers = [1usize, 2, 4, 8, 16];
+    println!("# Figs 13/14: UNOMT preprocessing, {rows} rows, single node 1..16 workers");
+
+    let mut t13 = Report::new("fig13_parallel_pipeline", &["workers", "bsp_s", "async_s"]);
+    let mut t14 = Report::new("fig14_speedup", &["workers", "bsp_speedup", "async_speedup"]);
+    let mut base = (0.0, 0.0);
+    for (i, &w) in workers.iter().enumerate() {
+        let b = measure(0, 3, || bsp_seconds(&cfg, w))?;
+        let a = measure(0, 3, || async_seconds(&cfg, w))?;
+        if i == 0 {
+            base = (b.median, a.median);
+        }
+        t13.row(&[w.to_string(), format!("{:.4}", b.median), format!("{:.4}", a.median)]);
+        t14.row(&[
+            w.to_string(),
+            format!("{:.2}", base.0 / b.median),
+            format!("{:.2}", base.1 / a.median),
+        ]);
+    }
+    t13.finish()?;
+    t14.finish()
+}

@@ -1,0 +1,55 @@
+//! Fig 15 — Multi-node distributed data-parallel data engineering
+//! (PyCylon only — the paper reports Modin "failed to scale beyond a
+//! single node and failed in the cluster set-up").
+//!
+//! Paper setup: Victor cluster, 16 processes/node, up to 6 nodes.
+//! Here: the BSP pipeline under the cluster link profile
+//! (16 ranks/node; ranks on different "nodes" pay inter-node alpha-beta
+//! costs on every shuffle message). The async engine is listed as
+//! FAIL, faithful to the paper's observation.
+
+use hptmt::bench::{measure, scaled, Report};
+use hptmt::comm::LinkProfile;
+use hptmt::exec::bsp::{run_bsp, BspConfig};
+use hptmt::unomt::{pipeline, UnomtConfig};
+
+fn bsp_seconds(cfg: &UnomtConfig, w: usize) -> anyhow::Result<f64> {
+    let cfg = cfg.clone();
+    let run = run_bsp(
+        &BspConfig::new(w).with_profile(LinkProfile::cluster(16)),
+        move |_, comm| {
+            pipeline::run_dist(comm, &cfg)?;
+            Ok(())
+        },
+    )?;
+    Ok(run.sim_wall_seconds)
+}
+
+fn main() -> anyhow::Result<()> {
+    // Larger workload than Fig 13 — multi-node only pays off at scale.
+    let rows = scaled(160_000);
+    let cfg = UnomtConfig::default().with_rows(rows);
+    // 16 ranks/node: 16 → 1 node, 32 → 2 nodes, ... 96 → 6 nodes (paper max).
+    let workers = [16usize, 32, 48, 64, 96];
+    println!("# Fig 15: UNOMT preprocessing, {rows} rows, 16 ranks/node cluster profile");
+
+    let mut report = Report::new(
+        "fig15_multinode",
+        &["workers", "nodes", "bsp_s", "bsp_speedup", "modin_role"],
+    );
+    let mut base = 0.0;
+    for (i, &w) in workers.iter().enumerate() {
+        let b = measure(0, 3, || bsp_seconds(&cfg, w))?;
+        if i == 0 {
+            base = b.median;
+        }
+        report.row(&[
+            w.to_string(),
+            (w / 16).to_string(),
+            format!("{:.4}", b.median),
+            format!("{:.2}", base / b.median * 16.0), // speedup normalised to 16-proc baseline x16
+            if w <= 16 { "n/a".into() } else { "FAIL (paper: Modin cannot run multi-node)".into() },
+        ]);
+    }
+    report.finish()
+}

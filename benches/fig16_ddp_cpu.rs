@@ -1,0 +1,88 @@
+//! Fig 16 — Distributed data-parallel deep learning on CPU.
+//!
+//! Paper setup: the drug-response network trained with PyTorch-DDP
+//! over MPI, 1→96 CPU processes; near-ideal strong scaling with a
+//! slight memory/comm overhead below the ideal point.
+//!
+//! Here: the Rust DDP trainer (PJRT grad_step → ring allreduce →
+//! apply_step) over the BSP communicator. Strong scaling: the global
+//! epoch (fixed sample count) is split across ranks; per-epoch time =
+//! steps/epoch × (measured per-step compute + modeled allreduce wire
+//! time under the cluster profile).
+//!
+//! Requires `make artifacts`.
+
+use hptmt::bench::{scaled, Report};
+use hptmt::comm::LinkProfile;
+use hptmt::dl::{synthetic_dataset, train_ddp, TrainConfig};
+use hptmt::exec::bsp::{run_bsp, BspConfig};
+use hptmt::runtime::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP fig16: no artifacts/ — run `make artifacts`");
+        return Ok(());
+    }
+    let steps = 6usize; // measured steps per config (median-of-steps)
+    let workers = [1usize, 2, 4, 8];
+    let epoch_samples = scaled(512 * 96); // fixed global epoch
+
+    println!("# Fig 16: DDP CPU strong scaling, {epoch_samples} samples/epoch, {steps} measured steps");
+    let mut report = Report::new(
+        "fig16_ddp_cpu",
+        &["workers", "step_compute_s", "step_wire_s", "epoch_s", "speedup", "efficiency"],
+    );
+
+    let mut base_epoch = 0.0;
+    for (i, &w) in workers.iter().enumerate() {
+        let run = run_bsp(
+            &BspConfig::new(w).with_profile(LinkProfile::cluster(16)),
+            move |rank, comm| {
+                let rt = ModelRuntime::load("artifacts")?;
+                let dims = rt.manifest.dims.clone();
+                let shard = synthetic_dataset(dims.batch * 2, dims.d_in, 55 + rank as u64);
+                // Warmup: first executions pay one-time buffer/layout
+                // costs that would otherwise skew the smallest world.
+                let warm = TrainConfig {
+                    artifacts_dir: String::new(),
+                    lr: 0.001,
+                    steps: 2,
+                    log_every: 0,
+                };
+                train_ddp(comm, &rt, &shard, &warm)?;
+                let cfg = TrainConfig {
+                    artifacts_dir: String::new(),
+                    lr: 0.001,
+                    steps,
+                    log_every: 0,
+                };
+                let report = train_ddp(comm, &rt, &shard, &cfg)?;
+                Ok((
+                    report.compute_seconds / steps as f64,
+                    report.comm_sim_seconds / steps as f64,
+                    dims.batch,
+                ))
+            },
+        )?;
+        // slowest rank bounds the BSP step
+        let step_compute =
+            run.results.iter().map(|r| r.0).fold(0.0, f64::max);
+        let step_wire = run.results.iter().map(|r| r.1).fold(0.0, f64::max);
+        let batch = run.results[0].2;
+        let steps_per_epoch = epoch_samples.div_ceil(batch * w);
+        let epoch = steps_per_epoch as f64 * (step_compute + step_wire);
+        if i == 0 {
+            base_epoch = epoch;
+        }
+        let speedup = base_epoch / epoch;
+        report.row(&[
+            w.to_string(),
+            format!("{:.4}", step_compute),
+            format!("{:.5}", step_wire),
+            format!("{:.3}", epoch),
+            format!("{:.2}", speedup),
+            format!("{:.0}%", 100.0 * speedup / w as f64),
+        ]);
+    }
+    report.finish()
+}

@@ -1,0 +1,70 @@
+//! Fig 17 — Distributed data-parallel deep learning on GPUs
+//! (simulated; DESIGN.md §3 hardware substitution).
+//!
+//! Paper setup: single node, 1→8 Tesla K80s over NCCL; observations:
+//! (a) execution time dominated by communication as parallelism grows,
+//! (b) computation scales close to ideal,
+//! (c) GPU ≈ 2x CPU for this network.
+//!
+//! Here: per-step CPU compute is MEASURED via PJRT (one real rank),
+//! then the accelerator cost model (`dl::cost_model`) maps it to the
+//! device profile: compute/2 for the K80-role speedup, NCCL-ring
+//! allreduce over the PCIe link profile for comm. Strong scaling over
+//! the fixed global batch, as in the paper.
+//!
+//! Requires `make artifacts`.
+
+use hptmt::bench::Report;
+use hptmt::dl::cost_model::{model_step, AccelProfile};
+use hptmt::dl::synthetic_dataset;
+use hptmt::runtime::ModelRuntime;
+use hptmt::util::time::CpuStopwatch;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP fig17: no artifacts/ — run `make artifacts`");
+        return Ok(());
+    }
+    let rt = ModelRuntime::load("artifacts")?;
+    let dims = rt.manifest.dims.clone();
+    let data = synthetic_dataset(dims.batch, dims.d_in, 3);
+    let (x, y) = data.batch(0, dims.batch);
+    let mut params = rt.init_params()?;
+    let grad_bytes = rt.n_params() * 4;
+
+    // Measure per-step CPU compute (grad + apply), median of 5.
+    let mut samples = Vec::new();
+    for step in 0..5 {
+        let sw = CpuStopwatch::start();
+        let (_, grads) = rt.grad_step(&params, x, y, step)?;
+        params = rt.apply_step(&params, &grads, 0.001)?;
+        samples.push(sw.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cpu_step = samples[samples.len() / 2];
+
+    println!(
+        "# Fig 17: measured CPU step {cpu_step:.4}s, grads {} KiB, K80-profile model",
+        grad_bytes / 1024
+    );
+    let profile = AccelProfile::default();
+    let mut report = Report::new(
+        "fig17_ddp_accel",
+        &["devices", "compute_s", "comm_s", "total_s", "comm_frac", "speedup_vs_cpu1"],
+    );
+    for &w in &[1usize, 2, 4, 8] {
+        // Strong scaling: per-device compute = full-batch compute / W.
+        let s = model_step(&profile, w, cpu_step / w as f64, grad_bytes);
+        report.row(&[
+            w.to_string(),
+            format!("{:.4}", s.compute_seconds),
+            format!("{:.5}", s.comm_seconds),
+            format!("{:.4}", s.total()),
+            format!("{:.0}%", 100.0 * s.comm_fraction()),
+            format!("{:.2}x", cpu_step / s.total()),
+        ]);
+    }
+    report.finish()?;
+    println!("# paper checks: 1-device speedup ≈ 2x CPU; comm fraction grows with devices");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Per-operator microbenchmarks (the paper's §5 "operator performance"
+//! discussion: data loading, duplicate handling, null handling, search
+//! are where engines differ).
+
+use hptmt::bench::{measure, scaled, Report};
+use hptmt::ops::local::{self, Agg, AggSpec, Cmp, DropNaHow, JoinAlgorithm, JoinType, SortKey};
+use hptmt::table::{csv, Array, Scalar, Table};
+use hptmt::util::rng::Rng;
+
+fn table(rows: usize, key_domain: usize, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let keys: Vec<i64> = (0..rows).map(|_| rng.gen_range(key_domain as u64) as i64).collect();
+    let strs: Vec<String> = (0..rows).map(|_| rng.ascii_lower(8)).collect();
+    let vals: Vec<Option<f64>> =
+        (0..rows).map(|_| if rng.bool(0.05) { None } else { Some(rng.normal()) }).collect();
+    Table::from_columns(vec![
+        ("k", Array::from_i64(keys)),
+        ("s", Array::from_strs(&strs)),
+        ("v", Array::from_opt_f64(vals)),
+    ])
+    .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = scaled(200_000);
+    let t = table(rows, rows / 10, 1);
+    let t2 = table(rows, rows / 10, 2);
+    println!("# operator microbench: {rows} rows, 10% key uniqueness");
+
+    let mut report = Report::new("ops_micro", &["operator", "median_s", "rows/s"]);
+    let mut bench = |name: &str, f: &mut dyn FnMut() -> anyhow::Result<()>| -> anyhow::Result<()> {
+        let stat = measure(1, 5, || {
+            let sw = hptmt::util::time::CpuStopwatch::start();
+            f()?;
+            Ok(sw.elapsed().as_secs_f64())
+        })?;
+        report.row(&[
+            name.to_string(),
+            format!("{:.4}", stat.median),
+            format!("{:.2e}", rows as f64 / stat.median),
+        ]);
+        Ok(())
+    };
+
+    bench("select (filter >)", &mut || {
+        std::hint::black_box(local::filter_cmp(&t, "v", Cmp::Gt, &Scalar::Float64(0.0))?);
+        Ok(())
+    })?;
+    bench("join hash (inner)", &mut || {
+        std::hint::black_box(local::join(&t, &t2, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?);
+        Ok(())
+    })?;
+    bench("join sort-merge", &mut || {
+        std::hint::black_box(local::join(&t, &t2, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::SortMerge)?);
+        Ok(())
+    })?;
+    bench("sort (1 key i64)", &mut || {
+        std::hint::black_box(local::sort(&t, &[SortKey::asc("k")])?);
+        Ok(())
+    })?;
+    bench("sort (2 keys)", &mut || {
+        std::hint::black_box(local::sort(&t, &[SortKey::asc("k"), SortKey::desc("v")])?);
+        Ok(())
+    })?;
+    bench("groupby sum+count", &mut || {
+        std::hint::black_box(local::groupby_aggregate(
+            &t,
+            &["k"],
+            &[AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)],
+        )?);
+        Ok(())
+    })?;
+    bench("drop_duplicates", &mut || {
+        std::hint::black_box(local::drop_duplicates(&t, Some(&["k"]))?);
+        Ok(())
+    })?;
+    bench("isin (10% set)", &mut || {
+        let vals = Array::from_i64((0..(rows as i64 / 100)).collect());
+        std::hint::black_box(local::filter_isin(&t, "k", &vals)?);
+        Ok(())
+    })?;
+    bench("dropna", &mut || {
+        std::hint::black_box(local::dropna(&t, Some(&["v"]), DropNaHow::Any)?);
+        Ok(())
+    })?;
+    bench("map utf8 (strip)", &mut || {
+        std::hint::black_box(local::strip_chars(t.column_by_name("s")?, &['a', 'e'])?);
+        Ok(())
+    })?;
+    bench("min_max_scale", &mut || {
+        std::hint::black_box(local::min_max_scale(&t, &["v"])?);
+        Ok(())
+    })?;
+    bench("csv write+read", &mut || {
+        let mut buf = Vec::new();
+        csv::write_csv_to(&t.head(rows / 10), &mut buf, &csv::CsvOptions::default())?;
+        std::hint::black_box(csv::read_csv_from(&buf[..], &csv::CsvOptions::default())?);
+        Ok(())
+    })?;
+    bench("ipc ser+deser", &mut || {
+        let bytes = hptmt::table::ipc::serialize(&t);
+        std::hint::black_box(hptmt::table::ipc::deserialize(&bytes)?);
+        Ok(())
+    })?;
+
+    report.finish()
+}

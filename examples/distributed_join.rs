@@ -1,0 +1,110 @@
+//! Distributed join at Fig 4's stress parameters: uniform random keys
+//! with ~10% uniqueness (heavy hash collisions and shuffle pressure),
+//! BSP engine vs the async central-scheduler baseline.
+//!
+//! ```bash
+//! cargo run --release --example distributed_join -- --rows 200000 --workers 1,2,4,8
+//! ```
+//!
+//! Prints per-worker-count simulated makespans for both engines — the
+//! Fig 4 series shape (the full sweep with TSV output lives in
+//! `benches/fig4_dist_join.rs`).
+
+use hptmt::comm::{LinkProfile, ReduceOp};
+use hptmt::exec::asynch::{run_async, AsyncCost, TaskGraph};
+use hptmt::exec::bsp::{run_bsp, BspConfig};
+use hptmt::ops::dist::dist_join;
+use hptmt::ops::local::join::{JoinAlgorithm, JoinType};
+use hptmt::ops::local::inner_join;
+use hptmt::table::{Array, Table};
+use hptmt::util::cli::Args;
+use hptmt::util::rng::Rng;
+
+/// One side's shard: `rows` rows, keys drawn from a domain of
+/// `rows_total * uniqueness` values (the paper's 10%).
+fn shard(rows: usize, key_domain: usize, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let keys: Vec<i64> = (0..rows).map(|_| rng.gen_range(key_domain as u64) as i64).collect();
+    let payload: Vec<f64> = (0..rows).map(|_| rng.f64()).collect();
+    Table::from_columns(vec![
+        ("k", Array::from_i64(keys)),
+        ("v", Array::from_f64(payload)),
+    ])
+    .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(0);
+    let total_rows = args.usize_or("rows", 200_000)?;
+    let workers = args.usize_list_or("workers", &[1, 2, 4, 8])?;
+    let uniqueness = args.f64_or("uniqueness", 0.10)?;
+    let key_domain = ((total_rows as f64) * uniqueness) as usize;
+
+    println!("# distributed join: {total_rows} rows/side, {:.0}% key uniqueness", uniqueness * 100.0);
+    println!("{:>8} {:>16} {:>16} {:>10}", "workers", "bsp_sim_s", "async_sim_s", "bsp_speedup");
+
+    for &w in &workers {
+        let rows_per_rank = total_rows / w;
+
+        // ---- BSP: shuffle + local join on every rank -------------------
+        let bsp = run_bsp(&BspConfig::new(w).with_profile(LinkProfile::cluster(16)), move |rank, comm| {
+            let left = shard(rows_per_rank, key_domain, 100 + rank as u64);
+            let right = shard(rows_per_rank, key_domain, 900 + rank as u64);
+            let out = dist_join(comm, &left, &right, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?;
+            // global result size via allreduce (tiny)
+            let n = hptmt::comm::allreduce_i64(comm, &[out.num_rows() as i64], ReduceOp::Sum)?[0];
+            Ok(n as usize)
+        })?;
+        let join_rows = bsp.results[0];
+
+        // ---- async baseline: partition tasks + gathered join ------------
+        let mut g = TaskGraph::new();
+        let mut left_parts = Vec::new();
+        let mut right_parts = Vec::new();
+        for p in 0..w {
+            left_parts.push(g.source(format!("load_l{p}"), move || {
+                Ok(shard(rows_per_rank, key_domain, 100 + p as u64))
+            }));
+            right_parts.push(g.source(format!("load_r{p}"), move || {
+                Ok(shard(rows_per_rank, key_domain, 900 + p as u64))
+            }));
+        }
+        // The driver-based engine repartitions through gather tasks: each
+        // output partition needs ALL input partitions (hash repartition
+        // through the object store), mirroring Dask/Modin's shuffle.
+        for p in 0..w {
+            let deps: Vec<_> = left_parts.iter().chain(right_parts.iter()).copied().collect();
+            let nparts = w;
+            g.add(format!("join-{p}"), deps, move |ins| {
+                let lparts: Vec<&Table> = ins[..nparts].to_vec();
+                let rparts: Vec<&Table> = ins[nparts..].to_vec();
+                let l = Table::concat_tables(&lparts)?;
+                let r = Table::concat_tables(&rparts)?;
+                // partition p of the repartitioned join
+                let lp = hash_part(&l, p, nparts);
+                let rp = hash_part(&r, p, nparts);
+                inner_join(&lp, &rp, &["k"], &["k"])
+            });
+        }
+        let run = run_async(&mut g, w, &AsyncCost::default())?;
+
+        println!(
+            "{:>8} {:>16.4} {:>16.4} {:>9.2}x",
+            w,
+            bsp.sim_wall_seconds,
+            run.sim.wall_seconds,
+            run.sim.wall_seconds / bsp.sim_wall_seconds
+        );
+        if w == workers[0] {
+            println!("#  (global join rows: {join_rows})");
+        }
+    }
+    Ok(())
+}
+
+fn hash_part(t: &Table, part: usize, nparts: usize) -> Table {
+    use hptmt::table::rowhash::{hash_columns, partition_indices};
+    let h = hash_columns(&[t.column_by_name("k").unwrap()]);
+    let parts = partition_indices(&h, nparts);
+    t.take(&parts[part])
+}

@@ -1,0 +1,117 @@
+//! END-TO-END driver: the full HPTMT stack on the UNOMT application.
+//!
+//! ```bash
+//! make artifacts                       # once (python AOT)
+//! cargo run --release --example unomt_e2e -- --workers 2 --steps 60
+//! ```
+//!
+//! Single distributed program per the paper's §3.3/§4 (one "script",
+//! one runtime, four stages):
+//!   Stage 1  spawn W BSP ranks (the mpirun role)
+//!   Stage 2  distributed feature engineering (Figs 8–11) — table
+//!            operators, incl. the global distributed drop_duplicates
+//!   Stage 3  engineered table → row-major tensors (DataFrame.to_numpy
+//!            role), train/test split
+//!   Stage 4  distributed data-parallel training of the drug-response
+//!            network via PJRT grad_step → ring-allreduce → apply_step,
+//!            logging the loss curve
+//!
+//! Python never runs here — the model was AOT-compiled by
+//! `make artifacts`. Results land in EXPERIMENTS.md §E2E.
+
+use hptmt::comm::{spawn_world, LinkProfile};
+use hptmt::dataframe::{CylonEnv, DataFrame};
+use hptmt::dl::{train_ddp, Dataset, TrainConfig};
+use hptmt::runtime::ModelRuntime;
+use hptmt::unomt::{pipeline, UnomtConfig};
+use hptmt::util::cli::Args;
+use hptmt::util::time::fmt_duration;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(0);
+    let workers = args.usize_or("workers", 2)?;
+    let steps = args.usize_or("steps", 60)?;
+    let rows = args.usize_or("rows", 60_000)?;
+    let lr = args.f64_or("lr", 0.003)? as f32;
+    let artifacts = args.str_or("artifacts", "artifacts");
+
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        anyhow::bail!("no {artifacts}/manifest.json — run `make artifacts` first");
+    }
+
+    println!("== UNOMT end-to-end: {workers} ranks, {rows} response rows, {steps} DDP steps ==");
+    let t0 = Instant::now();
+
+    let cfg = UnomtConfig::default().with_rows(rows);
+    let results = spawn_world(workers, LinkProfile::cluster(16), move |rank, comm| {
+        // ---- Stage 2: distributed feature engineering ----------------
+        let sw = Instant::now();
+        let (engineered, stats) = pipeline::run_dist(comm, &cfg)?;
+        let fe_wall = sw.elapsed();
+        if rank == 0 {
+            println!("-- feature engineering (rank 0 shard) --");
+            for s in &stats.stages {
+                println!(
+                    "   {:<16} {:>8} -> {:>8} rows   {}",
+                    s.name,
+                    s.rows_in,
+                    s.rows_out,
+                    fmt_duration(Duration::from_secs_f64(s.cpu_seconds))
+                );
+            }
+        }
+
+        // ---- Stage 3: table -> tensors -------------------------------
+        let df = DataFrame::new(engineered);
+        let mut env = CylonEnv::new(comm);
+        let global_rows = df.num_rows_global(&mut env)?;
+        drop(env);
+        let (buf, nrows, ncols) = df.to_row_major_f64()?;
+        let mut shard = Dataset::from_row_major_with_label(&buf, nrows, ncols)?;
+
+        // ---- Stage 4: DDP training ------------------------------------
+        // Each rank owns its own PJRT client (!Send wrappers).
+        let rt = ModelRuntime::load("artifacts")?;
+        shard.pad_to_multiple(rt.manifest.dims.batch);
+        let cfg = TrainConfig {
+            artifacts_dir: "artifacts".into(),
+            lr,
+            steps,
+            log_every: if rank == 0 { 10 } else { 0 },
+        };
+        let sw = Instant::now();
+        let report = train_ddp(comm, &rt, &shard, &cfg)?;
+        let train_wall = sw.elapsed();
+
+        Ok((report, fe_wall, train_wall, global_rows, shard.n))
+    })?;
+
+    let (report, fe_wall, train_wall, global_rows, _) = &results[0];
+    let first = report.losses.first().unwrap();
+    let last = report.losses.last().unwrap();
+    println!("-- summary --");
+    println!("engineered rows (global): {global_rows}");
+    println!("feature-engineering wall: {}", fmt_duration(*fe_wall));
+    println!(
+        "training: {} steps, loss {:.4} -> {:.4} ({}, {:.1} steps/s wall)",
+        report.steps,
+        first,
+        last,
+        fmt_duration(*train_wall),
+        report.steps as f64 / train_wall.as_secs_f64()
+    );
+    println!(
+        "per-rank compute {:.2}s, comm-cpu {:.2}s, modeled wire {:.3}s, grads {} KiB/step",
+        report.compute_seconds,
+        report.comm_cpu_seconds,
+        report.comm_sim_seconds,
+        report.grad_bytes_per_step / 1024
+    );
+    println!("loss curve: {:?}", &report.losses.iter().step_by(report.losses.len().div_ceil(12).max(1)).collect::<Vec<_>>());
+    anyhow::ensure!(last < first, "training must reduce the loss");
+    anyhow::ensure!(last.is_finite(), "training diverged");
+    println!("total wall: {}", fmt_duration(t0.elapsed()));
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,143 @@
+"""AOT compilation: lower the L2 model to HLO text artifacts for Rust.
+
+HLO **text** is the interchange format — NOT a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids
+which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  predict.hlo.txt     (params..., x)              -> (yhat,)
+  grad_step.hlo.txt   (params..., x, y, seed)     -> (loss, grads...)
+  apply_step.hlo.txt  (params..., grads..., lr)   -> (params'...)
+  params_init.bin     concatenated f32 LE initial parameters
+  manifest.json       dims, param specs, entry-point signatures
+
+Usage: ``python -m compile.aot --out ../artifacts [--paper-dims]
+[--batch 256] [--d-in 64] ...``
+
+Python runs ONCE, at build time; the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, apply_step, grad_step, init_params, predict
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(cfg: ModelConfig, batch: int, out_dir: str, seed: int = 0) -> dict:
+    """Lower all entry points and write artifacts. Returns the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    specs = cfg.param_specs()
+    pshapes = [s for _, s in specs]
+
+    p_args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in pshapes]
+    x_arg = jax.ShapeDtypeStruct((batch, cfg.d_in), jnp.float32)
+    y_arg = jax.ShapeDtypeStruct((batch, 1), jnp.float32)
+    seed_arg = jax.ShapeDtypeStruct((), jnp.int32)
+    lr_arg = jax.ShapeDtypeStruct((), jnp.float32)
+
+    n = len(specs)
+
+    def predict_flat(*args):
+        return (predict(cfg, list(args[:n]), args[n]),)
+
+    def grad_step_flat(*args):
+        return grad_step(cfg, list(args[:n]), args[n], args[n + 1], args[n + 2])
+
+    def apply_step_flat(*args):
+        return apply_step(cfg, list(args[:n]), list(args[n : 2 * n]), args[2 * n])
+
+    entries = {}
+
+    def lower(name, fn, args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[name] = {"file": fname, "num_inputs": len(args)}
+        print(f"  {name}: {len(args)} inputs, {len(text)} chars")
+
+    print(f"lowering model (d_in={cfg.d_in}, d_hidden={cfg.d_hidden}, "
+          f"blocks={cfg.n_blocks}, tail={cfg.n_tail}, batch={batch}, "
+          f"params={cfg.n_params():,})")
+    lower("predict", predict_flat, [*p_args, x_arg])
+    lower("grad_step", grad_step_flat, [*p_args, x_arg, y_arg, seed_arg])
+    lower("apply_step", apply_step_flat, [*p_args, *p_args, lr_arg])
+
+    # Initial parameters, concatenated f32 LE in spec order.
+    params = init_params(cfg, seed)
+    with open(os.path.join(out_dir, "params_init.bin"), "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+
+    manifest = {
+        "config": {
+            "d_in": cfg.d_in,
+            "d_hidden": cfg.d_hidden,
+            "d_block_hidden": cfg.d_block_hidden,
+            "n_blocks": cfg.n_blocks,
+            "n_tail": cfg.n_tail,
+            "dropout": cfg.dropout,
+            "batch": batch,
+        },
+        "params": [{"name": n_, "shape": list(s)} for n_, s in specs],
+        "entries": entries,
+        "dtype": "f32",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest + params_init.bin ({cfg.n_params() * 4:,} bytes)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--paper-dims", action="store_true",
+                    help="use the paper's 1537-input network dims")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--d-in", type=int, default=None)
+    ap.add_argument("--d-hidden", type=int, default=None)
+    ap.add_argument("--n-blocks", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = ModelConfig.paper() if args.paper_dims else ModelConfig()
+    overrides = {}
+    if args.d_in is not None:
+        overrides["d_in"] = args.d_in
+    if args.d_hidden is not None:
+        overrides["d_hidden"] = args.d_hidden
+        overrides["d_block_hidden"] = args.d_hidden
+    if args.n_blocks is not None:
+        overrides["n_blocks"] = args.n_blocks
+    if overrides:
+        from dataclasses import replace
+
+        cfg = replace(cfg, **overrides)
+
+    if args.batch % 128 != 0:
+        raise SystemExit("--batch must be a multiple of 128 (Pallas BLOCK_M)")
+    build(cfg, args.batch, args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

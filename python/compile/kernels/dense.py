@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused dense + optional ReLU.
+
+Used for the response network's input projection and tail layers
+(anywhere the width changes so the residual kernel does not apply).
+Same TPU-shaped layout as ``residual_block``: batch-tiled grid, weights
+VMEM-resident, MXU-friendly tiles, interpret=True for CPU execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _dense_pallas(x, w, b, *, relu: bool, block_m: int = BLOCK_M):
+    bsz, d_in = x.shape
+    d_out = w.shape[1]
+    assert w.shape == (d_in, d_out)
+    assert b.shape == (d_out,)
+    assert bsz % block_m == 0, f"batch {bsz} not a multiple of block_m {block_m}"
+
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        grid=(bsz // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, d_out), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+# pallas_call has no VJP rule — wrap each ReLU variant in a custom_vjp
+# (backward recomputes the pre-activation, FLASH-style).
+
+
+@jax.custom_vjp
+def _dense_linear(x, w, b):
+    return _dense_pallas(x, w, b, relu=False)
+
+
+def _lin_fwd(x, w, b):
+    return _dense_pallas(x, w, b, relu=False), (x, w)
+
+
+def _lin_bwd(res, g):
+    x, w = res
+    return jnp.matmul(g, w.T), jnp.matmul(x.T, g), jnp.sum(g, axis=0)
+
+
+_dense_linear.defvjp(_lin_fwd, _lin_bwd)
+
+
+@jax.custom_vjp
+def _dense_relu(x, w, b):
+    return _dense_pallas(x, w, b, relu=True)
+
+
+def _relu_fwd(x, w, b):
+    return _dense_pallas(x, w, b, relu=True), (x, w, b)
+
+
+def _relu_bwd(res, g):
+    x, w, b = res
+    pre = jnp.matmul(x, w) + b  # recompute pre-activation
+    g = g * (pre > 0.0)
+    return jnp.matmul(g, w.T), jnp.matmul(x.T, g), jnp.sum(g, axis=0)
+
+
+_dense_relu.defvjp(_relu_fwd, _relu_bwd)
+
+
+def dense(x, w, b, *, relu: bool = False, block_m: int = BLOCK_M):
+    """Fused ``x @ w + b`` (+ ReLU) via Pallas, differentiable.
+
+    x: (B, d_in), w: (d_in, d_out), b: (d_out,); B % block_m == 0.
+    """
+    assert block_m == BLOCK_M, "block_m is fixed at lowering time"
+    return _dense_relu(x, w, b) if relu else _dense_linear(x, w, b)

@@ -1,0 +1,33 @@
+"""Pure-jnp reference oracle for the L1 kernels.
+
+Every Pallas kernel in this package has its semantics defined here; the
+pytest suite asserts allclose between kernel and oracle across a
+hypothesis sweep of shapes. The L2 model can be switched between kernel
+and reference implementations (``use_kernel=False``) to isolate L1 from
+L2 bugs.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b):
+    """Dense layer: x @ w + b."""
+    return jnp.matmul(x, w) + b
+
+
+def dense_relu_ref(x, w, b):
+    """Fused dense + ReLU."""
+    return jnp.maximum(dense_ref(x, w, b), 0.0)
+
+
+def residual_block_ref(x, w1, b1, w2, b2, mask):
+    """UNOMT drug-response block (paper Fig 6):
+
+        y = relu(x + mask * (relu(x @ w1 + b1) @ w2 + b2))
+
+    ``mask`` is the (already scaled) dropout mask; pass ones for eval.
+    The residual add requires w2's output width to equal x's width.
+    """
+    h = dense_relu_ref(x, w1, b1)
+    h = dense_ref(h, w2, b2) * mask
+    return jnp.maximum(x + h, 0.0)

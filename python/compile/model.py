@@ -1,0 +1,174 @@
+"""L2: the UNOMT drug-response regression network in JAX.
+
+Paper §4.2 (Figs 6–7): a dense input projection of the concatenated
+gene-network + drug-network features and concentration, a stack of
+residual blocks (dense → dense → dropout → ReLU with skip connection),
+a tail of dense layers, and a single-output regression head trained
+with MSE — the "more extensive network designed to calculate the drug
+response based on the cell-line information".
+
+The residual blocks and dense layers execute through the L1 Pallas
+kernels (``use_kernel=True``, the default), so the whole network lowers
+into one HLO module per entry point. ``use_kernel=False`` switches to
+the pure-jnp reference path for differential testing.
+
+Entry points AOT-lowered by ``aot.py`` (Python never runs at serve
+time):
+
+* ``predict(params, x)            -> yhat``
+* ``loss(params, x, y)            -> mse``
+* ``grad_step(params, x, y, seed) -> (loss, *grads)``  (dropout active)
+* ``apply_step(params, grads, lr) -> params'``          (SGD)
+
+``grad_step``/``apply_step`` are split so the Rust L3 coordinator can
+allreduce gradients **between** the two executions — the HPTMT
+composition point where tensor collectives and table operators live in
+the same BSP program.
+"""
+
+from dataclasses import dataclass
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as dense_kernel
+from .kernels import ref as kref
+from .kernels import residual_block as rb_kernel
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Network dimensions.
+
+    Defaults are the scaled-down reproduction dims (fast on CPU-PJRT);
+    ``paper()`` gives the paper's 1537-input network. Dims should be
+    multiples of 128 for MXU-friendly tiles (enforced softly: the Pallas
+    kernels accept any dim, but DESIGN.md §Perf assumes alignment).
+    """
+
+    d_in: int = 64  # engineered feature width
+    d_hidden: int = 128  # residual block width
+    d_block_hidden: int = 128  # inner width of a block's first dense
+    n_blocks: int = 2
+    n_tail: int = 1  # dense+relu layers after the blocks
+    dropout: float = 0.1
+    use_kernel: bool = True  # False → pure-jnp reference path
+
+    @staticmethod
+    def paper() -> "ModelConfig":
+        """The paper's response-network scale: 1537-wide input (gene +
+        drug features + concentration), 1024-wide residual stack."""
+        return ModelConfig(
+            d_in=1537, d_hidden=1024, d_block_hidden=1024, n_blocks=3, n_tail=2
+        )
+
+    def param_specs(self) -> List[tuple]:
+        """Ordered (name, shape) list — the manifest contract with Rust."""
+        specs = [
+            ("in_w", (self.d_in, self.d_hidden)),
+            ("in_b", (self.d_hidden,)),
+        ]
+        for i in range(self.n_blocks):
+            specs += [
+                (f"blk{i}_w1", (self.d_hidden, self.d_block_hidden)),
+                (f"blk{i}_b1", (self.d_block_hidden,)),
+                (f"blk{i}_w2", (self.d_block_hidden, self.d_hidden)),
+                (f"blk{i}_b2", (self.d_hidden,)),
+            ]
+        for i in range(self.n_tail):
+            specs += [
+                (f"tail{i}_w", (self.d_hidden, self.d_hidden)),
+                (f"tail{i}_b", (self.d_hidden,)),
+            ]
+        specs += [("out_w", (self.d_hidden, 1)), ("out_b", (1,))]
+        return specs
+
+    def n_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_specs())
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """He-initialised parameters, in ``param_specs`` order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in).astype(jnp.float32)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def _dense(cfg, x, w, b, relu):
+    if cfg.use_kernel:
+        return dense_kernel.dense(x, w, b, relu=relu)
+    y = kref.dense_ref(x, w, b)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def _block(cfg, x, w1, b1, w2, b2, mask):
+    if cfg.use_kernel:
+        return rb_kernel.residual_block(x, w1, b1, w2, b2, mask)
+    return kref.residual_block_ref(x, w1, b1, w2, b2, mask)
+
+
+def forward(cfg: ModelConfig, params: List[jnp.ndarray], x, *, dropout_key=None):
+    """Network forward pass. ``dropout_key=None`` → eval (mask of ones)."""
+    it = iter(params)
+    nxt = lambda: next(it)  # noqa: E731
+
+    h = _dense(cfg, x, nxt(), nxt(), relu=True)
+    bsz = x.shape[0]
+    for i in range(cfg.n_blocks):
+        w1, b1, w2, b2 = nxt(), nxt(), nxt(), nxt()
+        if dropout_key is not None and cfg.dropout > 0.0:
+            k = jax.random.fold_in(dropout_key, i)
+            keep = 1.0 - cfg.dropout
+            mask = (
+                jax.random.bernoulli(k, keep, (bsz, cfg.d_hidden)).astype(jnp.float32)
+                / keep
+            )
+        else:
+            mask = jnp.ones((bsz, cfg.d_hidden), jnp.float32)
+        h = _block(cfg, h, w1, b1, w2, b2, mask)
+    for _ in range(cfg.n_tail):
+        h = _dense(cfg, h, nxt(), nxt(), relu=True)
+    out_w, out_b = nxt(), nxt()
+    # final regression layer: plain matmul (width-1 output is a poor
+    # MXU tile; XLA fuses it fine)
+    return jnp.matmul(h, out_w) + out_b
+
+
+def predict(cfg: ModelConfig, params, x):
+    """Eval-mode prediction: (B, d_in) -> (B, 1)."""
+    return forward(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params, x, y, *, dropout_key=None):
+    """Mean-squared error (the paper trains drug response with MSE)."""
+    yhat = forward(cfg, params, x, dropout_key=dropout_key)
+    return jnp.mean((yhat - y) ** 2)
+
+
+def grad_step(cfg: ModelConfig, params, x, y, seed):
+    """Training-mode loss + gradients. ``seed`` drives dropout masks
+    (fold in the global step on the Rust side for fresh masks)."""
+    key = jax.random.PRNGKey(seed)
+
+    def f(ps):
+        return loss_fn(cfg, ps, x, y, dropout_key=key)
+
+    loss, grads = jax.value_and_grad(f)(params)
+    return loss, *grads
+
+
+def apply_step(cfg: ModelConfig, params, grads, lr):
+    """SGD update: ``p - lr * g`` for every parameter tensor."""
+    del cfg
+    return tuple(p - lr * g for p, g in zip(params, grads))

@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch constrained to BLOCK_M multiples — the
+kernel contract) and input distributions; assert_allclose against
+ref.py. This is the CORE correctness signal for layer 1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense import BLOCK_M, dense
+from compile.kernels.residual_block import residual_block, vmem_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+dims = st.integers(min_value=1, max_value=48)
+batch_mult = st.integers(min_value=1, max_value=2)  # B = mult * BLOCK_M
+
+
+class TestDense:
+    @settings(max_examples=25, deadline=None)
+    @given(bm=batch_mult, d_in=dims, d_out=dims, relu=st.booleans(), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, bm, d_in, d_out, relu, seed):
+        b = bm * BLOCK_M
+        x = rand(seed, (b, d_in))
+        w = rand(seed + 1, (d_in, d_out), 0.3)
+        bias = rand(seed + 2, (d_out,))
+        got = dense(x, w, bias, relu=relu)
+        want = ref.dense_ref(x, w, bias)
+        if relu:
+            want = jnp.maximum(want, 0.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_unaligned_batch(self):
+        with pytest.raises(AssertionError):
+            dense(jnp.zeros((100, 4)), jnp.zeros((4, 4)), jnp.zeros(4))
+
+    @settings(max_examples=10, deadline=None)
+    @given(d_in=dims, d_out=dims, relu=st.booleans())
+    def test_gradients_match_ref(self, d_in, d_out, relu):
+        b = BLOCK_M
+        x = rand(7, (b, d_in))
+        w = rand(8, (d_in, d_out), 0.3)
+        bias = rand(9, (d_out,))
+
+        def f_kernel(w, bias):
+            y = dense(x, w, bias, relu=relu)
+            return jnp.sum(y**2)
+
+        def f_ref(w, bias):
+            y = ref.dense_ref(x, w, bias)
+            if relu:
+                y = jnp.maximum(y, 0.0)
+            return jnp.sum(y**2)
+
+        gk = jax.grad(f_kernel, argnums=(0, 1))(w, bias)
+        gr = jax.grad(f_ref, argnums=(0, 1))(w, bias)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+class TestResidualBlock:
+    @settings(max_examples=25, deadline=None)
+    @given(bm=batch_mult, d=dims, h=dims, seed=st.integers(0, 2**31 - 1),
+           dropout=st.booleans())
+    def test_matches_ref(self, bm, d, h, seed, dropout):
+        b = bm * BLOCK_M
+        x = rand(seed, (b, d))
+        w1 = rand(seed + 1, (d, h), 0.3)
+        b1 = rand(seed + 2, (h,))
+        w2 = rand(seed + 3, (h, d), 0.3)
+        b2 = rand(seed + 4, (d,))
+        if dropout:
+            keep = 0.9
+            mask = (
+                jax.random.bernoulli(jax.random.PRNGKey(seed + 5), keep, (b, d)).astype(
+                    jnp.float32
+                )
+                / keep
+            )
+        else:
+            mask = jnp.ones((b, d), jnp.float32)
+        got = residual_block(x, w1, b1, w2, b2, mask)
+        want = ref.residual_block_ref(x, w1, b1, w2, b2, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(d=dims, h=dims)
+    def test_gradients_match_ref(self, d, h):
+        b = BLOCK_M
+        x = rand(1, (b, d))
+        w1 = rand(2, (d, h), 0.3)
+        b1 = rand(3, (h,))
+        w2 = rand(4, (h, d), 0.3)
+        b2 = rand(5, (d,))
+        mask = jnp.ones((b, d), jnp.float32)
+
+        def f(fn):
+            def g(w1, b1, w2, b2, x):
+                return jnp.sum(fn(x, w1, b1, w2, b2, mask) ** 2)
+
+            return jax.grad(g, argnums=(0, 1, 2, 3, 4))(w1, b1, w2, b2, x)
+
+        gk = f(residual_block)
+        gr = f(ref.residual_block_ref)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+    def test_residual_identity_at_zero_weights(self):
+        # With zero weights the block must be relu(x).
+        b, d, h = BLOCK_M, 8, 16
+        x = rand(11, (b, d))
+        out = residual_block(
+            x, jnp.zeros((d, h)), jnp.zeros(h), jnp.zeros((h, d)), jnp.zeros(d),
+            jnp.ones((b, d)),
+        )
+        np.testing.assert_allclose(out, jnp.maximum(x, 0.0), rtol=1e-6, atol=1e-6)
+
+    def test_vmem_budget_for_paper_dims(self):
+        # d_hidden=1024 at BLOCK_M=128 must fit the ~16 MiB VMEM budget.
+        assert vmem_bytes(BLOCK_M, 1024, 1024) < 16 * 1024 * 1024
+        # and the reproduction default easily so
+        assert vmem_bytes(BLOCK_M, 128, 128) < 2 * 1024 * 1024

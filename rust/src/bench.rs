@@ -1,0 +1,147 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor
+//! mirror): warmup + N samples, median/min/max, aligned table output
+//! and TSV files under `bench_out/` for EXPERIMENTS.md.
+//!
+//! Scaling benches report **simulated seconds** (per-rank thread CPU
+//! time + modeled comm, see `exec::bsp`), because this image has one
+//! physical core — wall-clock parallel speedup cannot physically
+//! manifest. The simulation methodology is DESIGN.md §3.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::PathBuf;
+
+/// Summary statistics over samples (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Stat {
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub samples: usize,
+}
+
+/// Run `f` (returning a seconds metric) `warmup + samples` times.
+pub fn measure<F: FnMut() -> anyhow::Result<f64>>(
+    warmup: usize,
+    samples: usize,
+    mut f: F,
+) -> anyhow::Result<Stat> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        xs.push(f()?);
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(Stat {
+        median: xs[xs.len() / 2],
+        min: xs[0],
+        max: xs[xs.len() - 1],
+        samples: xs.len(),
+    })
+}
+
+/// A result table: rows of (series, x, stat) printed paper-style and
+/// dumped as TSV.
+pub struct Report {
+    name: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(name: impl Into<String>, header: &[&str]) -> Report {
+        Report {
+            name: name.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Aligned console rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.name);
+        for (i, h) in self.header.iter().enumerate() {
+            let _ = write!(out, "{:>w$}  ", h, w = widths[i]);
+        }
+        out.push('\n');
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                let _ = write!(out, "{:>w$}  ", c, w = widths[i]);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print and write `bench_out/<name>.tsv`.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        print!("{}", self.render());
+        let dir = PathBuf::from("bench_out");
+        std::fs::create_dir_all(&dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.tsv", self.name)))?;
+        writeln!(f, "{}", self.header.join("\t"))?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join("\t"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Benchmark scale factor from `HPTMT_BENCH_SCALE` (default 1.0).
+/// `cargo bench` at scale 1 finishes in minutes on this image; crank it
+/// up to approach the paper's row counts.
+pub fn scale() -> f64 {
+    std::env::var("HPTMT_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Scaled row count helper.
+pub fn scaled(base: usize) -> usize {
+    ((base as f64) * scale()).round() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_stats() {
+        let mut i = 0;
+        let s = measure(1, 5, || {
+            i += 1;
+            Ok(i as f64)
+        })
+        .unwrap();
+        // warmup consumed i=1; samples are 2..=6
+        assert_eq!(s.samples, 5);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 6.0);
+        assert_eq!(s.median, 4.0);
+    }
+
+    #[test]
+    fn report_renders_and_writes() {
+        let mut r = Report::new("test_report", &["workers", "seconds"]);
+        r.row(&["1".into(), "0.5".into()]);
+        r.row(&["2".into(), "0.25".into()]);
+        let s = r.render();
+        assert!(s.contains("workers"));
+        assert!(s.contains("0.25"));
+    }
+}

@@ -1,0 +1,584 @@
+//! Collective operations (the paper's Table 4 for arrays): Broadcast,
+//! Reduce, AllReduce, Gather, AllGather, Scatter, AllToAll.
+//!
+//! Built purely on point-to-point send/recv so they run on any
+//! [`Communicator`]. Broadcast and reduce use binomial trees (O(log W)
+//! rounds, like MPICH); allreduce uses the NCCL-style ring
+//! (reduce-scatter + allgather, bandwidth-optimal — this is the
+//! gradient-sync path the DDP trainer exercises).
+
+use super::communicator::Communicator;
+use anyhow::Result;
+
+/// Element-wise reduction operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl ReduceOp {
+    #[inline]
+    fn f64(&self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+        }
+    }
+
+    #[inline]
+    fn i64(&self, a: i64, b: i64) -> i64 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+        }
+    }
+}
+
+// ---- byte conversion helpers ------------------------------------------
+
+pub fn f64s_to_bytes(v: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f64s(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+pub fn i64s_to_bytes(v: &[i64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_i64s(b: &[u8]) -> Vec<i64> {
+    b.chunks_exact(8)
+        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+// ---- broadcast ---------------------------------------------------------
+
+/// Binomial-tree broadcast of raw bytes from `root`.
+pub fn broadcast_bytes<C: Communicator + ?Sized>(
+    comm: &mut C,
+    root: usize,
+    data: Option<Vec<u8>>,
+) -> Result<Vec<u8>> {
+    let (rank, size) = (comm.rank(), comm.world_size());
+    let tag = comm.next_collective_tag();
+    let vrank = (rank + size - root) % size;
+    let mut buf = if rank == root {
+        data.expect("broadcast: root must supply data")
+    } else {
+        Vec::new()
+    };
+
+    // Receive phase.
+    let mut mask = 1usize;
+    while mask < size {
+        if vrank & mask != 0 {
+            let src_v = vrank ^ mask; // vrank with this bit cleared
+            let src = (src_v + root) % size;
+            buf = comm.recv(src, tag)?;
+            break;
+        }
+        mask <<= 1;
+    }
+    // Send phase: forward to the subtree below the received bit.
+    mask >>= 1;
+    while mask > 0 {
+        if vrank + mask < size && vrank & mask == 0 {
+            let dst = ((vrank + mask) % size + root) % size;
+            comm.send(dst, tag, buf.clone())?;
+        }
+        mask >>= 1;
+    }
+    Ok(buf)
+}
+
+/// Broadcast a f64 vector.
+pub fn broadcast_f64<C: Communicator + ?Sized>(
+    comm: &mut C,
+    root: usize,
+    data: Option<&[f64]>,
+) -> Result<Vec<f64>> {
+    let bytes = broadcast_bytes(comm, root, data.map(f64s_to_bytes))?;
+    Ok(bytes_to_f64s(&bytes))
+}
+
+// ---- reduce ------------------------------------------------------------
+
+/// Binomial-tree reduce of f64 vectors to `root`. Non-root ranks get
+/// `None`.
+pub fn reduce_f64<C: Communicator + ?Sized>(
+    comm: &mut C,
+    root: usize,
+    data: &[f64],
+    op: ReduceOp,
+) -> Result<Option<Vec<f64>>> {
+    let (rank, size) = (comm.rank(), comm.world_size());
+    let tag = comm.next_collective_tag();
+    let vrank = (rank + size - root) % size;
+    let mut acc = data.to_vec();
+
+    let mut mask = 1usize;
+    while mask < size {
+        if vrank & mask == 0 {
+            let src_v = vrank | mask;
+            if src_v < size {
+                let src = (src_v + root) % size;
+                let other = bytes_to_f64s(&comm.recv(src, tag)?);
+                assert_eq!(other.len(), acc.len(), "reduce: length mismatch");
+                for (a, b) in acc.iter_mut().zip(other) {
+                    *a = op.f64(*a, b);
+                }
+            }
+        } else {
+            let dst = ((vrank ^ mask) + root) % size;
+            comm.send(dst, tag, f64s_to_bytes(&acc))?;
+            return Ok(None);
+        }
+        mask <<= 1;
+    }
+    Ok(Some(acc))
+}
+
+// ---- allreduce ----------------------------------------------------------
+
+/// Chunk boundaries splitting `len` into `n` near-equal pieces.
+fn chunk_offsets(len: usize, n: usize) -> Vec<usize> {
+    let base = len / n;
+    let extra = len % n;
+    let mut off = Vec::with_capacity(n + 1);
+    off.push(0);
+    for k in 0..n {
+        off.push(off[k] + base + usize::from(k < extra));
+    }
+    off
+}
+
+/// Ring allreduce (reduce-scatter + allgather) of a f64 vector.
+///
+/// 2(W-1) steps, each moving ~len/W elements — bandwidth-optimal, the
+/// same schedule NCCL uses for DDP gradient sync.
+pub fn allreduce_f64<C: Communicator + ?Sized>(
+    comm: &mut C,
+    data: &[f64],
+    op: ReduceOp,
+) -> Result<Vec<f64>> {
+    let (rank, size) = (comm.rank(), comm.world_size());
+    let mut buf = data.to_vec();
+    if size == 1 {
+        return Ok(buf);
+    }
+    let tag = comm.next_collective_tag();
+    let off = chunk_offsets(buf.len(), size);
+    let right = (rank + 1) % size;
+    let left = (rank + size - 1) % size;
+
+    // Reduce-scatter: after W-1 steps, rank r owns the fully-reduced
+    // chunk (r+1) % W.
+    for step in 0..size - 1 {
+        let send_chunk = (rank + size - step) % size;
+        let recv_chunk = (rank + size - step - 1) % size;
+        let payload = f64s_to_bytes(&buf[off[send_chunk]..off[send_chunk + 1]]);
+        comm.send(right, tag, payload)?;
+        let incoming = bytes_to_f64s(&comm.recv(left, tag)?);
+        let dst = &mut buf[off[recv_chunk]..off[recv_chunk + 1]];
+        debug_assert_eq!(incoming.len(), dst.len());
+        for (a, b) in dst.iter_mut().zip(incoming) {
+            *a = op.f64(*a, b);
+        }
+    }
+    // Allgather: circulate the reduced chunks.
+    for step in 0..size - 1 {
+        let send_chunk = (rank + 1 + size - step) % size;
+        let recv_chunk = (rank + size - step) % size;
+        let payload = f64s_to_bytes(&buf[off[send_chunk]..off[send_chunk + 1]]);
+        comm.send(right, tag, payload)?;
+        let incoming = bytes_to_f64s(&comm.recv(left, tag)?);
+        buf[off[recv_chunk]..off[recv_chunk + 1]].copy_from_slice(&incoming);
+    }
+    Ok(buf)
+}
+
+/// Ring allreduce of an f32 vector (the DDP gradient-sync path; same
+/// schedule as [`allreduce_f64`] at half the bytes).
+pub fn allreduce_f32<C: Communicator + ?Sized>(
+    comm: &mut C,
+    data: &[f32],
+    op: ReduceOp,
+) -> Result<Vec<f32>> {
+    fn to_bytes(v: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+    fn from_bytes(b: &[u8]) -> Vec<f32> {
+        b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    let (rank, size) = (comm.rank(), comm.world_size());
+    let mut buf = data.to_vec();
+    if size == 1 {
+        return Ok(buf);
+    }
+    let tag = comm.next_collective_tag();
+    let off = chunk_offsets(buf.len(), size);
+    let right = (rank + 1) % size;
+    let left = (rank + size - 1) % size;
+
+    for step in 0..size - 1 {
+        let send_chunk = (rank + size - step) % size;
+        let recv_chunk = (rank + size - step - 1) % size;
+        comm.send(right, tag, to_bytes(&buf[off[send_chunk]..off[send_chunk + 1]]))?;
+        let incoming = from_bytes(&comm.recv(left, tag)?);
+        let dst = &mut buf[off[recv_chunk]..off[recv_chunk + 1]];
+        for (a, b) in dst.iter_mut().zip(incoming) {
+            *a = match op {
+                ReduceOp::Sum => *a + b,
+                ReduceOp::Min => a.min(b),
+                ReduceOp::Max => a.max(b),
+            };
+        }
+    }
+    for step in 0..size - 1 {
+        let send_chunk = (rank + 1 + size - step) % size;
+        let recv_chunk = (rank + size - step) % size;
+        comm.send(right, tag, to_bytes(&buf[off[send_chunk]..off[send_chunk + 1]]))?;
+        let incoming = from_bytes(&comm.recv(left, tag)?);
+        buf[off[recv_chunk]..off[recv_chunk + 1]].copy_from_slice(&incoming);
+    }
+    Ok(buf)
+}
+
+/// Allreduce of i64 vectors (reduce to 0 + broadcast; counts are small).
+pub fn allreduce_i64<C: Communicator + ?Sized>(
+    comm: &mut C,
+    data: &[i64],
+    op: ReduceOp,
+) -> Result<Vec<i64>> {
+    // piggyback on f64 tree logic via a dedicated small tree
+    let (rank, size) = (comm.rank(), comm.world_size());
+    let tag = comm.next_collective_tag();
+    let mut acc = data.to_vec();
+    let mut mask = 1usize;
+    while mask < size {
+        if rank & mask == 0 {
+            let src = rank | mask;
+            if src < size {
+                let other = bytes_to_i64s(&comm.recv(src, tag)?);
+                for (a, b) in acc.iter_mut().zip(other) {
+                    *a = op.i64(*a, b);
+                }
+            }
+        } else {
+            comm.send(rank ^ mask, tag, i64s_to_bytes(&acc))?;
+            break;
+        }
+        mask <<= 1;
+    }
+    let bytes = broadcast_bytes(comm, 0, if rank == 0 { Some(i64s_to_bytes(&acc)) } else { None })?;
+    Ok(bytes_to_i64s(&bytes))
+}
+
+/// Scalar sum-allreduce convenience.
+pub fn allreduce_sum_f64<C: Communicator + ?Sized>(comm: &mut C, x: f64) -> Result<f64> {
+    Ok(allreduce_f64(comm, &[x], ReduceOp::Sum)?[0])
+}
+
+/// Scalar u64 sum (row counts etc.).
+pub fn allreduce_sum_usize<C: Communicator + ?Sized>(comm: &mut C, x: usize) -> Result<usize> {
+    Ok(allreduce_i64(comm, &[x as i64], ReduceOp::Sum)?[0] as usize)
+}
+
+// ---- gather / allgather / scatter ---------------------------------------
+
+/// Gather byte blobs to `root` (rank order). Non-root gets `None`.
+pub fn gather_bytes<C: Communicator + ?Sized>(
+    comm: &mut C,
+    root: usize,
+    data: Vec<u8>,
+) -> Result<Option<Vec<Vec<u8>>>> {
+    let (rank, size) = (comm.rank(), comm.world_size());
+    let tag = comm.next_collective_tag();
+    if rank == root {
+        let mut out = vec![Vec::new(); size];
+        for r in 0..size {
+            if r == root {
+                continue;
+            }
+            out[r] = comm.recv(r, tag)?;
+        }
+        out[root] = data;
+        Ok(Some(out))
+    } else {
+        comm.send(root, tag, data)?;
+        Ok(None)
+    }
+}
+
+/// Allgather: every rank gets every rank's blob (gather to 0 + bcast of
+/// a length-prefixed frame).
+pub fn allgather_bytes<C: Communicator + ?Sized>(
+    comm: &mut C,
+    data: Vec<u8>,
+) -> Result<Vec<Vec<u8>>> {
+    let gathered = gather_bytes(comm, 0, data)?;
+    let frame = gathered.map(|parts| {
+        let mut f = Vec::new();
+        f.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+        for p in &parts {
+            f.extend_from_slice(&(p.len() as u64).to_le_bytes());
+            f.extend_from_slice(p);
+        }
+        f
+    });
+    let frame = broadcast_bytes(comm, 0, frame)?;
+    // Decode.
+    let n = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 4;
+    for _ in 0..n {
+        let len = u64::from_le_bytes(frame[pos..pos + 8].try_into().unwrap()) as usize;
+        pos += 8;
+        out.push(frame[pos..pos + len].to_vec());
+        pos += len;
+    }
+    Ok(out)
+}
+
+/// Scatter: `root` holds one blob per rank; each rank receives its own.
+pub fn scatter_bytes<C: Communicator + ?Sized>(
+    comm: &mut C,
+    root: usize,
+    data: Option<Vec<Vec<u8>>>,
+) -> Result<Vec<u8>> {
+    let (rank, size) = (comm.rank(), comm.world_size());
+    let tag = comm.next_collective_tag();
+    if rank == root {
+        let mut parts = data.expect("scatter: root must supply data");
+        assert_eq!(parts.len(), size, "scatter: need one blob per rank");
+        let mine = std::mem::take(&mut parts[root]);
+        for (r, p) in parts.into_iter().enumerate() {
+            if r != root {
+                comm.send(r, tag, p)?;
+            }
+        }
+        Ok(mine)
+    } else {
+        comm.recv(root, tag)
+    }
+}
+
+/// AllToAll: rank r's `data[s]` arrives as the r-th element of rank s's
+/// result. The table shuffle (Table 4's "Shuffle") is this plus
+/// serialisation — see [`super::shuffle`].
+pub fn alltoall_bytes<C: Communicator + ?Sized>(
+    comm: &mut C,
+    mut data: Vec<Vec<u8>>,
+) -> Result<Vec<Vec<u8>>> {
+    let (rank, size) = (comm.rank(), comm.world_size());
+    assert_eq!(data.len(), size, "alltoall: need one blob per rank");
+    let tag = comm.next_collective_tag();
+    // Channel sends are non-blocking, so send everything then receive.
+    for dst in 0..size {
+        if dst != rank {
+            comm.send(dst, tag, std::mem::take(&mut data[dst]))?;
+        }
+    }
+    let mut out = vec![Vec::new(); size];
+    out[rank] = std::mem::take(&mut data[rank]);
+    for src in 0..size {
+        if src != rank {
+            out[src] = comm.recv(src, tag)?;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::profile::LinkProfile;
+    use crate::comm::thread_comm::spawn_world;
+
+    fn worlds() -> Vec<usize> {
+        vec![1, 2, 3, 4, 7, 8]
+    }
+
+    #[test]
+    fn broadcast_all_sizes() {
+        for w in worlds() {
+            for root in [0, w - 1] {
+                let res = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                    let data = if rank == root { Some(vec![1u8, 2, 3]) } else { None };
+                    broadcast_bytes(comm, root, data)
+                })
+                .unwrap();
+                for r in res {
+                    assert_eq!(r, vec![1, 2, 3], "world {w} root {root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sum_to_root() {
+        for w in worlds() {
+            let res = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                reduce_f64(comm, 0, &[rank as f64, 1.0], ReduceOp::Sum)
+            })
+            .unwrap();
+            let expect: f64 = (0..w).map(|r| r as f64).sum();
+            assert_eq!(res[0].as_ref().unwrap(), &vec![expect, w as f64]);
+            for r in &res[1..] {
+                assert!(r.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_matches_sum() {
+        for w in worlds() {
+            // length chosen to exercise uneven chunks
+            let len = 13;
+            let res = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                let data: Vec<f64> = (0..len).map(|i| (rank * len + i) as f64).collect();
+                allreduce_f64(comm, &data, ReduceOp::Sum)
+            })
+            .unwrap();
+            let expect: Vec<f64> = (0..len)
+                .map(|i| (0..w).map(|r| (r * len + i) as f64).sum())
+                .collect();
+            for r in res {
+                assert_eq!(r, expect, "world {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_min_max() {
+        let res = spawn_world(4, LinkProfile::zero(), |rank, comm| {
+            let mn = allreduce_f64(comm, &[rank as f64], ReduceOp::Min)?;
+            let mx = allreduce_f64(comm, &[rank as f64], ReduceOp::Max)?;
+            Ok((mn[0], mx[0]))
+        })
+        .unwrap();
+        for (mn, mx) in res {
+            assert_eq!(mn, 0.0);
+            assert_eq!(mx, 3.0);
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_f32_matches_f64() {
+        for w in [2usize, 5] {
+            let len = 11;
+            let res = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                let d32: Vec<f32> = (0..len).map(|i| (rank + i) as f32).collect();
+                let a = allreduce_f32(comm, &d32, ReduceOp::Sum)?;
+                let d64: Vec<f64> = d32.iter().map(|&x| x as f64).collect();
+                let b = allreduce_f64(comm, &d64, ReduceOp::Sum)?;
+                Ok((a, b))
+            })
+            .unwrap();
+            for (a, b) in res {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert!((*x as f64 - y).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_i64_and_scalars() {
+        let res = spawn_world(3, LinkProfile::zero(), |rank, comm| {
+            let v = allreduce_i64(comm, &[rank as i64, 10], ReduceOp::Sum)?;
+            let s = allreduce_sum_usize(comm, rank + 1)?;
+            Ok((v, s))
+        })
+        .unwrap();
+        for (v, s) in res {
+            assert_eq!(v, vec![3, 30]);
+            assert_eq!(s, 6);
+        }
+    }
+
+    #[test]
+    fn gather_and_allgather() {
+        let res = spawn_world(4, LinkProfile::zero(), |rank, comm| {
+            let g = gather_bytes(comm, 2, vec![rank as u8; rank + 1])?;
+            let ag = allgather_bytes(comm, vec![rank as u8])?;
+            Ok((g, ag))
+        })
+        .unwrap();
+        let g2 = res[2].0.as_ref().unwrap();
+        assert_eq!(g2[3], vec![3u8; 4]);
+        assert_eq!(g2[0], vec![0u8; 1]);
+        assert!(res[0].0.is_none());
+        for (_, ag) in &res {
+            assert_eq!(ag, &vec![vec![0u8], vec![1], vec![2], vec![3]]);
+        }
+    }
+
+    #[test]
+    fn scatter_delivers_per_rank() {
+        let res = spawn_world(3, LinkProfile::zero(), |rank, comm| {
+            let data = if rank == 1 {
+                Some(vec![vec![10u8], vec![11], vec![12]])
+            } else {
+                None
+            };
+            scatter_bytes(comm, 1, data)
+        })
+        .unwrap();
+        assert_eq!(res, vec![vec![10u8], vec![11], vec![12]]);
+    }
+
+    #[test]
+    fn alltoall_transposes() {
+        let res = spawn_world(3, LinkProfile::zero(), |rank, comm| {
+            let data: Vec<Vec<u8>> = (0..3).map(|dst| vec![(rank * 10 + dst) as u8]).collect();
+            alltoall_bytes(comm, data)
+        })
+        .unwrap();
+        // rank d receives from rank s the blob [s*10 + d]
+        for (d, out) in res.iter().enumerate() {
+            for (s, blob) in out.iter().enumerate() {
+                assert_eq!(blob, &vec![(s * 10 + d) as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn collective_sequences_do_not_crosstalk() {
+        // Two different collectives back-to-back with same participants.
+        let res = spawn_world(4, LinkProfile::zero(), |rank, comm| {
+            let a = allreduce_f64(comm, &[1.0], ReduceOp::Sum)?;
+            let b = broadcast_f64(comm, 0, if rank == 0 { Some(&[9.0][..]) } else { None })?;
+            let c = allreduce_f64(comm, &[2.0], ReduceOp::Sum)?;
+            Ok((a[0], b[0], c[0]))
+        })
+        .unwrap();
+        for (a, b, c) in res {
+            assert_eq!((a, b, c), (4.0, 9.0, 8.0));
+        }
+    }
+}

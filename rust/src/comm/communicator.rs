@@ -1,0 +1,65 @@
+//! The communicator abstraction: MPI-style rank-addressed messaging.
+//!
+//! Only point-to-point send/recv and barrier are primitive; every
+//! collective in [`super::collectives`] is built on these, mirroring how
+//! the paper's Table 5 builds distributed operators from a small set of
+//! communication operators.
+
+use anyhow::Result;
+use std::time::Duration;
+
+/// Message tag. Collectives draw from an internal per-communicator
+/// sequence so user tags (< [`Tag::USER_MAX`]) never collide with them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tag(pub u64);
+
+impl Tag {
+    pub const USER_MAX: u64 = 1 << 32;
+}
+
+/// Accumulated per-rank communication statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub msgs_recv: u64,
+    pub bytes_recv: u64,
+    /// Simulated seconds spent in communication under the link profile
+    /// (both endpoints are charged; see DESIGN.md §3).
+    pub sim_comm_seconds: f64,
+    /// Simulated seconds spent waiting at barriers.
+    pub sim_barrier_seconds: f64,
+}
+
+/// MPI-analog communicator.
+///
+/// All ranks of one world must issue matching operations in the same
+/// order — the loosely-synchronous contract the paper's execution model
+/// assumes (§2.2).
+pub trait Communicator: Send {
+    fn rank(&self) -> usize;
+    fn world_size(&self) -> usize;
+
+    /// Blocking tagged send.
+    fn send(&mut self, to: usize, tag: Tag, bytes: Vec<u8>) -> Result<()>;
+
+    /// Blocking tagged receive (selective by source and tag).
+    fn recv(&mut self, from: usize, tag: Tag) -> Result<Vec<u8>>;
+
+    /// Synchronise all ranks.
+    fn barrier(&mut self) -> Result<()>;
+
+    /// Fresh collective tag (same sequence on every rank).
+    fn next_collective_tag(&mut self) -> Tag;
+
+    /// Communication statistics accumulated so far on this rank.
+    fn stats(&self) -> CommStats;
+
+    /// Reset statistics (between benchmark phases).
+    fn reset_stats(&mut self);
+
+    /// Receive timeout (deadlock detection in tests).
+    fn timeout(&self) -> Duration {
+        Duration::from_secs(30)
+    }
+}

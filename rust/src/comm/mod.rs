@@ -1,0 +1,27 @@
+//! Communication substrate — the paper's Table 4 operators.
+//!
+//! | Data structure | Operations (paper) | Here |
+//! |---|---|---|
+//! | Arrays | Reduce, AllReduce, Gather, AllGather, Scatter, AllToAll, Broadcast, P2P | [`collectives`], [`Communicator::send`]/[`Communicator::recv`] |
+//! | Tables | Shuffle, Broadcast | [`shuffle`], [`collectives::broadcast_bytes`] over IPC bytes |
+//!
+//! The trait-object design keeps distributed operators independent of
+//! the transport: the in-process [`thread_comm::ThreadComm`] stands in
+//! for MPI (DESIGN.md §3), with a [`profile::LinkProfile`] cost model
+//! supplying simulated cluster timing.
+
+pub mod collectives;
+pub mod communicator;
+pub mod profile;
+pub mod shuffle;
+pub mod thread_comm;
+
+pub use collectives::{
+    allgather_bytes, allreduce_f32, allreduce_f64, allreduce_i64, allreduce_sum_f64,
+    allreduce_sum_usize, alltoall_bytes, broadcast_bytes, broadcast_f64, gather_bytes, reduce_f64,
+    scatter_bytes, ReduceOp,
+};
+pub use communicator::{CommStats, Communicator, Tag};
+pub use profile::{LinkCost, LinkProfile};
+pub use shuffle::{shuffle_by_hash, shuffle_by_range, shuffle_tables};
+pub use thread_comm::{spawn_world, ThreadComm};

@@ -1,0 +1,124 @@
+//! Link cost model for simulated-cluster timing.
+//!
+//! This image runs every rank as a thread on one core, so real wire
+//! time does not exist. The profile charges each message an
+//! alpha–beta cost (`latency + bytes/bandwidth`), distinguishing
+//! intra-node from inter-node links via `ranks_per_node` — that is what
+//! lets the Fig 15 multi-"node" bench reproduce the paper's scaling
+//! *shape* (see DESIGN.md §3).
+
+/// Alpha-beta cost model for one link class.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkCost {
+    /// One-way message latency (seconds).
+    pub latency: f64,
+    /// Bandwidth (bytes/second).
+    pub bandwidth: f64,
+}
+
+impl LinkCost {
+    /// Time for one message of `bytes`.
+    #[inline]
+    pub fn time(&self, bytes: usize) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+/// Cluster communication profile.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkProfile {
+    pub intra: LinkCost,
+    pub inter: LinkCost,
+    /// Ranks co-located per node (ranks r and s share a node when
+    /// `r / ranks_per_node == s / ranks_per_node`).
+    pub ranks_per_node: usize,
+}
+
+impl LinkProfile {
+    /// Zero-cost profile (pure in-process semantics, no simulated time).
+    pub fn zero() -> LinkProfile {
+        LinkProfile {
+            intra: LinkCost { latency: 0.0, bandwidth: f64::INFINITY },
+            inter: LinkCost { latency: 0.0, bandwidth: f64::INFINITY },
+            ranks_per_node: usize::MAX,
+        }
+    }
+
+    /// Shared-memory single node: ~0.5 us latency, ~10 GB/s effective.
+    pub fn single_node() -> LinkProfile {
+        LinkProfile {
+            intra: LinkCost { latency: 0.5e-6, bandwidth: 10e9 },
+            inter: LinkCost { latency: 0.5e-6, bandwidth: 10e9 },
+            ranks_per_node: usize::MAX,
+        }
+    }
+
+    /// HPC cluster like the paper's Victor testbed: shared memory within
+    /// a node, ~25 us / ~1.2 GB/s effective TCP-over-IB between nodes,
+    /// 16 ranks per node (the paper's process placement).
+    pub fn cluster(ranks_per_node: usize) -> LinkProfile {
+        LinkProfile {
+            intra: LinkCost { latency: 0.5e-6, bandwidth: 10e9 },
+            inter: LinkCost { latency: 25e-6, bandwidth: 1.2e9 },
+            ranks_per_node,
+        }
+    }
+
+    /// Device interconnect profile for the Fig 17 accelerator run
+    /// (PCIe-attached K80-era devices; NCCL ring over PCIe ~6 GB/s,
+    /// ~8 us launch+latency overhead per message).
+    pub fn accelerator() -> LinkProfile {
+        LinkProfile {
+            intra: LinkCost { latency: 8e-6, bandwidth: 6e9 },
+            inter: LinkCost { latency: 8e-6, bandwidth: 6e9 },
+            ranks_per_node: usize::MAX,
+        }
+    }
+
+    /// True when the two ranks share a node.
+    #[inline]
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        a / self.ranks_per_node == b / self.ranks_per_node
+    }
+
+    /// Modeled transfer time between two ranks.
+    #[inline]
+    pub fn time(&self, from: usize, to: usize, bytes: usize) -> f64 {
+        if from == to {
+            0.0
+        } else if self.same_node(from, to) {
+            self.intra.time(bytes)
+        } else {
+            self.inter.time(bytes)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_profile_free() {
+        let p = LinkProfile::zero();
+        assert_eq!(p.time(0, 1, 1_000_000), 0.0);
+    }
+
+    #[test]
+    fn inter_node_costs_more() {
+        let p = LinkProfile::cluster(16);
+        assert!(p.same_node(0, 15));
+        assert!(!p.same_node(15, 16));
+        let near = p.time(0, 1, 1 << 20);
+        let far = p.time(0, 16, 1 << 20);
+        assert!(far > 5.0 * near, "far={far} near={near}");
+        assert_eq!(p.time(3, 3, 123), 0.0);
+    }
+
+    #[test]
+    fn alpha_beta_shape() {
+        let c = LinkCost { latency: 1e-5, bandwidth: 1e9 };
+        assert!((c.time(0) - 1e-5).abs() < 1e-12);
+        assert!((c.time(1_000_000_000) - 1.00001).abs() < 1e-9);
+    }
+}

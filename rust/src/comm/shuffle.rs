@@ -1,0 +1,174 @@
+//! Table shuffle — the paper's table-specific communication operator
+//! (Table 4: "Shuffle — similar to AllToAll but specifically designed
+//! for Tables").
+//!
+//! `shuffle_by_hash` re-partitions a distributed table so that all rows
+//! with equal key values land on the same rank — the building block of
+//! distributed join, group-by, unique and set ops (Table 5).
+
+use super::collectives::alltoall_bytes;
+use super::communicator::Communicator;
+use crate::table::rowhash::{hash_columns, partition_indices};
+use crate::table::{ipc, Array, Table};
+use anyhow::{Context, Result};
+
+/// Exchange pre-partitioned tables: `parts[r]` goes to rank `r`; the
+/// received partitions are concatenated (own partition avoids the wire).
+pub fn shuffle_tables<C: Communicator + ?Sized>(
+    comm: &mut C,
+    parts: Vec<Table>,
+) -> Result<Table> {
+    assert_eq!(parts.len(), comm.world_size(), "shuffle: one partition per rank");
+    let rank = comm.rank();
+    let schema = parts[rank].schema().clone();
+    let mut own: Option<Table> = None;
+    let mut blobs: Vec<Vec<u8>> = Vec::with_capacity(parts.len());
+    for (r, p) in parts.into_iter().enumerate() {
+        if r == rank {
+            own = Some(p);
+            blobs.push(Vec::new());
+        } else {
+            blobs.push(ipc::serialize(&p));
+        }
+    }
+    let received = alltoall_bytes(comm, blobs)?;
+    let mut tables: Vec<Table> = Vec::with_capacity(received.len());
+    for (r, blob) in received.into_iter().enumerate() {
+        if r == rank {
+            tables.push(own.take().expect("own partition"));
+        } else {
+            tables.push(ipc::deserialize(&blob).with_context(|| format!("shuffle: from rank {r}"))?);
+        }
+    }
+    let refs: Vec<&Table> = tables.iter().collect();
+    let out = Table::concat_tables(&refs)?;
+    debug_assert_eq!(out.schema().as_ref(), schema.as_ref());
+    Ok(out)
+}
+
+/// Hash-partition `local` on `keys` and shuffle so equal keys co-locate.
+pub fn shuffle_by_hash<C: Communicator + ?Sized>(
+    comm: &mut C,
+    local: &Table,
+    keys: &[&str],
+) -> Result<Table> {
+    let key_cols: Vec<&Array> = keys
+        .iter()
+        .map(|k| local.column_by_name(k))
+        .collect::<Result<_>>()?;
+    let hashes = hash_columns(&key_cols);
+    let parts_idx = partition_indices(&hashes, comm.world_size());
+    let parts: Vec<Table> = parts_idx.iter().map(|idx| local.take(idx)).collect();
+    shuffle_tables(comm, parts)
+}
+
+/// Range-partition `local` on a numeric column given ascending pivot
+/// boundaries (len = world-1) and shuffle (distributed sort's exchange
+/// step). Rows with null keys go to the last rank.
+pub fn shuffle_by_range<C: Communicator + ?Sized>(
+    comm: &mut C,
+    local: &Table,
+    key: &str,
+    pivots: &[f64],
+) -> Result<Table> {
+    let w = comm.world_size();
+    assert_eq!(pivots.len() + 1, w, "need world-1 pivots");
+    let col = local.column_by_name(key)?;
+    let mut parts_idx: Vec<Vec<usize>> = vec![Vec::new(); w];
+    for i in 0..local.num_rows() {
+        let p = match col.f64_at(i) {
+            Some(x) => pivots.partition_point(|&pv| pv < x),
+            None => w - 1,
+        };
+        parts_idx[p].push(i);
+    }
+    let parts: Vec<Table> = parts_idx.iter().map(|idx| local.take(idx)).collect();
+    shuffle_tables(comm, parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::profile::LinkProfile;
+    use crate::comm::thread_comm::spawn_world;
+    use crate::table::Scalar;
+
+    fn local_table(rank: usize) -> Table {
+        // keys 0..8 spread across ranks
+        let keys: Vec<i64> = (0..8).map(|i| (i + rank) as i64 % 8).collect();
+        let vals: Vec<String> = (0..8).map(|i| format!("r{rank}v{i}")).collect();
+        Table::from_columns(vec![
+            ("k", Array::from_i64(keys)),
+            ("v", Array::from_strs(&vals)),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn hash_shuffle_colocates_keys() {
+        for w in [1usize, 2, 4] {
+            let res = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                shuffle_by_hash(comm, &local_table(rank), &["k"])
+            })
+            .unwrap();
+            // global row count preserved
+            let total: usize = res.iter().map(|t| t.num_rows()).sum();
+            assert_eq!(total, 8 * w);
+            // each key value appears on exactly one rank
+            for key in 0..8i64 {
+                let ranks_with_key = res
+                    .iter()
+                    .filter(|t| {
+                        (0..t.num_rows()).any(|i| t.cell(i, 0) == Scalar::Int64(key))
+                    })
+                    .count();
+                assert_eq!(ranks_with_key, 1, "key {key} on {ranks_with_key} ranks (w={w})");
+            }
+        }
+    }
+
+    #[test]
+    fn range_shuffle_orders_ranks() {
+        let res = spawn_world(3, LinkProfile::zero(), move |rank, comm| {
+            let t = local_table(rank);
+            shuffle_by_range(comm, &t, "k", &[2.0, 5.0])
+        })
+        .unwrap();
+        // rank 0 gets k <= 2, rank 1 gets 2 < k <= 5, rank 2 the rest
+        for (r, t) in res.iter().enumerate() {
+            for i in 0..t.num_rows() {
+                let k = t.cell(i, 0).as_i64().unwrap() as f64;
+                match r {
+                    0 => assert!(k <= 2.0),
+                    1 => assert!(k > 2.0 && k <= 5.0),
+                    _ => assert!(k > 5.0),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn null_keys_go_to_last_rank() {
+        let res = spawn_world(2, LinkProfile::zero(), move |rank, comm| {
+            let t = Table::from_columns(vec![(
+                "k",
+                Array::from_opt_i64(vec![Some(rank as i64), None]),
+            )])
+            .unwrap();
+            shuffle_by_range(comm, &t, "k", &[0.5])
+        })
+        .unwrap();
+        assert_eq!(res[1].column(0).null_count(), 2);
+        assert_eq!(res[0].column(0).null_count(), 0);
+    }
+
+    #[test]
+    fn shuffle_moves_bytes_not_pointers() {
+        let res = spawn_world(2, LinkProfile::single_node(), move |rank, comm| {
+            let out = shuffle_by_hash(comm, &local_table(rank), &["k"])?;
+            Ok((out.num_rows(), comm.stats().bytes_sent))
+        })
+        .unwrap();
+        assert!(res[0].1 > 0, "shuffle must serialise to bytes");
+    }
+}

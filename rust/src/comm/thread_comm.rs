@@ -1,0 +1,309 @@
+//! Thread-backed communicator: each rank is a thread, mailboxes are
+//! mpsc channels (the in-process stand-in for MPI — see DESIGN.md §3).
+
+use super::communicator::{CommStats, Communicator, Tag};
+use super::profile::LinkProfile;
+use anyhow::{bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+struct Envelope {
+    from: usize,
+    tag: Tag,
+    bytes: Vec<u8>,
+}
+
+/// One rank's endpoint of an in-process world.
+pub struct ThreadComm {
+    rank: usize,
+    world: usize,
+    senders: Vec<Sender<Envelope>>,
+    inbox: Receiver<Envelope>,
+    /// Out-of-order messages parked until a matching recv.
+    parked: HashMap<(usize, Tag), VecDeque<Vec<u8>>>,
+    barrier: Arc<Barrier>,
+    collective_seq: u64,
+    profile: LinkProfile,
+    stats: CommStats,
+    timeout: Duration,
+}
+
+impl ThreadComm {
+    /// Create a world of `n` connected communicators.
+    pub fn world(n: usize) -> Vec<ThreadComm> {
+        Self::world_with_profile(n, LinkProfile::zero())
+    }
+
+    /// Create a world with a link cost profile for simulated timing.
+    pub fn world_with_profile(n: usize, profile: LinkProfile) -> Vec<ThreadComm> {
+        assert!(n > 0);
+        let mut senders = Vec::with_capacity(n);
+        let mut inboxes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            inboxes.push(rx);
+        }
+        let barrier = Arc::new(Barrier::new(n));
+        inboxes
+            .into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| ThreadComm {
+                rank,
+                world: n,
+                senders: senders.clone(),
+                inbox,
+                parked: HashMap::new(),
+                barrier: barrier.clone(),
+                collective_seq: Tag::USER_MAX,
+                profile,
+                stats: CommStats::default(),
+                timeout: Duration::from_secs(30),
+            })
+            .collect()
+    }
+
+    pub fn set_timeout(&mut self, t: Duration) {
+        self.timeout = t;
+    }
+
+    pub fn profile(&self) -> &LinkProfile {
+        &self.profile
+    }
+}
+
+impl Communicator for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, to: usize, tag: Tag, bytes: Vec<u8>) -> Result<()> {
+        if to >= self.world {
+            bail!("send to rank {to} outside world of {}", self.world);
+        }
+        let n = bytes.len();
+        self.stats.msgs_sent += 1;
+        self.stats.bytes_sent += n as u64;
+        self.stats.sim_comm_seconds += self.profile.time(self.rank, to, n);
+        if to == self.rank {
+            // Self-send: park directly (no channel round-trip).
+            self.parked
+                .entry((self.rank, tag))
+                .or_default()
+                .push_back(bytes);
+            return Ok(());
+        }
+        self.senders[to]
+            .send(Envelope { from: self.rank, tag, bytes })
+            .map_err(|_| anyhow::anyhow!("send: rank {to} hung up"))?;
+        Ok(())
+    }
+
+    fn recv(&mut self, from: usize, tag: Tag) -> Result<Vec<u8>> {
+        if from >= self.world {
+            bail!("recv from rank {from} outside world of {}", self.world);
+        }
+        // Check parked messages first.
+        if let Some(q) = self.parked.get_mut(&(from, tag)) {
+            if let Some(bytes) = q.pop_front() {
+                self.stats.msgs_recv += 1;
+                self.stats.bytes_recv += bytes.len() as u64;
+                self.stats.sim_comm_seconds += self.profile.time(from, self.rank, bytes.len());
+                return Ok(bytes);
+            }
+        }
+        loop {
+            match self.inbox.recv_timeout(self.timeout) {
+                Ok(env) => {
+                    if env.from == from && env.tag == tag {
+                        self.stats.msgs_recv += 1;
+                        self.stats.bytes_recv += env.bytes.len() as u64;
+                        self.stats.sim_comm_seconds +=
+                            self.profile.time(from, self.rank, env.bytes.len());
+                        return Ok(env.bytes);
+                    }
+                    self.parked
+                        .entry((env.from, env.tag))
+                        .or_default()
+                        .push_back(env.bytes);
+                }
+                Err(RecvTimeoutError::Timeout) => bail!(
+                    "rank {}: recv(from={from}, tag={:?}) timed out after {:?} — \
+                     collective call order mismatch?",
+                    self.rank,
+                    tag,
+                    self.timeout
+                ),
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("rank {}: world disconnected", self.rank)
+                }
+            }
+        }
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        // Model barrier cost as one inter-node latency round (log-tree
+        // barriers cost O(log W) latencies; one term keeps it simple and
+        // is charged identically on every rank).
+        self.stats.sim_barrier_seconds += self.profile.inter.latency.max(self.profile.intra.latency);
+        self.barrier.wait();
+        Ok(())
+    }
+
+    fn next_collective_tag(&mut self) -> Tag {
+        self.collective_seq += 1;
+        Tag(self.collective_seq)
+    }
+
+    fn stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = CommStats::default();
+    }
+
+    fn timeout(&self) -> Duration {
+        self.timeout
+    }
+}
+
+/// Run `f(rank, comm)` on every rank of a fresh world, one thread per
+/// rank, and return the per-rank results in rank order.
+///
+/// This is the BSP entry point: no shared mutable state, ranks interact
+/// only through the communicator (the paper's loosely synchronous
+/// model).
+pub fn spawn_world<T, F>(world: usize, profile: LinkProfile, f: F) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(usize, &mut ThreadComm) -> Result<T> + Send + Sync + 'static,
+{
+    let comms = ThreadComm::world_with_profile(world, profile);
+    let f = Arc::new(f);
+    let mut handles = Vec::with_capacity(world);
+    for (rank, mut comm) in comms.into_iter().enumerate() {
+        let f = f.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .spawn(move || f(rank, &mut comm))
+                .expect("spawn rank thread"),
+        );
+    }
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(rank, h)| match h.join() {
+            Ok(r) => r,
+            Err(_) => bail!("rank {rank} panicked"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        let results = spawn_world(2, LinkProfile::zero(), |rank, comm| {
+            if rank == 0 {
+                comm.send(1, Tag(7), vec![1, 2, 3])?;
+                comm.recv(1, Tag(8))
+            } else {
+                let got = comm.recv(0, Tag(7))?;
+                comm.send(0, Tag(8), got.iter().map(|b| b * 2).collect())?;
+                Ok(vec![])
+            }
+        })
+        .unwrap();
+        assert_eq!(results[0], vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn selective_receive_out_of_order() {
+        let results = spawn_world(2, LinkProfile::zero(), |rank, comm| {
+            if rank == 0 {
+                comm.send(1, Tag(1), vec![1])?;
+                comm.send(1, Tag(2), vec![2])?;
+                Ok(0u8)
+            } else {
+                // Receive tag 2 first even though tag 1 arrives first.
+                let b = comm.recv(0, Tag(2))?;
+                let a = comm.recv(0, Tag(1))?;
+                Ok(a[0] * 10 + b[0])
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], 12);
+    }
+
+    #[test]
+    fn self_send() {
+        let results = spawn_world(1, LinkProfile::zero(), |_, comm| {
+            comm.send(0, Tag(5), vec![9])?;
+            comm.recv(0, Tag(5))
+        })
+        .unwrap();
+        assert_eq!(results[0], vec![9]);
+    }
+
+    #[test]
+    fn barrier_synchronises() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static BEFORE: AtomicUsize = AtomicUsize::new(0);
+        let _ = spawn_world(4, LinkProfile::zero(), |_, comm| {
+            BEFORE.fetch_add(1, Ordering::SeqCst);
+            comm.barrier()?;
+            // After the barrier every rank must have incremented.
+            assert_eq!(BEFORE.load(Ordering::SeqCst), 4);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn stats_account_messages() {
+        let results = spawn_world(2, LinkProfile::cluster(1), |rank, comm| {
+            if rank == 0 {
+                comm.send(1, Tag(1), vec![0u8; 1000])?;
+            } else {
+                comm.recv(0, Tag(1))?;
+            }
+            Ok(comm.stats())
+        })
+        .unwrap();
+        assert_eq!(results[0].msgs_sent, 1);
+        assert_eq!(results[0].bytes_sent, 1000);
+        assert_eq!(results[1].msgs_recv, 1);
+        assert!(results[0].sim_comm_seconds > 0.0);
+        assert!(results[1].sim_comm_seconds > 0.0);
+    }
+
+    #[test]
+    fn recv_timeout_reports_mismatch() {
+        let res = spawn_world(1, LinkProfile::zero(), |_, comm| {
+            comm.set_timeout(Duration::from_millis(50));
+            comm.recv(0, Tag(99))
+        });
+        let err = format!("{:?}", res.err().expect("should time out"));
+        assert!(err.contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn bad_ranks_rejected() {
+        let _ = spawn_world(1, LinkProfile::zero(), |_, comm| {
+            assert!(comm.send(5, Tag(0), vec![]).is_err());
+            assert!(comm.recv(5, Tag(0)).is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -1,0 +1,63 @@
+//! PyCylon-analog DataFrame API: the user-facing layer of HPTMT.
+//!
+//! Mirrors the paper's programming model (§3.1, Listings 1–3): the same
+//! script runs sequentially or distributed; distributed variants take a
+//! [`CylonEnv`] and operate on this rank's partition with a global
+//! view. Only the BSP path is exposed — the paper's HPTMT architecture
+//! deliberately excludes asynchronous execution (§2.2); the async
+//! engine in [`crate::exec::asynch`] exists purely as the comparison
+//! baseline.
+//!
+//! ```no_run
+//! use hptmt::dataframe::{DataFrame, CylonEnv};
+//! use hptmt::comm::{spawn_world, LinkProfile};
+//!
+//! spawn_world(4, LinkProfile::single_node(), |rank, comm| {
+//!     let mut env = CylonEnv::new(comm);
+//!     let df1 = DataFrame::read_csv(format!("part-{rank}.csv"))?;
+//!     let df2 = DataFrame::read_csv(format!("meta-{rank}.csv"))?;
+//!     let joined = df1.merge_dist(&df2, &["id"], &["drug_id"], &mut env)?;
+//!     println!("rank {rank}: {} rows", joined.num_rows());
+//!     Ok(())
+//! }).unwrap();
+//! ```
+
+mod frame;
+
+pub use frame::DataFrame;
+
+use crate::comm::{CommStats, Communicator};
+
+/// Distributed execution context (the paper's `CylonEnv`).
+///
+/// Wraps a communicator; `rank`/`world_size` mirror the PyCylon API.
+pub struct CylonEnv<'a> {
+    comm: &'a mut dyn Communicator,
+}
+
+impl<'a> CylonEnv<'a> {
+    pub fn new(comm: &'a mut impl Communicator) -> CylonEnv<'a> {
+        CylonEnv { comm }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.comm.world_size()
+    }
+
+    pub fn stats(&self) -> CommStats {
+        self.comm.stats()
+    }
+
+    /// Synchronise all ranks (exposed for application-level phases).
+    pub fn barrier(&mut self) -> anyhow::Result<()> {
+        self.comm.barrier()
+    }
+
+    pub(crate) fn comm(&mut self) -> &mut dyn Communicator {
+        self.comm
+    }
+}

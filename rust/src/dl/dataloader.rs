@@ -1,0 +1,115 @@
+//! Mini-batch loader: fixed-size batches from in-memory feature/label
+//! buffers (stage 3→4 of the paper's workflow: engineered features →
+//! tensors → training batches).
+
+use anyhow::{bail, Result};
+
+/// In-memory dataset: row-major features (n, d_in) + labels (n, 1).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub n: usize,
+    pub d_in: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<f32>, d_in: usize) -> Result<Dataset> {
+        if d_in == 0 || x.len() % d_in != 0 {
+            bail!("dataset: x length {} not divisible by d_in {d_in}", x.len());
+        }
+        let n = x.len() / d_in;
+        if y.len() != n {
+            bail!("dataset: {} labels for {n} rows", y.len());
+        }
+        Ok(Dataset { x, y, n, d_in })
+    }
+
+    /// From an f64 row-major feature matrix whose LAST column is the
+    /// label (the UNOMT convention: features + growth).
+    pub fn from_row_major_with_label(buf: &[f64], nrows: usize, ncols: usize) -> Result<Dataset> {
+        if ncols < 2 {
+            bail!("need at least one feature and the label column");
+        }
+        let d_in = ncols - 1;
+        let mut x = Vec::with_capacity(nrows * d_in);
+        let mut y = Vec::with_capacity(nrows);
+        for r in 0..nrows {
+            for c in 0..d_in {
+                x.push(buf[r * ncols + c] as f32);
+            }
+            y.push(buf[r * ncols + d_in] as f32);
+        }
+        Dataset::new(x, y, d_in)
+    }
+
+    /// Number of full batches of `batch` rows (remainder dropped, as
+    /// the AOT batch dim is static).
+    pub fn num_batches(&self, batch: usize) -> usize {
+        self.n / batch
+    }
+
+    /// Borrow batch `b` as (x_slice, y_slice).
+    pub fn batch(&self, b: usize, batch: usize) -> (&[f32], &[f32]) {
+        let lo = b * batch;
+        (&self.x[lo * self.d_in..(lo + batch) * self.d_in], &self.y[lo..lo + batch])
+    }
+
+    /// Pad with row repeats so n is a multiple of `batch` (used when a
+    /// rank's shard is smaller than one batch).
+    pub fn pad_to_multiple(&mut self, batch: usize) {
+        if self.n == 0 || self.n % batch == 0 {
+            return;
+        }
+        let target = self.n.div_ceil(batch) * batch;
+        let mut r = 0;
+        while self.n < target {
+            let lo = r * self.d_in;
+            let row: Vec<f32> = self.x[lo..lo + self.d_in].to_vec();
+            self.x.extend_from_slice(&row);
+            self.y.push(self.y[r]);
+            self.n += 1;
+            r = (r + 1) % self.n.min(self.n - 1).max(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_and_bounds() {
+        let d = Dataset::new((0..20).map(|i| i as f32).collect(), (0..10).map(|i| i as f32).collect(), 2)
+            .unwrap();
+        assert_eq!(d.n, 10);
+        assert_eq!(d.num_batches(4), 2);
+        let (x, y) = d.batch(1, 4);
+        assert_eq!(x.len(), 8);
+        assert_eq!(y, &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn from_row_major_splits_label() {
+        // 2 rows, 3 cols: features 2 + label
+        let buf = vec![1.0, 2.0, 10.0, 3.0, 4.0, 20.0];
+        let d = Dataset::from_row_major_with_label(&buf, 2, 3).unwrap();
+        assert_eq!(d.d_in, 2);
+        assert_eq!(d.x, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(d.y, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn padding() {
+        let mut d = Dataset::new(vec![1.0, 2.0, 3.0], vec![9.0, 8.0, 7.0], 1).unwrap();
+        d.pad_to_multiple(2);
+        assert_eq!(d.n, 4);
+        assert_eq!(d.num_batches(2), 2);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(Dataset::new(vec![1.0; 3], vec![1.0], 2).is_err());
+        assert!(Dataset::new(vec![1.0; 4], vec![1.0], 2).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Deep-learning layer: DDP training over the AOT-compiled UNOMT model
+//! (the paper's stage 3–4: tensors from engineered features, then
+//! distributed data-parallel training).
+
+pub mod cost_model;
+pub mod dataloader;
+pub mod trainer;
+
+pub use cost_model::{model_step, AccelProfile, AccelStep};
+pub use dataloader::Dataset;
+pub use trainer::{synthetic_dataset, train_ddp, TrainConfig, TrainReport};

@@ -1,0 +1,175 @@
+//! Task graph for the asynchronous central-scheduler baseline.
+//!
+//! This is the execution model of Dask/Modin that the paper contrasts
+//! with BSP: the application is compiled into a DAG of tasks over
+//! partitions, and a central scheduler assigns ready tasks to workers.
+
+use crate::table::Table;
+use anyhow::{bail, Result};
+
+/// Task identifier (index into the graph).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub usize);
+
+type TaskFn = Box<dyn FnMut(&[&Table]) -> Result<Table> + Send>;
+
+pub(crate) struct TaskNode {
+    pub name: String,
+    pub deps: Vec<TaskId>,
+    pub func: TaskFn,
+}
+
+/// A DAG of table-valued tasks.
+#[derive(Default)]
+pub struct TaskGraph {
+    pub(crate) tasks: Vec<TaskNode>,
+}
+
+impl TaskGraph {
+    pub fn new() -> TaskGraph {
+        TaskGraph { tasks: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Add a source task (no dependencies) producing a table.
+    pub fn source<F>(&mut self, name: impl Into<String>, mut f: F) -> TaskId
+    where
+        F: FnMut() -> Result<Table> + Send + 'static,
+    {
+        self.add(name, vec![], move |_| f())
+    }
+
+    /// Add a task depending on earlier tasks.
+    pub fn add<F>(&mut self, name: impl Into<String>, deps: Vec<TaskId>, f: F) -> TaskId
+    where
+        F: FnMut(&[&Table]) -> Result<Table> + Send + 'static,
+    {
+        for d in &deps {
+            assert!(d.0 < self.tasks.len(), "dependency on future task");
+        }
+        let id = TaskId(self.tasks.len());
+        self.tasks.push(TaskNode { name: name.into(), deps, func: Box::new(f) });
+        id
+    }
+
+    pub fn name(&self, id: TaskId) -> &str {
+        &self.tasks[id.0].name
+    }
+
+    pub fn deps(&self, id: TaskId) -> &[TaskId] {
+        &self.tasks[id.0].deps
+    }
+
+    /// Execute every task (dependencies first — construction order is
+    /// already topological) and return all outputs plus per-task
+    /// measurements. Used by the scheduler simulator.
+    ///
+    /// `object_store = true` models the Modin/Ray (plasma) and Dask data
+    /// plane: every task output is serialised into the store and every
+    /// input deserialised out of it, with that CPU charged to the task.
+    /// The BSP engine only pays serialisation at explicit shuffles —
+    /// the per-task-boundary cost is a real architectural difference of
+    /// the async model, not a thumb on the scale.
+    pub fn execute_all_with(
+        &mut self,
+        object_store: bool,
+    ) -> Result<(Vec<Table>, Vec<TaskMeasurement>)> {
+        let mut outputs: Vec<Option<Table>> = Vec::with_capacity(self.tasks.len());
+        let mut stored: Vec<Vec<u8>> = Vec::with_capacity(self.tasks.len());
+        let mut meas = Vec::with_capacity(self.tasks.len());
+        for i in 0..self.tasks.len() {
+            let (head, tail) = self.tasks.split_at_mut(i);
+            let node = &mut tail[0];
+            for d in &node.deps {
+                if d.0 >= head.len() {
+                    bail!("task {:?} depends on unexecuted task", node.name);
+                }
+            }
+            let sw = crate::util::time::CpuStopwatch::start();
+            let out = if object_store {
+                // Deserialise inputs out of the store (charged).
+                let owned: Vec<Table> = node
+                    .deps
+                    .iter()
+                    .map(|d| crate::table::ipc::deserialize(&stored[d.0]))
+                    .collect::<Result<_>>()?;
+                let inputs: Vec<&Table> = owned.iter().collect();
+                (node.func)(&inputs)?
+            } else {
+                let inputs: Vec<&Table> = node
+                    .deps
+                    .iter()
+                    .map(|d| outputs[d.0].as_ref().expect("dep executed"))
+                    .collect();
+                (node.func)(&inputs)?
+            };
+            // Serialise the output into the store (charged).
+            let output_bytes = if object_store {
+                let b = crate::table::ipc::serialize(&out);
+                let n = b.len();
+                stored.push(b);
+                n
+            } else {
+                stored.push(Vec::new());
+                out.nbytes()
+            };
+            let cpu = sw.elapsed().as_secs_f64();
+            meas.push(TaskMeasurement { cpu_seconds: cpu, output_bytes });
+            outputs.push(Some(out));
+        }
+        Ok((outputs.into_iter().map(|o| o.unwrap()).collect(), meas))
+    }
+
+    /// [`Self::execute_all_with`] without the object store (pure task
+    /// timing; unit tests and oracles).
+    pub fn execute_all(&mut self) -> Result<(Vec<Table>, Vec<TaskMeasurement>)> {
+        self.execute_all_with(false)
+    }
+}
+
+/// Measured cost of one task (input to the scheduler simulation).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskMeasurement {
+    pub cpu_seconds: f64,
+    pub output_bytes: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn tbl(v: Vec<i64>) -> Table {
+        Table::from_columns(vec![("x", Array::from_i64(v))]).unwrap()
+    }
+
+    #[test]
+    fn builds_and_executes_dag() {
+        let mut g = TaskGraph::new();
+        let a = g.source("a", || Ok(tbl(vec![1, 2])));
+        let b = g.source("b", || Ok(tbl(vec![3])));
+        let c = g.add("concat", vec![a, b], |ins| {
+            Table::concat_tables(&ins.to_vec())
+        });
+        let (outs, meas) = g.execute_all().unwrap();
+        assert_eq!(outs[c.0].num_rows(), 3);
+        assert_eq!(meas.len(), 3);
+        assert!(meas[c.0].output_bytes > 0);
+        assert_eq!(g.name(c), "concat");
+        assert_eq!(g.deps(c), &[a, b]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency on future task")]
+    fn forward_dependency_rejected() {
+        let mut g = TaskGraph::new();
+        g.add("bad", vec![TaskId(5)], |_| Ok(tbl(vec![])));
+    }
+}

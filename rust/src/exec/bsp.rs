@@ -1,0 +1,192 @@
+//! BSP (loosely synchronous) executor — the HPTMT execution model.
+//!
+//! One thread per rank, no shared mutable state, ranks interact only
+//! through the communicator; synchronisation happens only at
+//! communication points (§2.2 of the paper).
+//!
+//! ## Timing model
+//!
+//! This image exposes one CPU core, so W worker threads timeshare and
+//! wall-clock tells you nothing about scaling. Each rank therefore
+//! reports its **thread CPU time** (what a dedicated core would spend)
+//! and its **modeled communication time** (alpha-beta link profile).
+//! The run's simulated makespan is
+//! `max over ranks (cpu + comm + barrier)` — the BSP critical path.
+
+use crate::comm::communicator::{CommStats, Communicator};
+use crate::comm::profile::LinkProfile;
+use crate::comm::thread_comm::ThreadComm;
+use crate::util::time::CpuStopwatch;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// BSP run configuration.
+#[derive(Debug, Clone)]
+pub struct BspConfig {
+    pub world: usize,
+    pub profile: LinkProfile,
+    pub timeout: Duration,
+}
+
+impl BspConfig {
+    pub fn new(world: usize) -> BspConfig {
+        BspConfig { world, profile: LinkProfile::single_node(), timeout: Duration::from_secs(60) }
+    }
+
+    pub fn with_profile(mut self, p: LinkProfile) -> Self {
+        self.profile = p;
+        self
+    }
+}
+
+/// Per-rank execution report.
+#[derive(Debug, Clone)]
+pub struct RankReport {
+    /// Thread CPU seconds spent in the rank closure (compute).
+    pub cpu_seconds: f64,
+    /// Communication statistics incl. modeled comm seconds.
+    pub comm: CommStats,
+}
+
+impl RankReport {
+    /// This rank's simulated busy time.
+    pub fn sim_seconds(&self) -> f64 {
+        self.cpu_seconds + self.comm.sim_comm_seconds + self.comm.sim_barrier_seconds
+    }
+}
+
+/// Result of a BSP run.
+#[derive(Debug)]
+pub struct BspRun<T> {
+    /// Per-rank closure results, rank order.
+    pub results: Vec<T>,
+    pub ranks: Vec<RankReport>,
+    /// Simulated makespan: max over ranks of (cpu + comm + barrier).
+    pub sim_wall_seconds: f64,
+    /// Real wall time of the whole run (meaningful only relative to the
+    /// single shared core).
+    pub real_wall: Duration,
+}
+
+impl<T> BspRun<T> {
+    pub fn total_cpu_seconds(&self) -> f64 {
+        self.ranks.iter().map(|r| r.cpu_seconds).sum()
+    }
+
+    pub fn total_bytes_sent(&self) -> u64 {
+        self.ranks.iter().map(|r| r.comm.bytes_sent).sum()
+    }
+
+    pub fn max_comm_seconds(&self) -> f64 {
+        self.ranks
+            .iter()
+            .map(|r| r.comm.sim_comm_seconds)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Run `f(rank, comm)` on every rank; collect results and timing.
+pub fn run_bsp<T, F>(cfg: &BspConfig, f: F) -> Result<BspRun<T>>
+where
+    T: Send + 'static,
+    F: Fn(usize, &mut ThreadComm) -> Result<T> + Send + Sync + 'static,
+{
+    let comms = ThreadComm::world_with_profile(cfg.world, cfg.profile);
+    let f = Arc::new(f);
+    let wall = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(cfg.world);
+    for (rank, mut comm) in comms.into_iter().enumerate() {
+        comm.set_timeout(cfg.timeout);
+        let f = f.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("bsp-rank-{rank}"))
+                .spawn(move || -> Result<(T, RankReport)> {
+                    let sw = CpuStopwatch::start();
+                    let out = f(rank, &mut comm)?;
+                    let cpu = sw.elapsed().as_secs_f64();
+                    let comm_stats = comm.stats();
+                    // CPU time includes (de)serialisation done inside
+                    // comm calls, which is compute; the modeled wire
+                    // time is separate.
+                    Ok((out, RankReport { cpu_seconds: cpu, comm: comm_stats }))
+                })
+                .expect("spawn bsp rank"),
+        );
+    }
+    let mut results = Vec::with_capacity(cfg.world);
+    let mut ranks = Vec::with_capacity(cfg.world);
+    for (rank, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok((out, report))) => {
+                results.push(out);
+                ranks.push(report);
+            }
+            Ok(Err(e)) => bail!("rank {rank} failed: {e:#}"),
+            Err(_) => bail!("rank {rank} panicked"),
+        }
+    }
+    let sim_wall_seconds = ranks.iter().map(|r| r.sim_seconds()).fold(0.0, f64::max);
+    Ok(BspRun { results, ranks, sim_wall_seconds, real_wall: wall.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collectives::allreduce_sum_f64;
+
+    #[test]
+    fn runs_and_reports() {
+        let cfg = BspConfig::new(3);
+        let run = run_bsp(&cfg, |rank, comm| {
+            // burn some cpu
+            let mut x = 0u64;
+            for i in 0..200_000u64 {
+                x = x.wrapping_add(i * i);
+            }
+            std::hint::black_box(x);
+            allreduce_sum_f64(comm, rank as f64)
+        })
+        .unwrap();
+        assert_eq!(run.results, vec![3.0, 3.0, 3.0]);
+        assert_eq!(run.ranks.len(), 3);
+        for r in &run.ranks {
+            assert!(r.cpu_seconds > 0.0);
+            assert!(r.comm.msgs_sent > 0);
+        }
+        assert!(run.sim_wall_seconds > 0.0);
+        assert!(run.sim_wall_seconds < run.total_cpu_seconds() + 1.0);
+    }
+
+    #[test]
+    fn error_propagates_with_rank() {
+        let cfg = BspConfig::new(2);
+        let err = run_bsp(&cfg, |rank, _| {
+            if rank == 1 {
+                anyhow::bail!("boom");
+            }
+            Ok(())
+        })
+        .err()
+        .expect("should fail");
+        assert!(format!("{err:#}").contains("rank 1"));
+    }
+
+    #[test]
+    fn sim_wall_is_max_not_sum() {
+        let cfg = BspConfig::new(4);
+        let run = run_bsp(&cfg, |_, _| {
+            let mut x = 0u64;
+            for i in 0..500_000u64 {
+                x = x.wrapping_add(i * i);
+            }
+            std::hint::black_box(x);
+            Ok(())
+        })
+        .unwrap();
+        let max_rank = run.ranks.iter().map(|r| r.sim_seconds()).fold(0.0, f64::max);
+        assert!((run.sim_wall_seconds - max_rank).abs() < 1e-12);
+        assert!(run.sim_wall_seconds < run.total_cpu_seconds());
+    }
+}

@@ -1,0 +1,14 @@
+//! Execution engines.
+//!
+//! * [`bsp`] — the HPTMT model: loosely-synchronous rank-per-thread
+//!   execution, collectives on the data path, no central coordinator.
+//! * [`asynch`] — the comparison baseline: Dask/Modin-style task DAG
+//!   under a serial central scheduler.
+//! * [`seq`] — single-threaded reference execution (the Pandas role in
+//!   Fig 12).
+
+pub mod asynch;
+pub mod bsp;
+pub mod seq;
+
+pub use bsp::{run_bsp, BspConfig, BspRun, RankReport};

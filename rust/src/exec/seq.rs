@@ -1,0 +1,37 @@
+//! Sequential reference executor: run a closure single-threaded and
+//! report its CPU time (the "Pandas" role in the Fig 12 comparison).
+
+use crate::util::time::CpuStopwatch;
+use anyhow::Result;
+
+/// Result of a sequential run.
+#[derive(Debug)]
+pub struct SeqRun<T> {
+    pub result: T,
+    pub cpu_seconds: f64,
+}
+
+/// Run `f` and measure its thread CPU time.
+pub fn run_seq<T, F: FnOnce() -> Result<T>>(f: F) -> Result<SeqRun<T>> {
+    let sw = CpuStopwatch::start();
+    let result = f()?;
+    Ok(SeqRun { result, cpu_seconds: sw.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_cpu() {
+        let run = run_seq(|| {
+            let mut x = 0u64;
+            for i in 0..300_000u64 {
+                x = x.wrapping_add(i * i);
+            }
+            Ok(std::hint::black_box(x))
+        })
+        .unwrap();
+        assert!(run.cpu_seconds > 0.0);
+    }
+}

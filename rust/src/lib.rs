@@ -1,0 +1,33 @@
+//! # HPTMT — High-Performance Tensors, Matrices and Tables
+//!
+//! A Rust + JAX + Pallas reproduction of *"HPTMT Parallel Operators for
+//! High Performance Data Science & Data Engineering"* (Abeykoon et al.,
+//! 2021): loosely-synchronous (BSP) distributed operators over columnar
+//! tables and tensors, composable in one program with no central
+//! scheduler on the data path.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`table`] — columnar substrate (Arrow-analog)
+//! * `ops` — local + distributed relational operators
+//! * `comm` — MPI-analog communicator and collectives
+//! * `exec` — BSP executor + async central-scheduler baseline
+//! * `dataframe` — PyCylon-analog user API
+//! * `pipeline` — streaming orchestrator
+//! * [`runtime`] — PJRT loader/executor for AOT-compiled JAX models
+//! * `dl` — distributed-data-parallel training driver
+//! * `unomt` — the paper's end-to-end CANDLE/UNOMT application
+
+pub mod bench;
+pub mod comm;
+pub mod dataframe;
+pub mod dl;
+pub mod exec;
+pub mod ops;
+pub mod pipeline;
+pub mod runtime;
+pub mod table;
+pub mod unomt;
+pub mod util;
+
+#[cfg(test)]
+mod proptests;

@@ -1,0 +1,172 @@
+//! `hptmt` — the leader entrypoint / CLI.
+//!
+//! The paper's "simple execution mode": one binary, one command, no
+//! external scheduler or worker daemons (§3.3 — the contrast with
+//! Dask's worker+scheduler setup). BSP ranks are spawned in-process.
+//!
+//! ```bash
+//! hptmt smoke                       # PJRT client + artifact check
+//! hptmt ops                         # operator taxonomy (Tables 1-5)
+//! hptmt pipeline --workers 4        # distributed UNOMT feature engineering
+//! hptmt train --workers 2 --steps 30  # DDP training on synthetic data
+//! hptmt show data.csv               # CSV head through the table engine
+//! ```
+
+use anyhow::Result;
+use hptmt::comm::{spawn_world, LinkProfile};
+use hptmt::dl::{synthetic_dataset, train_ddp, TrainConfig};
+use hptmt::runtime::ModelRuntime;
+use hptmt::unomt::{pipeline, UnomtConfig};
+use hptmt::util::cli::Args;
+
+const USAGE: &str = "hptmt — HPTMT parallel operators (paper reproduction)
+
+USAGE: hptmt <COMMAND> [OPTIONS]
+
+COMMANDS:
+  smoke                     bring up the PJRT client, check artifacts
+  ops                       print the operator taxonomy (paper Tables 1-5)
+  pipeline [--workers N] [--rows N]
+                            run the UNOMT feature-engineering pipeline (BSP)
+  train [--workers N] [--steps N] [--lr F] [--artifacts DIR]
+                            DDP-train the drug-response model on synthetic data
+  show <FILE> [--rows N]    read a CSV and pretty-print the head
+
+Examples map to the paper: `pipeline` = Figs 8-11, `train` = stage 4.
+See examples/ for the full end-to-end driver (unomt_e2e).";
+
+fn main() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    let args = Args::from_env(1);
+    match cmd.as_str() {
+        "smoke" => smoke(),
+        "ops" => {
+            print_taxonomy();
+            Ok(())
+        }
+        "pipeline" => cmd_pipeline(&args),
+        "train" => cmd_train(&args),
+        "show" => cmd_show(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn smoke() -> Result<()> {
+    println!("{}", hptmt::runtime::smoke()?);
+    match ModelRuntime::load("artifacts") {
+        Ok(rt) => {
+            let d = &rt.manifest.dims;
+            println!(
+                "artifacts OK: d_in={} d_hidden={} blocks={} batch={} ({} params)",
+                d.d_in,
+                d.d_hidden,
+                d.n_blocks,
+                d.batch,
+                rt.n_params()
+            );
+        }
+        Err(e) => println!("artifacts not ready: {e:#}"),
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 2)?;
+    let rows = args.usize_or("rows", 20_000)?;
+    let cfg = UnomtConfig::default().with_rows(rows);
+    println!("UNOMT pipeline: {rows} rows across {workers} BSP ranks");
+    let results = spawn_world(workers, LinkProfile::cluster(16), move |_, comm| {
+        pipeline::run_dist(comm, &cfg)
+    })?;
+    let mut total = 0;
+    for (rank, (t, stats)) in results.iter().enumerate() {
+        println!(
+            "rank {rank}: {} engineered rows, {:.3}s cpu across {} stages",
+            t.num_rows(),
+            stats.total_cpu_seconds(),
+            stats.stages.len()
+        );
+        total += t.num_rows();
+    }
+    println!("global engineered rows: {total}");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 2)?;
+    let steps = args.usize_or("steps", 30)?;
+    let lr = args.f64_or("lr", 0.003)? as f32;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    println!("DDP training: {workers} ranks x {steps} steps (lr {lr})");
+    let results = spawn_world(workers, LinkProfile::cluster(16), move |rank, comm| {
+        let rt = ModelRuntime::load(&artifacts)?;
+        let dims = rt.manifest.dims.clone();
+        let shard = synthetic_dataset(dims.batch * 4, dims.d_in, 7 + rank as u64);
+        let cfg = TrainConfig {
+            artifacts_dir: String::new(),
+            lr,
+            steps,
+            log_every: if rank == 0 { 5 } else { 0 },
+        };
+        train_ddp(comm, &rt, &shard, &cfg)
+    })?;
+    let r = &results[0];
+    println!(
+        "loss {:.5} -> {:.5}; per-rank compute {:.2}s, comm-cpu {:.2}s, wire {:.3}s",
+        r.losses.first().unwrap(),
+        r.losses.last().unwrap(),
+        r.compute_seconds,
+        r.comm_cpu_seconds,
+        r.comm_sim_seconds,
+    );
+    Ok(())
+}
+
+fn cmd_show(args: &Args) -> Result<()> {
+    let Some(path) = args.positional().first() else {
+        anyhow::bail!("usage: hptmt show <FILE> [--rows N]")
+    };
+    let rows = args.usize_or("rows", 10)?;
+    let t = hptmt::table::csv::read_csv(path)?;
+    println!("{} rows x {} cols, schema {}", t.num_rows(), t.num_columns(), t.schema());
+    println!("{}", hptmt::table::pretty::pretty(&t, rows));
+    Ok(())
+}
+
+fn print_taxonomy() {
+    println!(
+        "\
+HPTMT operator taxonomy (paper Tables 1-5 -> this crate)
+
+Table 2 — local table operators (ops::local):
+  Select        filter_cmp / filter_mask / filter_isin
+  Project       Table::select_columns / project / drop_columns
+  Union         union, union_all        Intersect   intersect
+  Difference    difference              Cartesian   cartesian
+  Join          join (inner/left/right/full x hash/sort-merge)
+  OrderBy       sort / sort_by_columns  Aggregate   aggregate
+  GroupBy       groupby_aggregate       Unique      drop_duplicates/unique
+  + Pandas-role: isin, map, astype(cast), dropna/fillna/isnull,
+    sample/shuffle/train_test_split, min_max/standard scale
+
+Table 4 — communication operators (comm):
+  Arrays: Reduce, AllReduce (ring), Gather, AllGather, Scatter,
+          AllToAll, Broadcast (binomial), P2P send/recv
+  Tables: Shuffle (hash/range partition + AllToAll over IPC bytes),
+          Broadcast
+
+Table 5 — distributed compositions (ops::dist):
+  Join    = partition + shuffle + local join      (dist_join)
+  Sort    = sample pivots + range shuffle + sort  (dist_sort)
+  GroupBy = shuffle + local groupby               (dist_groupby[_partial])
+  Unique/set ops = shuffle + local kernel         (dist_unique, ...)
+  Vector add = AllReduce(SUM)                     (allreduce_f64)
+
+Tensors (Table 1 role): dl::trainer drives the AOT-compiled UNOMT
+network (L2 jax + L1 Pallas) through runtime:: via PJRT; gradient sync
+is comm::allreduce_f32 — tables and tensors in ONE BSP program."
+    );
+}

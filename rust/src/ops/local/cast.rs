@@ -1,0 +1,198 @@
+//! Type casts (`astype` in the UNOMT pipeline: strings → numeric before
+//! tensor conversion).
+
+use crate::table::{Array, Bitmap, DataType, Table};
+use anyhow::{bail, Result};
+
+/// Cast an array to a target type.
+///
+/// Rules:
+/// * numeric ↔ numeric: int→float exact; float→int truncates toward zero
+/// * utf8 → numeric: parses; unparseable cells become null
+/// * numeric/bool → utf8: formats
+/// * bool → int/float: 0/1
+/// * int/float → bool: nonzero = true
+pub fn cast(col: &Array, to: DataType) -> Result<Array> {
+    if col.data_type() == to {
+        return Ok(col.clone());
+    }
+    let n = col.len();
+    let v = col.validity().cloned();
+    Ok(match (col, to) {
+        (Array::Int64(x, _), DataType::Float64) => {
+            Array::Float64(x.iter().map(|&a| a as f64).collect(), v)
+        }
+        (Array::Float64(x, _), DataType::Int64) => {
+            Array::Int64(x.iter().map(|&a| a as i64).collect(), v)
+        }
+        (Array::Bool(x, _), DataType::Int64) => {
+            Array::Int64(x.iter().map(|&a| a as i64).collect(), v)
+        }
+        (Array::Bool(x, _), DataType::Float64) => {
+            Array::Float64(x.iter().map(|&a| (a as i64) as f64).collect(), v)
+        }
+        (Array::Int64(x, _), DataType::Bool) => {
+            Array::Bool(x.iter().map(|&a| a != 0).collect(), v)
+        }
+        (Array::Float64(x, _), DataType::Bool) => {
+            Array::Bool(x.iter().map(|&a| a != 0.0).collect(), v)
+        }
+        (Array::Utf8(d, _), DataType::Int64) => {
+            let mut vals = Vec::with_capacity(n);
+            let mut bm = Bitmap::new_null(n);
+            for i in 0..n {
+                match (col.is_valid(i), d.value(i).trim().parse::<i64>()) {
+                    (true, Ok(x)) => {
+                        vals.push(x);
+                        bm.set(i, true);
+                    }
+                    _ => vals.push(0),
+                }
+            }
+            Array::Int64(vals, Some(bm)).normalize_validity()
+        }
+        (Array::Utf8(d, _), DataType::Float64) => {
+            let mut vals = Vec::with_capacity(n);
+            let mut bm = Bitmap::new_null(n);
+            for i in 0..n {
+                match (col.is_valid(i), d.value(i).trim().parse::<f64>()) {
+                    (true, Ok(x)) => {
+                        vals.push(x);
+                        bm.set(i, true);
+                    }
+                    _ => vals.push(0.0),
+                }
+            }
+            Array::Float64(vals, Some(bm)).normalize_validity()
+        }
+        (Array::Utf8(d, _), DataType::Bool) => {
+            let mut vals = Vec::with_capacity(n);
+            let mut bm = Bitmap::new_null(n);
+            for i in 0..n {
+                if col.is_valid(i) {
+                    match d.value(i).trim().to_ascii_lowercase().as_str() {
+                        "true" | "1" => {
+                            vals.push(true);
+                            bm.set(i, true);
+                        }
+                        "false" | "0" => {
+                            vals.push(false);
+                            bm.set(i, true);
+                        }
+                        _ => vals.push(false),
+                    }
+                } else {
+                    vals.push(false);
+                }
+            }
+            Array::Bool(vals, Some(bm)).normalize_validity()
+        }
+        (_, DataType::Utf8) => {
+            let mut d = crate::table::array::Utf8Data::empty();
+            for i in 0..n {
+                if col.is_valid(i) {
+                    d.push(&col.get(i).to_string());
+                } else {
+                    d.push("");
+                }
+            }
+            Array::Utf8(d, v)
+        }
+        (c, t) => bail!("unsupported cast {} -> {t}", c.data_type()),
+    })
+}
+
+/// Cast named columns of a table (`df.astype({col: ty})`).
+pub fn cast_columns(table: &Table, specs: &[(&str, DataType)]) -> Result<Table> {
+    let mut out = table.clone();
+    for (name, ty) in specs {
+        let col = out.column_by_name(name)?;
+        out = out.with_column(name, cast(col, *ty)?)?;
+    }
+    Ok(out)
+}
+
+/// Cast every numeric-parseable column to Float64 (the UNOMT "fully
+/// numeric before tensors" step). Utf8 columns are attempted; columns
+/// that fail to parse on every non-null cell are left untouched.
+pub fn to_numeric_table(table: &Table) -> Result<Table> {
+    let mut out = table.clone();
+    for f in table.schema().fields() {
+        let col = out.column_by_name(&f.name)?.clone();
+        match f.data_type {
+            DataType::Float64 => {}
+            DataType::Int64 | DataType::Bool => {
+                out = out.with_column(&f.name, cast(&col, DataType::Float64)?)?;
+            }
+            DataType::Utf8 => {
+                let parsed = cast(&col, DataType::Float64)?;
+                // accept only if parsing preserved all non-null cells
+                if parsed.null_count() == col.null_count() {
+                    out = out.with_column(&f.name, parsed)?;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Scalar;
+
+    #[test]
+    fn numeric_casts() {
+        let i = Array::from_opt_i64(vec![Some(2), None]);
+        let f = cast(&i, DataType::Float64).unwrap();
+        assert_eq!(f.get(0), Scalar::Float64(2.0));
+        assert_eq!(f.get(1), Scalar::Null);
+        let back = cast(&Array::from_f64(vec![2.9, -1.2]), DataType::Int64).unwrap();
+        assert_eq!(back.i64_values().unwrap(), &[2, -1]);
+    }
+
+    #[test]
+    fn string_parsing() {
+        let s = Array::from_strs(&["1", "2.5", "x"]);
+        let f = cast(&s, DataType::Float64).unwrap();
+        assert_eq!(f.get(0), Scalar::Float64(1.0));
+        assert_eq!(f.get(1), Scalar::Float64(2.5));
+        assert_eq!(f.get(2), Scalar::Null);
+        let i = cast(&Array::from_strs(&[" 7 "]), DataType::Int64).unwrap();
+        assert_eq!(i.get(0), Scalar::Int64(7));
+    }
+
+    #[test]
+    fn bool_casts() {
+        let b = cast(&Array::from_strs(&["true", "0", "huh"]), DataType::Bool).unwrap();
+        assert_eq!(b.get(0), Scalar::Bool(true));
+        assert_eq!(b.get(1), Scalar::Bool(false));
+        assert_eq!(b.get(2), Scalar::Null);
+        let i = cast(&Array::from_bools(vec![true, false]), DataType::Int64).unwrap();
+        assert_eq!(i.i64_values().unwrap(), &[1, 0]);
+    }
+
+    #[test]
+    fn to_utf8() {
+        let s = cast(&Array::from_opt_i64(vec![Some(5), None]), DataType::Utf8).unwrap();
+        assert_eq!(s.get(0), Scalar::Utf8("5".into()));
+        assert_eq!(s.get(1), Scalar::Null);
+    }
+
+    #[test]
+    fn table_casts() {
+        let t = Table::from_columns(vec![
+            ("a", Array::from_strs(&["1", "2"])),
+            ("b", Array::from_strs(&["x", "y"])),
+            ("c", Array::from_i64(vec![1, 2])),
+        ])
+        .unwrap();
+        let out = to_numeric_table(&t).unwrap();
+        assert_eq!(out.column_by_name("a").unwrap().data_type(), DataType::Float64);
+        assert_eq!(out.column_by_name("b").unwrap().data_type(), DataType::Utf8); // unparseable kept
+        assert_eq!(out.column_by_name("c").unwrap().data_type(), DataType::Float64);
+
+        let c = cast_columns(&t, &[("a", DataType::Int64)]).unwrap();
+        assert_eq!(c.column_by_name("a").unwrap().data_type(), DataType::Int64);
+    }
+}

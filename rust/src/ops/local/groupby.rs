@@ -1,0 +1,440 @@
+//! GroupBy + Aggregate (Table 2, "GroupBy", "Aggregate").
+//!
+//! Hash-grouping over key columns followed by single-pass columnar
+//! accumulation. The distributed group-by (shuffle by key hash + local
+//! group-by) reuses this kernel.
+
+use crate::table::rowhash::{hash_columns, rows_eq};
+use crate::table::{Array, ArrayBuilder, DataType, Field, Schema, Table};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Aggregation function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Agg {
+    Sum,
+    Mean,
+    Min,
+    Max,
+    Count,
+    /// Population standard deviation.
+    Std,
+    /// Population variance.
+    Var,
+    First,
+    Last,
+}
+
+impl Agg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Agg::Sum => "sum",
+            Agg::Mean => "mean",
+            Agg::Min => "min",
+            Agg::Max => "max",
+            Agg::Count => "count",
+            Agg::Std => "std",
+            Agg::Var => "var",
+            Agg::First => "first",
+            Agg::Last => "last",
+        }
+    }
+
+    /// Output type given the input column type.
+    fn out_type(&self, input: DataType) -> Result<DataType> {
+        Ok(match self {
+            Agg::Count => DataType::Int64,
+            Agg::Mean | Agg::Std | Agg::Var => {
+                if !input.is_numeric() {
+                    bail!("{} requires a numeric column, got {input}", self.name());
+                }
+                DataType::Float64
+            }
+            Agg::Sum => {
+                if !input.is_numeric() {
+                    bail!("sum requires a numeric column, got {input}");
+                }
+                input
+            }
+            Agg::Min | Agg::Max | Agg::First | Agg::Last => input,
+        })
+    }
+}
+
+/// One aggregation request: `(input column, function, output name)`.
+#[derive(Debug, Clone)]
+pub struct AggSpec {
+    pub column: String,
+    pub agg: Agg,
+    pub out_name: String,
+}
+
+impl AggSpec {
+    pub fn new(column: impl Into<String>, agg: Agg) -> AggSpec {
+        let column = column.into();
+        let out_name = format!("{column}_{}", agg.name());
+        AggSpec { column, agg, out_name }
+    }
+
+    pub fn named(column: impl Into<String>, agg: Agg, out_name: impl Into<String>) -> AggSpec {
+        AggSpec { column: column.into(), agg, out_name: out_name.into() }
+    }
+}
+
+/// Group assignment: for each row, its group id; plus one representative
+/// row per group (first occurrence, in first-seen order).
+pub fn group_ids(table: &Table, keys: &[&str]) -> Result<(Vec<usize>, Vec<usize>)> {
+    let key_cols: Vec<&Array> = keys
+        .iter()
+        .map(|k| table.column_by_name(k))
+        .collect::<Result<_>>()?;
+    if key_cols.is_empty() {
+        bail!("groupby: no key columns");
+    }
+    let hashes = hash_columns(&key_cols);
+    let n = table.num_rows();
+    let mut ids = Vec::with_capacity(n);
+    let mut reps: Vec<usize> = Vec::new();
+    // Compact chaining (EXPERIMENTS.md §Perf): hash -> first group id
+    // (1-based) in `seen`, collision chain in `next_group` — no per-key
+    // Vec allocation.
+    let mut seen: HashMap<u64, u32> = HashMap::with_capacity(n);
+    let mut next_group: Vec<u32> = Vec::new(); // per group, 0 = end
+    for i in 0..n {
+        let slot = seen.entry(hashes[i]).or_insert(0);
+        let mut cur = *slot;
+        let mut gid = None;
+        while cur != 0 {
+            let g = (cur - 1) as usize;
+            if rows_eq(&key_cols, i, &key_cols, reps[g]) {
+                gid = Some(g);
+                break;
+            }
+            cur = next_group[g];
+        }
+        let g = match gid {
+            Some(g) => g,
+            None => {
+                let g = reps.len();
+                reps.push(i);
+                // prepend to the chain for this hash
+                next_group.push(*slot);
+                *slot = (g + 1) as u32;
+                g
+            }
+        };
+        ids.push(g);
+    }
+    Ok((ids, reps))
+}
+
+/// Columnar accumulator for one aggregation over all groups.
+enum Acc {
+    F64 { sum: Vec<f64>, count: Vec<u64> },
+    MinMaxF64(Vec<Option<f64>>),
+    MinMaxI64(Vec<Option<i64>>),
+    MinMaxStr(Vec<Option<String>>),
+    Count(Vec<i64>),
+    /// mean/std/var via Welford-free two-accumulator (sum, sumsq, count)
+    Moments { sum: Vec<f64>, sumsq: Vec<f64>, count: Vec<u64> },
+    FirstLast(Vec<Option<usize>>, bool /* last? */),
+    SumI64(Vec<i64>),
+}
+
+fn finish_acc(acc: Acc, agg: Agg, src: &Array) -> Array {
+    match acc {
+        Acc::F64 { sum, .. } => Array::from_f64(sum),
+        Acc::SumI64(v) => Array::from_i64(v),
+        Acc::Count(v) => Array::from_i64(v),
+        Acc::MinMaxF64(v) => Array::from_opt_f64(v),
+        Acc::MinMaxI64(v) => Array::from_opt_i64(v),
+        Acc::MinMaxStr(v) => {
+            Array::from_opt_strs(v.iter().map(|o| o.as_deref()).collect())
+        }
+        Acc::Moments { sum, sumsq, count } => {
+            let out: Vec<Option<f64>> = sum
+                .iter()
+                .zip(sumsq.iter())
+                .zip(count.iter())
+                .map(|((&s, &ss), &c)| {
+                    if c == 0 {
+                        None
+                    } else {
+                        let mean = s / c as f64;
+                        match agg {
+                            Agg::Mean => Some(mean),
+                            Agg::Var => Some((ss / c as f64 - mean * mean).max(0.0)),
+                            Agg::Std => Some((ss / c as f64 - mean * mean).max(0.0).sqrt()),
+                            _ => unreachable!(),
+                        }
+                    }
+                })
+                .collect();
+            Array::from_opt_f64(out)
+        }
+        Acc::FirstLast(rows, _) => {
+            let mut b = ArrayBuilder::with_capacity(src.data_type(), rows.len());
+            for r in rows {
+                match r {
+                    Some(i) => b.push_from(src, i),
+                    None => b.push_null(),
+                }
+            }
+            b.finish()
+        }
+    }
+}
+
+/// Group by `keys` and compute `aggs`. Output: key columns (group
+/// representatives, first-seen order) then one column per agg.
+pub fn groupby_aggregate(table: &Table, keys: &[&str], aggs: &[AggSpec]) -> Result<Table> {
+    let (ids, reps) = group_ids(table, keys)?;
+    let ngroups = reps.len();
+
+    let mut out_fields: Vec<Field> = Vec::new();
+    let mut out_cols: Vec<Array> = Vec::new();
+
+    // Key columns: gather group representatives.
+    for k in keys {
+        let col = table.column_by_name(k)?;
+        out_fields.push(Field::new(*k, col.data_type()));
+        out_cols.push(col.take(&reps));
+    }
+
+    for spec in aggs {
+        let src = table.column_by_name(&spec.column)?;
+        let out_ty = spec.agg.out_type(src.data_type())?;
+        let mut acc = match (spec.agg, src.data_type()) {
+            (Agg::Count, _) => Acc::Count(vec![0; ngroups]),
+            (Agg::Sum, DataType::Int64) => Acc::SumI64(vec![0; ngroups]),
+            (Agg::Sum, _) => Acc::F64 { sum: vec![0.0; ngroups], count: vec![0; ngroups] },
+            (Agg::Mean | Agg::Std | Agg::Var, _) => Acc::Moments {
+                sum: vec![0.0; ngroups],
+                sumsq: vec![0.0; ngroups],
+                count: vec![0; ngroups],
+            },
+            (Agg::Min | Agg::Max, DataType::Int64) => Acc::MinMaxI64(vec![None; ngroups]),
+            (Agg::Min | Agg::Max, DataType::Float64) => Acc::MinMaxF64(vec![None; ngroups]),
+            (Agg::Min | Agg::Max, DataType::Utf8) => Acc::MinMaxStr(vec![None; ngroups]),
+            (Agg::Min | Agg::Max, DataType::Bool) => {
+                bail!("min/max on bool not supported")
+            }
+            (Agg::First, _) => Acc::FirstLast(vec![None; ngroups], false),
+            (Agg::Last, _) => Acc::FirstLast(vec![None; ngroups], true),
+        };
+
+        let want_max = spec.agg == Agg::Max;
+        for (i, &g) in ids.iter().enumerate() {
+            match &mut acc {
+                Acc::Count(v) => {
+                    if src.is_valid(i) {
+                        v[g] += 1;
+                    }
+                }
+                Acc::SumI64(v) => {
+                    if let Array::Int64(vals, _) = src {
+                        if src.is_valid(i) {
+                            v[g] += vals[i];
+                        }
+                    }
+                }
+                Acc::F64 { sum, count } => {
+                    if let Some(x) = src.f64_at(i) {
+                        sum[g] += x;
+                        count[g] += 1;
+                    }
+                }
+                Acc::Moments { sum, sumsq, count } => {
+                    if let Some(x) = src.f64_at(i) {
+                        sum[g] += x;
+                        sumsq[g] += x * x;
+                        count[g] += 1;
+                    }
+                }
+                Acc::MinMaxI64(v) => {
+                    if let (Array::Int64(vals, _), true) = (src, src.is_valid(i)) {
+                        let x = vals[i];
+                        v[g] = Some(match v[g] {
+                            None => x,
+                            Some(c) if want_max => c.max(x),
+                            Some(c) => c.min(x),
+                        });
+                    }
+                }
+                Acc::MinMaxF64(v) => {
+                    if let Some(x) = src.f64_at(i) {
+                        v[g] = Some(match v[g] {
+                            None => x,
+                            Some(c) if want_max => c.max(x),
+                            Some(c) => c.min(x),
+                        });
+                    }
+                }
+                Acc::MinMaxStr(v) => {
+                    if let (Array::Utf8(d, _), true) = (src, src.is_valid(i)) {
+                        let x = d.value(i);
+                        match &v[g] {
+                            None => v[g] = Some(x.to_string()),
+                            Some(c) => {
+                                if (want_max && x > c.as_str()) || (!want_max && x < c.as_str()) {
+                                    v[g] = Some(x.to_string());
+                                }
+                            }
+                        }
+                    }
+                }
+                Acc::FirstLast(v, last) => {
+                    if src.is_valid(i) && (*last || v[g].is_none()) {
+                        v[g] = Some(i);
+                    }
+                }
+            }
+        }
+        let arr = finish_acc(acc, spec.agg, src);
+        debug_assert_eq!(arr.data_type(), out_ty);
+        out_fields.push(Field::new(spec.out_name.clone(), out_ty));
+        out_cols.push(arr);
+    }
+
+    Table::new(Schema::new(out_fields), out_cols)
+}
+
+/// Whole-table aggregation (no keys): one output row.
+pub fn aggregate(table: &Table, aggs: &[AggSpec]) -> Result<Table> {
+    // Reuse the grouped path with a constant key, then drop it.
+    let tmp = table.with_column("__all", Array::from_i64(vec![0; table.num_rows()]))?;
+    if table.num_rows() == 0 {
+        // groupby of empty input yields zero groups; synthesise one null row
+        let mut fields = Vec::new();
+        let mut cols = Vec::new();
+        for spec in aggs {
+            let src = table.column_by_name(&spec.column)?;
+            let ty = spec.agg.out_type(src.data_type())?;
+            fields.push(Field::new(spec.out_name.clone(), ty));
+            let mut b = ArrayBuilder::with_capacity(ty, 1);
+            if spec.agg == Agg::Count {
+                b.push_i64(0);
+            } else {
+                b.push_null();
+            }
+            cols.push(b.finish());
+        }
+        return Table::new(Schema::new(fields), cols);
+    }
+    let g = groupby_aggregate(&tmp, &["__all"], aggs)?;
+    g.drop_columns(&["__all"])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Scalar;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("g", Array::from_strs(&["a", "b", "a", "b", "a"])),
+            ("x", Array::from_opt_i64(vec![Some(1), Some(2), Some(3), None, Some(5)])),
+            ("y", Array::from_f64(vec![1.0, 2.0, 3.0, 4.0, 5.0])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn sums_and_counts() {
+        let g = groupby_aggregate(
+            &t(),
+            &["g"],
+            &[AggSpec::new("x", Agg::Sum), AggSpec::new("x", Agg::Count)],
+        )
+        .unwrap();
+        assert_eq!(g.num_rows(), 2);
+        // first-seen order: a then b
+        assert_eq!(g.cell(0, 0), Scalar::Utf8("a".into()));
+        assert_eq!(g.cell(0, 1), Scalar::Int64(9)); // 1+3+5
+        assert_eq!(g.cell(0, 2), Scalar::Int64(3));
+        assert_eq!(g.cell(1, 1), Scalar::Int64(2)); // null skipped
+        assert_eq!(g.cell(1, 2), Scalar::Int64(1));
+    }
+
+    #[test]
+    fn moments() {
+        let g = groupby_aggregate(
+            &t(),
+            &["g"],
+            &[
+                AggSpec::new("y", Agg::Mean),
+                AggSpec::new("y", Agg::Var),
+                AggSpec::new("y", Agg::Std),
+            ],
+        )
+        .unwrap();
+        // group a: y = 1,3,5 → mean 3, var 8/3
+        assert_eq!(g.cell(0, 1), Scalar::Float64(3.0));
+        let var = g.cell(0, 2).as_f64().unwrap();
+        assert!((var - 8.0 / 3.0).abs() < 1e-12);
+        let std = g.cell(0, 3).as_f64().unwrap();
+        assert!((std - (8.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max_first_last() {
+        let g = groupby_aggregate(
+            &t(),
+            &["g"],
+            &[
+                AggSpec::new("x", Agg::Min),
+                AggSpec::new("x", Agg::Max),
+                AggSpec::new("y", Agg::First),
+                AggSpec::new("y", Agg::Last),
+            ],
+        )
+        .unwrap();
+        assert_eq!(g.cell(0, 1), Scalar::Int64(1));
+        assert_eq!(g.cell(0, 2), Scalar::Int64(5));
+        assert_eq!(g.cell(1, 3), Scalar::Float64(2.0));
+        assert_eq!(g.cell(1, 4), Scalar::Float64(4.0));
+    }
+
+    #[test]
+    fn string_min_max() {
+        let g = groupby_aggregate(
+            &t(),
+            &["g"],
+            &[AggSpec::new("g", Agg::Min), AggSpec::new("g", Agg::Max)],
+        )
+        .unwrap();
+        assert_eq!(g.cell(0, 1), Scalar::Utf8("a".into()));
+    }
+
+    #[test]
+    fn null_keys_form_a_group() {
+        let tbl = Table::from_columns(vec![
+            ("k", Array::from_opt_i64(vec![None, Some(1), None])),
+            ("v", Array::from_i64(vec![10, 20, 30])),
+        ])
+        .unwrap();
+        let g = groupby_aggregate(&tbl, &["k"], &[AggSpec::new("v", Agg::Sum)]).unwrap();
+        assert_eq!(g.num_rows(), 2);
+        assert_eq!(g.cell(0, 0), Scalar::Null);
+        assert_eq!(g.cell(0, 1), Scalar::Int64(40));
+    }
+
+    #[test]
+    fn whole_table_aggregate() {
+        let a = aggregate(&t(), &[AggSpec::new("y", Agg::Sum), AggSpec::new("x", Agg::Count)]).unwrap();
+        assert_eq!(a.num_rows(), 1);
+        assert_eq!(a.cell(0, 0), Scalar::Float64(15.0));
+        assert_eq!(a.cell(0, 1), Scalar::Int64(4));
+        // empty input
+        let e = aggregate(&t().slice(0, 0), &[AggSpec::new("x", Agg::Count), AggSpec::new("y", Agg::Sum)])
+            .unwrap();
+        assert_eq!(e.cell(0, 0), Scalar::Int64(0));
+        assert_eq!(e.cell(0, 1), Scalar::Null);
+    }
+
+    #[test]
+    fn type_errors() {
+        assert!(groupby_aggregate(&t(), &["g"], &[AggSpec::new("g", Agg::Sum)]).is_err());
+        assert!(groupby_aggregate(&t(), &[], &[AggSpec::new("x", Agg::Sum)]).is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! `isin`: membership mask of a column against a set of values
+//! (the UNOMT pipeline's drug/RNA filtering step, Fig 11).
+
+use crate::table::rowhash::{cell_eq, hash_columns};
+use crate::table::{Array, Table};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Boolean mask: `mask[i] = column[i] ∈ values`. Null cells yield false
+/// (Pandas semantics).
+pub fn isin_mask(column: &Array, values: &Array) -> Vec<bool> {
+    let vh = hash_columns(&[values]);
+    let mut set: HashMap<u64, Vec<u32>> = HashMap::with_capacity(values.len());
+    for (j, &h) in vh.iter().enumerate() {
+        if values.is_valid(j) {
+            set.entry(h).or_default().push(j as u32);
+        }
+    }
+    let ch = hash_columns(&[column]);
+    (0..column.len())
+        .map(|i| {
+            column.is_valid(i)
+                && set.get(&ch[i]).map_or(false, |cands| {
+                    cands.iter().any(|&j| cell_eq(column, i, values, j as usize))
+                })
+        })
+        .collect()
+}
+
+/// Filter `table` to rows whose `column` value appears in `values`.
+pub fn filter_isin(table: &Table, column: &str, values: &Array) -> Result<Table> {
+    let col = table.column_by_name(column)?;
+    let mask = isin_mask(col, values);
+    let idx: Vec<usize> = mask
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &m)| if m { Some(i) } else { None })
+        .collect();
+    Ok(table.take(&idx))
+}
+
+/// Filter to rows whose `column` value does NOT appear in `values`.
+pub fn filter_not_in(table: &Table, column: &str, values: &Array) -> Result<Table> {
+    let col = table.column_by_name(column)?;
+    let mask = isin_mask(col, values);
+    let idx: Vec<usize> = mask
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &m)| if !m { Some(i) } else { None })
+        .collect();
+    Ok(table.take(&idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Scalar;
+
+    #[test]
+    fn int_membership() {
+        let col = Array::from_opt_i64(vec![Some(1), Some(2), None, Some(4)]);
+        let vals = Array::from_i64(vec![2, 4, 99]);
+        assert_eq!(isin_mask(&col, &vals), vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn string_membership() {
+        let col = Array::from_strs(&["a", "b", "c"]);
+        let vals = Array::from_strs(&["c", "a"]);
+        assert_eq!(isin_mask(&col, &vals), vec![true, false, true]);
+    }
+
+    #[test]
+    fn null_values_in_set_ignored() {
+        let col = Array::from_opt_i64(vec![None, Some(1)]);
+        let vals = Array::from_opt_i64(vec![None, Some(1)]);
+        // null ∈ set is false even when the set contains null (Pandas)
+        assert_eq!(isin_mask(&col, &vals), vec![false, true]);
+    }
+
+    #[test]
+    fn table_filters() {
+        let t = Table::from_columns(vec![
+            ("id", Array::from_strs(&["d1", "d2", "d3"])),
+            ("x", Array::from_i64(vec![1, 2, 3])),
+        ])
+        .unwrap();
+        let keep = Array::from_strs(&["d3", "d1"]);
+        let f = filter_isin(&t, "id", &keep).unwrap();
+        assert_eq!(f.num_rows(), 2);
+        assert_eq!(f.cell(0, 0), Scalar::Utf8("d1".into()));
+        let n = filter_not_in(&t, "id", &keep).unwrap();
+        assert_eq!(n.num_rows(), 1);
+        assert_eq!(n.cell(0, 0), Scalar::Utf8("d2".into()));
+    }
+}

@@ -1,0 +1,415 @@
+//! Join: combine two tables on key columns (Table 2, "Join").
+//!
+//! Variants: inner, left, right, full outer. Algorithms: hash (build on
+//! the right side, probe from the left — preserves left order, which is
+//! what Pandas `merge` does) and sort-merge. Null keys never match
+//! (SQL semantics); under outer variants they surface as unmatched rows.
+//!
+//! The distributed join (Table 5: "partition + shuffle + local join")
+//! reuses exactly this kernel after the shuffle step.
+
+use crate::table::rowhash::{any_null, hash_columns, rows_eq};
+use crate::table::{Array, Field, Schema, Table};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Join variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinType {
+    Inner,
+    Left,
+    Right,
+    FullOuter,
+}
+
+/// Join algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinAlgorithm {
+    Hash,
+    SortMerge,
+}
+
+/// Matched row-index pairs, sentinel-encoded: `u32::MAX` marks the
+/// null side of outer rows (half the memory traffic of
+/// `(Option<usize>, Option<usize>)` on multi-million-row outputs —
+/// EXPERIMENTS.md §Perf).
+const NONE_IDX: u32 = u32::MAX;
+type Pairs = Vec<(u32, u32)>;
+
+fn key_columns<'a>(t: &'a Table, on: &[&str]) -> Result<Vec<&'a Array>> {
+    if on.is_empty() {
+        bail!("join: empty key list");
+    }
+    on.iter().map(|c| t.column_by_name(c)).collect()
+}
+
+/// Hash join pair production.
+///
+/// Perf notes (EXPERIMENTS.md §Perf): the build side uses compact
+/// head/next chaining — one `HashMap<u64, u32>` of chain heads plus a
+/// flat `next` array — instead of `HashMap<u64, Vec<u32>>`, avoiding a
+/// heap allocation per distinct key; chains are built in reverse so
+/// probes see right rows in ascending order.
+fn hash_pairs(
+    lk: &[&Array],
+    rk: &[&Array],
+    jt: JoinType,
+    lrows: usize,
+    rrows: usize,
+) -> Pairs {
+    // Build on right: hash -> first row (1-based), next[] chains.
+    let rh = hash_columns(rk);
+    let mut head: HashMap<u64, u32> = HashMap::with_capacity(rrows);
+    let mut next: Vec<u32> = vec![0; rrows]; // 0 = end of chain
+    for j in (0..rrows).rev() {
+        if any_null(rk, j) {
+            continue;
+        }
+        let slot = head.entry(rh[j]).or_insert(0);
+        next[j] = *slot;
+        *slot = (j + 1) as u32;
+    }
+
+    let lh = hash_columns(lk);
+    let mut pairs: Pairs = Vec::with_capacity(lrows);
+    let mut right_matched = vec![false; rrows];
+    for i in 0..lrows {
+        let mut matched = false;
+        if !any_null(lk, i) {
+            if let Some(&first) = head.get(&lh[i]) {
+                let mut cur = first;
+                while cur != 0 {
+                    let j = (cur - 1) as usize;
+                    if rows_eq(lk, i, rk, j) {
+                        pairs.push((i as u32, j as u32));
+                        right_matched[j] = true;
+                        matched = true;
+                    }
+                    cur = next[j];
+                }
+            }
+        }
+        if !matched && matches!(jt, JoinType::Left | JoinType::FullOuter) {
+            pairs.push((i as u32, NONE_IDX));
+        }
+    }
+    if matches!(jt, JoinType::Right | JoinType::FullOuter) {
+        // Unmatched right rows — including null-key rows, which are
+        // never matched by construction.
+        for (j, m) in right_matched.iter().enumerate() {
+            if !m {
+                pairs.push((NONE_IDX, j as u32));
+            }
+        }
+    }
+    pairs
+}
+
+/// Order rows by key for the merge pass. Nulls sort last and are
+/// chopped off (they never match); returns (sorted indices, valid_len).
+fn merge_order(keys: &[&Array], nrows: usize) -> (Vec<usize>, usize) {
+    use crate::table::rowhash::canonical_f64_total_cmp;
+    use std::cmp::Ordering;
+
+    let mut idx: Vec<usize> = (0..nrows).collect();
+    let cmp_cell = |col: &Array, a: usize, b: usize| -> Ordering {
+        match col {
+            Array::Int64(v, _) => v[a].cmp(&v[b]),
+            Array::Float64(v, _) => canonical_f64_total_cmp(v[a], v[b]),
+            Array::Utf8(d, _) => d.value(a).cmp(d.value(b)),
+            Array::Bool(v, _) => v[a].cmp(&v[b]),
+        }
+    };
+    idx.sort_by(|&a, &b| {
+        let an = any_null(keys, a);
+        let bn = any_null(keys, b);
+        match (an, bn) {
+            (true, true) => return Ordering::Equal,
+            (true, false) => return Ordering::Greater,
+            (false, true) => return Ordering::Less,
+            (false, false) => {}
+        }
+        for col in keys {
+            let o = cmp_cell(col, a, b);
+            if o != Ordering::Equal {
+                return o;
+            }
+        }
+        Ordering::Equal
+    });
+    let valid = idx.iter().take_while(|&&i| !any_null(keys, i)).count();
+    (idx, valid)
+}
+
+fn keys_cmp(lk: &[&Array], i: usize, rk: &[&Array], j: usize) -> std::cmp::Ordering {
+    use crate::table::rowhash::canonical_f64_total_cmp;
+    use std::cmp::Ordering;
+    for (a, b) in lk.iter().zip(rk.iter()) {
+        let o = match (a, b) {
+            (Array::Int64(x, _), Array::Int64(y, _)) => x[i].cmp(&y[j]),
+            (Array::Float64(x, _), Array::Float64(y, _)) => canonical_f64_total_cmp(x[i], y[j]),
+            (Array::Utf8(x, _), Array::Utf8(y, _)) => x.value(i).cmp(y.value(j)),
+            (Array::Bool(x, _), Array::Bool(y, _)) => x[i].cmp(&y[j]),
+            _ => unreachable!("join key types validated earlier"),
+        };
+        if o != Ordering::Equal {
+            return o;
+        }
+    }
+    Ordering::Equal
+}
+
+/// Sort-merge join pair production.
+fn merge_pairs(
+    lk: &[&Array],
+    rk: &[&Array],
+    jt: JoinType,
+    lrows: usize,
+    rrows: usize,
+) -> Pairs {
+    use std::cmp::Ordering;
+    let (lidx, lvalid) = merge_order(lk, lrows);
+    let (ridx, rvalid) = merge_order(rk, rrows);
+
+    let mut pairs: Pairs = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut right_matched = vec![false; rrows];
+    while i < lvalid && j < rvalid {
+        match keys_cmp(lk, lidx[i], rk, ridx[j]) {
+            Ordering::Less => {
+                if matches!(jt, JoinType::Left | JoinType::FullOuter) {
+                    pairs.push((lidx[i] as u32, NONE_IDX));
+                }
+                i += 1;
+            }
+            Ordering::Greater => {
+                j += 1; // right-unmatched handled by the sweep below
+            }
+            Ordering::Equal => {
+                // Gather the equal-key run on both sides.
+                let i0 = i;
+                while i < lvalid && keys_cmp(lk, lidx[i], rk, ridx[j]) == Ordering::Equal {
+                    i += 1;
+                }
+                let j0 = j;
+                while j < rvalid && keys_cmp(lk, lidx[i0], rk, ridx[j]) == Ordering::Equal {
+                    j += 1;
+                }
+                for a in i0..i {
+                    for b in j0..j {
+                        pairs.push((lidx[a] as u32, ridx[b] as u32));
+                        right_matched[ridx[b]] = true;
+                    }
+                }
+            }
+        }
+    }
+    if matches!(jt, JoinType::Left | JoinType::FullOuter) {
+        while i < lvalid {
+            pairs.push((lidx[i] as u32, NONE_IDX));
+            i += 1;
+        }
+        // left null-key rows are unmatched
+        for &li in &lidx[lvalid..] {
+            pairs.push((li as u32, NONE_IDX));
+        }
+    }
+    if matches!(jt, JoinType::Right | JoinType::FullOuter) {
+        for (jrow, m) in right_matched.iter().enumerate() {
+            if !m {
+                pairs.push((NONE_IDX, jrow as u32));
+            }
+        }
+    }
+    pairs
+}
+
+/// Output schema: left fields unchanged; right fields get `_r` appended
+/// on name collision.
+fn join_schema(left: &Table, right: &Table) -> Schema {
+    let mut fields: Vec<Field> = left.schema().fields().to_vec();
+    for f in right.schema().fields() {
+        let name = if left.schema().contains(&f.name) {
+            format!("{}_r", f.name)
+        } else {
+            f.name.clone()
+        };
+        fields.push(Field::new(name, f.data_type));
+    }
+    Schema::new(fields)
+}
+
+/// Join `left` and `right` on parallel key-column lists.
+pub fn join(
+    left: &Table,
+    right: &Table,
+    left_on: &[&str],
+    right_on: &[&str],
+    jt: JoinType,
+    algo: JoinAlgorithm,
+) -> Result<Table> {
+    if left_on.len() != right_on.len() {
+        bail!("join: key arity mismatch ({} vs {})", left_on.len(), right_on.len());
+    }
+    let lk = key_columns(left, left_on)?;
+    let rk = key_columns(right, right_on)?;
+    for (a, b) in lk.iter().zip(rk.iter()) {
+        if a.data_type() != b.data_type() {
+            bail!("join: key type mismatch {} vs {}", a.data_type(), b.data_type());
+        }
+    }
+
+    let pairs = match algo {
+        JoinAlgorithm::Hash => hash_pairs(&lk, &rk, jt, left.num_rows(), right.num_rows()),
+        JoinAlgorithm::SortMerge => merge_pairs(&lk, &rk, jt, left.num_rows(), right.num_rows()),
+    };
+
+    let mut columns = Vec::with_capacity(left.num_columns() + right.num_columns());
+    if jt == JoinType::Inner {
+        // Fast path: inner joins never produce null slots — gather with
+        // the dense single-pass `take` (EXPERIMENTS.md §Perf).
+        let lidx: Vec<usize> = pairs.iter().map(|p| p.0 as usize).collect();
+        let ridx: Vec<usize> = pairs.iter().map(|p| p.1 as usize).collect();
+        for c in left.columns() {
+            columns.push(c.take(&lidx));
+        }
+        for c in right.columns() {
+            columns.push(c.take(&ridx));
+        }
+    } else {
+        let opt = |x: u32| if x == NONE_IDX { None } else { Some(x as usize) };
+        let lidx: Vec<Option<usize>> = pairs.iter().map(|p| opt(p.0)).collect();
+        let ridx: Vec<Option<usize>> = pairs.iter().map(|p| opt(p.1)).collect();
+        for c in left.columns() {
+            columns.push(c.take_opt(&lidx));
+        }
+        for c in right.columns() {
+            columns.push(c.take_opt(&ridx));
+        }
+    }
+    Table::new(join_schema(left, right), columns)
+}
+
+/// Inner hash join shorthand.
+pub fn inner_join(left: &Table, right: &Table, left_on: &[&str], right_on: &[&str]) -> Result<Table> {
+    join(left, right, left_on, right_on, JoinType::Inner, JoinAlgorithm::Hash)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Scalar;
+
+    fn left() -> Table {
+        Table::from_columns(vec![
+            ("k", Array::from_opt_i64(vec![Some(1), Some(2), Some(2), None, Some(5)])),
+            ("lv", Array::from_strs(&["a", "b", "c", "d", "e"])),
+        ])
+        .unwrap()
+    }
+
+    fn right() -> Table {
+        Table::from_columns(vec![
+            ("k", Array::from_opt_i64(vec![Some(2), Some(2), Some(3), None])),
+            ("rv", Array::from_strs(&["x", "y", "z", "w"])),
+        ])
+        .unwrap()
+    }
+
+    fn sorted_rows(t: &Table) -> Vec<Vec<String>> {
+        let mut rows: Vec<Vec<String>> = (0..t.num_rows())
+            .map(|i| t.row(i).iter().map(|s| s.to_string()).collect())
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    #[test]
+    fn inner_hash() {
+        let j = inner_join(&left(), &right(), &["k"], &["k"]).unwrap();
+        // k=2 matches: left rows b,c × right rows x,y = 4 pairs
+        assert_eq!(j.num_rows(), 4);
+        assert_eq!(j.schema().names(), vec!["k", "lv", "k_r", "rv"]);
+    }
+
+    #[test]
+    fn null_keys_never_match() {
+        let j = inner_join(&left(), &right(), &["k"], &["k"]).unwrap();
+        for i in 0..j.num_rows() {
+            assert_ne!(j.cell(i, 0), Scalar::Null);
+        }
+    }
+
+    #[test]
+    fn left_join_keeps_unmatched() {
+        let j = join(&left(), &right(), &["k"], &["k"], JoinType::Left, JoinAlgorithm::Hash).unwrap();
+        // 4 matches + unmatched left rows (k=1, k=null, k=5)
+        assert_eq!(j.num_rows(), 7);
+        let nulls_rv = (0..j.num_rows()).filter(|&i| j.cell(i, 3) == Scalar::Null).count();
+        assert_eq!(nulls_rv, 3);
+    }
+
+    #[test]
+    fn right_join_keeps_unmatched_right() {
+        let j = join(&left(), &right(), &["k"], &["k"], JoinType::Right, JoinAlgorithm::Hash).unwrap();
+        // 4 matches + right k=3 + right null
+        assert_eq!(j.num_rows(), 6);
+    }
+
+    #[test]
+    fn full_outer_counts() {
+        let j =
+            join(&left(), &right(), &["k"], &["k"], JoinType::FullOuter, JoinAlgorithm::Hash).unwrap();
+        // 4 matches + 3 left-only + 2 right-only
+        assert_eq!(j.num_rows(), 9);
+    }
+
+    #[test]
+    fn sort_merge_matches_hash_all_types() {
+        for jt in [JoinType::Inner, JoinType::Left, JoinType::Right, JoinType::FullOuter] {
+            let h = join(&left(), &right(), &["k"], &["k"], jt, JoinAlgorithm::Hash).unwrap();
+            let m = join(&left(), &right(), &["k"], &["k"], jt, JoinAlgorithm::SortMerge).unwrap();
+            assert_eq!(sorted_rows(&h), sorted_rows(&m), "join type {jt:?}");
+        }
+    }
+
+    #[test]
+    fn multi_key_join() {
+        let l = Table::from_columns(vec![
+            ("a", Array::from_i64(vec![1, 1, 2])),
+            ("b", Array::from_strs(&["x", "y", "x"])),
+            ("lv", Array::from_i64(vec![10, 20, 30])),
+        ])
+        .unwrap();
+        let r = Table::from_columns(vec![
+            ("a", Array::from_i64(vec![1, 2])),
+            ("b", Array::from_strs(&["y", "x"])),
+            ("rv", Array::from_i64(vec![100, 200])),
+        ])
+        .unwrap();
+        let j = inner_join(&l, &r, &["a", "b"], &["a", "b"]).unwrap();
+        assert_eq!(j.num_rows(), 2);
+        let rows = sorted_rows(&j);
+        assert_eq!(rows[0], vec!["1", "y", "20", "1", "y", "100"]);
+    }
+
+    #[test]
+    fn key_validation() {
+        assert!(join(&left(), &right(), &["k"], &[], JoinType::Inner, JoinAlgorithm::Hash).is_err());
+        let r2 = right().rename("k", "kk").unwrap();
+        assert!(inner_join(&left(), &r2, &["k"], &["k"]).is_err());
+        // type mismatch
+        let r3 = Table::from_columns(vec![("k", Array::from_strs(&["1"]))]).unwrap();
+        assert!(inner_join(&left(), &r3, &["k"], &["k"]).is_err());
+    }
+
+    #[test]
+    fn empty_sides() {
+        let e = left().slice(0, 0);
+        let j = inner_join(&e, &right(), &["k"], &["k"]).unwrap();
+        assert_eq!(j.num_rows(), 0);
+        let j = join(&left(), &right().slice(0, 0), &["k"], &["k"], JoinType::Left, JoinAlgorithm::Hash)
+            .unwrap();
+        assert_eq!(j.num_rows(), left().num_rows());
+    }
+}

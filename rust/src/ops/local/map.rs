@@ -1,0 +1,206 @@
+//! Map / apply: element-wise column transforms (the UNOMT pipeline's
+//! drug-id cleanup `map` step, plus general numeric transforms).
+
+use crate::table::{Array, Bitmap, Table};
+use anyhow::{bail, Result};
+
+/// Apply a string→string function to a Utf8 column (nulls pass through).
+pub fn map_utf8<F: FnMut(&str) -> String>(col: &Array, mut f: F) -> Result<Array> {
+    let Some(d) = col.utf8_data() else {
+        bail!("map_utf8 on {} column", col.data_type())
+    };
+    let mut out = crate::table::array::Utf8Data::empty();
+    for i in 0..col.len() {
+        if col.is_valid(i) {
+            out.push(&f(d.value(i)));
+        } else {
+            out.push("");
+        }
+    }
+    Ok(Array::Utf8(out, col.validity().cloned()))
+}
+
+/// Apply an f64→f64 function to a numeric column (ints widen to float;
+/// nulls pass through).
+pub fn map_f64<F: FnMut(f64) -> f64>(col: &Array, mut f: F) -> Result<Array> {
+    if !col.data_type().is_numeric() {
+        bail!("map_f64 on {} column", col.data_type());
+    }
+    let out: Vec<f64> = (0..col.len())
+        .map(|i| col.f64_at(i).map(&mut f).unwrap_or(0.0))
+        .collect();
+    Ok(Array::Float64(out, col.validity().cloned()))
+}
+
+/// Apply an i64→i64 function to an Int64 column.
+pub fn map_i64<F: FnMut(i64) -> i64>(col: &Array, mut f: F) -> Result<Array> {
+    let Some(v) = col.i64_values() else {
+        bail!("map_i64 on {} column", col.data_type())
+    };
+    let out: Vec<i64> = v.iter().map(|&x| f(x)).collect();
+    Ok(Array::Int64(out, col.validity().cloned()))
+}
+
+/// Replace one column with a mapped version (Pandas
+/// `df[col] = df[col].map(f)`).
+pub fn map_column_utf8<F: FnMut(&str) -> String>(
+    table: &Table,
+    column: &str,
+    f: F,
+) -> Result<Table> {
+    let col = table.column_by_name(column)?;
+    table.with_column(column, map_utf8(col, f)?)
+}
+
+/// Numeric in-place map over a column.
+pub fn map_column_f64<F: FnMut(f64) -> f64>(table: &Table, column: &str, f: F) -> Result<Table> {
+    let col = table.column_by_name(column)?;
+    table.with_column(column, map_f64(col, f)?)
+}
+
+/// Strip a set of characters anywhere in the string (UNOMT drug-id
+/// symbol cleanup: `"NSC.123" → "NSC123"`).
+pub fn strip_chars(col: &Array, chars: &[char]) -> Result<Array> {
+    map_utf8(col, |s| s.chars().filter(|c| !chars.contains(c)).collect())
+}
+
+/// Min-max scale numeric columns to [0, 1] (the Scikit-learn
+/// `MinMaxScaler` role in the UNOMT pipeline). Constant columns map
+/// to 0. Returns the scaled table plus per-column (min, max).
+pub fn min_max_scale(table: &Table, columns: &[&str]) -> Result<(Table, Vec<(f64, f64)>)> {
+    let mut out = table.clone();
+    let mut ranges = Vec::with_capacity(columns.len());
+    for c in columns {
+        let col = table.column_by_name(c)?;
+        if !col.data_type().is_numeric() {
+            bail!("min_max_scale: column {c:?} is {}", col.data_type());
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for i in 0..col.len() {
+            if let Some(x) = col.f64_at(i) {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+        }
+        if !lo.is_finite() {
+            // all-null column
+            lo = 0.0;
+            hi = 0.0;
+        }
+        let span = hi - lo;
+        let scaled = map_f64(col, |x| if span > 0.0 { (x - lo) / span } else { 0.0 })?;
+        out = out.with_column(c, scaled)?;
+        ranges.push((lo, hi));
+    }
+    Ok((out, ranges))
+}
+
+/// Standard-score scale (x-mean)/std over numeric columns (the
+/// Scikit-learn `StandardScaler` role). Returns per-column (mean, std).
+pub fn standard_scale(table: &Table, columns: &[&str]) -> Result<(Table, Vec<(f64, f64)>)> {
+    let mut out = table.clone();
+    let mut stats = Vec::with_capacity(columns.len());
+    for c in columns {
+        let col = table.column_by_name(c)?;
+        if !col.data_type().is_numeric() {
+            bail!("standard_scale: column {c:?} is {}", col.data_type());
+        }
+        let (mut sum, mut sumsq, mut n) = (0.0, 0.0, 0u64);
+        for i in 0..col.len() {
+            if let Some(x) = col.f64_at(i) {
+                sum += x;
+                sumsq += x * x;
+                n += 1;
+            }
+        }
+        let mean = if n > 0 { sum / n as f64 } else { 0.0 };
+        let var = if n > 0 { (sumsq / n as f64 - mean * mean).max(0.0) } else { 0.0 };
+        let std = var.sqrt();
+        let scaled = map_f64(col, |x| if std > 0.0 { (x - mean) / std } else { 0.0 })?;
+        out = out.with_column(c, scaled)?;
+        stats.push((mean, std));
+    }
+    Ok((out, stats))
+}
+
+/// Build a boolean column from a per-row predicate (helper for bespoke
+/// conditions; result has no nulls).
+pub fn build_mask<F: FnMut(usize) -> bool>(nrows: usize, mut f: F) -> Array {
+    Array::Bool((0..nrows).map(|i| f(i)).collect(), None)
+}
+
+/// Null-safe equality mask between two columns of the same type.
+pub fn eq_mask(a: &Array, b: &Array) -> Result<Array> {
+    if a.len() != b.len() {
+        bail!("eq_mask: length mismatch");
+    }
+    let vals: Vec<bool> = (0..a.len())
+        .map(|i| crate::table::rowhash::cell_eq(a, i, b, i))
+        .collect();
+    let _ = Bitmap::new_valid(0); // keep Bitmap import for future use
+    Ok(Array::Bool(vals, None))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Scalar;
+
+    #[test]
+    fn utf8_map_preserves_nulls() {
+        let col = Array::from_opt_strs(vec![Some("NSC.123"), None, Some("A-B")]);
+        let out = strip_chars(&col, &['.', '-']).unwrap();
+        assert_eq!(out.get(0), Scalar::Utf8("NSC123".into()));
+        assert_eq!(out.get(1), Scalar::Null);
+        assert_eq!(out.get(2), Scalar::Utf8("AB".into()));
+    }
+
+    #[test]
+    fn numeric_maps() {
+        let col = Array::from_opt_i64(vec![Some(2), None]);
+        let f = map_f64(&col, |x| x * 10.0).unwrap();
+        assert_eq!(f.get(0), Scalar::Float64(20.0));
+        assert_eq!(f.get(1), Scalar::Null);
+        let i = map_i64(&Array::from_i64(vec![1, 2]), |x| x + 1).unwrap();
+        assert_eq!(i.i64_values().unwrap(), &[2, 3]);
+        assert!(map_i64(&Array::from_f64(vec![1.0]), |x| x).is_err());
+    }
+
+    #[test]
+    fn min_max_scaling() {
+        let t = Table::from_columns(vec![
+            ("x", Array::from_f64(vec![0.0, 5.0, 10.0])),
+            ("c", Array::from_f64(vec![3.0, 3.0, 3.0])),
+        ])
+        .unwrap();
+        let (s, ranges) = min_max_scale(&t, &["x", "c"]).unwrap();
+        assert_eq!(s.cell(1, 0), Scalar::Float64(0.5));
+        assert_eq!(s.cell(0, 1), Scalar::Float64(0.0)); // constant column
+        assert_eq!(ranges[0], (0.0, 10.0));
+    }
+
+    #[test]
+    fn standard_scaling() {
+        let t = Table::from_columns(vec![("x", Array::from_f64(vec![1.0, 3.0]))]).unwrap();
+        let (s, stats) = standard_scale(&t, &["x"]).unwrap();
+        assert_eq!(stats[0].0, 2.0);
+        assert_eq!(s.cell(0, 0), Scalar::Float64(-1.0));
+        assert_eq!(s.cell(1, 0), Scalar::Float64(1.0));
+    }
+
+    #[test]
+    fn table_level_map() {
+        let t = Table::from_columns(vec![("id", Array::from_strs(&["x.1", "y.2"]))]).unwrap();
+        let m = map_column_utf8(&t, "id", |s| s.replace('.', "")).unwrap();
+        assert_eq!(m.cell(1, 0), Scalar::Utf8("y2".into()));
+    }
+
+    #[test]
+    fn eq_masks() {
+        let a = Array::from_opt_i64(vec![Some(1), None, Some(3)]);
+        let b = Array::from_opt_i64(vec![Some(1), None, Some(4)]);
+        let m = eq_mask(&a, &b).unwrap();
+        assert_eq!(m.bool_values().unwrap(), &[true, true, false]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Missing-data handling: `isnull`, `notnull`, `dropna`, `fillna`
+//! (all used by the UNOMT feature-engineering stages).
+
+use crate::table::{Array, Scalar, Table};
+use anyhow::{bail, Result};
+
+/// Boolean mask of nulls in a column (`df[col].isnull()`).
+pub fn isnull_mask(col: &Array) -> Array {
+    Array::Bool((0..col.len()).map(|i| col.is_null(i)).collect(), None)
+}
+
+/// Boolean mask of non-nulls (`df[col].notnull()`).
+pub fn notnull_mask(col: &Array) -> Array {
+    Array::Bool((0..col.len()).map(|i| col.is_valid(i)).collect(), None)
+}
+
+/// How [`dropna`] decides to drop a row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropNaHow {
+    /// Drop when ANY considered column is null (Pandas default).
+    Any,
+    /// Drop only when ALL considered columns are null.
+    All,
+}
+
+/// Drop rows with nulls in the given columns (None = all columns).
+pub fn dropna(table: &Table, subset: Option<&[&str]>, how: DropNaHow) -> Result<Table> {
+    let cols: Vec<&Array> = match subset {
+        Some(names) => names
+            .iter()
+            .map(|n| table.column_by_name(n))
+            .collect::<Result<_>>()?,
+        None => table.columns().iter().collect(),
+    };
+    if cols.is_empty() {
+        bail!("dropna: no columns to consider");
+    }
+    let idx: Vec<usize> = (0..table.num_rows())
+        .filter(|&i| match how {
+            DropNaHow::Any => cols.iter().all(|c| c.is_valid(i)),
+            DropNaHow::All => cols.iter().any(|c| c.is_valid(i)),
+        })
+        .collect();
+    Ok(table.take(&idx))
+}
+
+/// Replace nulls in one column with a scalar.
+pub fn fillna_column(col: &Array, fill: &Scalar) -> Result<Array> {
+    if col.null_count() == 0 {
+        return Ok(col.clone());
+    }
+    use crate::table::ArrayBuilder;
+    let mut b = ArrayBuilder::with_capacity(col.data_type(), col.len());
+    for i in 0..col.len() {
+        if col.is_valid(i) {
+            b.push_from(col, i);
+        } else {
+            b.push_scalar(fill)?;
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Fill nulls in the named columns of a table.
+pub fn fillna(table: &Table, fills: &[(&str, Scalar)]) -> Result<Table> {
+    let mut out = table.clone();
+    for (name, fill) in fills {
+        let col = out.column_by_name(name)?;
+        out = out.with_column(name, fillna_column(col, fill)?)?;
+    }
+    Ok(out)
+}
+
+/// Count of nulls per column, in schema order.
+pub fn null_counts(table: &Table) -> Vec<(String, usize)> {
+    table
+        .schema()
+        .fields()
+        .iter()
+        .zip(table.columns())
+        .map(|(f, c)| (f.name.clone(), c.null_count()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("a", Array::from_opt_i64(vec![Some(1), None, None, Some(4)])),
+            ("b", Array::from_opt_strs(vec![Some("x"), Some("y"), None, None])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn masks() {
+        let m = isnull_mask(t().column(0));
+        assert_eq!(m.bool_values().unwrap(), &[false, true, true, false]);
+        let n = notnull_mask(t().column(0));
+        assert_eq!(n.bool_values().unwrap(), &[true, false, false, true]);
+    }
+
+    #[test]
+    fn dropna_any_all() {
+        let any = dropna(&t(), None, DropNaHow::Any).unwrap();
+        assert_eq!(any.num_rows(), 1);
+        let all = dropna(&t(), None, DropNaHow::All).unwrap();
+        assert_eq!(all.num_rows(), 3); // only row 2 (both null) dropped
+        let sub = dropna(&t(), Some(&["a"]), DropNaHow::Any).unwrap();
+        assert_eq!(sub.num_rows(), 2);
+    }
+
+    #[test]
+    fn fill_values() {
+        let f = fillna(&t(), &[("a", Scalar::Int64(0)), ("b", Scalar::Utf8("?".into()))]).unwrap();
+        assert_eq!(f.column(0).null_count(), 0);
+        assert_eq!(f.cell(1, 0), Scalar::Int64(0));
+        assert_eq!(f.cell(3, 1), Scalar::Utf8("?".into()));
+        // type mismatch rejected
+        assert!(fillna(&t(), &[("a", Scalar::Utf8("no".into()))]).is_err());
+    }
+
+    #[test]
+    fn counts() {
+        let c = null_counts(&t());
+        assert_eq!(c, vec![("a".to_string(), 2), ("b".to_string(), 2)]);
+    }
+}

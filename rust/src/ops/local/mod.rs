@@ -1,0 +1,46 @@
+//! Local (single-rank) operators — the paper's Table 2 taxonomy.
+//!
+//! | Paper operator    | Here |
+//! |-------------------|------|
+//! | Select            | [`select::filter_cmp`], [`select::filter_mask`] |
+//! | Project           | [`crate::table::Table::select_columns`] / [`crate::table::Table::project`] |
+//! | Union             | [`setops::union`], [`setops::union_all`] |
+//! | Cartesian Product | [`setops::cartesian`] |
+//! | Difference        | [`setops::difference`] |
+//! | Intersect         | [`setops::intersect`] |
+//! | Join (L/R/F/I)    | [`join::join`] |
+//! | OrderBy           | [`sort::sort`] |
+//! | Aggregate         | [`groupby::aggregate`] |
+//! | GroupBy           | [`groupby::groupby_aggregate`] |
+//!
+//! Plus the Pandas-style operators the UNOMT application needs:
+//! `drop_duplicates`/`unique`, `isin`, `map`, `astype` (cast),
+//! `dropna`/`fillna`/`isnull`, sampling and scaling.
+
+pub mod cast;
+#[cfg(test)]
+mod proptests;
+pub mod groupby;
+pub mod isin;
+pub mod join;
+pub mod map;
+pub mod missing;
+pub mod sample;
+pub mod select;
+pub mod setops;
+pub mod sort;
+pub mod unique;
+pub mod window;
+
+pub use cast::{cast, cast_columns, to_numeric_table};
+pub use groupby::{aggregate, groupby_aggregate, Agg, AggSpec};
+pub use isin::{filter_isin, filter_not_in, isin_mask};
+pub use join::{inner_join, join, JoinAlgorithm, JoinType};
+pub use map::{map_column_f64, map_column_utf8, min_max_scale, standard_scale, strip_chars};
+pub use missing::{dropna, fillna, isnull_mask, notnull_mask, DropNaHow};
+pub use sample::{sample, sample_frac, shuffle, train_test_split};
+pub use select::{filter_cmp, filter_mask, Cmp};
+pub use setops::{cartesian, difference, intersect, union, union_all};
+pub use sort::{is_sorted, sort, sort_by_columns, SortKey};
+pub use unique::{drop_duplicates, n_unique, unique};
+pub use window::{rolling, with_rolling, RollAgg};

@@ -1,0 +1,251 @@
+//! Property tests for local operators against brute-force oracles.
+
+use super::*;
+use crate::table::{Array, Scalar, Table};
+use crate::util::prop::{check, Config};
+use crate::util::rng::Rng;
+
+/// Random keyed table: small key domain to force collisions and
+/// duplicate keys, ~10% null keys.
+fn keyed_table(rng: &mut Rng, size: usize, prefix: &str) -> Table {
+    let n = rng.usize_in(0, size + 1);
+    let keys: Vec<Option<i64>> = (0..n)
+        .map(|_| if rng.bool(0.1) { None } else { Some(rng.gen_range(10) as i64) })
+        .collect();
+    let vals: Vec<String> = (0..n).map(|i| format!("{prefix}{i}")).collect();
+    Table::from_columns(vec![
+        ("k", Array::from_opt_i64(keys)),
+        ("v", Array::from_strs(&vals)),
+    ])
+    .unwrap()
+}
+
+fn row_strings(t: &Table) -> Vec<Vec<String>> {
+    let mut rows: Vec<Vec<String>> = (0..t.num_rows())
+        .map(|i| t.row(i).iter().map(|s| s.to_string()).collect())
+        .collect();
+    rows.sort();
+    rows
+}
+
+/// Brute-force inner join oracle (nested loops, null keys skip).
+fn oracle_inner_join(l: &Table, r: &Table) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for i in 0..l.num_rows() {
+        let lk = l.cell(i, 0);
+        if lk.is_null() {
+            continue;
+        }
+        for j in 0..r.num_rows() {
+            if lk == r.cell(j, 0) {
+                let mut row: Vec<String> = l.row(i).iter().map(|s| s.to_string()).collect();
+                row.extend(r.row(j).iter().map(|s| s.to_string()));
+                rows.push(row);
+            }
+        }
+    }
+    rows.sort();
+    rows
+}
+
+#[test]
+fn prop_hash_join_matches_oracle() {
+    check(Config::default().cases(60).max_size(60), "hash join vs oracle", |rng, size| {
+        let l = keyed_table(rng, size, "l");
+        let r = keyed_table(rng, size, "r");
+        let j = inner_join(&l, &r, &["k"], &["k"]).map_err(|e| e.to_string())?;
+        if row_strings(&j) != oracle_inner_join(&l, &r) {
+            return Err(format!("mismatch at {}x{} rows", l.num_rows(), r.num_rows()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sort_merge_join_matches_hash() {
+    check(Config::default().cases(50).max_size(50), "merge join vs hash", |rng, size| {
+        let l = keyed_table(rng, size, "l");
+        let r = keyed_table(rng, size, "r");
+        for jt in [JoinType::Inner, JoinType::Left, JoinType::Right, JoinType::FullOuter] {
+            let h = join(&l, &r, &["k"], &["k"], jt, JoinAlgorithm::Hash).map_err(|e| e.to_string())?;
+            let m =
+                join(&l, &r, &["k"], &["k"], jt, JoinAlgorithm::SortMerge).map_err(|e| e.to_string())?;
+            if row_strings(&h) != row_strings(&m) {
+                return Err(format!("{jt:?}: hash {} rows vs merge {} rows", h.num_rows(), m.num_rows()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_outer_join_row_counts() {
+    // |LEFT| = |INNER| + unmatched_left, |FULL| = |INNER| + unmatched both
+    check(Config::default().cases(50).max_size(60), "outer join counts", |rng, size| {
+        let l = keyed_table(rng, size, "l");
+        let r = keyed_table(rng, size, "r");
+        let inner = inner_join(&l, &r, &["k"], &["k"]).map_err(|e| e.to_string())?;
+        let left = join(&l, &r, &["k"], &["k"], JoinType::Left, JoinAlgorithm::Hash)
+            .map_err(|e| e.to_string())?;
+        let right = join(&l, &r, &["k"], &["k"], JoinType::Right, JoinAlgorithm::Hash)
+            .map_err(|e| e.to_string())?;
+        let full = join(&l, &r, &["k"], &["k"], JoinType::FullOuter, JoinAlgorithm::Hash)
+            .map_err(|e| e.to_string())?;
+        let matched_left: std::collections::HashSet<String> = (0..inner.num_rows())
+            .map(|i| inner.cell(i, 1).to_string())
+            .collect();
+        let unmatched_left = (0..l.num_rows())
+            .filter(|&i| !matched_left.contains(&l.cell(i, 1).to_string()))
+            .count();
+        if left.num_rows() != inner.num_rows() + unmatched_left {
+            return Err(format!(
+                "left count: {} != {} + {unmatched_left}",
+                left.num_rows(),
+                inner.num_rows()
+            ));
+        }
+        if full.num_rows() != left.num_rows() + right.num_rows() - inner.num_rows() {
+            return Err("full != left + right - inner".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sort_is_permutation_and_ordered() {
+    check(Config::default().cases(60).max_size(120), "sort", |rng, size| {
+        let t = keyed_table(rng, size, "x");
+        let keys = [SortKey::asc("k")];
+        let s = sort(&t, &keys).map_err(|e| e.to_string())?;
+        if !is_sorted(&s, &keys).map_err(|e| e.to_string())? {
+            return Err("not sorted".into());
+        }
+        if row_strings(&s) != row_strings(&t) {
+            return Err("sort changed the multiset of rows".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_groupby_sum_matches_scalar_loop() {
+    check(Config::default().cases(60).max_size(100), "groupby sum", |rng, size| {
+        let n = rng.usize_in(0, size + 1);
+        let keys: Vec<Option<i64>> =
+            (0..n).map(|_| if rng.bool(0.1) { None } else { Some(rng.gen_range(8) as i64) }).collect();
+        let vals: Vec<Option<i64>> =
+            (0..n).map(|_| if rng.bool(0.1) { None } else { Some(rng.gen_range(100) as i64) }).collect();
+        let t = Table::from_columns(vec![
+            ("k", Array::from_opt_i64(keys.clone())),
+            ("x", Array::from_opt_i64(vals.clone())),
+        ])
+        .unwrap();
+        let g = groupby_aggregate(&t, &["k"], &[AggSpec::new("x", Agg::Sum)])
+            .map_err(|e| e.to_string())?;
+        // oracle
+        let mut sums: std::collections::HashMap<Option<i64>, i64> = Default::default();
+        for (k, v) in keys.iter().zip(vals.iter()) {
+            if let Some(v) = v {
+                *sums.entry(*k).or_default() += v;
+            } else {
+                sums.entry(*k).or_default();
+            }
+        }
+        if g.num_rows() != sums.len() {
+            return Err(format!("group count {} != {}", g.num_rows(), sums.len()));
+        }
+        for i in 0..g.num_rows() {
+            let k = g.cell(i, 0).as_i64();
+            let got = g.cell(i, 1).as_i64().unwrap_or(0);
+            let want = sums[&k];
+            if got != want {
+                return Err(format!("group {k:?}: {got} != {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_set_ops_laws() {
+    check(Config::default().cases(50).max_size(40), "set op laws", |rng, size| {
+        let a = keyed_table(rng, size, "s"); // shared prefix → overlaps possible
+        let b = keyed_table(rng, size, "s");
+        let i = intersect(&a, &b).map_err(|e| e.to_string())?;
+        let d = difference(&a, &b).map_err(|e| e.to_string())?;
+        let u = union(&a, &b).map_err(|e| e.to_string())?;
+        let da = drop_duplicates(&a, None).map_err(|e| e.to_string())?;
+        // |distinct a| = |a ∩ b| + |a \ b|
+        if da.num_rows() != i.num_rows() + d.num_rows() {
+            return Err(format!(
+                "|distinct a|={} != |i|={} + |d|={}",
+                da.num_rows(),
+                i.num_rows(),
+                d.num_rows()
+            ));
+        }
+        // union is distinct and contains both distinct inputs
+        let du = drop_duplicates(&u, None).map_err(|e| e.to_string())?;
+        if du.num_rows() != u.num_rows() {
+            return Err("union not distinct".into());
+        }
+        if intersect(&u, &a).map_err(|e| e.to_string())?.num_rows() != da.num_rows() {
+            return Err("union lost rows of a".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_isin_matches_naive() {
+    check(Config::default().cases(60).max_size(80), "isin", |rng, size| {
+        let col_v: Vec<Option<i64>> = (0..rng.usize_in(0, size + 1))
+            .map(|_| if rng.bool(0.15) { None } else { Some(rng.gen_range(20) as i64) })
+            .collect();
+        let set_v: Vec<i64> = (0..rng.usize_in(0, 10)).map(|_| rng.gen_range(20) as i64).collect();
+        let col = Array::from_opt_i64(col_v.clone());
+        let set = Array::from_i64(set_v.clone());
+        let mask = isin_mask(&col, &set);
+        for (i, c) in col_v.iter().enumerate() {
+            let want = c.map_or(false, |v| set_v.contains(&v));
+            if mask[i] != want {
+                return Err(format!("row {i}: {:?} in {:?} -> {} want {want}", c, set_v, mask[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dropna_fillna_inverse_ish() {
+    check(Config::default().cases(40).max_size(80), "dropna/fillna", |rng, size| {
+        let t = keyed_table(rng, size, "z");
+        let filled = fillna(&t, &[("k", Scalar::Int64(-1))]).map_err(|e| e.to_string())?;
+        if filled.column(0).null_count() != 0 {
+            return Err("fillna left nulls".into());
+        }
+        let dropped = dropna(&t, Some(&["k"]), DropNaHow::Any).map_err(|e| e.to_string())?;
+        let nulls = t.column(0).null_count();
+        if dropped.num_rows() + nulls != t.num_rows() {
+            return Err("dropna row accounting wrong".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cast_roundtrip_int_utf8() {
+    use crate::table::DataType;
+    check(Config::default().cases(40).max_size(100), "cast roundtrip", |rng, size| {
+        let v: Vec<Option<i64>> = (0..rng.usize_in(0, size + 1))
+            .map(|_| if rng.bool(0.1) { None } else { Some(rng.gen_range(10_000) as i64 - 5_000) })
+            .collect();
+        let a = Array::from_opt_i64(v);
+        let s = cast(&a, DataType::Utf8).map_err(|e| e.to_string())?;
+        let back = cast(&s, DataType::Int64).map_err(|e| e.to_string())?;
+        if back != a.clone().normalize_validity() {
+            return Err("int -> utf8 -> int not identity".into());
+        }
+        Ok(())
+    });
+}

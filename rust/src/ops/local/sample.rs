@@ -1,0 +1,99 @@
+//! Row sampling and train/test splitting (stage 3 of the paper's
+//! data-engineering → deep-learning handoff).
+
+use crate::table::Table;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Sample `n` rows without replacement (deterministic given the rng).
+pub fn sample(table: &Table, n: usize, rng: &mut Rng) -> Result<Table> {
+    if n > table.num_rows() {
+        bail!("sample: n={n} > rows={}", table.num_rows());
+    }
+    // Partial Fisher–Yates over an index vector.
+    let mut idx: Vec<usize> = (0..table.num_rows()).collect();
+    for i in 0..n {
+        let j = i + rng.gen_range((idx.len() - i) as u64) as usize;
+        idx.swap(i, j);
+    }
+    idx.truncate(n);
+    Ok(table.take(&idx))
+}
+
+/// Sample a fraction of rows without replacement.
+pub fn sample_frac(table: &Table, frac: f64, rng: &mut Rng) -> Result<Table> {
+    if !(0.0..=1.0).contains(&frac) {
+        bail!("sample_frac: frac={frac} outside [0,1]");
+    }
+    sample(table, (table.num_rows() as f64 * frac).round() as usize, rng)
+}
+
+/// Shuffle all rows.
+pub fn shuffle(table: &Table, rng: &mut Rng) -> Table {
+    let mut idx: Vec<usize> = (0..table.num_rows()).collect();
+    rng.shuffle(&mut idx);
+    table.take(&idx)
+}
+
+/// Split into (train, test) with `test_frac` of rows in the test set,
+/// after an optional shuffle (the UNOMT train/test partition step).
+pub fn train_test_split(
+    table: &Table,
+    test_frac: f64,
+    rng: Option<&mut Rng>,
+) -> Result<(Table, Table)> {
+    if !(0.0..=1.0).contains(&test_frac) {
+        bail!("train_test_split: test_frac={test_frac} outside [0,1]");
+    }
+    let t = match rng {
+        Some(r) => shuffle(table, r),
+        None => table.clone(),
+    };
+    let ntest = (t.num_rows() as f64 * test_frac).round() as usize;
+    let ntrain = t.num_rows() - ntest;
+    Ok((t.head(ntrain), t.tail(ntest)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Array;
+
+    fn t() -> Table {
+        Table::from_columns(vec![("x", Array::from_i64((0..100).collect()))]).unwrap()
+    }
+
+    #[test]
+    fn sample_sizes_and_uniqueness() {
+        let mut rng = Rng::new(1);
+        let s = sample(&t(), 30, &mut rng).unwrap();
+        assert_eq!(s.num_rows(), 30);
+        let mut vals: Vec<i64> = s.column(0).i64_values().unwrap().to_vec();
+        vals.sort_unstable();
+        vals.dedup();
+        assert_eq!(vals.len(), 30, "sampling must be without replacement");
+        assert!(sample(&t(), 101, &mut rng).is_err());
+    }
+
+    #[test]
+    fn frac_and_shuffle() {
+        let mut rng = Rng::new(2);
+        assert_eq!(sample_frac(&t(), 0.25, &mut rng).unwrap().num_rows(), 25);
+        let sh = shuffle(&t(), &mut rng);
+        assert_eq!(sh.num_rows(), 100);
+        assert_ne!(sh, t(), "shuffle should permute (100 rows, astronomically unlikely identity)");
+    }
+
+    #[test]
+    fn split_partitions() {
+        let (train, test) = train_test_split(&t(), 0.2, None).unwrap();
+        assert_eq!(train.num_rows(), 80);
+        assert_eq!(test.num_rows(), 20);
+        // unshuffled split preserves order
+        assert_eq!(train.cell(0, 0).as_i64(), Some(0));
+        assert_eq!(test.cell(0, 0).as_i64(), Some(80));
+        let mut rng = Rng::new(3);
+        let (tr, te) = train_test_split(&t(), 0.5, Some(&mut rng)).unwrap();
+        assert_eq!(tr.num_rows() + te.num_rows(), 100);
+    }
+}

@@ -1,0 +1,208 @@
+//! Select (filter): keep rows matching a predicate (Table 2, "Select").
+//!
+//! Predicates are evaluated columnar-first: a boolean mask is built in
+//! one pass over the predicate columns, then all columns are gathered
+//! once. Null predicate results count as false (SQL semantics).
+
+use crate::table::{Array, Scalar, Table};
+use anyhow::{bail, Result};
+
+/// Comparison operators for [`filter_cmp`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl Cmp {
+    #[inline]
+    fn holds_ord(&self, o: std::cmp::Ordering) -> bool {
+        use std::cmp::Ordering::*;
+        matches!(
+            (self, o),
+            (Cmp::Eq, Equal)
+                | (Cmp::Ne, Less)
+                | (Cmp::Ne, Greater)
+                | (Cmp::Lt, Less)
+                | (Cmp::Le, Less)
+                | (Cmp::Le, Equal)
+                | (Cmp::Gt, Greater)
+                | (Cmp::Ge, Greater)
+                | (Cmp::Ge, Equal)
+        )
+    }
+}
+
+/// Row indices where `mask[i] == Some(true)`.
+fn mask_to_indices(mask: &[Option<bool>]) -> Vec<usize> {
+    mask.iter()
+        .enumerate()
+        .filter_map(|(i, m)| if *m == Some(true) { Some(i) } else { None })
+        .collect()
+}
+
+/// Boolean mask comparing a column against a scalar literal.
+///
+/// `None` where the cell (or an incomparable type pair) is null.
+pub fn cmp_mask(col: &Array, op: Cmp, lit: &Scalar) -> Result<Vec<Option<bool>>> {
+    let n = col.len();
+    let mut mask = vec![None; n];
+    match (col, lit) {
+        (Array::Int64(v, _), Scalar::Int64(x)) => {
+            for i in 0..n {
+                if col.is_valid(i) {
+                    mask[i] = Some(op.holds_ord(v[i].cmp(x)));
+                }
+            }
+        }
+        (Array::Int64(v, _), Scalar::Float64(x)) => {
+            for i in 0..n {
+                if col.is_valid(i) {
+                    if let Some(o) = (v[i] as f64).partial_cmp(x) {
+                        mask[i] = Some(op.holds_ord(o));
+                    }
+                }
+            }
+        }
+        (Array::Float64(v, _), Scalar::Float64(x)) => {
+            for i in 0..n {
+                if col.is_valid(i) {
+                    if let Some(o) = v[i].partial_cmp(x) {
+                        mask[i] = Some(op.holds_ord(o));
+                    }
+                }
+            }
+        }
+        (Array::Float64(v, _), Scalar::Int64(x)) => {
+            let x = *x as f64;
+            for i in 0..n {
+                if col.is_valid(i) {
+                    if let Some(o) = v[i].partial_cmp(&x) {
+                        mask[i] = Some(op.holds_ord(o));
+                    }
+                }
+            }
+        }
+        (Array::Utf8(d, _), Scalar::Utf8(x)) => {
+            for i in 0..n {
+                if col.is_valid(i) {
+                    mask[i] = Some(op.holds_ord(d.value(i).cmp(x.as_str())));
+                }
+            }
+        }
+        (Array::Bool(v, _), Scalar::Bool(x)) => {
+            for i in 0..n {
+                if col.is_valid(i) {
+                    mask[i] = Some(op.holds_ord(v[i].cmp(x)));
+                }
+            }
+        }
+        (c, l) => bail!("cmp: incompatible types {} vs {:?}", c.data_type(), l),
+    }
+    Ok(mask)
+}
+
+/// Filter rows by comparing `column` against a literal.
+pub fn filter_cmp(table: &Table, column: &str, op: Cmp, lit: &Scalar) -> Result<Table> {
+    let col = table.column_by_name(column)?;
+    let mask = cmp_mask(col, op, lit)?;
+    Ok(table.take(&mask_to_indices(&mask)))
+}
+
+/// Filter rows with an arbitrary row predicate (slow path — used by the
+/// UNOMT pipeline's bespoke conditions and by tests as the oracle).
+pub fn filter_by<F: FnMut(usize) -> bool>(table: &Table, mut pred: F) -> Table {
+    let idx: Vec<usize> = (0..table.num_rows()).filter(|&i| pred(i)).collect();
+    table.take(&idx)
+}
+
+/// Filter by a precomputed boolean column (nulls drop the row).
+pub fn filter_mask(table: &Table, mask: &Array) -> Result<Table> {
+    let Some(vals) = mask.bool_values() else {
+        bail!("filter_mask: mask must be bool, got {}", mask.data_type())
+    };
+    if mask.len() != table.num_rows() {
+        bail!("filter_mask: mask length {} != rows {}", mask.len(), table.num_rows());
+    }
+    let idx: Vec<usize> = (0..table.num_rows())
+        .filter(|&i| mask.is_valid(i) && vals[i])
+        .collect();
+    Ok(table.take(&idx))
+}
+
+/// Combine two optional-bool masks with AND (the UNOMT "common drugs"
+/// step composes isin masks this way).
+pub fn and_masks(a: &[Option<bool>], b: &[Option<bool>]) -> Vec<Option<bool>> {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| match (x, y) {
+            (Some(false), _) | (_, Some(false)) => Some(false),
+            (Some(true), Some(true)) => Some(true),
+            _ => None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("id", Array::from_opt_i64(vec![Some(1), Some(2), None, Some(4)])),
+            ("name", Array::from_strs(&["a", "bb", "c", "bb"])),
+            ("score", Array::from_f64(vec![0.5, 1.5, 2.5, 3.5])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn numeric_filters() {
+        let f = filter_cmp(&t(), "id", Cmp::Ge, &Scalar::Int64(2)).unwrap();
+        assert_eq!(f.num_rows(), 2); // null row dropped
+        let f = filter_cmp(&t(), "score", Cmp::Lt, &Scalar::Float64(2.0)).unwrap();
+        assert_eq!(f.num_rows(), 2);
+        // int column vs float literal
+        let f = filter_cmp(&t(), "id", Cmp::Gt, &Scalar::Float64(1.5)).unwrap();
+        assert_eq!(f.num_rows(), 2);
+    }
+
+    #[test]
+    fn string_filters() {
+        let f = filter_cmp(&t(), "name", Cmp::Eq, &Scalar::Utf8("bb".into())).unwrap();
+        assert_eq!(f.num_rows(), 2);
+        let f = filter_cmp(&t(), "name", Cmp::Ne, &Scalar::Utf8("bb".into())).unwrap();
+        assert_eq!(f.num_rows(), 2);
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        assert!(filter_cmp(&t(), "name", Cmp::Lt, &Scalar::Int64(1)).is_err());
+    }
+
+    #[test]
+    fn filter_by_pred() {
+        let tbl = t();
+        let f = filter_by(&tbl, |i| tbl.cell(i, 0).as_i64().map_or(false, |v| v % 2 == 0));
+        assert_eq!(f.num_rows(), 2);
+    }
+
+    #[test]
+    fn mask_filter_and_combination() {
+        let tbl = t();
+        let m = Array::from_bools(vec![true, false, true, true]);
+        assert_eq!(filter_mask(&tbl, &m).unwrap().num_rows(), 3);
+        assert!(filter_mask(&tbl, &Array::from_i64(vec![1, 2, 3, 4])).is_err());
+
+        let a = vec![Some(true), Some(true), None, Some(false)];
+        let b = vec![Some(true), Some(false), Some(true), None];
+        assert_eq!(
+            and_masks(&a, &b),
+            vec![Some(true), Some(false), None, Some(false)]
+        );
+    }
+}

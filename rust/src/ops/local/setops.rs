@@ -1,0 +1,167 @@
+//! Relational set operators over union-compatible tables (Table 2:
+//! Union, Intersect, Difference, Cartesian Product).
+//!
+//! All three set operators use bag-to-set semantics like SQL's
+//! UNION/INTERSECT/EXCEPT: results are distinct. `union_all` keeps
+//! duplicates (SQL UNION ALL).
+
+use super::unique::drop_duplicates;
+use crate::table::rowhash::{hash_columns, rows_eq};
+use crate::table::{Array, Table};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+fn check_compat(a: &Table, b: &Table) -> Result<()> {
+    if !a.schema().type_compatible(b.schema()) {
+        bail!("set op: incompatible schemas {} vs {}", a.schema(), b.schema());
+    }
+    Ok(())
+}
+
+/// UNION ALL: vertical concatenation.
+pub fn union_all(a: &Table, b: &Table) -> Result<Table> {
+    check_compat(a, b)?;
+    Table::concat_tables(&[a, b])
+}
+
+/// UNION: concatenation with duplicates removed.
+pub fn union(a: &Table, b: &Table) -> Result<Table> {
+    drop_duplicates(&union_all(a, b)?, None)
+}
+
+/// Build a row-set over all columns of `t`: hash → row indices.
+fn row_set(t: &Table) -> (Vec<&Array>, Vec<u64>, HashMap<u64, Vec<u32>>) {
+    let cols: Vec<&Array> = t.columns().iter().collect();
+    let hashes = hash_columns(&cols);
+    let mut set: HashMap<u64, Vec<u32>> = HashMap::with_capacity(t.num_rows());
+    for (i, &h) in hashes.iter().enumerate() {
+        set.entry(h).or_default().push(i as u32);
+    }
+    (cols, hashes, set)
+}
+
+/// Rows of `a` (distinct) that also appear in `b` (INTERSECT).
+pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
+    check_compat(a, b)?;
+    let da = drop_duplicates(a, None)?;
+    let (bcols, _, bset) = row_set(b);
+    let acols: Vec<&Array> = da.columns().iter().collect();
+    let ah = hash_columns(&acols);
+    let idx: Vec<usize> = (0..da.num_rows())
+        .filter(|&i| {
+            bset.get(&ah[i]).map_or(false, |cands| {
+                cands.iter().any(|&j| rows_eq(&acols, i, &bcols, j as usize))
+            })
+        })
+        .collect();
+    Ok(da.take(&idx))
+}
+
+/// Rows of `a` (distinct) that do NOT appear in `b` (EXCEPT).
+pub fn difference(a: &Table, b: &Table) -> Result<Table> {
+    check_compat(a, b)?;
+    let da = drop_duplicates(a, None)?;
+    let (bcols, _, bset) = row_set(b);
+    let acols: Vec<&Array> = da.columns().iter().collect();
+    let ah = hash_columns(&acols);
+    let idx: Vec<usize> = (0..da.num_rows())
+        .filter(|&i| {
+            !bset.get(&ah[i]).map_or(false, |cands| {
+                cands.iter().any(|&j| rows_eq(&acols, i, &bcols, j as usize))
+            })
+        })
+        .collect();
+    Ok(da.take(&idx))
+}
+
+/// Cartesian product: every pair of rows; right columns renamed on
+/// collision as in join.
+pub fn cartesian(a: &Table, b: &Table) -> Result<Table> {
+    let (n, m) = (a.num_rows(), b.num_rows());
+    let mut aidx = Vec::with_capacity(n * m);
+    let mut bidx = Vec::with_capacity(n * m);
+    for i in 0..n {
+        for j in 0..m {
+            aidx.push(i);
+            bidx.push(j);
+        }
+    }
+    let left = a.take(&aidx);
+    let right = b.take(&bidx);
+    let mut out = left;
+    for (f, c) in right.schema().fields().iter().zip(right.columns()) {
+        let name = if out.schema().contains(&f.name) {
+            format!("{}_r", f.name)
+        } else {
+            f.name.clone()
+        };
+        out = out.with_column(&name, c.clone())?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Scalar;
+
+    fn ta() -> Table {
+        Table::from_columns(vec![
+            ("k", Array::from_i64(vec![1, 2, 2, 3])),
+            ("v", Array::from_strs(&["a", "b", "b", "c"])),
+        ])
+        .unwrap()
+    }
+
+    fn tb() -> Table {
+        Table::from_columns(vec![
+            ("k", Array::from_i64(vec![2, 4])),
+            ("v", Array::from_strs(&["b", "d"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn union_dedups() {
+        let u = union(&ta(), &tb()).unwrap();
+        assert_eq!(u.num_rows(), 4); // (1,a),(2,b),(3,c),(4,d)
+        let ua = union_all(&ta(), &tb()).unwrap();
+        assert_eq!(ua.num_rows(), 6);
+    }
+
+    #[test]
+    fn intersect_difference() {
+        let i = intersect(&ta(), &tb()).unwrap();
+        assert_eq!(i.num_rows(), 1);
+        assert_eq!(i.cell(0, 0), Scalar::Int64(2));
+        let d = difference(&ta(), &tb()).unwrap();
+        assert_eq!(d.num_rows(), 2); // (1,a),(3,c)
+        let d2 = difference(&tb(), &ta()).unwrap();
+        assert_eq!(d2.num_rows(), 1); // (4,d)
+    }
+
+    #[test]
+    fn incompatible_schemas_rejected() {
+        let c = ta().select_columns(&["k"]).unwrap();
+        assert!(union(&ta(), &c).is_err());
+        assert!(intersect(&ta(), &c).is_err());
+        assert!(difference(&ta(), &c).is_err());
+    }
+
+    #[test]
+    fn cartesian_product() {
+        let c = cartesian(&ta().head(2), &tb()).unwrap();
+        assert_eq!(c.num_rows(), 4);
+        assert_eq!(c.num_columns(), 4);
+        assert_eq!(c.schema().names(), vec!["k", "v", "k_r", "v_r"]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let e = ta().slice(0, 0);
+        assert_eq!(union(&ta(), &e).unwrap().num_rows(), 3);
+        assert_eq!(intersect(&ta(), &e).unwrap().num_rows(), 0);
+        assert_eq!(difference(&e, &ta()).unwrap().num_rows(), 0);
+        assert_eq!(cartesian(&ta(), &e).unwrap().num_rows(), 0);
+    }
+}

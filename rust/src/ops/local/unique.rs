@@ -1,0 +1,70 @@
+//! Duplicate handling: `drop_duplicates` / distinct (Pandas analogues
+//! used heavily by the UNOMT pipeline).
+
+use super::groupby::group_ids;
+use crate::table::Table;
+use anyhow::Result;
+
+/// Keep the first row of every distinct key combination.
+///
+/// `keys = None` deduplicates over all columns (Pandas
+/// `drop_duplicates()` default).
+pub fn drop_duplicates(table: &Table, keys: Option<&[&str]>) -> Result<Table> {
+    let all_names;
+    let keys: &[&str] = match keys {
+        Some(k) => k,
+        None => {
+            all_names = table.schema().names();
+            &all_names
+        }
+    };
+    let (_, reps) = group_ids(table, keys)?;
+    Ok(table.take(&reps))
+}
+
+/// Distinct values of the key columns only (SQL `SELECT DISTINCT k...`).
+pub fn unique(table: &Table, keys: &[&str]) -> Result<Table> {
+    drop_duplicates(&table.select_columns(keys)?, None)
+}
+
+/// Count of distinct key combinations.
+pub fn n_unique(table: &Table, keys: &[&str]) -> Result<usize> {
+    let (_, reps) = group_ids(table, keys)?;
+    Ok(reps.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::{Array, Scalar};
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("k", Array::from_opt_i64(vec![Some(1), Some(2), Some(1), None, None])),
+            ("v", Array::from_strs(&["a", "b", "c", "d", "d"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn dedup_on_key() {
+        let d = drop_duplicates(&t(), Some(&["k"])).unwrap();
+        assert_eq!(d.num_rows(), 3); // 1, 2, null
+        assert_eq!(d.cell(0, 1), Scalar::Utf8("a".into())); // first kept
+    }
+
+    #[test]
+    fn dedup_all_columns() {
+        let d = drop_duplicates(&t(), None).unwrap();
+        assert_eq!(d.num_rows(), 4); // only (null, "d") duplicated
+    }
+
+    #[test]
+    fn unique_projects() {
+        let u = unique(&t(), &["k"]).unwrap();
+        assert_eq!(u.num_columns(), 1);
+        assert_eq!(u.num_rows(), 3);
+        assert_eq!(n_unique(&t(), &["k"]).unwrap(), 3);
+        assert_eq!(n_unique(&t(), &["k", "v"]).unwrap(), 4);
+    }
+}

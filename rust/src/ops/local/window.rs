@@ -1,0 +1,180 @@
+//! Rolling-window operators (Pandas `rolling` role): the dose–response
+//! smoothing UNOMT-style analyses apply before curve fitting.
+
+use crate::table::{Array, Bitmap, Table};
+use anyhow::{bail, Result};
+
+/// Rolling aggregation over a numeric column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RollAgg {
+    Mean,
+    Sum,
+    Min,
+    Max,
+}
+
+/// Rolling aggregate of `column` with the given window size; output row
+/// `i` covers rows `[i+1-window, i]`. Rows with fewer than `min_periods`
+/// valid inputs in the window are null (Pandas semantics;
+/// `min_periods = window` by default).
+pub fn rolling(
+    table: &Table,
+    column: &str,
+    window: usize,
+    min_periods: Option<usize>,
+    agg: RollAgg,
+) -> Result<Array> {
+    if window == 0 {
+        bail!("rolling: window must be > 0");
+    }
+    let min_periods = min_periods.unwrap_or(window);
+    let col = table.column_by_name(column)?;
+    if !col.data_type().is_numeric() {
+        bail!("rolling: column {column:?} is {}", col.data_type());
+    }
+    let n = col.len();
+    let mut out = vec![0.0f64; n];
+    let mut validity = Bitmap::new_null(n);
+
+    // O(n·w) direct evaluation for min/max; O(n) sliding sums for
+    // sum/mean. Window sizes in practice are small (dose ladders).
+    match agg {
+        RollAgg::Sum | RollAgg::Mean => {
+            let mut sum = 0.0f64;
+            let mut count = 0usize;
+            for i in 0..n {
+                if let Some(x) = col.f64_at(i) {
+                    sum += x;
+                    count += 1;
+                }
+                if i >= window {
+                    if let Some(x) = col.f64_at(i - window) {
+                        sum -= x;
+                        count -= 1;
+                    }
+                }
+                if count >= min_periods {
+                    out[i] = if agg == RollAgg::Mean { sum / count as f64 } else { sum };
+                    validity.set(i, true);
+                }
+            }
+        }
+        RollAgg::Min | RollAgg::Max => {
+            for i in 0..n {
+                let lo = (i + 1).saturating_sub(window);
+                let mut acc: Option<f64> = None;
+                let mut count = 0usize;
+                for j in lo..=i {
+                    if let Some(x) = col.f64_at(j) {
+                        count += 1;
+                        acc = Some(match acc {
+                            None => x,
+                            Some(a) if agg == RollAgg::Max => a.max(x),
+                            Some(a) => a.min(x),
+                        });
+                    }
+                }
+                if count >= min_periods {
+                    out[i] = acc.unwrap();
+                    validity.set(i, true);
+                }
+            }
+        }
+    }
+    Ok(Array::Float64(out, Some(validity)).normalize_validity())
+}
+
+/// Attach a rolling aggregate as a new column named
+/// `{column}_roll_{agg}`.
+pub fn with_rolling(
+    table: &Table,
+    column: &str,
+    window: usize,
+    agg: RollAgg,
+) -> Result<Table> {
+    let arr = rolling(table, column, window, None, agg)?;
+    let name = format!(
+        "{column}_roll_{}",
+        match agg {
+            RollAgg::Mean => "mean",
+            RollAgg::Sum => "sum",
+            RollAgg::Min => "min",
+            RollAgg::Max => "max",
+        }
+    );
+    table.with_column(&name, arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::Scalar;
+
+    fn t() -> Table {
+        Table::from_columns(vec![(
+            "x",
+            Array::from_opt_f64(vec![Some(1.0), Some(2.0), None, Some(4.0), Some(5.0)]),
+        )])
+        .unwrap()
+    }
+
+    #[test]
+    fn rolling_mean_with_nulls() {
+        let r = rolling(&t(), "x", 2, Some(1), RollAgg::Mean).unwrap();
+        assert_eq!(r.get(0), Scalar::Float64(1.0));
+        assert_eq!(r.get(1), Scalar::Float64(1.5));
+        assert_eq!(r.get(2), Scalar::Float64(2.0)); // window {2, null}
+        assert_eq!(r.get(3), Scalar::Float64(4.0)); // window {null, 4}
+        assert_eq!(r.get(4), Scalar::Float64(4.5));
+    }
+
+    #[test]
+    fn min_periods_produces_nulls() {
+        let r = rolling(&t(), "x", 2, None, RollAgg::Mean).unwrap();
+        assert_eq!(r.get(0), Scalar::Null); // only 1 value in window
+        assert_eq!(r.get(2), Scalar::Null); // null shrinks the window
+        assert_eq!(r.get(1), Scalar::Float64(1.5));
+    }
+
+    #[test]
+    fn rolling_sum_min_max() {
+        let s = rolling(&t(), "x", 2, Some(1), RollAgg::Sum).unwrap();
+        assert_eq!(s.get(1), Scalar::Float64(3.0));
+        let mn = rolling(&t(), "x", 3, Some(1), RollAgg::Min).unwrap();
+        assert_eq!(mn.get(3), Scalar::Float64(2.0));
+        let mx = rolling(&t(), "x", 3, Some(1), RollAgg::Max).unwrap();
+        assert_eq!(mx.get(4), Scalar::Float64(5.0));
+    }
+
+    #[test]
+    fn sliding_sum_matches_direct() {
+        // the O(n) sliding path must agree with direct recompute
+        let vals: Vec<Option<f64>> =
+            (0..50).map(|i| if i % 7 == 0 { None } else { Some(i as f64) }).collect();
+        let t = Table::from_columns(vec![("x", Array::from_opt_f64(vals.clone()))]).unwrap();
+        let r = rolling(&t, "x", 5, Some(1), RollAgg::Sum).unwrap();
+        for i in 0..50usize {
+            let lo = (i + 1).saturating_sub(5);
+            let want: f64 = (lo..=i).filter_map(|j| vals[j]).sum();
+            let any = (lo..=i).any(|j| vals[j].is_some());
+            if any {
+                assert!((r.get(i).as_f64().unwrap() - want).abs() < 1e-9, "row {i}");
+            } else {
+                assert_eq!(r.get(i), Scalar::Null);
+            }
+        }
+    }
+
+    #[test]
+    fn with_rolling_names_column() {
+        let out = with_rolling(&t(), "x", 2, RollAgg::Mean).unwrap();
+        assert!(out.schema().contains("x_roll_mean"));
+    }
+
+    #[test]
+    fn validation() {
+        assert!(rolling(&t(), "x", 0, None, RollAgg::Mean).is_err());
+        let s = Table::from_columns(vec![("s", Array::from_strs(&["a"]))]).unwrap();
+        assert!(rolling(&s, "s", 2, None, RollAgg::Mean).is_err());
+    }
+}

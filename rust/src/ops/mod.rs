@@ -1,0 +1,13 @@
+//! HPTMT operators: local (single rank) and distributed (rank-collective).
+//!
+//! The paper's central organising idea — applications are compositions
+//! of *operators* over data structures, and distributed operators are
+//! compositions of communication operators with local operators
+//! (Table 5) — maps directly onto this module tree:
+//!
+//! * [`local`] — Table 2 relational algebra + Pandas-style operators.
+//! * `dist` — Table 5 compositions (shuffle + local kernel), built on
+//!   [`crate::comm`].
+
+pub mod dist;
+pub mod local;

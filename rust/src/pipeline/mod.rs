@@ -1,0 +1,33 @@
+//! Streaming pipeline orchestrator — the L3 coordination layer for
+//! data-pipeline workloads: sharded stages, rebalancing or key-hash
+//! routing between stages, and bounded channels for backpressure.
+//!
+//! The paper composes batch operators; production ingestion runs the
+//! same operators as a stream of table batches. This orchestrator keeps
+//! the HPTMT discipline: no central scheduler — stages are static
+//! thread groups connected by channels, and routing is data-driven
+//! (hash or round-robin), exactly like a shuffle fixed at plan time.
+//!
+//! ```no_run
+//! use hptmt::pipeline::{Pipeline, Routing};
+//! # use hptmt::table::{Table, Array};
+//! let run = Pipeline::new("demo")
+//!     .source("gen", 2, |shard, emit| {
+//!         for b in 0..10 {
+//!             emit(Table::from_columns(vec![
+//!                 ("x", Array::from_i64(vec![shard as i64, b])),
+//!             ])?)?;
+//!         }
+//!         Ok(())
+//!     })
+//!     .map("double", 4, Routing::Rebalance, |t| {
+//!         Ok(Some(t)) // transform the batch
+//!     })
+//!     .run(8)
+//!     .unwrap();
+//! println!("{} rows out", run.total_rows_out());
+//! ```
+
+mod stage;
+
+pub use stage::{Pipeline, PipelineRun, Routing, StageMetrics};

@@ -1,0 +1,141 @@
+//! Cross-module property tests (substrate invariants).
+//!
+//! Generator helpers live here too; operator-level property tests are in
+//! their own modules and `rust/tests/`.
+
+use crate::table::{csv, ipc, Array, Table};
+use crate::util::prop::{check, Config};
+use crate::util::rng::Rng;
+
+/// Random table with a mix of types and nulls; size scales with the hint.
+pub fn arb_table(rng: &mut Rng, size: usize) -> Table {
+    let n = rng.usize_in(0, size + 1);
+    let id: Vec<Option<i64>> = (0..n)
+        .map(|_| if rng.bool(0.1) { None } else { Some(rng.gen_range(1000) as i64 - 500) })
+        .collect();
+    let score: Vec<Option<f64>> = (0..n)
+        .map(|_| if rng.bool(0.1) { None } else { Some(rng.normal()) })
+        .collect();
+    let name: Vec<String> = (0..n)
+        .map(|_| {
+            let len = rng.usize_in(0, 8);
+            rng.ascii_lower(len)
+        })
+        .collect();
+    let flag: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+    Table::from_columns(vec![
+        ("id", Array::from_opt_i64(id)),
+        ("score", Array::from_opt_f64(score)),
+        ("name", Array::from_strs(&name)),
+        ("flag", Array::from_bools(flag)),
+    ])
+    .unwrap()
+}
+
+#[test]
+fn prop_ipc_roundtrip_identity() {
+    check(Config::default().cases(60).max_size(300), "ipc roundtrip", |rng, size| {
+        let t = arb_table(rng, size);
+        let rt = ipc::deserialize(&ipc::serialize(&t)).map_err(|e| e.to_string())?;
+        if rt != t {
+            return Err(format!("roundtrip mismatch at {} rows", t.num_rows()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csv_roundtrip_preserves_cells() {
+    // CSV cannot represent empty-string-vs-null distinctly; generate
+    // non-empty strings and compare cell-by-cell.
+    check(Config::default().cases(40).max_size(60), "csv roundtrip", |rng, size| {
+        let n = rng.usize_in(1, size + 2);
+        let id: Vec<Option<i64>> =
+            (0..n).map(|_| if rng.bool(0.2) { None } else { Some(rng.gen_range(99) as i64) }).collect();
+        let name: Vec<String> = (0..n)
+            .map(|_| {
+                let len = 1 + rng.usize_in(0, 6);
+                rng.ascii_lower(len)
+            })
+            .collect();
+        let t = Table::from_columns(vec![
+            ("id", Array::from_opt_i64(id)),
+            ("name", Array::from_strs(&name)),
+        ])
+        .unwrap();
+        let mut buf = Vec::new();
+        csv::write_csv_to(&t, &mut buf, &csv::CsvOptions::default()).map_err(|e| e.to_string())?;
+        let rt = csv::read_csv_from(&buf[..], &csv::CsvOptions::default()).map_err(|e| e.to_string())?;
+        if rt.num_rows() != t.num_rows() {
+            return Err(format!("row count {} != {}", rt.num_rows(), t.num_rows()));
+        }
+        for r in 0..t.num_rows() {
+            for c in 0..t.num_columns() {
+                if rt.cell(r, c) != t.cell(r, c) {
+                    return Err(format!("cell ({r},{c}): {:?} != {:?}", rt.cell(r, c), t.cell(r, c)));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_concat_identity() {
+    check(Config::default().cases(60).max_size(200), "split/concat", |rng, size| {
+        let t = arb_table(rng, size);
+        let k = rng.usize_in(1, 9);
+        let parts = t.split(k);
+        if parts.len() != k {
+            return Err(format!("expected {k} parts, got {}", parts.len()));
+        }
+        let back = Table::concat_tables(&parts.iter().collect::<Vec<_>>()).map_err(|e| e.to_string())?;
+        if back != t {
+            return Err("concat(split(t)) != t".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_take_matches_cells() {
+    check(Config::default().cases(60).max_size(150), "take", |rng, size| {
+        let t = arb_table(rng, size);
+        if t.num_rows() == 0 {
+            return Ok(());
+        }
+        let idx: Vec<usize> = (0..rng.usize_in(0, 2 * t.num_rows()))
+            .map(|_| rng.usize_in(0, t.num_rows()))
+            .collect();
+        let g = t.take(&idx);
+        for (k, &i) in idx.iter().enumerate() {
+            for c in 0..t.num_columns() {
+                if g.cell(k, c) != t.cell(i, c) {
+                    return Err(format!("take mismatch at out-row {k} col {c}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hash_consistent_with_eq() {
+    use crate::table::rowhash::{hash_columns, rows_eq};
+    check(Config::default().cases(40).max_size(120), "hash/eq", |rng, size| {
+        let t = arb_table(rng, size);
+        if t.num_rows() < 2 {
+            return Ok(());
+        }
+        let keys: Vec<&Array> = vec![t.column(0), t.column(2)];
+        let h = hash_columns(&keys);
+        for _ in 0..20 {
+            let i = rng.usize_in(0, t.num_rows());
+            let j = rng.usize_in(0, t.num_rows());
+            if rows_eq(&keys, i, &keys, j) && h[i] != h[j] {
+                return Err(format!("equal rows {i},{j} hash differently"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,181 @@
+//! PJRT model runtime: compile the AOT HLO-text artifacts once, then
+//! execute them from the L3 hot path (no Python anywhere).
+
+use super::manifest::Manifest;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A loaded, compiled model: all three entry points on one PJRT client.
+///
+/// NOT `Send` — PJRT wrapper types hold raw pointers. Each DDP rank
+/// thread constructs its own `ModelRuntime` (compilation is per-rank
+/// one-time cost; see `dl::trainer`).
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    predict: xla::PjRtLoadedExecutable,
+    grad_step: xla::PjRtLoadedExecutable,
+    apply_step: xla::PjRtLoadedExecutable,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))
+}
+
+/// Turn a flat f32 vec + shape into a device literal.
+fn literal(values: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    if values.len() != numel {
+        bail!("literal: {} values for shape {:?}", values.len(), shape);
+    }
+    let lit = xla::Literal::vec1(values);
+    if shape.is_empty() {
+        // rank-0: vec1 gives [1]; reshape to scalar
+        Ok(lit.reshape(&[]).map_err(|e| anyhow::anyhow!("reshape scalar: {e}"))?)
+    } else {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e}"))?)
+    }
+}
+
+impl ModelRuntime {
+    /// Load artifacts from a directory (see `make artifacts`).
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        let predict = compile(&client, &manifest.entries["predict"].file)?;
+        let grad_step = compile(&client, &manifest.entries["grad_step"].file)?;
+        let apply_step = compile(&client, &manifest.entries["apply_step"].file)?;
+        Ok(ModelRuntime { manifest, client, predict, grad_step, apply_step })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Initial parameters from the artifact bundle.
+    pub fn init_params(&self) -> Result<Vec<Vec<f32>>> {
+        self.manifest.load_init_params()
+    }
+
+    /// Flattened gradient length (= total parameter count).
+    pub fn n_params(&self) -> usize {
+        self.manifest.n_params()
+    }
+
+    fn param_literals(&self, params: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+        if params.len() != self.manifest.params.len() {
+            bail!(
+                "expected {} parameter tensors, got {}",
+                self.manifest.params.len(),
+                params.len()
+            );
+        }
+        params
+            .iter()
+            .zip(self.manifest.params.iter())
+            .map(|(v, spec)| literal(v, &spec.shape))
+            .collect()
+    }
+
+    fn run(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        tuple.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))
+    }
+
+    /// Eval-mode prediction: `x` is row-major (batch, d_in).
+    pub fn predict(&self, params: &[Vec<f32>], x: &[f32]) -> Result<Vec<f32>> {
+        let dims = &self.manifest.dims;
+        let mut args = self.param_literals(params)?;
+        args.push(literal(x, &[dims.batch, dims.d_in])?);
+        let out = self.run(&self.predict, &args)?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("predict output: {e}"))
+    }
+
+    /// Training step gradients: returns (loss, per-tensor grads).
+    pub fn grad_step(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[f32],
+        seed: i32,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let dims = &self.manifest.dims;
+        let mut args = self.param_literals(params)?;
+        args.push(literal(x, &[dims.batch, dims.d_in])?);
+        args.push(literal(y, &[dims.batch, 1])?);
+        args.push(
+            xla::Literal::scalar(seed),
+        );
+        let out = self.run(&self.grad_step, &args)?;
+        if out.len() != 1 + self.manifest.params.len() {
+            bail!("grad_step returned {} outputs, expected {}", out.len(), 1 + self.manifest.params.len());
+        }
+        let loss = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss output: {e}"))?[0];
+        let grads = out[1..]
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("grad output: {e}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    /// SGD update: params' = params - lr * grads.
+    pub fn apply_step(
+        &self,
+        params: &[Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut args = self.param_literals(params)?;
+        args.extend(self.param_literals(grads)?);
+        args.push(xla::Literal::scalar(lr));
+        let out = self.run(&self.apply_step, &args)?;
+        if out.len() != self.manifest.params.len() {
+            bail!("apply_step returned {} outputs, expected {}", out.len(), self.manifest.params.len());
+        }
+        out.iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("param output: {e}")))
+            .collect()
+    }
+}
+
+/// Flatten per-tensor vectors into one contiguous buffer (gradient
+/// allreduce operates on the flat form).
+pub fn flatten(tensors: &[Vec<f32>]) -> Vec<f32> {
+    let total: usize = tensors.iter().map(|t| t.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for t in tensors {
+        out.extend_from_slice(t);
+    }
+    out
+}
+
+/// Inverse of [`flatten`] given the manifest's parameter specs.
+pub fn unflatten(flat: &[f32], manifest: &Manifest) -> Result<Vec<Vec<f32>>> {
+    if flat.len() != manifest.n_params() {
+        bail!("unflatten: {} values for {} params", flat.len(), manifest.n_params());
+    }
+    let mut out = Vec::with_capacity(manifest.params.len());
+    let mut off = 0;
+    for spec in &manifest.params {
+        let n = spec.numel();
+        out.push(flat[off..off + n].to_vec());
+        off += n;
+    }
+    Ok(out)
+}

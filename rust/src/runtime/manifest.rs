@@ -1,0 +1,190 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (entry points, parameter order/shapes, batch dims).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor's name and shape (spec order = literal order).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Model dims as lowered (must match when feeding batches).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub n_blocks: usize,
+    pub n_tail: usize,
+    pub batch: usize,
+    pub dropout: f64,
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub file: PathBuf,
+    pub num_inputs: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub params: Vec<ParamSpec>,
+    pub entries: BTreeMap<String, EntryInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("cannot read {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text)?;
+
+        let cfg = j.get("config")?;
+        let dims = ModelDims {
+            d_in: cfg.get("d_in")?.as_usize()?,
+            d_hidden: cfg.get("d_hidden")?.as_usize()?,
+            n_blocks: cfg.get("n_blocks")?.as_usize()?,
+            n_tail: cfg.get("n_tail")?.as_usize()?,
+            batch: cfg.get("batch")?.as_usize()?,
+            dropout: cfg.get("dropout")?.as_f64()?,
+        };
+
+        let mut params = Vec::new();
+        for p in j.get("params")?.as_arr()? {
+            let shape = p
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            params.push(ParamSpec { name: p.get("name")?.as_str()?.to_string(), shape });
+        }
+        if params.is_empty() {
+            bail!("manifest has no parameters");
+        }
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries")?.as_obj()? {
+            entries.insert(
+                name.clone(),
+                EntryInfo {
+                    file: dir.join(e.get("file")?.as_str()?),
+                    num_inputs: e.get("num_inputs")?.as_usize()?,
+                },
+            );
+        }
+        for required in ["predict", "grad_step", "apply_step"] {
+            if !entries.contains_key(required) {
+                bail!("manifest missing entry point {required:?}");
+            }
+        }
+        if j.get("dtype")?.as_str()? != "f32" {
+            bail!("only f32 artifacts supported");
+        }
+        Ok(Manifest { dir, dims, params, entries })
+    }
+
+    /// Total parameter scalar count.
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Load `params_init.bin` (concatenated f32 LE in spec order).
+    pub fn load_init_params(&self) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join("params_init.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("cannot read {}", path.display()))?;
+        if bytes.len() != 4 * self.n_params() {
+            bail!(
+                "params_init.bin is {} bytes, expected {} (manifest mismatch — rebuild artifacts)",
+                bytes.len(),
+                4 * self.n_params()
+            );
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0;
+        for spec in &self.params {
+            let n = spec.numel();
+            let v: Vec<f32> = bytes[off..off + 4 * n]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            out.push(v);
+            off += 4 * n;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path, nparams_bytes_delta: i64) {
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "config": {"d_in": 8, "d_hidden": 16, "d_block_hidden": 16,
+                         "n_blocks": 1, "n_tail": 1, "dropout": 0.1, "batch": 128},
+              "params": [{"name": "in_w", "shape": [8, 16]}, {"name": "in_b", "shape": [16]}],
+              "entries": {
+                "predict": {"file": "predict.hlo.txt", "num_inputs": 3},
+                "grad_step": {"file": "grad_step.hlo.txt", "num_inputs": 5},
+                "apply_step": {"file": "apply_step.hlo.txt", "num_inputs": 5}
+              },
+              "dtype": "f32"
+            }"#,
+        )
+        .unwrap();
+        let n = (8 * 16 + 16) * 4;
+        let bytes = vec![0u8; (n as i64 + nparams_bytes_delta) as usize];
+        std::fs::write(dir.join("params_init.bin"), bytes).unwrap();
+    }
+
+    #[test]
+    fn loads_fixture() {
+        let dir = std::env::temp_dir().join(format!("hptmt-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir, 0);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dims.batch, 128);
+        assert_eq!(m.n_params(), 8 * 16 + 16);
+        let params = m.load_init_params().unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].len(), 128);
+        assert_eq!(params[1].len(), 16);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("hptmt-manifest-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir, 4);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.load_init_params().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let err = Manifest::load("/nonexistent/path").err().unwrap();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

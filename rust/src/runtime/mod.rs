@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them
+//! from the Rust hot path (Python never runs at serve/train time).
+//!
+//! Pipeline: `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `execute`. HLO **text** is the interchange
+//! format (the image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id
+//! serialized protos; the text parser reassigns ids).
+
+pub mod executable;
+pub mod manifest;
+
+pub use executable::{flatten, unflatten, ModelRuntime};
+pub use manifest::{EntryInfo, Manifest, ModelDims, ParamSpec};
+
+use anyhow::Result;
+
+/// Smoke check: CPU PJRT client comes up.
+pub fn smoke() -> Result<String> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(format!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    ))
+}

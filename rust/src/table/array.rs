@@ -1,0 +1,479 @@
+//! Columnar arrays: the unit of vectorised execution.
+//!
+//! Four physical layouts (matching [`DataType`]):
+//! * `Int64`  — `Vec<i64>` values + optional validity bitmap
+//! * `Float64`— `Vec<f64>` values + optional validity bitmap
+//! * `Utf8`   — Arrow-style `offsets: Vec<u32>` + `bytes: Vec<u8>` + bitmap
+//! * `Bool`   — `Vec<bool>` values + optional validity bitmap
+//!
+//! Null slots hold a zero/empty payload; consumers must consult the
+//! bitmap. An absent bitmap means "all valid".
+
+use super::bitmap::Bitmap;
+use super::scalar::{DataType, Scalar};
+
+/// UTF-8 column payload: `value(i) = bytes[offsets[i]..offsets[i+1]]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Utf8Data {
+    pub offsets: Vec<u32>,
+    pub bytes: Vec<u8>,
+}
+
+impl Utf8Data {
+    pub fn empty() -> Self {
+        Utf8Data { offsets: vec![0], bytes: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn value(&self, i: usize) -> &str {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        // Safety: builders only append valid UTF-8.
+        unsafe { std::str::from_utf8_unchecked(&self.bytes[lo..hi]) }
+    }
+
+    pub fn push(&mut self, s: &str) {
+        self.bytes.extend_from_slice(s.as_bytes());
+        self.offsets.push(self.bytes.len() as u32);
+    }
+
+    pub fn from_strs<S: AsRef<str>>(vals: &[S]) -> Self {
+        let total: usize = vals.iter().map(|s| s.as_ref().len()).sum();
+        let mut d = Utf8Data { offsets: Vec::with_capacity(vals.len() + 1), bytes: Vec::with_capacity(total) };
+        d.offsets.push(0);
+        for s in vals {
+            d.push(s.as_ref());
+        }
+        d
+    }
+}
+
+/// A column of data. Cheap to clone? No — clones copy buffers; operators
+/// move or borrow. Wrap in `Arc` at the [`Table`](super::table::Table)
+/// level when sharing is needed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Array {
+    Int64(Vec<i64>, Option<Bitmap>),
+    Float64(Vec<f64>, Option<Bitmap>),
+    Utf8(Utf8Data, Option<Bitmap>),
+    Bool(Vec<bool>, Option<Bitmap>),
+}
+
+impl Array {
+    // ---- constructors -------------------------------------------------
+
+    pub fn from_i64(v: Vec<i64>) -> Array {
+        Array::Int64(v, None)
+    }
+
+    pub fn from_f64(v: Vec<f64>) -> Array {
+        Array::Float64(v, None)
+    }
+
+    pub fn from_strs<S: AsRef<str>>(v: &[S]) -> Array {
+        Array::Utf8(Utf8Data::from_strs(v), None)
+    }
+
+    pub fn from_bools(v: Vec<bool>) -> Array {
+        Array::Bool(v, None)
+    }
+
+    /// From options; `None` entries become nulls.
+    pub fn from_opt_i64(v: Vec<Option<i64>>) -> Array {
+        let mut vals = Vec::with_capacity(v.len());
+        let mut bm = Bitmap::new_null(v.len());
+        let mut any_null = false;
+        for (i, o) in v.into_iter().enumerate() {
+            match o {
+                Some(x) => {
+                    vals.push(x);
+                    bm.set(i, true);
+                }
+                None => {
+                    vals.push(0);
+                    any_null = true;
+                }
+            }
+        }
+        Array::Int64(vals, if any_null { Some(bm) } else { None })
+    }
+
+    pub fn from_opt_f64(v: Vec<Option<f64>>) -> Array {
+        let mut vals = Vec::with_capacity(v.len());
+        let mut bm = Bitmap::new_null(v.len());
+        let mut any_null = false;
+        for (i, o) in v.into_iter().enumerate() {
+            match o {
+                Some(x) => {
+                    vals.push(x);
+                    bm.set(i, true);
+                }
+                None => {
+                    vals.push(0.0);
+                    any_null = true;
+                }
+            }
+        }
+        Array::Float64(vals, if any_null { Some(bm) } else { None })
+    }
+
+    pub fn from_opt_strs(v: Vec<Option<&str>>) -> Array {
+        let mut data = Utf8Data::empty();
+        let mut bm = Bitmap::new_null(v.len());
+        let mut any_null = false;
+        for (i, o) in v.into_iter().enumerate() {
+            match o {
+                Some(s) => {
+                    data.push(s);
+                    bm.set(i, true);
+                }
+                None => {
+                    data.push("");
+                    any_null = true;
+                }
+            }
+        }
+        Array::Utf8(data, if any_null { Some(bm) } else { None })
+    }
+
+    /// An empty array of the given type.
+    pub fn empty(dt: DataType) -> Array {
+        match dt {
+            DataType::Int64 => Array::Int64(Vec::new(), None),
+            DataType::Float64 => Array::Float64(Vec::new(), None),
+            DataType::Utf8 => Array::Utf8(Utf8Data::empty(), None),
+            DataType::Bool => Array::Bool(Vec::new(), None),
+        }
+    }
+
+    // ---- inspectors ----------------------------------------------------
+
+    pub fn data_type(&self) -> DataType {
+        match self {
+            Array::Int64(..) => DataType::Int64,
+            Array::Float64(..) => DataType::Float64,
+            Array::Utf8(..) => DataType::Utf8,
+            Array::Bool(..) => DataType::Bool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Array::Int64(v, _) => v.len(),
+            Array::Float64(v, _) => v.len(),
+            Array::Utf8(d, _) => d.len(),
+            Array::Bool(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn validity(&self) -> Option<&Bitmap> {
+        match self {
+            Array::Int64(_, b) | Array::Float64(_, b) | Array::Utf8(_, b) | Array::Bool(_, b) => {
+                b.as_ref()
+            }
+        }
+    }
+
+    #[inline]
+    pub fn is_valid(&self, i: usize) -> bool {
+        self.validity().map_or(true, |b| b.get(i))
+    }
+
+    #[inline]
+    pub fn is_null(&self, i: usize) -> bool {
+        !self.is_valid(i)
+    }
+
+    pub fn null_count(&self) -> usize {
+        self.validity().map_or(0, |b| b.count_null())
+    }
+
+    /// Cell accessor (slow path).
+    pub fn get(&self, i: usize) -> Scalar {
+        if self.is_null(i) {
+            return Scalar::Null;
+        }
+        match self {
+            Array::Int64(v, _) => Scalar::Int64(v[i]),
+            Array::Float64(v, _) => Scalar::Float64(v[i]),
+            Array::Utf8(d, _) => Scalar::Utf8(d.value(i).to_string()),
+            Array::Bool(v, _) => Scalar::Bool(v[i]),
+        }
+    }
+
+    // ---- typed views ---------------------------------------------------
+
+    pub fn i64_values(&self) -> Option<&[i64]> {
+        match self {
+            Array::Int64(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn f64_values(&self) -> Option<&[f64]> {
+        match self {
+            Array::Float64(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn utf8_data(&self) -> Option<&Utf8Data> {
+        match self {
+            Array::Utf8(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn bool_values(&self) -> Option<&[bool]> {
+        match self {
+            Array::Bool(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Numeric view of cell `i`, widening ints; None when null or non-numeric.
+    #[inline]
+    pub fn f64_at(&self, i: usize) -> Option<f64> {
+        if self.is_null(i) {
+            return None;
+        }
+        match self {
+            Array::Int64(v, _) => Some(v[i] as f64),
+            Array::Float64(v, _) => Some(v[i]),
+            _ => None,
+        }
+    }
+
+    // ---- kernels --------------------------------------------------------
+
+    /// Gather rows by index: `out[k] = self[indices[k]]`.
+    ///
+    /// The workhorse of select / sort / join materialisation — single
+    /// pass, pre-sized output buffers.
+    pub fn take(&self, indices: &[usize]) -> Array {
+        let validity = self.validity().map(|b| b.take(indices));
+        match self {
+            Array::Int64(v, _) => {
+                let out: Vec<i64> = indices.iter().map(|&i| v[i]).collect();
+                Array::Int64(out, validity)
+            }
+            Array::Float64(v, _) => {
+                let out: Vec<f64> = indices.iter().map(|&i| v[i]).collect();
+                Array::Float64(out, validity)
+            }
+            Array::Bool(v, _) => {
+                let out: Vec<bool> = indices.iter().map(|&i| v[i]).collect();
+                Array::Bool(out, validity)
+            }
+            Array::Utf8(d, _) => {
+                let total: usize = indices
+                    .iter()
+                    .map(|&i| (d.offsets[i + 1] - d.offsets[i]) as usize)
+                    .sum();
+                let mut out = Utf8Data {
+                    offsets: Vec::with_capacity(indices.len() + 1),
+                    bytes: Vec::with_capacity(total),
+                };
+                out.offsets.push(0);
+                for &i in indices {
+                    let lo = d.offsets[i] as usize;
+                    let hi = d.offsets[i + 1] as usize;
+                    out.bytes.extend_from_slice(&d.bytes[lo..hi]);
+                    out.offsets.push(out.bytes.len() as u32);
+                }
+                Array::Utf8(out, validity)
+            }
+        }
+    }
+
+    /// Gather with optional indices: `None` produces a null slot (outer
+    /// join materialisation).
+    pub fn take_opt(&self, indices: &[Option<usize>]) -> Array {
+        use super::builder::ArrayBuilder;
+        let mut b = ArrayBuilder::with_capacity(self.data_type(), indices.len());
+        for &i in indices {
+            match i {
+                Some(i) => b.push_from(self, i),
+                None => b.push_null(),
+            }
+        }
+        b.finish()
+    }
+
+    /// Contiguous slice copy `[start, start+len)`.
+    pub fn slice(&self, start: usize, len: usize) -> Array {
+        let idx: Vec<usize> = (start..start + len).collect();
+        self.take(&idx)
+    }
+
+    /// Concatenate many arrays of the same type.
+    pub fn concat(arrays: &[&Array]) -> Array {
+        assert!(!arrays.is_empty(), "concat of zero arrays");
+        let dt = arrays[0].data_type();
+        assert!(
+            arrays.iter().all(|a| a.data_type() == dt),
+            "concat type mismatch"
+        );
+        let total: usize = arrays.iter().map(|a| a.len()).sum();
+        let any_null = arrays.iter().any(|a| a.null_count() > 0);
+        let validity = if any_null {
+            let mut bm = Bitmap::new_null(total);
+            let mut off = 0;
+            for a in arrays {
+                for i in 0..a.len() {
+                    if a.is_valid(i) {
+                        bm.set(off + i, true);
+                    }
+                }
+                off += a.len();
+            }
+            Some(bm)
+        } else {
+            None
+        };
+        match dt {
+            DataType::Int64 => {
+                let mut out = Vec::with_capacity(total);
+                for a in arrays {
+                    out.extend_from_slice(a.i64_values().unwrap());
+                }
+                Array::Int64(out, validity)
+            }
+            DataType::Float64 => {
+                let mut out = Vec::with_capacity(total);
+                for a in arrays {
+                    out.extend_from_slice(a.f64_values().unwrap());
+                }
+                Array::Float64(out, validity)
+            }
+            DataType::Bool => {
+                let mut out = Vec::with_capacity(total);
+                for a in arrays {
+                    out.extend_from_slice(a.bool_values().unwrap());
+                }
+                Array::Bool(out, validity)
+            }
+            DataType::Utf8 => {
+                let bytes_total: usize = arrays.iter().map(|a| a.utf8_data().unwrap().bytes.len()).sum();
+                let mut out = Utf8Data {
+                    offsets: Vec::with_capacity(total + 1),
+                    bytes: Vec::with_capacity(bytes_total),
+                };
+                out.offsets.push(0);
+                for a in arrays {
+                    let d = a.utf8_data().unwrap();
+                    let base = out.bytes.len() as u32;
+                    out.bytes.extend_from_slice(&d.bytes);
+                    out.offsets.extend(d.offsets[1..].iter().map(|o| o + base));
+                }
+                Array::Utf8(out, validity)
+            }
+        }
+    }
+
+    /// Drop the bitmap if it is all-valid (normalisation after filters).
+    pub fn normalize_validity(self) -> Array {
+        fn norm(b: Option<Bitmap>) -> Option<Bitmap> {
+            b.filter(|bm| !bm.all_valid())
+        }
+        match self {
+            Array::Int64(v, b) => Array::Int64(v, norm(b)),
+            Array::Float64(v, b) => Array::Float64(v, norm(b)),
+            Array::Utf8(d, b) => Array::Utf8(d, norm(b)),
+            Array::Bool(v, b) => Array::Bool(v, norm(b)),
+        }
+    }
+
+    /// Approximate heap footprint in bytes (used by the comm cost model
+    /// and the pipeline's backpressure accounting).
+    pub fn nbytes(&self) -> usize {
+        let bm = self.validity().map_or(0, |b| b.raw().len());
+        bm + match self {
+            Array::Int64(v, _) => v.len() * 8,
+            Array::Float64(v, _) => v.len() * 8,
+            Array::Bool(v, _) => v.len(),
+            Array::Utf8(d, _) => d.bytes.len() + d.offsets.len() * 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_get() {
+        let a = Array::from_opt_i64(vec![Some(1), None, Some(3)]);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.null_count(), 1);
+        assert_eq!(a.get(0), Scalar::Int64(1));
+        assert_eq!(a.get(1), Scalar::Null);
+        assert_eq!(a.f64_at(2), Some(3.0));
+        assert_eq!(a.f64_at(1), None);
+    }
+
+    #[test]
+    fn utf8_layout() {
+        let a = Array::from_strs(&["ab", "", "xyz"]);
+        let d = a.utf8_data().unwrap();
+        assert_eq!(d.value(0), "ab");
+        assert_eq!(d.value(1), "");
+        assert_eq!(d.value(2), "xyz");
+        assert_eq!(a.nbytes(), 5 + 4 * 4);
+    }
+
+    #[test]
+    fn take_gathers_values_and_validity() {
+        let a = Array::from_opt_strs(vec![Some("a"), None, Some("c"), Some("d")]);
+        let t = a.take(&[3, 1, 0]);
+        assert_eq!(t.get(0), Scalar::Utf8("d".into()));
+        assert_eq!(t.get(1), Scalar::Null);
+        assert_eq!(t.get(2), Scalar::Utf8("a".into()));
+    }
+
+    #[test]
+    fn concat_mixed_validity() {
+        let a = Array::from_i64(vec![1, 2]);
+        let b = Array::from_opt_i64(vec![None, Some(4)]);
+        let c = Array::concat(&[&a, &b]);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.null_count(), 1);
+        assert_eq!(c.get(3), Scalar::Int64(4));
+        assert_eq!(c.get(2), Scalar::Null);
+    }
+
+    #[test]
+    fn concat_utf8_offsets_rebased() {
+        let a = Array::from_strs(&["aa", "b"]);
+        let b = Array::from_strs(&["ccc"]);
+        let c = Array::concat(&[&a, &b]);
+        assert_eq!(c.get(2), Scalar::Utf8("ccc".into()));
+    }
+
+    #[test]
+    fn slice_copies_range() {
+        let a = Array::from_f64(vec![0.0, 1.0, 2.0, 3.0]);
+        let s = a.slice(1, 2);
+        assert_eq!(s.f64_values().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn normalize_drops_full_bitmap() {
+        let mut bm = Bitmap::new_valid(2);
+        bm.set(0, true);
+        let a = Array::Int64(vec![1, 2], Some(bm)).normalize_validity();
+        assert!(a.validity().is_none());
+    }
+}

@@ -1,0 +1,211 @@
+//! Validity bitmap: one bit per row, 1 = valid, 0 = null.
+//!
+//! Matches Arrow's semantics: an array with no bitmap is entirely valid.
+
+/// A packed bitmap with LSB-first bit order within each byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitmap {
+    bits: Vec<u8>,
+    len: usize,
+}
+
+impl Bitmap {
+    /// An all-valid bitmap of length `len`.
+    pub fn new_valid(len: usize) -> Self {
+        Bitmap { bits: vec![0xFF; len.div_ceil(8)], len }
+    }
+
+    /// An all-null bitmap of length `len`.
+    pub fn new_null(len: usize) -> Self {
+        Bitmap { bits: vec![0u8; len.div_ceil(8)], len }
+    }
+
+    /// Build from a bool slice (`true` = valid).
+    pub fn from_bools(v: &[bool]) -> Self {
+        let mut bm = Bitmap::new_null(v.len());
+        for (i, &b) in v.iter().enumerate() {
+            if b {
+                bm.set(i, true);
+            }
+        }
+        bm
+    }
+
+    /// Reconstruct from raw LSB-first bytes (IPC path).
+    pub fn from_raw(bits: Vec<u8>, len: usize) -> Self {
+        debug_assert!(bits.len() >= len.div_ceil(8));
+        Bitmap { bits, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw bytes (LSB-first) for IPC.
+    pub fn raw(&self) -> &[u8] {
+        &self.bits
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.bits[i >> 3] >> (i & 7)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, valid: bool) {
+        debug_assert!(i < self.len);
+        if valid {
+            self.bits[i >> 3] |= 1 << (i & 7);
+        } else {
+            self.bits[i >> 3] &= !(1 << (i & 7));
+        }
+    }
+
+    /// Append one bit.
+    pub fn push(&mut self, valid: bool) {
+        if self.len % 8 == 0 {
+            self.bits.push(0);
+        }
+        self.len += 1;
+        self.set(self.len - 1, valid);
+    }
+
+    /// Number of valid (set) bits.
+    pub fn count_valid(&self) -> usize {
+        // Mask the trailing partial byte before popcount.
+        let full = self.len / 8;
+        let mut n: usize = self.bits[..full].iter().map(|b| b.count_ones() as usize).sum();
+        let rem = self.len % 8;
+        if rem > 0 {
+            let mask = (1u16 << rem) as u8 - 1;
+            n += (self.bits[full] & mask).count_ones() as usize;
+        }
+        n
+    }
+
+    /// Number of null (unset) bits.
+    pub fn count_null(&self) -> usize {
+        self.len - self.count_valid()
+    }
+
+    /// True when every bit is valid (fast path to drop the bitmap).
+    pub fn all_valid(&self) -> bool {
+        self.count_valid() == self.len
+    }
+
+    /// Gather: new bitmap with `out[k] = self[indices[k]]`.
+    pub fn take(&self, indices: &[usize]) -> Bitmap {
+        let mut out = Bitmap::new_null(indices.len());
+        for (k, &i) in indices.iter().enumerate() {
+            if self.get(i) {
+                out.set(k, true);
+            }
+        }
+        out
+    }
+
+    /// Concatenate two bitmaps.
+    pub fn concat(&self, other: &Bitmap) -> Bitmap {
+        let mut out = Bitmap::new_null(self.len + other.len);
+        for i in 0..self.len {
+            if self.get(i) {
+                out.set(i, true);
+            }
+        }
+        for i in 0..other.len {
+            if other.get(i) {
+                out.set(self.len + i, true);
+            }
+        }
+        out
+    }
+
+    /// Bitwise AND of two equal-length bitmaps.
+    pub fn and(&self, other: &Bitmap) -> Bitmap {
+        assert_eq!(self.len, other.len, "bitmap length mismatch");
+        let bits = self
+            .bits
+            .iter()
+            .zip(other.bits.iter())
+            .map(|(a, b)| a & b)
+            .collect();
+        Bitmap { bits, len: self.len }
+    }
+
+    /// Iterator over bits as bools.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+}
+
+/// Combine two optional validity bitmaps (None = all valid).
+pub fn merge_validity(a: Option<&Bitmap>, b: Option<&Bitmap>, len: usize) -> Option<Bitmap> {
+    match (a, b) {
+        (None, None) => None,
+        (Some(a), None) => Some(a.clone()),
+        (None, Some(b)) => Some(b.clone()),
+        (Some(a), Some(b)) => {
+            debug_assert_eq!(a.len(), len);
+            debug_assert_eq!(b.len(), len);
+            Some(a.and(b))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_push() {
+        let mut bm = Bitmap::new_null(10);
+        bm.set(3, true);
+        bm.set(9, true);
+        assert!(bm.get(3) && bm.get(9) && !bm.get(0));
+        assert_eq!(bm.count_valid(), 2);
+        bm.push(true);
+        assert_eq!(bm.len(), 11);
+        assert!(bm.get(10));
+        assert_eq!(bm.count_valid(), 3);
+    }
+
+    #[test]
+    fn counts_with_partial_byte() {
+        let bm = Bitmap::new_valid(13);
+        assert_eq!(bm.count_valid(), 13);
+        assert_eq!(bm.count_null(), 0);
+        assert!(bm.all_valid());
+    }
+
+    #[test]
+    fn take_and_concat() {
+        let bm = Bitmap::from_bools(&[true, false, true, true]);
+        let t = bm.take(&[3, 1, 0]);
+        assert_eq!(t.iter().collect::<Vec<_>>(), vec![true, false, true]);
+        let c = bm.concat(&Bitmap::from_bools(&[false, true]));
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.count_valid(), 4);
+    }
+
+    #[test]
+    fn and_merge() {
+        let a = Bitmap::from_bools(&[true, true, false]);
+        let b = Bitmap::from_bools(&[true, false, false]);
+        assert_eq!(a.and(&b).iter().collect::<Vec<_>>(), vec![true, false, false]);
+        assert!(merge_validity(None, None, 3).is_none());
+        let m = merge_validity(Some(&a), Some(&b), 3).unwrap();
+        assert_eq!(m.count_valid(), 1);
+    }
+
+    #[test]
+    fn raw_roundtrip() {
+        let bm = Bitmap::from_bools(&[true, false, true, false, true, true, true, false, true]);
+        let rt = Bitmap::from_raw(bm.raw().to_vec(), bm.len());
+        assert_eq!(bm, rt);
+    }
+}

@@ -1,0 +1,289 @@
+//! Incremental builders for arrays and tables (CSV reader, data
+//! generators and shuffle receive path all append row-at-a-time or
+//! cell-at-a-time).
+
+use super::array::{Array, Utf8Data};
+use super::bitmap::Bitmap;
+use super::scalar::{DataType, Scalar};
+use super::schema::{Schema, SchemaRef};
+use super::table::Table;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Builder for a single column.
+#[derive(Debug)]
+pub enum ArrayBuilder {
+    Int64(Vec<i64>, Bitmap, bool),
+    Float64(Vec<f64>, Bitmap, bool),
+    Utf8(Utf8Data, Bitmap, bool),
+    Bool(Vec<bool>, Bitmap, bool),
+}
+
+impl ArrayBuilder {
+    pub fn new(dt: DataType) -> ArrayBuilder {
+        Self::with_capacity(dt, 0)
+    }
+
+    pub fn with_capacity(dt: DataType, cap: usize) -> ArrayBuilder {
+        match dt {
+            DataType::Int64 => ArrayBuilder::Int64(Vec::with_capacity(cap), Bitmap::new_null(0), false),
+            DataType::Float64 => {
+                ArrayBuilder::Float64(Vec::with_capacity(cap), Bitmap::new_null(0), false)
+            }
+            DataType::Utf8 => ArrayBuilder::Utf8(Utf8Data::empty(), Bitmap::new_null(0), false),
+            DataType::Bool => ArrayBuilder::Bool(Vec::with_capacity(cap), Bitmap::new_null(0), false),
+        }
+    }
+
+    pub fn data_type(&self) -> DataType {
+        match self {
+            ArrayBuilder::Int64(..) => DataType::Int64,
+            ArrayBuilder::Float64(..) => DataType::Float64,
+            ArrayBuilder::Utf8(..) => DataType::Utf8,
+            ArrayBuilder::Bool(..) => DataType::Bool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ArrayBuilder::Int64(v, ..) => v.len(),
+            ArrayBuilder::Float64(v, ..) => v.len(),
+            ArrayBuilder::Utf8(d, ..) => d.len(),
+            ArrayBuilder::Bool(v, ..) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn push_i64(&mut self, v: i64) {
+        match self {
+            ArrayBuilder::Int64(vals, bm, _) => {
+                vals.push(v);
+                bm.push(true);
+            }
+            _ => panic!("push_i64 on {:?} builder", self.data_type()),
+        }
+    }
+
+    pub fn push_f64(&mut self, v: f64) {
+        match self {
+            ArrayBuilder::Float64(vals, bm, _) => {
+                vals.push(v);
+                bm.push(true);
+            }
+            _ => panic!("push_f64 on {:?} builder", self.data_type()),
+        }
+    }
+
+    pub fn push_str(&mut self, v: &str) {
+        match self {
+            ArrayBuilder::Utf8(data, bm, _) => {
+                data.push(v);
+                bm.push(true);
+            }
+            _ => panic!("push_str on {:?} builder", self.data_type()),
+        }
+    }
+
+    pub fn push_bool(&mut self, v: bool) {
+        match self {
+            ArrayBuilder::Bool(vals, bm, _) => {
+                vals.push(v);
+                bm.push(true);
+            }
+            _ => panic!("push_bool on {:?} builder", self.data_type()),
+        }
+    }
+
+    pub fn push_null(&mut self) {
+        match self {
+            ArrayBuilder::Int64(vals, bm, n) => {
+                vals.push(0);
+                bm.push(false);
+                *n = true;
+            }
+            ArrayBuilder::Float64(vals, bm, n) => {
+                vals.push(0.0);
+                bm.push(false);
+                *n = true;
+            }
+            ArrayBuilder::Utf8(data, bm, n) => {
+                data.push("");
+                bm.push(false);
+                *n = true;
+            }
+            ArrayBuilder::Bool(vals, bm, n) => {
+                vals.push(false);
+                bm.push(false);
+                *n = true;
+            }
+        }
+    }
+
+    /// Append a scalar; must match the builder type or be null.
+    pub fn push_scalar(&mut self, s: &Scalar) -> Result<()> {
+        match (self, s) {
+            (b, Scalar::Null) => b.push_null(),
+            (b @ ArrayBuilder::Int64(..), Scalar::Int64(v)) => b.push_i64(*v),
+            (b @ ArrayBuilder::Float64(..), Scalar::Float64(v)) => b.push_f64(*v),
+            // widen int into float columns (CSV inference may settle on
+            // float after seeing ints first)
+            (b @ ArrayBuilder::Float64(..), Scalar::Int64(v)) => b.push_f64(*v as f64),
+            (b @ ArrayBuilder::Utf8(..), Scalar::Utf8(v)) => b.push_str(v),
+            (b @ ArrayBuilder::Bool(..), Scalar::Bool(v)) => b.push_bool(*v),
+            (b, s) => bail!("type mismatch: {} builder, {:?} scalar", b.data_type(), s),
+        }
+        Ok(())
+    }
+
+    /// Append cell `i` of `src` (shuffle receive path).
+    pub fn push_from(&mut self, src: &Array, i: usize) {
+        if src.is_null(i) {
+            self.push_null();
+            return;
+        }
+        match (self, src) {
+            (b @ ArrayBuilder::Int64(..), Array::Int64(v, _)) => b.push_i64(v[i]),
+            (b @ ArrayBuilder::Float64(..), Array::Float64(v, _)) => b.push_f64(v[i]),
+            (b @ ArrayBuilder::Utf8(..), Array::Utf8(d, _)) => b.push_str(d.value(i)),
+            (b @ ArrayBuilder::Bool(..), Array::Bool(v, _)) => b.push_bool(v[i]),
+            (b, s) => panic!("push_from type mismatch: {} vs {}", b.data_type(), s.data_type()),
+        }
+    }
+
+    pub fn finish(self) -> Array {
+        match self {
+            ArrayBuilder::Int64(v, bm, any_null) => {
+                Array::Int64(v, if any_null { Some(bm) } else { None })
+            }
+            ArrayBuilder::Float64(v, bm, any_null) => {
+                Array::Float64(v, if any_null { Some(bm) } else { None })
+            }
+            ArrayBuilder::Utf8(d, bm, any_null) => {
+                Array::Utf8(d, if any_null { Some(bm) } else { None })
+            }
+            ArrayBuilder::Bool(v, bm, any_null) => {
+                Array::Bool(v, if any_null { Some(bm) } else { None })
+            }
+        }
+    }
+}
+
+/// Builder for a whole table (one `ArrayBuilder` per field).
+#[derive(Debug)]
+pub struct TableBuilder {
+    schema: SchemaRef,
+    builders: Vec<ArrayBuilder>,
+}
+
+impl TableBuilder {
+    pub fn new(schema: Schema) -> TableBuilder {
+        Self::shared(Arc::new(schema), 0)
+    }
+
+    pub fn shared(schema: SchemaRef, cap: usize) -> TableBuilder {
+        let builders = schema
+            .fields()
+            .iter()
+            .map(|f| ArrayBuilder::with_capacity(f.data_type, cap))
+            .collect();
+        TableBuilder { schema, builders }
+    }
+
+    pub fn schema(&self) -> &SchemaRef {
+        &self.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.builders.first().map_or(0, |b| b.len())
+    }
+
+    pub fn column_builder(&mut self, i: usize) -> &mut ArrayBuilder {
+        &mut self.builders[i]
+    }
+
+    /// Append a full row of scalars.
+    pub fn push_row(&mut self, row: &[Scalar]) -> Result<()> {
+        if row.len() != self.builders.len() {
+            bail!("row has {} cells, schema has {}", row.len(), self.builders.len());
+        }
+        for (b, s) in self.builders.iter_mut().zip(row.iter()) {
+            b.push_scalar(s)?;
+        }
+        Ok(())
+    }
+
+    /// Append row `i` of `src` (schemas must be type-compatible).
+    pub fn push_table_row(&mut self, src: &Table, i: usize) {
+        for (b, c) in self.builders.iter_mut().zip(src.columns().iter()) {
+            b.push_from(c, i);
+        }
+    }
+
+    pub fn finish(self) -> Table {
+        let columns: Vec<Array> = self.builders.into_iter().map(|b| b.finish()).collect();
+        Table::new_shared(self.schema, columns).expect("builder produced consistent table")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::schema::Field;
+
+    #[test]
+    fn build_with_nulls() {
+        let mut b = ArrayBuilder::new(DataType::Int64);
+        b.push_i64(1);
+        b.push_null();
+        b.push_i64(3);
+        let a = b.finish();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.null_count(), 1);
+        assert_eq!(a.get(2), Scalar::Int64(3));
+    }
+
+    #[test]
+    fn no_nulls_no_bitmap() {
+        let mut b = ArrayBuilder::new(DataType::Utf8);
+        b.push_str("x");
+        b.push_str("y");
+        let a = b.finish();
+        assert!(a.validity().is_none());
+    }
+
+    #[test]
+    fn int_widens_into_float_builder() {
+        let mut b = ArrayBuilder::new(DataType::Float64);
+        b.push_scalar(&Scalar::Int64(2)).unwrap();
+        assert_eq!(b.finish().get(0), Scalar::Float64(2.0));
+    }
+
+    #[test]
+    fn table_builder_roundtrip() {
+        let schema = Schema::new(vec![
+            Field::new("id", DataType::Int64),
+            Field::new("tag", DataType::Utf8),
+        ]);
+        let mut tb = TableBuilder::new(schema);
+        tb.push_row(&[Scalar::Int64(1), Scalar::Utf8("a".into())]).unwrap();
+        tb.push_row(&[Scalar::Null, Scalar::Utf8("b".into())]).unwrap();
+        let t = tb.finish();
+        assert_eq!(t.num_rows(), 2);
+        assert_eq!(t.cell(1, 0), Scalar::Null);
+
+        // push_table_row copies across
+        let mut tb2 = TableBuilder::shared(t.schema().clone(), 2);
+        tb2.push_table_row(&t, 1);
+        let t2 = tb2.finish();
+        assert_eq!(t2.cell(0, 1), Scalar::Utf8("b".into()));
+    }
+
+    #[test]
+    fn row_arity_checked() {
+        let mut tb = TableBuilder::new(Schema::new(vec![Field::new("x", DataType::Int64)]));
+        assert!(tb.push_row(&[Scalar::Int64(1), Scalar::Int64(2)]).is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! CSV reader/writer with type inference.
+//!
+//! Covers what the UNOMT pipeline and the examples need: header row,
+//! configurable delimiter, RFC-4180 quoting, null tokens (empty string,
+//! "NA", "null", "NaN"), and two-pass type inference
+//! (int64 → float64 → bool → utf8 fallback).
+
+use super::builder::TableBuilder;
+use super::scalar::DataType;
+use super::schema::{Field, Schema};
+use super::table::Table;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+/// Reader options.
+#[derive(Debug, Clone)]
+pub struct CsvOptions {
+    pub delimiter: u8,
+    pub has_header: bool,
+    /// Tokens parsed as null (in addition to the empty string).
+    pub null_tokens: Vec<String>,
+    /// Rows sampled for type inference (whole file is still parsed).
+    pub infer_rows: usize,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        CsvOptions {
+            delimiter: b',',
+            has_header: true,
+            null_tokens: vec!["NA".into(), "null".into(), "NaN".into()],
+            infer_rows: 1000,
+        }
+    }
+}
+
+/// Split one CSV record into fields, honouring double-quote quoting.
+fn split_record(line: &str, delim: u8) -> Vec<String> {
+    let delim = delim as char;
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cur.push(c);
+            }
+        } else if c == '"' {
+            in_quotes = true;
+        } else if c == delim {
+            fields.push(std::mem::take(&mut cur));
+        } else {
+            cur.push(c);
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+fn is_null_token(s: &str, opts: &CsvOptions) -> bool {
+    s.is_empty() || opts.null_tokens.iter().any(|t| t == s)
+}
+
+/// Narrowest type that parses every non-null sample of a column.
+fn infer_type(samples: &[&str]) -> DataType {
+    let mut t = DataType::Int64;
+    for s in samples {
+        t = match t {
+            DataType::Int64 if s.parse::<i64>().is_ok() => DataType::Int64,
+            DataType::Int64 | DataType::Float64 if s.parse::<f64>().is_ok() => DataType::Float64,
+            DataType::Int64 | DataType::Float64 | DataType::Bool
+                if matches!(*s, "true" | "false" | "True" | "False") =>
+            {
+                DataType::Bool
+            }
+            _ => return DataType::Utf8,
+        };
+    }
+    t
+}
+
+/// Read a CSV from any reader.
+pub fn read_csv_from<R: Read>(reader: R, opts: &CsvOptions) -> Result<Table> {
+    let buf = BufReader::new(reader);
+    let mut lines = Vec::new();
+    for line in buf.lines() {
+        let line = line.context("csv: read error")?;
+        if !line.is_empty() {
+            lines.push(line);
+        }
+    }
+    if lines.is_empty() {
+        bail!("csv: empty input");
+    }
+
+    let (header, data_lines) = if opts.has_header {
+        let h = split_record(&lines[0], opts.delimiter);
+        (h, &lines[1..])
+    } else {
+        let n = split_record(&lines[0], opts.delimiter).len();
+        ((0..n).map(|i| format!("c{i}")).collect(), &lines[..])
+    };
+    let ncols = header.len();
+
+    // Parse all records once.
+    let mut records: Vec<Vec<String>> = Vec::with_capacity(data_lines.len());
+    for (lineno, line) in data_lines.iter().enumerate() {
+        let rec = split_record(line, opts.delimiter);
+        if rec.len() != ncols {
+            bail!(
+                "csv: line {} has {} fields, expected {ncols}",
+                lineno + 1 + usize::from(opts.has_header),
+                rec.len()
+            );
+        }
+        records.push(rec);
+    }
+
+    // Infer per-column types from a sample of non-null cells.
+    let mut types = Vec::with_capacity(ncols);
+    for c in 0..ncols {
+        let samples: Vec<&str> = records
+            .iter()
+            .take(opts.infer_rows)
+            .map(|r| r[c].as_str())
+            .filter(|s| !is_null_token(s, opts))
+            .collect();
+        types.push(if samples.is_empty() { DataType::Utf8 } else { infer_type(&samples) });
+    }
+
+    let schema = Schema::new(
+        header
+            .iter()
+            .zip(types.iter())
+            .map(|(n, &t)| Field::new(n.clone(), t))
+            .collect(),
+    );
+    let mut tb = TableBuilder::new(schema);
+    for rec in &records {
+        for (c, cell) in rec.iter().enumerate() {
+            let b = tb.column_builder(c);
+            if is_null_token(cell, opts) {
+                b.push_null();
+                continue;
+            }
+            match types[c] {
+                DataType::Int64 => match cell.parse::<i64>() {
+                    Ok(v) => b.push_i64(v),
+                    Err(_) => b.push_null(), // value fell outside the inferred sample
+                },
+                DataType::Float64 => match cell.parse::<f64>() {
+                    Ok(v) => b.push_f64(v),
+                    Err(_) => b.push_null(),
+                },
+                DataType::Bool => b.push_bool(matches!(cell.as_str(), "true" | "True")),
+                DataType::Utf8 => b.push_str(cell),
+            }
+        }
+    }
+    Ok(tb.finish())
+}
+
+/// Read a CSV file with default options.
+pub fn read_csv(path: impl AsRef<Path>) -> Result<Table> {
+    read_csv_opts(path, &CsvOptions::default())
+}
+
+/// Read a CSV file.
+pub fn read_csv_opts(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Table> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("csv: cannot open {}", path.as_ref().display()))?;
+    read_csv_from(f, opts)
+}
+
+fn needs_quoting(s: &str, delim: u8) -> bool {
+    s.bytes().any(|b| b == delim || b == b'"' || b == b'\n' || b == b'\r')
+}
+
+/// Write a table as CSV.
+pub fn write_csv_to<W: Write>(table: &Table, mut w: W, opts: &CsvOptions) -> Result<()> {
+    let delim = opts.delimiter as char;
+    if opts.has_header {
+        let names = table.schema().names();
+        writeln!(w, "{}", names.join(&delim.to_string()))?;
+    }
+    for r in 0..table.num_rows() {
+        let mut line = String::new();
+        for c in 0..table.num_columns() {
+            if c > 0 {
+                line.push(delim);
+            }
+            let cell = table.cell(r, c);
+            if cell.is_null() {
+                continue; // null → empty field
+            }
+            let s = cell.to_string();
+            if needs_quoting(&s, opts.delimiter) {
+                line.push('"');
+                line.push_str(&s.replace('"', "\"\""));
+                line.push('"');
+            } else {
+                line.push_str(&s);
+            }
+        }
+        writeln!(w, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Write a table to a CSV file (Pandas `to_csv` role).
+pub fn write_csv(table: &Table, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("csv: cannot create {}", path.as_ref().display()))?;
+    write_csv_to(table, f, &CsvOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::scalar::Scalar;
+
+    #[test]
+    fn infer_and_parse() {
+        let data = "id,name,score,ok\n1,alpha,0.5,true\n2,beta,,false\n,gamma,2.5,true\n";
+        let t = read_csv_from(data.as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!(t.num_rows(), 3);
+        let s = t.schema();
+        assert_eq!(s.field(0).data_type, DataType::Int64);
+        assert_eq!(s.field(1).data_type, DataType::Utf8);
+        assert_eq!(s.field(2).data_type, DataType::Float64);
+        assert_eq!(s.field(3).data_type, DataType::Bool);
+        assert_eq!(t.cell(2, 0), Scalar::Null);
+        assert_eq!(t.cell(1, 2), Scalar::Null);
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let data = "a,b\n\"x,y\",\"he said \"\"hi\"\"\"\n";
+        let t = read_csv_from(data.as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!(t.cell(0, 0), Scalar::Utf8("x,y".into()));
+        assert_eq!(t.cell(0, 1), Scalar::Utf8("he said \"hi\"".into()));
+    }
+
+    #[test]
+    fn null_tokens() {
+        let data = "x\nNA\n7\nnull\n";
+        let t = read_csv_from(data.as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!(t.column(0).null_count(), 2);
+        assert_eq!(t.cell(1, 0), Scalar::Int64(7));
+    }
+
+    #[test]
+    fn headerless() {
+        let opts = CsvOptions { has_header: false, ..Default::default() };
+        let t = read_csv_from("1,2\n3,4\n".as_bytes(), &opts).unwrap();
+        assert_eq!(t.schema().names(), vec!["c0", "c1"]);
+        assert_eq!(t.num_rows(), 2);
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        assert!(read_csv_from("a,b\n1\n".as_bytes(), &CsvOptions::default()).is_err());
+    }
+
+    #[test]
+    fn write_roundtrip() {
+        let t = Table::from_columns(vec![
+            ("id", crate::table::array::Array::from_opt_i64(vec![Some(1), None])),
+            ("s", crate::table::array::Array::from_strs(&["a,b", "plain"])),
+        ])
+        .unwrap();
+        let mut buf = Vec::new();
+        write_csv_to(&t, &mut buf, &CsvOptions::default()).unwrap();
+        let rt = read_csv_from(&buf[..], &CsvOptions::default()).unwrap();
+        assert_eq!(rt.cell(0, 1), Scalar::Utf8("a,b".into()));
+        assert_eq!(rt.cell(1, 0), Scalar::Null);
+    }
+}

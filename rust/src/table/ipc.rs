@@ -1,0 +1,229 @@
+//! Byte-level (de)serialisation of tables — the "wire format" used by
+//! the shuffle path and the multi-node simulation.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "HPT1"           4 bytes
+//! ncols: u32, nrows: u64
+//! per column:
+//!   name_len: u32, name bytes
+//!   dtype tag: u8
+//!   has_validity: u8
+//!   [validity bytes: ceil(nrows/8)]
+//!   payload:
+//!     int64/float64: nrows * 8 bytes
+//!     bool: nrows bytes
+//!     utf8: offsets (nrows+1)*4 bytes, byte_len u64, bytes
+//! ```
+//!
+//! Going through real bytes (rather than handing `Arc<Table>` across the
+//! channel) is deliberate: it charges the benchmark the serialisation
+//! cost an MPI shuffle pays, and gives the comm cost model exact message
+//! sizes.
+
+use super::array::{Array, Utf8Data};
+use super::bitmap::Bitmap;
+use super::scalar::DataType;
+use super::schema::{Field, Schema};
+use super::table::Table;
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"HPT1";
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("ipc: truncated buffer (want {n} at {}, have {})", self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Serialise a table to bytes.
+pub fn serialize(table: &Table) -> Vec<u8> {
+    let nrows = table.num_rows();
+    let mut w = Writer { buf: Vec::with_capacity(table.nbytes() + 64) };
+    w.bytes(MAGIC);
+    w.u32(table.num_columns() as u32);
+    w.u64(nrows as u64);
+    for (field, col) in table.schema().fields().iter().zip(table.columns()) {
+        w.u32(field.name.len() as u32);
+        w.bytes(field.name.as_bytes());
+        w.u8(field.data_type.tag());
+        match col.validity() {
+            Some(bm) => {
+                w.u8(1);
+                w.bytes(&bm.raw()[..nrows.div_ceil(8)]);
+            }
+            None => w.u8(0),
+        }
+        match col {
+            Array::Int64(v, _) => {
+                for x in v {
+                    w.bytes(&x.to_le_bytes());
+                }
+            }
+            Array::Float64(v, _) => {
+                for x in v {
+                    w.bytes(&x.to_le_bytes());
+                }
+            }
+            Array::Bool(v, _) => {
+                for &x in v {
+                    w.u8(x as u8);
+                }
+            }
+            Array::Utf8(d, _) => {
+                for o in &d.offsets {
+                    w.bytes(&o.to_le_bytes());
+                }
+                w.u64(d.bytes.len() as u64);
+                w.bytes(&d.bytes);
+            }
+        }
+    }
+    w.buf
+}
+
+/// Deserialise a table from bytes produced by [`serialize`].
+pub fn deserialize(buf: &[u8]) -> Result<Table> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("ipc: bad magic");
+    }
+    let ncols = r.u32()? as usize;
+    let nrows = r.u64()? as usize;
+    let mut fields = Vec::with_capacity(ncols);
+    let mut columns = Vec::with_capacity(ncols);
+    for c in 0..ncols {
+        let name_len = r.u32()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .with_context(|| format!("ipc: column {c} name not utf8"))?
+            .to_string();
+        let dt = DataType::from_tag(r.u8()?).context("ipc: bad dtype tag")?;
+        let validity = if r.u8()? == 1 {
+            let raw = r.take(nrows.div_ceil(8))?.to_vec();
+            Some(Bitmap::from_raw(raw, nrows))
+        } else {
+            None
+        };
+        let arr = match dt {
+            DataType::Int64 => {
+                let raw = r.take(nrows * 8)?;
+                let v = raw
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Array::Int64(v, validity)
+            }
+            DataType::Float64 => {
+                let raw = r.take(nrows * 8)?;
+                let v = raw
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Array::Float64(v, validity)
+            }
+            DataType::Bool => {
+                let raw = r.take(nrows)?;
+                Array::Bool(raw.iter().map(|&b| b != 0).collect(), validity)
+            }
+            DataType::Utf8 => {
+                let raw = r.take((nrows + 1) * 4)?;
+                let offsets: Vec<u32> = raw
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let blen = r.u64()? as usize;
+                let bytes = r.take(blen)?.to_vec();
+                Array::Utf8(Utf8Data { offsets, bytes }, validity)
+            }
+        };
+        fields.push(Field::new(name, dt));
+        columns.push(arr);
+    }
+    if r.pos != buf.len() {
+        bail!("ipc: {} trailing bytes", buf.len() - r.pos);
+    }
+    Table::new(Schema::new(fields), columns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::scalar::Scalar;
+
+    fn sample() -> Table {
+        Table::from_columns(vec![
+            ("id", Array::from_opt_i64(vec![Some(1), None, Some(3)])),
+            ("name", Array::from_opt_strs(vec![Some("aa"), Some(""), None])),
+            ("score", Array::from_f64(vec![0.5, 1.5, -2.5])),
+            ("flag", Array::from_bools(vec![true, false, true])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = sample();
+        let bytes = serialize(&t);
+        let rt = deserialize(&bytes).unwrap();
+        assert_eq!(t, rt);
+        assert_eq!(rt.cell(1, 0), Scalar::Null);
+        assert_eq!(rt.cell(0, 1), Scalar::Utf8("aa".into()));
+    }
+
+    #[test]
+    fn empty_table_roundtrip() {
+        let t = sample().slice(0, 0);
+        let rt = deserialize(&serialize(&t)).unwrap();
+        assert_eq!(rt.num_rows(), 0);
+        assert_eq!(rt.num_columns(), 4);
+    }
+
+    #[test]
+    fn corrupt_inputs_rejected() {
+        assert!(deserialize(b"nope").is_err());
+        let mut bytes = serialize(&sample());
+        bytes.truncate(bytes.len() - 3);
+        assert!(deserialize(&bytes).is_err());
+        let mut extra = serialize(&sample());
+        extra.push(0);
+        assert!(deserialize(&extra).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! Columnar table substrate (Apache-Arrow-analog).
+//!
+//! The HPTMT paper's data-engineering side is built on Arrow tables; in
+//! this reproduction the substrate is implemented from scratch:
+//! validity-bitmap nullable arrays, UTF-8 offset arrays, schemas, typed
+//! builders, a CSV front door, an IPC wire format for shuffles, and the
+//! shared row-hash/row-equality kernels every hash-based operator uses.
+
+pub mod array;
+pub mod bitmap;
+pub mod builder;
+pub mod csv;
+pub mod ipc;
+pub mod pretty;
+pub mod rowhash;
+pub mod scalar;
+pub mod schema;
+#[allow(clippy::module_inception)]
+pub mod table;
+
+pub use array::Array;
+pub use bitmap::Bitmap;
+pub use builder::{ArrayBuilder, TableBuilder};
+pub use scalar::{DataType, Scalar};
+pub use schema::{Field, Schema, SchemaRef};
+pub use table::Table;

@@ -1,0 +1,65 @@
+//! Human-readable table rendering for the CLI and examples.
+
+use super::table::Table;
+use std::fmt::Write as _;
+
+/// Render up to `max_rows` rows as an aligned ASCII grid.
+pub fn pretty(table: &Table, max_rows: usize) -> String {
+    let ncols = table.num_columns();
+    let shown = table.num_rows().min(max_rows);
+    let mut cells: Vec<Vec<String>> = Vec::with_capacity(shown + 1);
+    cells.push(
+        table
+            .schema()
+            .fields()
+            .iter()
+            .map(|f| format!("{} ({})", f.name, f.data_type))
+            .collect(),
+    );
+    for r in 0..shown {
+        cells.push((0..ncols).map(|c| table.cell(r, c).to_string()).collect());
+    }
+    let mut widths = vec![0usize; ncols];
+    for row in &cells {
+        for (c, s) in row.iter().enumerate() {
+            widths[c] = widths[c].max(s.len());
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in cells.iter().enumerate() {
+        for (c, s) in row.iter().enumerate() {
+            let _ = write!(out, "| {:w$} ", s, w = widths[c]);
+        }
+        out.push_str("|\n");
+        if i == 0 {
+            for &w in &widths {
+                let _ = write!(out, "+{}", "-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        }
+    }
+    if table.num_rows() > shown {
+        let _ = writeln!(out, "... {} more rows", table.num_rows() - shown);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::array::Array;
+
+    #[test]
+    fn renders_and_truncates() {
+        let t = Table::from_columns(vec![
+            ("id", Array::from_i64(vec![1, 2, 3])),
+            ("name", Array::from_opt_strs(vec![Some("long-name"), None, Some("x")])),
+        ])
+        .unwrap();
+        let s = pretty(&t, 2);
+        assert!(s.contains("id (int64)"));
+        assert!(s.contains("long-name"));
+        assert!(s.contains("null"));
+        assert!(s.contains("1 more rows"));
+    }
+}

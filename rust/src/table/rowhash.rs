@@ -1,0 +1,223 @@
+//! Row hashing and row equality over key columns.
+//!
+//! These are the shared primitives under hash join, group-by, unique,
+//! isin and hash-partitioned shuffle — the paper's Table 5 compositions
+//! all bottom out here. Hashes are computed column-at-a-time
+//! (vectorised) and combined per row, so the hot loop never branches on
+//! data type per cell.
+
+use super::array::Array;
+
+/// 64-bit finaliser (splitmix64). Good avalanche, cheap.
+#[inline]
+pub fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Combine a new column hash into a running row hash.
+#[inline]
+fn combine(acc: u64, h: u64) -> u64 {
+    // boost-style hash_combine, widened to 64-bit.
+    acc ^ (h
+        .wrapping_add(0x9E3779B97F4A7C15)
+        .wrapping_add(acc << 6)
+        .wrapping_add(acc >> 2))
+}
+
+const NULL_HASH: u64 = 0xA5A5_5A5A_DEAD_BEEF;
+
+/// Hash one string.
+#[inline]
+fn hash_bytes(b: &[u8]) -> u64 {
+    // FNV-1a with a splitmix finaliser: fast on the short keys the
+    // UNOMT pipeline produces (drug ids, cell-line names).
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &byte in b {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    mix64(h)
+}
+
+/// Canonical bits for f64 so that `-0.0 == 0.0` and all NaNs collide.
+#[inline]
+fn canon_f64(v: f64) -> u64 {
+    if v.is_nan() {
+        0x7FF8_0000_0000_0000
+    } else if v == 0.0 {
+        0
+    } else {
+        v.to_bits()
+    }
+}
+
+/// Per-column hashes, written into (or combined with) `out`.
+fn hash_column_into(col: &Array, out: &mut [u64], first: bool) {
+    let n = col.len();
+    debug_assert_eq!(out.len(), n);
+    macro_rules! body {
+        ($get:expr) => {
+            for i in 0..n {
+                let h = if col.is_valid(i) { $get(i) } else { NULL_HASH };
+                out[i] = if first { h } else { combine(out[i], h) };
+            }
+        };
+    }
+    match col {
+        Array::Int64(v, _) => body!(|i: usize| mix64(v[i] as u64)),
+        Array::Float64(v, _) => body!(|i: usize| mix64(canon_f64(v[i]))),
+        Array::Bool(v, _) => body!(|i: usize| mix64(v[i] as u64 + 1)),
+        Array::Utf8(d, _) => body!(|i: usize| hash_bytes(
+            &d.bytes[d.offsets[i] as usize..d.offsets[i + 1] as usize]
+        )),
+    }
+}
+
+/// Row hashes over a set of key columns (all must share a length).
+pub fn hash_columns(cols: &[&Array]) -> Vec<u64> {
+    assert!(!cols.is_empty(), "hash_columns: no key columns");
+    let n = cols[0].len();
+    let mut out = vec![0u64; n];
+    for (k, col) in cols.iter().enumerate() {
+        assert_eq!(col.len(), n, "key column length mismatch");
+        hash_column_into(col, &mut out, k == 0);
+    }
+    out
+}
+
+/// Total order on f64 consistent with [`cell_eq`]'s canonicalisation:
+/// `-0.0 == 0.0`, all NaNs equal and greater than every number.
+#[inline]
+pub fn canonical_f64_total_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.partial_cmp(&b).unwrap(),
+    }
+}
+
+/// Cell equality between `a[i]` and `b[j]` with null == null semantics
+/// (group-by / unique semantics; SQL joins filter nulls before probing).
+#[inline]
+pub fn cell_eq(a: &Array, i: usize, b: &Array, j: usize) -> bool {
+    match (a.is_valid(i), b.is_valid(j)) {
+        (false, false) => true,
+        (true, true) => match (a, b) {
+            (Array::Int64(x, _), Array::Int64(y, _)) => x[i] == y[j],
+            (Array::Float64(x, _), Array::Float64(y, _)) => canon_f64(x[i]) == canon_f64(y[j]),
+            (Array::Bool(x, _), Array::Bool(y, _)) => x[i] == y[j],
+            (Array::Utf8(x, _), Array::Utf8(y, _)) => x.value(i) == y.value(j),
+            _ => false,
+        },
+        _ => false,
+    }
+}
+
+/// Row equality across parallel key-column sets.
+#[inline]
+pub fn rows_eq(left: &[&Array], i: usize, right: &[&Array], j: usize) -> bool {
+    left.iter()
+        .zip(right.iter())
+        .all(|(a, b)| cell_eq(a, i, b, j))
+}
+
+/// True when any key cell in row `i` is null (SQL join semantics: null
+/// keys never match).
+#[inline]
+pub fn any_null(cols: &[&Array], i: usize) -> bool {
+    cols.iter().any(|c| c.is_null(i))
+}
+
+/// Map row hashes to `nparts` partitions.
+///
+/// Uses the high bits via 128-bit multiply (Lemire reduction) — cheaper
+/// and better distributed than `% nparts` on already-mixed hashes.
+#[inline]
+pub fn partition_of(hash: u64, nparts: usize) -> usize {
+    (((hash as u128) * (nparts as u128)) >> 64) as usize
+}
+
+/// Partition row indices of a table by key-column hash.
+/// Returns `nparts` index vectors (the shuffle send lists).
+pub fn partition_indices(hashes: &[u64], nparts: usize) -> Vec<Vec<usize>> {
+    // Two passes: count then fill, so each Vec is allocated exactly once.
+    let mut counts = vec![0usize; nparts];
+    for &h in hashes {
+        counts[partition_of(h, nparts)] += 1;
+    }
+    let mut out: Vec<Vec<usize>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for (i, &h) in hashes.iter().enumerate() {
+        out[partition_of(h, nparts)].push(i);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_rows_hash_equal() {
+        let a = Array::from_i64(vec![1, 2, 1]);
+        let b = Array::from_strs(&["x", "y", "x"]);
+        let h = hash_columns(&[&a, &b]);
+        assert_eq!(h[0], h[2]);
+        assert_ne!(h[0], h[1]);
+    }
+
+    #[test]
+    fn null_handling() {
+        let a = Array::from_opt_i64(vec![None, None, Some(0)]);
+        let h = hash_columns(&[&a]);
+        assert_eq!(h[0], h[1]);
+        assert_ne!(h[0], h[2]);
+        assert!(cell_eq(&a, 0, &a, 1));
+        assert!(!cell_eq(&a, 0, &a, 2));
+        assert!(any_null(&[&a], 0));
+        assert!(!any_null(&[&a], 2));
+    }
+
+    #[test]
+    fn float_canonicalisation() {
+        let a = Array::from_f64(vec![0.0, -0.0, f64::NAN, f64::NAN]);
+        let h = hash_columns(&[&a]);
+        assert_eq!(h[0], h[1]);
+        assert_eq!(h[2], h[3]);
+        assert!(cell_eq(&a, 2, &a, 3));
+        assert!(cell_eq(&a, 0, &a, 1));
+    }
+
+    #[test]
+    fn cross_table_row_eq() {
+        let a1 = Array::from_i64(vec![1, 2]);
+        let b1 = Array::from_strs(&["u", "v"]);
+        let a2 = Array::from_i64(vec![2]);
+        let b2 = Array::from_strs(&["v"]);
+        assert!(rows_eq(&[&a1, &b1], 1, &[&a2, &b2], 0));
+        assert!(!rows_eq(&[&a1, &b1], 0, &[&a2, &b2], 0));
+    }
+
+    #[test]
+    fn partitions_cover_all_rows() {
+        let a = Array::from_i64((0..1000).collect());
+        let h = hash_columns(&[&a]);
+        let parts = partition_indices(&h, 7);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 1000);
+        // every partition id in range, reasonably balanced (< 3x mean)
+        for p in &parts {
+            assert!(p.len() < 3 * 1000 / 7);
+        }
+    }
+
+    #[test]
+    fn partition_of_in_range() {
+        for h in [0u64, 1, u64::MAX, 0xDEADBEEF] {
+            assert!(partition_of(h, 5) < 5);
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Data types and scalar values for table columns.
+//!
+//! The substrate mirrors the slice of the Apache Arrow type system the
+//! HPTMT paper's workloads actually exercise: 64-bit integers, 64-bit
+//! floats, UTF-8 strings and booleans, all nullable.
+
+use std::fmt;
+
+/// Physical type of a column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataType {
+    Int64,
+    Float64,
+    Utf8,
+    Bool,
+}
+
+impl DataType {
+    /// Short lowercase name (used by CSV inference, pretty printing and
+    /// the IPC header).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataType::Int64 => "int64",
+            DataType::Float64 => "float64",
+            DataType::Utf8 => "utf8",
+            DataType::Bool => "bool",
+        }
+    }
+
+    /// Stable one-byte tag for the IPC wire format.
+    pub fn tag(&self) -> u8 {
+        match self {
+            DataType::Int64 => 0,
+            DataType::Float64 => 1,
+            DataType::Utf8 => 2,
+            DataType::Bool => 3,
+        }
+    }
+
+    /// Inverse of [`DataType::tag`].
+    pub fn from_tag(tag: u8) -> Option<DataType> {
+        Some(match tag {
+            0 => DataType::Int64,
+            1 => DataType::Float64,
+            2 => DataType::Utf8,
+            3 => DataType::Bool,
+            _ => return None,
+        })
+    }
+
+    /// True when values of this type are numeric (castable to f64).
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, DataType::Int64 | DataType::Float64)
+    }
+}
+
+impl fmt::Display for DataType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A single (possibly null) cell value.
+///
+/// `Scalar` is the slow path — operators work on columnar arrays — but it
+/// is the convenient currency for filters, literals and test assertions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    Null,
+    Int64(i64),
+    Float64(f64),
+    Utf8(String),
+    Bool(bool),
+}
+
+impl Scalar {
+    pub fn is_null(&self) -> bool {
+        matches!(self, Scalar::Null)
+    }
+
+    /// The type of the scalar, if it is not null.
+    pub fn data_type(&self) -> Option<DataType> {
+        Some(match self {
+            Scalar::Null => return None,
+            Scalar::Int64(_) => DataType::Int64,
+            Scalar::Float64(_) => DataType::Float64,
+            Scalar::Utf8(_) => DataType::Utf8,
+            Scalar::Bool(_) => DataType::Bool,
+        })
+    }
+
+    /// Numeric view (ints widen to f64). None for null / non-numeric.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Scalar::Int64(v) => Some(*v as f64),
+            Scalar::Float64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Scalar::Int64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Scalar::Utf8(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Scalar::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Scalar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Scalar::Null => write!(f, "null"),
+            Scalar::Int64(v) => write!(f, "{v}"),
+            Scalar::Float64(v) => write!(f, "{v}"),
+            Scalar::Utf8(s) => write!(f, "{s}"),
+            Scalar::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+impl From<i64> for Scalar {
+    fn from(v: i64) -> Self {
+        Scalar::Int64(v)
+    }
+}
+impl From<f64> for Scalar {
+    fn from(v: f64) -> Self {
+        Scalar::Float64(v)
+    }
+}
+impl From<&str> for Scalar {
+    fn from(v: &str) -> Self {
+        Scalar::Utf8(v.to_string())
+    }
+}
+impl From<String> for Scalar {
+    fn from(v: String) -> Self {
+        Scalar::Utf8(v)
+    }
+}
+impl From<bool> for Scalar {
+    fn from(v: bool) -> Self {
+        Scalar::Bool(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_roundtrip() {
+        for dt in [DataType::Int64, DataType::Float64, DataType::Utf8, DataType::Bool] {
+            assert_eq!(DataType::from_tag(dt.tag()), Some(dt));
+        }
+        assert_eq!(DataType::from_tag(42), None);
+    }
+
+    #[test]
+    fn scalar_views() {
+        assert_eq!(Scalar::Int64(3).as_f64(), Some(3.0));
+        assert_eq!(Scalar::Float64(2.5).as_f64(), Some(2.5));
+        assert_eq!(Scalar::Utf8("x".into()).as_str(), Some("x"));
+        assert!(Scalar::Null.is_null());
+        assert_eq!(Scalar::Null.data_type(), None);
+        assert_eq!(Scalar::Bool(true).as_bool(), Some(true));
+    }
+
+    #[test]
+    fn scalar_from_conversions() {
+        assert_eq!(Scalar::from(1i64), Scalar::Int64(1));
+        assert_eq!(Scalar::from("a"), Scalar::Utf8("a".into()));
+        assert_eq!(Scalar::from(false), Scalar::Bool(false));
+    }
+}

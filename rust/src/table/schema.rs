@@ -1,0 +1,169 @@
+//! Table schemas: ordered, named, typed fields.
+
+use super::scalar::DataType;
+use anyhow::{bail, Result};
+use std::fmt;
+use std::sync::Arc;
+
+/// A named, typed column descriptor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    pub data_type: DataType,
+    pub nullable: bool,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, data_type: DataType) -> Self {
+        Field { name: name.into(), data_type, nullable: true }
+    }
+
+    pub fn not_null(name: impl Into<String>, data_type: DataType) -> Self {
+        Field { name: name.into(), data_type, nullable: false }
+    }
+}
+
+/// An ordered collection of fields. Shared via `Arc` between tables that
+/// have the same shape (e.g. partitions of one distributed table).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    fields: Vec<Field>,
+}
+
+pub type SchemaRef = Arc<Schema>;
+
+impl Schema {
+    pub fn new(fields: Vec<Field>) -> Self {
+        Schema { fields }
+    }
+
+    pub fn empty() -> Self {
+        Schema { fields: Vec::new() }
+    }
+
+    pub fn fields(&self) -> &[Field] {
+        &self.fields
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn field(&self, i: usize) -> &Field {
+        &self.fields[i]
+    }
+
+    /// Index of the column with the given name.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        match self.fields.iter().position(|f| f.name == name) {
+            Some(i) => Ok(i),
+            None => bail!(
+                "column {name:?} not found (have: {:?})",
+                self.fields.iter().map(|f| &f.name).collect::<Vec<_>>()
+            ),
+        }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.fields.iter().any(|f| f.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.fields.iter().map(|f| f.name.as_str()).collect()
+    }
+
+    /// Sub-schema by column indices.
+    pub fn project(&self, indices: &[usize]) -> Schema {
+        Schema { fields: indices.iter().map(|&i| self.fields[i].clone()).collect() }
+    }
+
+    /// New schema with a prefix prepended to every column name
+    /// (Pandas' `add_prefix`, used by the UNOMT pipeline).
+    pub fn add_prefix(&self, prefix: &str) -> Schema {
+        Schema {
+            fields: self
+                .fields
+                .iter()
+                .map(|f| Field { name: format!("{prefix}{}", f.name), ..f.clone() })
+                .collect(),
+        }
+    }
+
+    /// New schema with one column renamed.
+    pub fn rename(&self, from: &str, to: &str) -> Result<Schema> {
+        let i = self.index_of(from)?;
+        let mut fields = self.fields.clone();
+        fields[i].name = to.to_string();
+        Ok(Schema { fields })
+    }
+
+    /// Two schemas are union-compatible when types match positionally.
+    pub fn type_compatible(&self, other: &Schema) -> bool {
+        self.fields.len() == other.fields.len()
+            && self
+                .fields
+                .iter()
+                .zip(other.fields.iter())
+                .all(|(a, b)| a.data_type == b.data_type)
+    }
+}
+
+impl fmt::Display for Schema {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, fld) in self.fields.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}: {}", fld.name, fld.data_type)?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl FromIterator<Field> for Schema {
+    fn from_iter<T: IntoIterator<Item = Field>>(iter: T) -> Self {
+        Schema { fields: iter.into_iter().collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s() -> Schema {
+        Schema::new(vec![
+            Field::new("id", DataType::Int64),
+            Field::new("name", DataType::Utf8),
+            Field::new("score", DataType::Float64),
+        ])
+    }
+
+    #[test]
+    fn lookup() {
+        let sc = s();
+        assert_eq!(sc.index_of("name").unwrap(), 1);
+        assert!(sc.index_of("missing").is_err());
+        assert!(sc.contains("score"));
+    }
+
+    #[test]
+    fn project_and_prefix() {
+        let sc = s().project(&[2, 0]);
+        assert_eq!(sc.names(), vec!["score", "id"]);
+        let p = sc.add_prefix("x_");
+        assert_eq!(p.names(), vec!["x_score", "x_id"]);
+    }
+
+    #[test]
+    fn rename_and_compat() {
+        let sc = s().rename("id", "key").unwrap();
+        assert_eq!(sc.names()[0], "key");
+        assert!(sc.type_compatible(&s()));
+        assert!(!sc.project(&[0]).type_compatible(&s()));
+    }
+}

@@ -1,0 +1,310 @@
+//! The in-memory columnar table: schema + equal-length arrays.
+//!
+//! `Table` is the local (single-rank) unit the HPTMT operators work on.
+//! A distributed table is simply one `Table` per rank plus the
+//! communicator that relates them (the paper's "global view").
+
+use super::array::Array;
+use super::scalar::Scalar;
+use super::schema::{Field, Schema, SchemaRef};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Immutable columnar table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    schema: SchemaRef,
+    columns: Vec<Array>,
+    nrows: usize,
+}
+
+impl Table {
+    /// Build from a schema and matching columns.
+    pub fn new(schema: Schema, columns: Vec<Array>) -> Result<Table> {
+        Self::new_shared(Arc::new(schema), columns)
+    }
+
+    /// Build sharing an existing schema allocation.
+    pub fn new_shared(schema: SchemaRef, columns: Vec<Array>) -> Result<Table> {
+        if schema.len() != columns.len() {
+            bail!(
+                "schema has {} fields but {} columns supplied",
+                schema.len(),
+                columns.len()
+            );
+        }
+        let nrows = columns.first().map_or(0, |c| c.len());
+        for (f, c) in schema.fields().iter().zip(columns.iter()) {
+            if f.data_type != c.data_type() {
+                bail!(
+                    "column {:?}: schema says {} but array is {}",
+                    f.name,
+                    f.data_type,
+                    c.data_type()
+                );
+            }
+            if c.len() != nrows {
+                bail!("ragged table: column {:?} has {} rows, expected {nrows}", f.name, c.len());
+            }
+        }
+        Ok(Table { schema, columns, nrows })
+    }
+
+    /// Convenience constructor from (name, array) pairs.
+    pub fn from_columns(cols: Vec<(&str, Array)>) -> Result<Table> {
+        let fields = cols
+            .iter()
+            .map(|(n, a)| Field::new(*n, a.data_type()))
+            .collect::<Vec<_>>();
+        let arrays = cols.into_iter().map(|(_, a)| a).collect();
+        Table::new(Schema::new(fields), arrays)
+    }
+
+    /// Zero-row table with the given schema.
+    pub fn empty(schema: Schema) -> Table {
+        let columns = schema.fields().iter().map(|f| Array::empty(f.data_type)).collect();
+        Table { schema: Arc::new(schema), columns, nrows: 0 }
+    }
+
+    // ---- inspectors ----------------------------------------------------
+
+    pub fn schema(&self) -> &SchemaRef {
+        &self.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn columns(&self) -> &[Array] {
+        &self.columns
+    }
+
+    pub fn column(&self, i: usize) -> &Array {
+        &self.columns[i]
+    }
+
+    /// Column by name.
+    pub fn column_by_name(&self, name: &str) -> Result<&Array> {
+        Ok(&self.columns[self.schema.index_of(name)?])
+    }
+
+    /// Cell accessor (slow path; tests and pretty printing).
+    pub fn cell(&self, row: usize, col: usize) -> Scalar {
+        self.columns[col].get(row)
+    }
+
+    /// One row as scalars (slow path).
+    pub fn row(&self, i: usize) -> Vec<Scalar> {
+        self.columns.iter().map(|c| c.get(i)).collect()
+    }
+
+    /// Approximate heap footprint.
+    pub fn nbytes(&self) -> usize {
+        self.columns.iter().map(|c| c.nbytes()).sum()
+    }
+
+    // ---- structural ops (the cheap, schema-level ones live here; the
+    //      relational operators live in `crate::ops`) -------------------
+
+    /// Gather rows by index into a new table.
+    pub fn take(&self, indices: &[usize]) -> Table {
+        let columns = self.columns.iter().map(|c| c.take(indices)).collect();
+        Table { schema: self.schema.clone(), columns, nrows: indices.len() }
+    }
+
+    /// Contiguous row range copy.
+    pub fn slice(&self, start: usize, len: usize) -> Table {
+        let len = len.min(self.nrows.saturating_sub(start));
+        let columns = self.columns.iter().map(|c| c.slice(start, len)).collect();
+        Table { schema: self.schema.clone(), columns, nrows: len }
+    }
+
+    /// First `n` rows.
+    pub fn head(&self, n: usize) -> Table {
+        self.slice(0, n)
+    }
+
+    /// Last `n` rows.
+    pub fn tail(&self, n: usize) -> Table {
+        let n = n.min(self.nrows);
+        self.slice(self.nrows - n, n)
+    }
+
+    /// Keep the named columns, in the given order (relational Project).
+    pub fn select_columns(&self, names: &[&str]) -> Result<Table> {
+        let idx = names
+            .iter()
+            .map(|n| self.schema.index_of(n))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(self.project(&idx))
+    }
+
+    /// Keep columns by index, in the given order.
+    pub fn project(&self, indices: &[usize]) -> Table {
+        let schema = self.schema.project(indices);
+        let columns = indices.iter().map(|&i| self.columns[i].clone()).collect();
+        Table { schema: Arc::new(schema), columns, nrows: self.nrows }
+    }
+
+    /// Drop the named columns.
+    pub fn drop_columns(&self, names: &[&str]) -> Result<Table> {
+        for n in names {
+            self.schema.index_of(n)?; // error on unknown names
+        }
+        let keep: Vec<usize> = (0..self.num_columns())
+            .filter(|&i| !names.contains(&self.schema.field(i).name.as_str()))
+            .collect();
+        Ok(self.project(&keep))
+    }
+
+    /// Add (or replace) a column.
+    pub fn with_column(&self, name: &str, array: Array) -> Result<Table> {
+        if array.len() != self.nrows {
+            bail!("with_column: length mismatch ({} vs {})", array.len(), self.nrows);
+        }
+        let mut fields: Vec<Field> = self.schema.fields().to_vec();
+        let mut columns = self.columns.clone();
+        match self.schema.index_of(name) {
+            Ok(i) => {
+                fields[i] = Field::new(name, array.data_type());
+                columns[i] = array;
+            }
+            Err(_) => {
+                fields.push(Field::new(name, array.data_type()));
+                columns.push(array);
+            }
+        }
+        Table::new(Schema::new(fields), columns)
+    }
+
+    /// Rename one column.
+    pub fn rename(&self, from: &str, to: &str) -> Result<Table> {
+        let schema = self.schema.rename(from, to)?;
+        Ok(Table { schema: Arc::new(schema), columns: self.columns.clone(), nrows: self.nrows })
+    }
+
+    /// Prefix every column name (Pandas `add_prefix`).
+    pub fn add_prefix(&self, prefix: &str) -> Table {
+        Table {
+            schema: Arc::new(self.schema.add_prefix(prefix)),
+            columns: self.columns.clone(),
+            nrows: self.nrows,
+        }
+    }
+
+    /// Vertically stack union-compatible tables (schema of the first wins).
+    pub fn concat_tables(tables: &[&Table]) -> Result<Table> {
+        let Some(first) = tables.first() else { bail!("concat of zero tables") };
+        for t in tables {
+            if !first.schema.type_compatible(&t.schema) {
+                bail!("concat: incompatible schemas {} vs {}", first.schema, t.schema);
+            }
+        }
+        let ncols = first.num_columns();
+        let mut columns = Vec::with_capacity(ncols);
+        for c in 0..ncols {
+            let parts: Vec<&Array> = tables.iter().map(|t| &t.columns[c]).collect();
+            columns.push(Array::concat(&parts));
+        }
+        let nrows = tables.iter().map(|t| t.nrows).sum();
+        Ok(Table { schema: first.schema.clone(), columns, nrows })
+    }
+
+    /// Split into `n` contiguous chunks of near-equal size (row-partition
+    /// for pleasingly-parallel dispatch; last chunks may be one row
+    /// shorter).
+    pub fn split(&self, n: usize) -> Vec<Table> {
+        assert!(n > 0);
+        let base = self.nrows / n;
+        let extra = self.nrows % n;
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        for k in 0..n {
+            let len = base + usize::from(k < extra);
+            out.push(self.slice(start, len));
+            start += len;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::scalar::DataType;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("id", Array::from_i64(vec![1, 2, 3, 4])),
+            ("name", Array::from_strs(&["a", "b", "c", "d"])),
+            ("score", Array::from_f64(vec![0.1, 0.2, 0.3, 0.4])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_checks() {
+        assert!(Table::from_columns(vec![
+            ("a", Array::from_i64(vec![1])),
+            ("b", Array::from_i64(vec![1, 2])),
+        ])
+        .is_err());
+        let tbl = t();
+        assert_eq!(tbl.num_rows(), 4);
+        assert_eq!(tbl.num_columns(), 3);
+    }
+
+    #[test]
+    fn take_and_slice() {
+        let tbl = t();
+        let g = tbl.take(&[2, 0]);
+        assert_eq!(g.cell(0, 0), Scalar::Int64(3));
+        assert_eq!(g.cell(1, 1), Scalar::Utf8("a".into()));
+        let s = tbl.slice(1, 2);
+        assert_eq!(s.num_rows(), 2);
+        assert_eq!(s.cell(0, 0), Scalar::Int64(2));
+        assert_eq!(tbl.head(2).num_rows(), 2);
+        assert_eq!(tbl.tail(1).cell(0, 0), Scalar::Int64(4));
+    }
+
+    #[test]
+    fn column_ops() {
+        let tbl = t();
+        let p = tbl.select_columns(&["score", "id"]).unwrap();
+        assert_eq!(p.schema().names(), vec!["score", "id"]);
+        let d = tbl.drop_columns(&["name"]).unwrap();
+        assert_eq!(d.num_columns(), 2);
+        assert!(tbl.drop_columns(&["nope"]).is_err());
+        let w = tbl.with_column("flag", Array::from_bools(vec![true, false, true, false])).unwrap();
+        assert_eq!(w.num_columns(), 4);
+        let w2 = w.with_column("id", Array::from_f64(vec![0.0; 4])).unwrap();
+        assert_eq!(w2.column_by_name("id").unwrap().data_type(), DataType::Float64);
+        let r = tbl.rename("id", "key").unwrap();
+        assert!(r.schema().contains("key"));
+        let pre = tbl.add_prefix("p_");
+        assert!(pre.schema().contains("p_id"));
+    }
+
+    #[test]
+    fn concat_and_split() {
+        let tbl = t();
+        let c = Table::concat_tables(&[&tbl, &tbl]).unwrap();
+        assert_eq!(c.num_rows(), 8);
+        let parts = tbl.split(3);
+        assert_eq!(parts.iter().map(|p| p.num_rows()).collect::<Vec<_>>(), vec![2, 1, 1]);
+        let back = Table::concat_tables(&parts.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(back, tbl);
+    }
+
+    #[test]
+    fn empty_table() {
+        let e = Table::empty(Schema::new(vec![Field::new("x", DataType::Int64)]));
+        assert_eq!(e.num_rows(), 0);
+        assert_eq!(e.num_columns(), 1);
+    }
+}

@@ -1,0 +1,79 @@
+//! UNOMT workload configuration.
+//!
+//! The paper uses NCI60 (1006 drugs) + gCSI and 2.5M response samples;
+//! we have no access to those, so the generators in
+//! [`super::datagen`] synthesise datasets with the same schema, the
+//! same dirt (symbol-polluted ids, duplicates, nulls) and configurable
+//! cardinalities/selectivities (DESIGN.md §3).
+
+/// Synthetic UNOMT dataset dimensions.
+#[derive(Debug, Clone)]
+pub struct UnomtConfig {
+    /// Drug-response rows (the paper's 2.5M; default scaled down).
+    pub n_response: usize,
+    /// Distinct drugs (paper: 1006 from NCI60).
+    pub n_drugs: usize,
+    /// Distinct cell lines (NCI60: 60).
+    pub n_cell_lines: usize,
+    /// Drug descriptor feature count (first metadata sub-table).
+    pub n_descriptors: usize,
+    /// Drug fingerprint feature count (second metadata sub-table).
+    pub n_fingerprints: usize,
+    /// RNA-seq feature count per cell line.
+    pub n_rna_features: usize,
+    /// Fraction of drugs present in the metadata tables (drives the
+    /// isin/intersect selectivity of Fig 11).
+    pub drug_coverage: f64,
+    /// Fraction of null cells injected into raw numeric columns.
+    pub null_frac: f64,
+    /// Fraction of RNA rows duplicated (exercises drop_duplicates).
+    pub dup_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for UnomtConfig {
+    fn default() -> Self {
+        UnomtConfig {
+            n_response: 20_000,
+            n_drugs: 1006, // NCI60
+            n_cell_lines: 60,
+            n_descriptors: 20,
+            n_fingerprints: 20,
+            n_rna_features: 23,
+            drug_coverage: 0.9,
+            null_frac: 0.01,
+            dup_frac: 0.05,
+            seed: 42,
+        }
+    }
+}
+
+impl UnomtConfig {
+    /// Engineered feature width = descriptors + fingerprints + RNA +
+    /// concentration (must equal the model's `d_in`).
+    pub fn feature_width(&self) -> usize {
+        self.n_descriptors + self.n_fingerprints + self.n_rna_features + 1
+    }
+
+    /// Scale row counts (for bench sweeps).
+    pub fn with_rows(mut self, n: usize) -> Self {
+        self.n_response = n;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_model_d_in() {
+        // The default AOT artifact is lowered with d_in = 64.
+        assert_eq!(UnomtConfig::default().feature_width(), 64);
+    }
+}

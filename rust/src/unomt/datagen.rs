@@ -1,0 +1,218 @@
+//! Synthetic NCI60-analog data generators (DESIGN.md §3 substitution).
+//!
+//! Three raw datasets with the paper's schemas and dirt:
+//! * **drug response** (Fig 8 input): source centre, symbol-polluted
+//!   drug id, cell line, log-concentration, growth + two junk columns
+//!   that the pipeline's column filter must drop;
+//! * **drug features** (Fig 9 input): two sub-tables (descriptors,
+//!   fingerprints) keyed by *clean* drug id, covering a configurable
+//!   fraction of drugs;
+//! * **RNA-seq** (Fig 10 input): symbol-polluted cell ids, duplicated
+//!   rows, numeric expression features with nulls.
+//!
+//! Everything is deterministic in the config seed; rank-sharded
+//! generation (`response_shard`) partitions rows without materialising
+//! the global table.
+
+use super::config::UnomtConfig;
+use crate::table::{Array, Table};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Clean drug id (what the metadata tables use).
+pub fn drug_id(i: usize) -> String {
+    format!("NSC{i:05}")
+}
+
+/// Dirty drug id as it appears in raw response files ("NSC.00123").
+fn dirty_drug_id(i: usize, rng: &mut Rng) -> String {
+    let sep = match rng.gen_range(3) {
+        0 => ".",
+        1 => "-",
+        _ => "_",
+    };
+    format!("NSC{sep}{i:05}")
+}
+
+/// Cell line id ("CCL_07"); raw RNA files pollute it with a suffix.
+pub fn cell_id(i: usize) -> String {
+    format!("CCL_{i:03}")
+}
+
+/// One rank's shard of the drug-response table (`world = 1` gives the
+/// whole table). Row counts split as evenly as `Table::split`.
+pub fn response_shard(cfg: &UnomtConfig, rank: usize, world: usize) -> Result<Table> {
+    let base = cfg.n_response / world;
+    let extra = cfg.n_response % world;
+    let n = base + usize::from(rank < extra);
+    // Independent stream per rank (same global distribution).
+    let mut rng = Rng::new(cfg.seed ^ 0xD0D0).fork(rank as u64);
+
+    let mut source = Vec::with_capacity(n);
+    let mut drug = Vec::with_capacity(n);
+    let mut cell = Vec::with_capacity(n);
+    let mut conc = Vec::with_capacity(n);
+    let mut growth = Vec::with_capacity(n);
+    let mut junk_a = Vec::with_capacity(n);
+    let mut junk_b = Vec::with_capacity(n);
+    let centres = ["NCI60", "CTRP", "GDSC", "CCLE", "gCSI", "NCIPDM"];
+
+    for _ in 0..n {
+        let d = rng.usize_in(0, cfg.n_drugs);
+        let c = rng.usize_in(0, cfg.n_cell_lines);
+        source.push(centres[rng.usize_in(0, centres.len())].to_string());
+        drug.push(dirty_drug_id(d, &mut rng));
+        cell.push(cell_id(c));
+        // log10 molar concentration in [-8, -4]
+        let lc = -8.0 + 4.0 * rng.f64();
+        conc.push(if rng.bool(cfg.null_frac) { None } else { Some(lc) });
+        // growth: dose-dependent sigmoid + drug/cell effects + noise
+        let effect = ((d * 31 + c * 17) % 100) as f64 / 100.0;
+        let g = 100.0 / (1.0 + (-(lc + 6.0) * 2.0).exp()) * (0.5 + effect) + 5.0 * rng.normal();
+        growth.push(if rng.bool(cfg.null_frac) { None } else { Some(g) });
+        junk_a.push(rng.gen_range(1000) as i64);
+        junk_b.push(rng.ascii_lower(4));
+    }
+
+    Table::from_columns(vec![
+        ("SOURCE", Array::from_strs(&source)),
+        ("DRUG_ID", Array::from_strs(&drug)),
+        ("CELLNAME", Array::from_strs(&cell)),
+        ("LOG_CONCENTRATION", Array::from_opt_f64(conc)),
+        ("GROWTH", Array::from_opt_f64(growth)),
+        ("STUDY_ROW", Array::from_i64(junk_a)),
+        ("BATCH_TAG", Array::from_strs(&junk_b)),
+    ])
+}
+
+/// Drug descriptor sub-table (covered drugs only).
+pub fn drug_descriptors(cfg: &UnomtConfig) -> Result<Table> {
+    let mut rng = Rng::new(cfg.seed ^ 0xDE5C);
+    covered_drug_features(cfg, &mut rng, cfg.n_descriptors, "DD")
+}
+
+/// Drug fingerprint sub-table (covered drugs only).
+pub fn drug_fingerprints(cfg: &UnomtConfig) -> Result<Table> {
+    let mut rng = Rng::new(cfg.seed ^ 0xF17E);
+    covered_drug_features(cfg, &mut rng, cfg.n_fingerprints, "FP")
+}
+
+fn covered_drug_features(
+    cfg: &UnomtConfig,
+    rng: &mut Rng,
+    width: usize,
+    prefix: &str,
+) -> Result<Table> {
+    let n_covered = ((cfg.n_drugs as f64) * cfg.drug_coverage).round() as usize;
+    let ids: Vec<String> = (0..n_covered).map(drug_id).collect();
+    let mut cols: Vec<(String, Array)> = vec![("DRUG_ID".to_string(), Array::from_strs(&ids))];
+    for f in 0..width {
+        let vals: Vec<Option<f64>> = (0..n_covered)
+            .map(|_| {
+                if rng.bool(cfg.null_frac) {
+                    None
+                } else {
+                    Some(rng.normal())
+                }
+            })
+            .collect();
+        cols.push((format!("{prefix}_{f}"), Array::from_opt_f64(vals)));
+    }
+    let refs: Vec<(&str, Array)> = cols.iter().map(|(n, a)| (n.as_str(), a.clone())).collect();
+    Table::from_columns(refs)
+}
+
+/// Raw RNA-seq table: dirty cell ids, duplicates, nulls.
+pub fn rna_seq(cfg: &UnomtConfig) -> Result<Table> {
+    let mut rng = Rng::new(cfg.seed ^ 0x19A5);
+    let n_dups = ((cfg.n_cell_lines as f64) * cfg.dup_frac).ceil() as usize;
+    let n = cfg.n_cell_lines + n_dups;
+
+    let mut ids = Vec::with_capacity(n);
+    let mut rows: Vec<Vec<Option<f64>>> = (0..cfg.n_rna_features).map(|_| Vec::with_capacity(n)).collect();
+    let gen_row = |c: usize, rng: &mut Rng, rows: &mut Vec<Vec<Option<f64>>>| {
+        for (f, col) in rows.iter_mut().enumerate() {
+            // per-cell deterministic base so duplicates carry equal values
+            let base = (((c * 131 + f * 17) % 97) as f64) / 10.0;
+            col.push(if rng.bool(cfg.null_frac) { None } else { Some(base) });
+        }
+    };
+    for c in 0..cfg.n_cell_lines {
+        // raw files decorate the id: "CCL_007.r1"
+        ids.push(format!("{}.r1", cell_id(c)));
+        gen_row(c, &mut rng, &mut rows);
+    }
+    for _ in 0..n_dups {
+        let c = rng.usize_in(0, cfg.n_cell_lines);
+        ids.push(format!("{}.r1", cell_id(c)));
+        // exact duplicate feature rows (no fresh nulls → identical)
+        for (f, col) in rows.iter_mut().enumerate() {
+            let base = (((c * 131 + f * 17) % 97) as f64) / 10.0;
+            col.push(Some(base));
+        }
+    }
+
+    let mut cols: Vec<(String, Array)> = vec![("CELLNAME".to_string(), Array::from_strs(&ids))];
+    for (f, col) in rows.into_iter().enumerate() {
+        cols.push((format!("RNA_{f}"), Array::from_opt_f64(col)));
+    }
+    let refs: Vec<(&str, Array)> = cols.iter().map(|(n, a)| (n.as_str(), a.clone())).collect();
+    Table::from_columns(refs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> UnomtConfig {
+        UnomtConfig { n_response: 500, ..Default::default() }
+    }
+
+    #[test]
+    fn response_schema_and_dirt() {
+        let t = response_shard(&cfg(), 0, 1).unwrap();
+        assert_eq!(t.num_rows(), 500);
+        assert_eq!(t.num_columns(), 7);
+        // ids are dirty (contain a separator symbol)
+        let id = t.cell(0, 1).to_string();
+        assert!(id.contains('.') || id.contains('-') || id.contains('_'));
+        // some nulls injected
+        assert!(t.column_by_name("GROWTH").unwrap().null_count() > 0);
+    }
+
+    #[test]
+    fn sharding_partitions_rows() {
+        let total: usize = (0..3)
+            .map(|r| response_shard(&cfg(), r, 3).unwrap().num_rows())
+            .sum();
+        assert_eq!(total, 500);
+        // shards differ (independent streams)
+        let a = response_shard(&cfg(), 0, 3).unwrap();
+        let b = response_shard(&cfg(), 1, 3).unwrap();
+        assert_ne!(a.cell(0, 1), b.cell(0, 1));
+    }
+
+    #[test]
+    fn metadata_coverage() {
+        let d = drug_descriptors(&cfg()).unwrap();
+        assert_eq!(d.num_rows(), (1006f64 * 0.9).round() as usize);
+        assert_eq!(d.num_columns(), 1 + 20);
+        let f = drug_fingerprints(&cfg()).unwrap();
+        assert_eq!(f.num_columns(), 1 + 20);
+    }
+
+    #[test]
+    fn rna_has_duplicates() {
+        let r = rna_seq(&cfg()).unwrap();
+        assert!(r.num_rows() > 60);
+        let dedup = crate::ops::local::drop_duplicates(&r, Some(&["CELLNAME"])).unwrap();
+        assert_eq!(dedup.num_rows(), 60);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = response_shard(&cfg(), 0, 2).unwrap();
+        let b = response_shard(&cfg(), 0, 2).unwrap();
+        assert_eq!(a, b);
+    }
+}

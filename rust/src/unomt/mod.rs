@@ -1,0 +1,14 @@
+//! The UNOMT application (paper §4): CANDLE drug-response feature
+//! engineering + distributed deep learning, end to end, in one program.
+//!
+//! * [`config`] — synthetic workload dimensions (NCI60-analog).
+//! * [`datagen`] — the three raw datasets with the paper's schemas.
+//! * [`pipeline`] — the Figs 8–11 operator pipeline, sequential /
+//!   BSP-distributed / async-task-graph variants.
+
+pub mod config;
+pub mod datagen;
+pub mod pipeline;
+
+pub use config::UnomtConfig;
+pub use pipeline::{run_dist, run_local, PipelineStats};

@@ -1,0 +1,398 @@
+//! The UNOMT feature-engineering pipeline (paper Figs 8–11).
+//!
+//! Four stages, exactly the operator sequence §4.3 describes:
+//! * **Fig 8 — drug response**: column filter (Project) → map-clean the
+//!   symbol-polluted drug ids → dropna → min-max scale the numeric
+//!   columns → fully numeric.
+//! * **Fig 9 — drug features**: inner-join the descriptor and
+//!   fingerprint sub-tables on drug id → cast numeric → fill nulls.
+//! * **Fig 10 — RNA-seq**: map-clean cell ids → drop_duplicates → scale
+//!   → cast numeric → fill nulls.
+//! * **Fig 11 — assembly**: unique response drugs, isin-filter against
+//!   the metadata drug set (the "common drugs" AND), then join response
+//!   ⋈ drug-features ⋈ RNA and project to the model's feature layout
+//!   `[LOG_CONCENTRATION, DD_*, FP_*, RNA_*, GROWTH]`.
+//!
+//! `run_local` executes sequentially (the Pandas/PyCylon-1-core role);
+//! `run_dist` executes the same code on each rank's shard — pleasingly
+//! parallel except the **distributed drop_duplicates** (the one global
+//! operator, §4.3) — the metadata tables are replicated, so the joins
+//! are map-side (broadcast) joins. `build_taskgraph` compiles the same
+//! pipeline into a task DAG for the async central-scheduler baseline
+//! (the Modin role).
+
+use super::config::UnomtConfig;
+use super::datagen;
+use crate::comm::Communicator;
+use crate::exec::asynch::{TaskGraph, TaskId};
+use crate::ops::dist;
+use crate::ops::local::{self, DropNaHow, JoinAlgorithm, JoinType};
+use crate::table::{Scalar, Table};
+use anyhow::{bail, Result};
+
+/// Per-stage row counts + CPU timing.
+#[derive(Debug, Clone, Default)]
+pub struct StageStat {
+    pub name: &'static str,
+    pub rows_in: usize,
+    pub rows_out: usize,
+    pub cpu_seconds: f64,
+}
+
+/// Pipeline execution report.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineStats {
+    pub stages: Vec<StageStat>,
+}
+
+impl PipelineStats {
+    fn record<T>(&mut self, name: &'static str, rows_in: usize, f: impl FnOnce() -> Result<T>) -> Result<T>
+    where
+        T: RowCounted,
+    {
+        let sw = crate::util::time::CpuStopwatch::start();
+        let out = f()?;
+        self.stages.push(StageStat {
+            name,
+            rows_in,
+            rows_out: out.rows(),
+            cpu_seconds: sw.elapsed().as_secs_f64(),
+        });
+        Ok(out)
+    }
+
+    pub fn total_cpu_seconds(&self) -> f64 {
+        self.stages.iter().map(|s| s.cpu_seconds).sum()
+    }
+}
+
+/// Row-count view used by the stats recorder.
+pub trait RowCounted {
+    fn rows(&self) -> usize;
+}
+
+impl RowCounted for Table {
+    fn rows(&self) -> usize {
+        self.num_rows()
+    }
+}
+
+// ---- stages ---------------------------------------------------------------
+
+/// Fig 8: raw response → clean numeric response.
+pub fn clean_response(raw: &Table) -> Result<Table> {
+    // Project: drop the junk columns the raw feed carries.
+    let t = raw.select_columns(&["DRUG_ID", "CELLNAME", "LOG_CONCENTRATION", "GROWTH"])?;
+    // Map: strip the symbols from drug ids ("NSC.00123" → "NSC00123").
+    let t = local::map_column_utf8(&t, "DRUG_ID", |s| {
+        s.chars().filter(|c| !matches!(c, '.' | '-' | '_')).collect()
+    })?;
+    // dropna on the numeric columns (paper: not_null / dropna).
+    let t = local::dropna(&t, Some(&["LOG_CONCENTRATION", "GROWTH"]), DropNaHow::Any)?;
+    // Scale numeric values (the Scikit-learn MinMaxScaler role).
+    let (t, _) = local::min_max_scale(&t, &["LOG_CONCENTRATION", "GROWTH"])?;
+    Ok(t)
+}
+
+/// Fig 9: descriptor ⋈ fingerprint metadata → numeric drug features.
+pub fn drug_feature_table(descriptors: &Table, fingerprints: &Table) -> Result<Table> {
+    let joined = local::join(
+        descriptors,
+        fingerprints,
+        &["DRUG_ID"],
+        &["DRUG_ID"],
+        JoinType::Inner,
+        JoinAlgorithm::Hash,
+    )?;
+    let t = joined.drop_columns(&["DRUG_ID_r"])?;
+    // Cast to numeric + fill the injected nulls (features must be dense).
+    let t = local::to_numeric_table(&t)?;
+    let fills: Vec<(&str, Scalar)> = t
+        .schema()
+        .names()
+        .iter()
+        .filter(|n| **n != "DRUG_ID")
+        .map(|n| (*n, Scalar::Float64(0.0)))
+        .collect();
+    local::fillna(&t, &fills)
+}
+
+/// Fig 10: raw RNA-seq → clean deduplicated numeric features.
+pub fn clean_rna(raw: &Table) -> Result<Table> {
+    // Map: strip the ".r1" decoration from cell ids.
+    let t = local::map_column_utf8(raw, "CELLNAME", |s| {
+        s.split('.').next().unwrap_or(s).to_string()
+    })?;
+    // drop duplicate cell lines (paper: drop-duplicate operator).
+    let t = local::drop_duplicates(&t, Some(&["CELLNAME"]))?;
+    // Scale the expression features.
+    let feature_names: Vec<String> = t
+        .schema()
+        .names()
+        .iter()
+        .filter(|n| n.starts_with("RNA_"))
+        .map(|s| s.to_string())
+        .collect();
+    let refs: Vec<&str> = feature_names.iter().map(|s| s.as_str()).collect();
+    let (t, _) = local::min_max_scale(&t, &refs)?;
+    let fills: Vec<(&str, Scalar)> = refs.iter().map(|n| (*n, Scalar::Float64(0.0))).collect();
+    local::fillna(&t, &fills)
+}
+
+/// Fig 11: assemble the final drug-response training table.
+///
+/// Output columns: `LOG_CONCENTRATION, DD_*, FP_*, RNA_*, GROWTH`.
+pub fn assemble(response: &Table, drug_features: &Table, rna: &Table) -> Result<Table> {
+    // Common drugs: response drugs ∩ metadata drugs (the paper's isin +
+    // AND step).
+    let drug_ids = drug_features.column_by_name("DRUG_ID")?;
+    let filtered = local::filter_isin(response, "DRUG_ID", drug_ids)?;
+    let cells = rna.column_by_name("CELLNAME")?;
+    let filtered = local::filter_isin(&filtered, "CELLNAME", cells)?;
+
+    // response ⋈ drug features on DRUG_ID.
+    let j1 = local::join(
+        &filtered,
+        drug_features,
+        &["DRUG_ID"],
+        &["DRUG_ID"],
+        JoinType::Inner,
+        JoinAlgorithm::Hash,
+    )?;
+    // ⋈ RNA on CELLNAME.
+    let j2 = local::join(&j1, rna, &["CELLNAME"], &["CELLNAME"], JoinType::Inner, JoinAlgorithm::Hash)?;
+
+    // Project to the model feature layout (features..., label last).
+    let mut names: Vec<String> = vec!["LOG_CONCENTRATION".into()];
+    for n in j2.schema().names() {
+        if n.starts_with("DD_") || n.starts_with("FP_") || n.starts_with("RNA_") {
+            names.push(n.to_string());
+        }
+    }
+    names.push("GROWTH".into());
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    j2.select_columns(&refs)
+}
+
+// ---- drivers ---------------------------------------------------------------
+
+/// Sequential run over the full synthetic dataset.
+pub fn run_local(cfg: &UnomtConfig) -> Result<(Table, PipelineStats)> {
+    let mut stats = PipelineStats::default();
+    let raw = stats.record("gen_response", 0, || datagen::response_shard(cfg, 0, 1))?;
+    let desc = datagen::drug_descriptors(cfg)?;
+    let fp = datagen::drug_fingerprints(cfg)?;
+    let rna_raw = datagen::rna_seq(cfg)?;
+
+    let response = stats.record("clean_response", raw.num_rows(), || clean_response(&raw))?;
+    let features =
+        stats.record("drug_features", desc.num_rows(), || drug_feature_table(&desc, &fp))?;
+    let rna = stats.record("clean_rna", rna_raw.num_rows(), || clean_rna(&rna_raw))?;
+    let out = stats.record("assemble", response.num_rows(), || {
+        assemble(&response, &features, &rna)
+    })?;
+    Ok((out, stats))
+}
+
+/// Distributed (BSP) run: this rank's partition of the engineered table.
+///
+/// Metadata is replicated (generated identically per rank) so the joins
+/// are map-side; the global step is the distributed drop_duplicates
+/// (the paper's "distributed unique operator", §4.3).
+pub fn run_dist<C: Communicator + ?Sized>(
+    comm: &mut C,
+    cfg: &UnomtConfig,
+) -> Result<(Table, PipelineStats)> {
+    let mut stats = PipelineStats::default();
+    let (rank, world) = (comm.rank(), comm.world_size());
+    let raw = stats.record("gen_response", 0, || datagen::response_shard(cfg, rank, world))?;
+    let desc = datagen::drug_descriptors(cfg)?;
+    let fp = datagen::drug_fingerprints(cfg)?;
+    let rna_raw = datagen::rna_seq(cfg)?;
+
+    let response = stats.record("clean_response", raw.num_rows(), || clean_response(&raw))?;
+    // Global dedup of identical measurements across ranks (exercises
+    // the shuffle path; the paper calls this step out explicitly).
+    let n_in = response.num_rows();
+    let response = {
+        let sw = crate::util::time::CpuStopwatch::start();
+        let out = dist::dist_drop_duplicates(
+            comm,
+            &response,
+            Some(&["DRUG_ID", "CELLNAME", "LOG_CONCENTRATION"]),
+        )?;
+        stats.stages.push(StageStat {
+            name: "dist_dedup",
+            rows_in: n_in,
+            rows_out: out.num_rows(),
+            cpu_seconds: sw.elapsed().as_secs_f64(),
+        });
+        out
+    };
+    let features =
+        stats.record("drug_features", desc.num_rows(), || drug_feature_table(&desc, &fp))?;
+    let rna = stats.record("clean_rna", rna_raw.num_rows(), || clean_rna(&rna_raw))?;
+    let out = stats.record("assemble", response.num_rows(), || {
+        assemble(&response, &features, &rna)
+    })?;
+    Ok((out, stats))
+}
+
+/// Compile the pipeline into a task DAG over `nparts` partitions for
+/// the async central-scheduler baseline (Modin role in Figs 12–14).
+///
+/// Returns the graph and the per-partition output task ids.
+pub fn build_taskgraph(cfg: &UnomtConfig, nparts: usize) -> Result<(TaskGraph, Vec<TaskId>)> {
+    if nparts == 0 {
+        bail!("nparts must be > 0");
+    }
+    let mut g = TaskGraph::new();
+    let cfg = cfg.clone();
+
+    // Metadata tasks (single partition each, like Modin's small frames).
+    let cfg_d = cfg.clone();
+    let desc = g.source("gen_descriptors", move || datagen::drug_descriptors(&cfg_d));
+    let cfg_f = cfg.clone();
+    let fp = g.source("gen_fingerprints", move || datagen::drug_fingerprints(&cfg_f));
+    let features = g.add("drug_features", vec![desc, fp], |ins| {
+        drug_feature_table(ins[0], ins[1])
+    });
+    let cfg_r = cfg.clone();
+    let rna_raw = g.source("gen_rna", move || datagen::rna_seq(&cfg_r));
+    let rna = g.add("clean_rna", vec![rna_raw], |ins| clean_rna(ins[0]));
+
+    // Per-partition generate + clean.
+    let mut cleaned_parts = Vec::with_capacity(nparts);
+    for p in 0..nparts {
+        let cfg_p = cfg.clone();
+        let src = g.source(format!("gen_response-{p}"), move || {
+            datagen::response_shard(&cfg_p, p, nparts)
+        });
+        cleaned_parts.push(g.add(format!("clean_response-{p}"), vec![src], |ins| {
+            clean_response(ins[0])
+        }));
+    }
+
+    // Full-axis materialisation: the sklearn-style scaling inside
+    // clean_response needs whole-column statistics, which forces
+    // Modin to materialise ALL partitions into one frame and re-split
+    // (the paper: "it cannot go back-and-forth between the Pandas data
+    // structure... caused some of these operations to be relatively
+    // slower for Modin"). Every byte passes the object store twice.
+    let materialized = g.add("full_axis_materialize", cleaned_parts.clone(), |ins| {
+        Table::concat_tables(&ins.to_vec())
+    });
+    let mut resplit = Vec::with_capacity(nparts);
+    for p in 0..nparts {
+        resplit.push(g.add(format!("resplit-{p}"), vec![materialized], move |ins| {
+            Ok(ins[0].split(nparts).swap_remove(p))
+        }));
+    }
+
+    // Per-partition assembly against the (store-routed) metadata.
+    let mut outs = Vec::with_capacity(nparts);
+    for (p, part) in resplit.into_iter().enumerate() {
+        let out = g.add(format!("assemble-{p}"), vec![part, features, rna], |ins| {
+            assemble(ins[0], ins[1], ins[2])
+        });
+        outs.push(out);
+    }
+    Ok((g, outs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{spawn_world, LinkProfile};
+    use crate::exec::asynch::{run_async, AsyncCost};
+
+    fn cfg() -> UnomtConfig {
+        UnomtConfig { n_response: 2000, ..Default::default() }
+    }
+
+    #[test]
+    fn local_pipeline_produces_model_layout() {
+        let (out, stats) = run_local(&cfg()).unwrap();
+        assert_eq!(out.num_columns(), cfg().feature_width() + 1);
+        assert_eq!(out.schema().names()[0], "LOG_CONCENTRATION");
+        assert_eq!(*out.schema().names().last().unwrap(), "GROWTH");
+        // dense numeric output
+        for c in 0..out.num_columns() {
+            assert_eq!(out.column(c).null_count(), 0, "column {c} has nulls");
+            assert!(out.column(c).data_type().is_numeric());
+        }
+        // rows were filtered but most survive (coverage 0.9)
+        assert!(out.num_rows() > 1000 && out.num_rows() < 2000);
+        assert_eq!(stats.stages.len(), 5);
+        assert!(stats.total_cpu_seconds() > 0.0);
+    }
+
+    #[test]
+    fn scaled_columns_are_unit_range() {
+        let (out, _) = run_local(&cfg()).unwrap();
+        for name in ["LOG_CONCENTRATION", "GROWTH"] {
+            let col = out.column_by_name(name).unwrap();
+            for i in 0..col.len() {
+                let v = col.f64_at(i).unwrap();
+                assert!((0.0..=1.0).contains(&v), "{name}[{i}] = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_pipeline_matches_local_union() {
+        let w = 3;
+        let parts = spawn_world(w, LinkProfile::zero(), move |_, comm| {
+            run_dist(comm, &cfg()).map(|(t, _)| t)
+        })
+        .unwrap();
+        let dist_total: usize = parts.iter().map(|t| t.num_rows()).sum();
+        // local run on the union of shards (same generator streams):
+        // response shards are rank-seeded, so regenerate via world=1 of
+        // each shard and assemble — instead compare against the sum of
+        // locally-assembled shards (dedup rarely fires on random data).
+        let mut local_total = 0;
+        for r in 0..w {
+            let raw = datagen::response_shard(&cfg(), r, w).unwrap();
+            let response = clean_response(&raw).unwrap();
+            let features = drug_feature_table(
+                &datagen::drug_descriptors(&cfg()).unwrap(),
+                &datagen::drug_fingerprints(&cfg()).unwrap(),
+            )
+            .unwrap();
+            let rna = clean_rna(&datagen::rna_seq(&cfg()).unwrap()).unwrap();
+            local_total += assemble(&response, &features, &rna).unwrap().num_rows();
+        }
+        assert_eq!(dist_total, local_total);
+    }
+
+    #[test]
+    fn async_taskgraph_matches_local() {
+        let (mut g, outs) = build_taskgraph(&cfg(), 2).unwrap();
+        let run = run_async(&mut g, 2, &AsyncCost::default()).unwrap();
+        let async_total: usize = outs.iter().map(|id| run.outputs[id.0].num_rows()).sum();
+        // Oracle: the same shards assembled sequentially (shard RNG
+        // streams differ from the world=1 stream, so compare per-shard).
+        let features = drug_feature_table(
+            &datagen::drug_descriptors(&cfg()).unwrap(),
+            &datagen::drug_fingerprints(&cfg()).unwrap(),
+        )
+        .unwrap();
+        let rna = clean_rna(&datagen::rna_seq(&cfg()).unwrap()).unwrap();
+        let mut oracle_total = 0;
+        for p in 0..2 {
+            let raw = datagen::response_shard(&cfg(), p, 2).unwrap();
+            let response = clean_response(&raw).unwrap();
+            oracle_total += assemble(&response, &features, &rna).unwrap().num_rows();
+        }
+        assert_eq!(async_total, oracle_total);
+        assert!(run.sim.wall_seconds > 0.0);
+    }
+
+    #[test]
+    fn feature_width_contract() {
+        // The engineered width must equal the default model's d_in.
+        let (out, _) = run_local(&cfg()).unwrap();
+        assert_eq!(out.num_columns() - 1, 64);
+    }
+}

@@ -1,0 +1,156 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor mirror).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    ///
+    /// `known_flags` disambiguates `--verbose input.csv`: a name listed
+    /// there never consumes the following token as its value.
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse with no declared flags (use `--flag=true`-free style only
+    /// when flags are trailing or followed by other options).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        Self::parse_with_flags(raw, &[])
+    }
+
+    /// Parse from the process environment (skipping argv[0..=n] where the
+    /// caller already consumed `skip` leading items such as a subcommand).
+    pub fn from_env(skip: usize) -> Args {
+        Args::parse(std::env::args().skip(1 + skip))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of usizes, e.g. `--workers 1,2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| p.trim().parse::<usize>().with_context(|| format!("--{name}: bad item {p:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_all_forms() {
+        let a = Args::parse_with_flags(
+            "run --rows 100 --mode=bsp --verbose input.csv"
+                .split_whitespace()
+                .map(String::from),
+            &["verbose"],
+        );
+        assert_eq!(a.positional(), &["run".to_string(), "input.csv".to_string()]);
+        assert_eq!(a.usize_or("rows", 0).unwrap(), 100);
+        assert_eq!(a.str_or("mode", ""), "bsp");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = args("--rows nope");
+        assert!(a.usize_or("rows", 1).is_err());
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.required("absent").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = args("--workers 1,2, 4");
+        // note: whitespace split means "4" became positional; test the attached form
+        let b = args("--workers 1,2,4");
+        assert_eq!(b.usize_list_or("workers", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.usize_list_or("missing", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args("--verbose --rows 5");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("rows", 0).unwrap(), 5);
+    }
+}

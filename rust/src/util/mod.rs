@@ -1,0 +1,12 @@
+//! Shared utilities: deterministic RNG, property-test harness, CLI
+//! parsing, timing. These stand in for `rand`, `proptest` and `clap`,
+//! none of which are available in the offline vendor mirror.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod time;
+
+pub use cli::Args;
+pub use rng::Rng;

@@ -1,0 +1,126 @@
+//! Minimal property-based testing harness (proptest is not available in
+//! the offline vendor mirror).
+//!
+//! A property is a closure over a seeded [`Rng`]; the harness runs it
+//! for `cases` seeds and, on failure, retries the failing seed with
+//! progressively smaller `size` hints to report the smallest size that
+//! still fails (value-level shrinking is the generator's job: write
+//! generators that scale with `size`).
+//!
+//! ```no_run
+//! use hptmt::util::prop::{check, Config};
+//! check(Config::default().cases(64), "sum is commutative", |rng, size| {
+//!     let a = rng.gen_range(size.max(1) as u64) as i64;
+//!     let b = rng.gen_range(size.max(1) as u64) as i64;
+//!     if a + b != b + a { return Err(format!("{a} {b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub max_size: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, max_size: 200, seed: 0xC0FFEE }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn max_size(mut self, n: usize) -> Self {
+        self.max_size = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run a property; panics with a reproducible report on failure.
+///
+/// The property receives a fresh deterministic `Rng` and a `size` hint
+/// that ramps from 1 to `max_size` across cases.
+pub fn check<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink the size hint for the same seed.
+            let mut min_fail = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(case_seed);
+                match prop(&mut rng, s) {
+                    Err(m) => {
+                        min_fail = (s, m);
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name:?} failed\n  case: {case} seed: {case_seed:#x}\n  \
+                 minimal failing size: {}\n  {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(Config::default().cases(17), "always ok", |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal failing size")]
+    fn failing_property_panics_with_shrunk_size() {
+        check(Config::default().cases(50).max_size(100), "fails at size>=4", |_, size| {
+            if size >= 4 {
+                Err(format!("size was {size}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut vals1 = Vec::new();
+        check(Config::default().cases(5).seed(11), "collect1", |rng, _| {
+            vals1.push(rng.next_u64());
+            Ok(())
+        });
+        let mut vals2 = Vec::new();
+        check(Config::default().cases(5).seed(11), "collect2", |rng, _| {
+            vals2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(vals1, vals2);
+    }
+}

@@ -1,0 +1,101 @@
+//! Timing utilities, including per-thread CPU time.
+//!
+//! This image exposes a single CPU core, so wall-clock scaling of W
+//! worker threads is meaningless (they timeshare). Scaling benches
+//! therefore measure each rank's **thread CPU time**
+//! (`CLOCK_THREAD_CPUTIME_ID`) — the compute a dedicated core would
+//! spend — and combine it with the comm cost model to produce simulated
+//! wall time (see `comm::profile` and DESIGN.md §3).
+
+use std::time::{Duration, Instant};
+
+/// CPU time consumed by the calling thread.
+pub fn thread_cpu_time() -> Duration {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    assert_eq!(rc, 0, "clock_gettime failed");
+    Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// CPU time consumed by the whole process.
+pub fn process_cpu_time() -> Duration {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
+    assert_eq!(rc, 0, "clock_gettime failed");
+    Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// Stopwatch over thread CPU time.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuStopwatch {
+    start: Duration,
+}
+
+impl CpuStopwatch {
+    pub fn start() -> Self {
+        CpuStopwatch { start: thread_cpu_time() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        thread_cpu_time().saturating_sub(self.start)
+    }
+}
+
+/// Stopwatch over wall time.
+#[derive(Debug, Clone, Copy)]
+pub struct WallStopwatch {
+    start: Instant,
+}
+
+impl WallStopwatch {
+    pub fn start() -> Self {
+        WallStopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Pretty duration: "12.3ms", "4.56s".
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_time_advances_with_work() {
+        let sw = CpuStopwatch::start();
+        let mut x = 0u64;
+        for i in 0..2_000_000u64 {
+            x = x.wrapping_add(i * i);
+        }
+        std::hint::black_box(x);
+        assert!(sw.elapsed() > Duration::from_micros(10));
+    }
+
+    #[test]
+    fn cpu_time_ignores_sleep() {
+        let sw = CpuStopwatch::start();
+        std::thread::sleep(Duration::from_millis(30));
+        // sleeping burns (almost) no CPU
+        assert!(sw.elapsed() < Duration::from_millis(15));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.000ms");
+        assert_eq!(fmt_duration(Duration::from_micros(7)), "7.0us");
+    }
+}
