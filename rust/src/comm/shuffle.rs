@@ -10,7 +10,7 @@ use super::collectives::alltoall_bytes;
 use super::communicator::Communicator;
 use crate::table::rowhash::{hash_columns, partition_indices};
 use crate::table::{ipc, Array, Table};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 /// Exchange pre-partitioned tables: `parts[r]` goes to rank `r`; the
 /// received partitions are concatenated (own partition avoids the wire).
@@ -64,7 +64,9 @@ pub fn shuffle_by_hash<C: Communicator + ?Sized>(
 
 /// Range-partition `local` on a numeric column given ascending pivot
 /// boundaries (len = world-1) and shuffle (distributed sort's exchange
-/// step). Rows with null keys go to the last rank.
+/// step). Rows with null or NaN keys go to the last rank — both order
+/// after every number under the canonical total order, so the global
+/// rank-concatenation order stays sorted.
 pub fn shuffle_by_range<C: Communicator + ?Sized>(
     comm: &mut C,
     local: &Table,
@@ -74,11 +76,14 @@ pub fn shuffle_by_range<C: Communicator + ?Sized>(
     let w = comm.world_size();
     assert_eq!(pivots.len() + 1, w, "need world-1 pivots");
     let col = local.column_by_name(key)?;
+    if !col.data_type().is_numeric() {
+        bail!("shuffle_by_range: key {key:?} must be numeric, got {}", col.data_type());
+    }
     let mut parts_idx: Vec<Vec<usize>> = vec![Vec::new(); w];
     for i in 0..local.num_rows() {
         let p = match col.f64_at(i) {
-            Some(x) => pivots.partition_point(|&pv| pv < x),
-            None => w - 1,
+            Some(x) if !x.is_nan() => pivots.partition_point(|&pv| pv < x),
+            _ => w - 1,
         };
         parts_idx[p].push(i);
     }
@@ -160,6 +165,89 @@ mod tests {
         .unwrap();
         assert_eq!(res[1].column(0).null_count(), 2);
         assert_eq!(res[0].column(0).null_count(), 0);
+    }
+
+    #[test]
+    fn world_of_one_shuffle_is_a_no_op_on_the_wire() {
+        let res = spawn_world(1, LinkProfile::single_node(), |rank, comm| {
+            let t = local_table(rank);
+            let out = shuffle_by_hash(comm, &t, &["k"])?;
+            let st = comm.stats();
+            Ok((out == t, st.bytes_sent, st.msgs_sent))
+        })
+        .unwrap();
+        assert!(res[0].0, "w=1 shuffle must return the input unchanged");
+        assert_eq!(res[0].1, 0, "w=1 shuffle must not serialise anything");
+        assert_eq!(res[0].2, 0);
+    }
+
+    #[test]
+    fn empty_partition_from_a_rank_keeps_schema_and_rows() {
+        let res = spawn_world(3, LinkProfile::zero(), |rank, comm| {
+            // rank 1 contributes zero rows (but the right schema)
+            let t = if rank == 1 { local_table(0).slice(0, 0) } else { local_table(rank) };
+            let schema = t.schema().clone();
+            let out = shuffle_by_hash(comm, &t, &["k"])?;
+            Ok((out, schema))
+        })
+        .unwrap();
+        let total: usize = res.iter().map(|(t, _)| t.num_rows()).sum();
+        assert_eq!(total, 16, "two ranks x 8 rows survive");
+        for (out, schema) in &res {
+            assert_eq!(out.schema().as_ref(), schema.as_ref(), "schema must survive the shuffle");
+        }
+    }
+
+    #[test]
+    fn schema_and_values_survive_an_ipc_round_trip_shuffle() {
+        // All four dtypes, incl. validity bitmaps and empty strings,
+        // cross the wire intact.
+        let res = spawn_world(2, LinkProfile::zero(), |rank, comm| {
+            let t = Table::from_columns(vec![
+                ("k", Array::from_opt_i64(vec![Some(rank as i64), None, Some(7)])),
+                ("f", Array::from_f64(vec![0.5, -1.5, 3.25])),
+                ("s", Array::from_opt_strs(vec![Some("ab"), None, Some("")])),
+                ("b", Array::from_bools(vec![true, false, rank == 0])),
+            ])?;
+            shuffle_by_hash(comm, &t, &["k"])
+        })
+        .unwrap();
+        let total: usize = res.iter().map(|t| t.num_rows()).sum();
+        assert_eq!(total, 6);
+        for t in &res {
+            assert_eq!(t.schema().names(), vec!["k", "f", "s", "b"]);
+        }
+        // null keys hash equal, so they co-locate on exactly one rank
+        let nulls: usize = res.iter().map(|t| t.column(0).null_count()).sum();
+        assert_eq!(nulls, 2);
+        let ranks_with_nulls = res.iter().filter(|t| t.column(0).null_count() > 0).count();
+        assert_eq!(ranks_with_nulls, 1);
+        // empty string stays distinct from null after the round trip
+        let empties: usize = res
+            .iter()
+            .map(|t| {
+                (0..t.num_rows())
+                    .filter(|&i| t.cell(i, 2) == Scalar::Utf8(String::new()))
+                    .count()
+            })
+            .sum();
+        assert_eq!(empties, 2);
+    }
+
+    #[test]
+    fn nan_keys_route_to_last_rank() {
+        let res = spawn_world(2, LinkProfile::zero(), move |rank, comm| {
+            let t = Table::from_columns(vec![(
+                "k",
+                Array::from_f64(vec![rank as f64, f64::NAN]),
+            )])?;
+            shuffle_by_range(comm, &t, "k", &[0.5])
+        })
+        .unwrap();
+        let nan_count =
+            |t: &Table| (0..t.num_rows()).filter(|&i| t.cell(i, 0).as_f64().unwrap().is_nan()).count();
+        assert_eq!(nan_count(&res[0]), 0);
+        assert_eq!(nan_count(&res[1]), 2);
     }
 
     #[test]

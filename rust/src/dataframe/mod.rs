@@ -57,7 +57,10 @@ impl<'a> CylonEnv<'a> {
         self.comm.barrier()
     }
 
-    pub(crate) fn comm(&mut self) -> &mut dyn Communicator {
+    /// The underlying communicator — the bridge from the DataFrame API
+    /// down to `ops::dist` and raw `comm` collectives (every
+    /// distributed method on [`DataFrame`] goes through this).
+    pub fn comm(&mut self) -> &mut dyn Communicator {
         self.comm
     }
 }

@@ -1,0 +1,82 @@
+//! Distributed joins (Table 5: "Join = partition + shuffle + local
+//! join", plus the broadcast variant for small dimension tables).
+
+use crate::comm::{allgather_bytes, shuffle_by_hash, Communicator};
+use crate::ops::local::{self, JoinAlgorithm, JoinType};
+use crate::table::{ipc, Table};
+use anyhow::{bail, Context, Result};
+
+/// Distributed join: hash-partition both sides on their key columns so
+/// equal keys co-locate, then run the local join kernel on each rank's
+/// partitions (the paper's Fig 4 operator).
+///
+/// Key hashing is value-based, so `left_on`/`right_on` may name
+/// different columns as long as the types match. Null keys all hash to
+/// one rank; they never match (SQL semantics) but surface there as
+/// unmatched rows under outer variants.
+pub fn dist_join<C: Communicator + ?Sized>(
+    comm: &mut C,
+    left: &Table,
+    right: &Table,
+    left_on: &[&str],
+    right_on: &[&str],
+    jt: JoinType,
+    algo: JoinAlgorithm,
+) -> Result<Table> {
+    if left_on.is_empty() || left_on.len() != right_on.len() {
+        bail!(
+            "dist_join: key lists must be non-empty and of equal length ({} vs {})",
+            left_on.len(),
+            right_on.len()
+        );
+    }
+    if comm.world_size() == 1 {
+        return local::join(left, right, left_on, right_on, jt, algo);
+    }
+    let l = shuffle_by_hash(comm, left, left_on)?;
+    let r = shuffle_by_hash(comm, right, right_on)?;
+    local::join(&l, &r, left_on, right_on, jt, algo)
+}
+
+/// Broadcast join: allgather the (small) right side to every rank and
+/// join locally — the big left side never touches the wire. The win
+/// over [`dist_join`] when `|right| << |left| / world` is ablated in
+/// `benches/ablation_join.rs`.
+///
+/// Only `Inner` and `Left` are supported: under `Right`/`FullOuter`
+/// every rank would emit the globally-unmatched right rows, duplicating
+/// them `world` times.
+pub fn broadcast_join<C: Communicator + ?Sized>(
+    comm: &mut C,
+    left: &Table,
+    right: &Table,
+    left_on: &[&str],
+    right_on: &[&str],
+    jt: JoinType,
+) -> Result<Table> {
+    if matches!(jt, JoinType::Right | JoinType::FullOuter) {
+        bail!(
+            "broadcast_join: {jt:?} would replicate unmatched right rows on every rank; \
+             use dist_join"
+        );
+    }
+    if comm.world_size() == 1 {
+        return local::join(left, right, left_on, right_on, jt, JoinAlgorithm::Hash);
+    }
+    let rank = comm.rank();
+    let blobs = allgather_bytes(comm, ipc::serialize(right))?;
+    let mut parts: Vec<Table> = Vec::with_capacity(blobs.len());
+    for (r, blob) in blobs.into_iter().enumerate() {
+        if r == rank {
+            // Own partition: skip the decode, reuse the table.
+            parts.push(right.clone());
+        } else {
+            parts.push(
+                ipc::deserialize(&blob).with_context(|| format!("broadcast_join: from rank {r}"))?,
+            );
+        }
+    }
+    let refs: Vec<&Table> = parts.iter().collect();
+    let gathered = Table::concat_tables(&refs)?;
+    local::join(left, &gathered, left_on, right_on, jt, JoinAlgorithm::Hash)
+}

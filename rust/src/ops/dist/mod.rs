@@ -1,0 +1,285 @@
+//! Distributed operators — the paper's Table 5 compositions.
+//!
+//! Every operator here is a composition of communication operators from
+//! [`crate::comm`] (shuffle, broadcast, allgather, allreduce) with a
+//! local kernel from [`crate::ops::local`], exactly the decomposition
+//! the paper tabulates:
+//!
+//! | Distributed operator | Composition (Table 5) | Here |
+//! |---|---|---|
+//! | Join | hash partition + shuffle + local join | [`dist_join`] |
+//! | Join, small side | allgather small side + local join | [`broadcast_join`] |
+//! | OrderBy | sample splitters + range shuffle + local sort | [`dist_sort`] |
+//! | GroupBy | shuffle + local group-by | [`dist_groupby`] |
+//! | GroupBy, combiner | partial agg + shuffle + final reduce | [`dist_groupby_partial`] |
+//! | Unique | local distinct + shuffle + local distinct | [`dist_unique`], [`dist_drop_duplicates`] |
+//! | Partitioning | counts allreduce + targeted exchange | [`rebalance`], [`global_counts`] |
+//!
+//! Contracts shared by every operator (DESIGN.md §4):
+//!
+//! * **Collectives.** All ranks of a world must call the same dist
+//!   operators in the same order — the loosely-synchronous execution
+//!   model (paper §2.2). Violations surface as recv timeouts.
+//! * **`world_size == 1` short-circuits the wire.** The local kernel
+//!   runs directly and `comm.stats()` records zero bytes, so the same
+//!   program runs sequentially or distributed unchanged (paper §3.1).
+//! * **Partitioned output.** Result rows live on the rank the
+//!   composition's partitioning assigns them to; no rank materialises
+//!   the global result. `global_counts` gives the global view.
+
+pub mod groupby;
+pub mod join;
+pub mod partition;
+pub mod setops;
+pub mod sort;
+
+pub use groupby::{dist_groupby, dist_groupby_partial};
+pub use join::{broadcast_join, dist_join};
+pub use partition::{global_counts, rebalance};
+pub use setops::{dist_drop_duplicates, dist_unique};
+pub use sort::dist_sort;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{spawn_world, Communicator, LinkProfile};
+    use crate::ops::local::{self, Agg, AggSpec, JoinAlgorithm, JoinType, SortKey};
+    use crate::table::{ipc, Array, Table};
+    use crate::util::rng::Rng;
+
+    fn keyed(rows: usize, domain: u64, seed: u64) -> Table {
+        let mut rng = Rng::new(seed);
+        let keys: Vec<Option<i64>> = (0..rows)
+            .map(|_| if rng.bool(0.1) { None } else { Some(rng.gen_range(domain) as i64) })
+            .collect();
+        let vals: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        Table::from_columns(vec![
+            ("k", Array::from_opt_i64(keys)),
+            ("v", Array::from_f64(vals)),
+        ])
+        .unwrap()
+    }
+
+    /// Satellite: every dist operator on a world of one must produce
+    /// byte-identical output to its local counterpart with zero bytes
+    /// on the wire.
+    #[test]
+    fn world_of_one_matches_local_with_zero_wire_bytes() {
+        let res = spawn_world(1, LinkProfile::single_node(), |_, comm| {
+            let t = keyed(64, 8, 1);
+            let r = keyed(32, 8, 2);
+            let aggs = [
+                AggSpec::new("v", Agg::Sum),
+                AggSpec::new("v", Agg::Mean),
+                AggSpec::new("v", Agg::Count),
+            ];
+            let pairs = vec![
+                (
+                    "dist_join",
+                    dist_join(comm, &t, &r, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?,
+                    local::join(&t, &r, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?,
+                ),
+                (
+                    "broadcast_join",
+                    broadcast_join(comm, &t, &r, &["k"], &["k"], JoinType::Left)?,
+                    local::join(&t, &r, &["k"], &["k"], JoinType::Left, JoinAlgorithm::Hash)?,
+                ),
+                ("dist_sort", dist_sort(comm, &t, "v")?, local::sort(&t, &[SortKey::asc("v")])?),
+                (
+                    "dist_groupby",
+                    dist_groupby(comm, &t, &["k"], &aggs)?,
+                    local::groupby_aggregate(&t, &["k"], &aggs)?,
+                ),
+                (
+                    "dist_groupby_partial",
+                    dist_groupby_partial(comm, &t, &["k"], &aggs)?,
+                    local::groupby_aggregate(&t, &["k"], &aggs)?,
+                ),
+                ("dist_unique", dist_unique(comm, &t, &["k"])?, local::unique(&t, &["k"])?),
+                (
+                    "dist_drop_duplicates",
+                    dist_drop_duplicates(comm, &t, Some(&["k"]))?,
+                    local::drop_duplicates(&t, Some(&["k"]))?,
+                ),
+                ("rebalance", rebalance(comm, &t)?, t.clone()),
+            ];
+            for (name, got, want) in &pairs {
+                assert_eq!(
+                    ipc::serialize(got),
+                    ipc::serialize(want),
+                    "{name}: w=1 fast path must be byte-identical to the local kernel"
+                );
+            }
+            assert_eq!(global_counts(comm, &t)?, vec![t.num_rows()]);
+            Ok(comm.stats())
+        })
+        .unwrap();
+        assert_eq!(res[0].bytes_sent, 0, "world of one must not touch the wire");
+        assert_eq!(res[0].msgs_sent, 0);
+        assert_eq!(res[0].bytes_recv, 0);
+    }
+
+    fn sorted_rows(tables: &[&Table]) -> Vec<String> {
+        let mut rows: Vec<String> = tables
+            .iter()
+            .flat_map(|t| (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect::<Vec<_>>())
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    #[test]
+    fn broadcast_join_matches_shuffle_join() {
+        for w in [2usize, 3] {
+            let res = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                let l = keyed(50, 12, 100 + rank as u64);
+                let r = keyed(20, 12, 200 + rank as u64);
+                let a = dist_join(comm, &l, &r, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?;
+                let b = broadcast_join(comm, &l, &r, &["k"], &["k"], JoinType::Inner)?;
+                Ok((a, b))
+            })
+            .unwrap();
+            let av: Vec<&Table> = res.iter().map(|(a, _)| a).collect();
+            let bv: Vec<&Table> = res.iter().map(|(_, b)| b).collect();
+            assert_eq!(sorted_rows(&av), sorted_rows(&bv), "w={w}");
+        }
+    }
+
+    #[test]
+    fn broadcast_join_rejects_right_and_full_outer() {
+        let _ = spawn_world(1, LinkProfile::zero(), |_, comm| {
+            let t = keyed(4, 4, 9);
+            assert!(broadcast_join(comm, &t, &t, &["k"], &["k"], JoinType::Right).is_err());
+            assert!(broadcast_join(comm, &t, &t, &["k"], &["k"], JoinType::FullOuter).is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn partial_groupby_matches_full_shuffle() {
+        let res = spawn_world(4, LinkProfile::zero(), |rank, comm| {
+            let t = keyed(120, 6, 40 + rank as u64);
+            let aggs = [
+                AggSpec::new("v", Agg::Sum),
+                AggSpec::new("v", Agg::Count),
+                AggSpec::new("v", Agg::Mean),
+                AggSpec::new("v", Agg::Min),
+                AggSpec::new("v", Agg::Max),
+            ];
+            let full = dist_groupby(comm, &t, &["k"], &aggs)?;
+            let part = dist_groupby_partial(comm, &t, &["k"], &aggs)?;
+            Ok((full, part))
+        })
+        .unwrap();
+        let collect = |tables: Vec<&Table>| -> std::collections::BTreeMap<String, Vec<f64>> {
+            let mut m = std::collections::BTreeMap::new();
+            for t in tables {
+                for i in 0..t.num_rows() {
+                    let key = t.cell(i, 0).to_string();
+                    let vals: Vec<f64> = (1..t.num_columns())
+                        .map(|c| t.cell(i, c).as_f64().unwrap_or(f64::NAN))
+                        .collect();
+                    m.insert(key, vals);
+                }
+            }
+            m
+        };
+        let f = collect(res.iter().map(|(a, _)| a).collect());
+        let p = collect(res.iter().map(|(_, b)| b).collect());
+        assert_eq!(f.len(), p.len(), "group sets differ");
+        for (k, fv) in &f {
+            let pv = p.get(k).unwrap_or_else(|| panic!("missing group {k}"));
+            for (x, y) in fv.iter().zip(pv) {
+                assert!((x - y).abs() < 1e-9, "group {k}: {x} vs {y}");
+            }
+        }
+        let (full, part) = &res[0];
+        assert_eq!(full.schema().names(), part.schema().names(), "column layout must match");
+    }
+
+    #[test]
+    fn partial_groupby_rejects_non_decomposable_aggs() {
+        let _ = spawn_world(2, LinkProfile::zero(), |rank, comm| {
+            let t = keyed(10, 4, 50 + rank as u64);
+            // Std needs a sum-of-squares partial this kernel does not carry.
+            let err = dist_groupby_partial(comm, &t, &["k"], &[AggSpec::new("v", Agg::Std)]);
+            assert!(err.is_err());
+            // Keep the world in lockstep: both ranks fail before any comm.
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn rebalance_preserves_global_order_and_counts() {
+        let sizes = [7usize, 0, 11];
+        let res = spawn_world(3, LinkProfile::zero(), move |rank, comm| {
+            let start: i64 = sizes[..rank].iter().sum::<usize>() as i64;
+            let vals: Vec<i64> = (0..sizes[rank] as i64).map(|i| start + i).collect();
+            let t = Table::from_columns(vec![("x", Array::from_i64(vals))])?;
+            rebalance(comm, &t)
+        })
+        .unwrap();
+        let ns: Vec<usize> = res.iter().map(|t| t.num_rows()).collect();
+        assert_eq!(ns.iter().sum::<usize>(), 18);
+        assert!(ns.iter().max().unwrap() - ns.iter().min().unwrap() <= 1, "uneven: {ns:?}");
+        let mut seq = Vec::new();
+        for t in &res {
+            for i in 0..t.num_rows() {
+                seq.push(t.cell(i, 0).as_i64().unwrap());
+            }
+        }
+        assert_eq!(seq, (0..18).collect::<Vec<i64>>(), "global order must be preserved");
+    }
+
+    #[test]
+    fn dist_sort_handles_empty_and_skewed_ranks() {
+        let res = spawn_world(3, LinkProfile::zero(), |rank, comm| {
+            // rank 1 contributes nothing; rank 2 is one repeated value
+            let vals: Vec<f64> = match rank {
+                0 => (0..40).map(|i| (i % 5) as f64).collect(),
+                1 => Vec::new(),
+                _ => vec![2.5; 60],
+            };
+            let t = Table::from_columns(vec![("v", Array::from_f64(vals))])?;
+            dist_sort(comm, &t, "v")
+        })
+        .unwrap();
+        let total: usize = res.iter().map(|t| t.num_rows()).sum();
+        assert_eq!(total, 100);
+        let mut last = f64::NEG_INFINITY;
+        for t in &res {
+            for i in 0..t.num_rows() {
+                let x = t.cell(i, 0).as_f64().unwrap();
+                assert!(x >= last, "global order violated: {x} after {last}");
+                last = x;
+            }
+        }
+    }
+
+    #[test]
+    fn dist_sort_rejects_non_numeric_keys() {
+        let _ = spawn_world(1, LinkProfile::zero(), |_, comm| {
+            let t = Table::from_columns(vec![("s", Array::from_strs(&["b", "a"]))])?;
+            assert!(dist_sort(comm, &t, "s").is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn dist_dedup_is_globally_unique() {
+        let res = spawn_world(3, LinkProfile::zero(), |_, comm| {
+            // identical tables on every rank: 12 rows over 5 distinct keys
+            let t = Table::from_columns(vec![(
+                "k",
+                Array::from_i64((0..12).map(|i| i % 5).collect()),
+            )])?;
+            dist_drop_duplicates(comm, &t, None)
+        })
+        .unwrap();
+        let total: usize = res.iter().map(|t| t.num_rows()).sum();
+        assert_eq!(total, 5, "each key must survive exactly once globally");
+    }
+}

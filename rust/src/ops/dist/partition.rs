@@ -1,0 +1,54 @@
+//! Partition-shape operators: the global row-count view and the
+//! row-count equaliser (Table 5's "Partitioning" row — load balance
+//! after skewed operators like filter or join).
+
+use crate::comm::{allreduce_i64, shuffle_tables, Communicator, ReduceOp};
+use crate::table::Table;
+use anyhow::Result;
+
+/// Per-rank global row counts: `result[r]` is rank r's row count, the
+/// same vector on every rank (one small allreduce).
+pub fn global_counts<C: Communicator + ?Sized>(comm: &mut C, table: &Table) -> Result<Vec<usize>> {
+    if comm.world_size() == 1 {
+        return Ok(vec![table.num_rows()]);
+    }
+    let mut counts = vec![0i64; comm.world_size()];
+    counts[comm.rank()] = table.num_rows() as i64;
+    Ok(allreduce_i64(comm, &counts, ReduceOp::Sum)?
+        .into_iter()
+        .map(|x| x as usize)
+        .collect())
+}
+
+/// Equalise row counts across ranks (to within one row) with a
+/// targeted exchange, preserving the global row order.
+///
+/// Rows are numbered globally by (rank, local index); rank `r`'s target
+/// range is `[r*base + min(r, extra), ...)` where `base = total/world`
+/// and `extra = total%world`. Each rank slices its contiguous overlap
+/// with every target range, so only rows that must move cross the wire
+/// and the received runs concatenate back in global order.
+pub fn rebalance<C: Communicator + ?Sized>(comm: &mut C, table: &Table) -> Result<Table> {
+    let w = comm.world_size();
+    if w == 1 {
+        return Ok(table.clone());
+    }
+    let counts = global_counts(comm, table)?;
+    let total: usize = counts.iter().sum();
+    let (base, extra) = (total / w, total % w);
+    let target_start = |r: usize| r * base + r.min(extra);
+    let my_start: usize = counts[..comm.rank()].iter().sum();
+    let my_end = my_start + table.num_rows();
+
+    let mut parts = Vec::with_capacity(w);
+    for r in 0..w {
+        let lo = target_start(r).max(my_start);
+        let hi = target_start(r + 1).min(my_end);
+        if hi > lo {
+            parts.push(table.slice(lo - my_start, hi - lo));
+        } else {
+            parts.push(table.slice(0, 0));
+        }
+    }
+    shuffle_tables(comm, parts)
+}

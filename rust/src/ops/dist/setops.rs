@@ -1,0 +1,54 @@
+//! Distributed duplicate elimination (Table 5: "Unique = local distinct
+//! + shuffle + local distinct" — the paper's "distributed unique
+//! operator to ensure no duplicate records across all processes",
+//! §4.3, which UNOMT stage 4 runs on the response table).
+
+use crate::comm::{shuffle_by_hash, Communicator};
+use crate::ops::local::unique::{drop_duplicates, unique};
+use crate::table::Table;
+use anyhow::Result;
+
+/// Distinct values of the key columns across all ranks. Each distinct
+/// key combination ends up on exactly one rank, exactly once.
+///
+/// Local distinct runs *before* the shuffle (a combiner): at most one
+/// row per (rank, key) crosses the wire regardless of input skew.
+pub fn dist_unique<C: Communicator + ?Sized>(
+    comm: &mut C,
+    table: &Table,
+    keys: &[&str],
+) -> Result<Table> {
+    if comm.world_size() == 1 {
+        return unique(table, keys);
+    }
+    let pre = unique(table, keys)?;
+    let shuffled = shuffle_by_hash(comm, &pre, keys)?;
+    unique(&shuffled, keys)
+}
+
+/// Drop duplicate rows across all ranks, keeping one full row per
+/// distinct key combination (`subset = None` keys on every column).
+///
+/// Which of several global duplicates survives depends on shuffle
+/// arrival order — "keep first" is only well-defined per rank, matching
+/// the paper's unordered distributed-table semantics.
+pub fn dist_drop_duplicates<C: Communicator + ?Sized>(
+    comm: &mut C,
+    table: &Table,
+    subset: Option<&[&str]>,
+) -> Result<Table> {
+    let all_names;
+    let keys: &[&str] = match subset {
+        Some(k) => k,
+        None => {
+            all_names = table.schema().names();
+            &all_names
+        }
+    };
+    if comm.world_size() == 1 {
+        return drop_duplicates(table, Some(keys));
+    }
+    let pre = drop_duplicates(table, Some(keys))?;
+    let shuffled = shuffle_by_hash(comm, &pre, keys)?;
+    drop_duplicates(&shuffled, Some(keys))
+}

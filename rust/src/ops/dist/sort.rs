@@ -1,0 +1,64 @@
+//! Distributed sort (Table 5: "OrderBy = sample sort"): local sort →
+//! allgather splitter samples → range-partition shuffle → local sort.
+//! After the exchange, rank `r` holds exactly the rows between splitters
+//! `r-1` and `r`, so the concatenation of partitions in rank order is
+//! the globally sorted table.
+
+use crate::comm::collectives::{bytes_to_f64s, f64s_to_bytes};
+use crate::comm::{allgather_bytes, shuffle_by_range, Communicator};
+use crate::ops::local::sort::{sort, SortKey};
+use crate::table::rowhash::canonical_f64_total_cmp;
+use crate::table::Table;
+use anyhow::{bail, Result};
+
+/// Per-rank sample budget is `OVERSAMPLE * world` key values; regular
+/// sampling from the locally sorted run keeps the splitters close to
+/// the true quantiles even under skew (sample-sort's classic bound).
+const OVERSAMPLE: usize = 16;
+
+/// Distributed ascending sort on one numeric key column. Nulls sort
+/// last (Pandas convention) and are routed to the last rank.
+pub fn dist_sort<C: Communicator + ?Sized>(comm: &mut C, table: &Table, key: &str) -> Result<Table> {
+    let col = table.column_by_name(key)?;
+    if !col.data_type().is_numeric() {
+        bail!("dist_sort: key {key:?} must be numeric, got {}", col.data_type());
+    }
+    let keys = [SortKey::asc(key)];
+    if comm.world_size() == 1 {
+        return sort(table, &keys);
+    }
+    let w = comm.world_size();
+
+    // 1. Local sort; nulls sort last, so valid keys form a prefix.
+    let sorted = sort(table, &keys)?;
+    let col = sorted.column_by_name(key)?;
+    let valid = (0..sorted.num_rows()).take_while(|&i| col.is_valid(i)).count();
+
+    // 2. Regular samples of this rank's key distribution (NaNs are
+    //    excluded: they order after every number and stay on the last
+    //    rank via the null/NaN routing below).
+    let take = (OVERSAMPLE * w).min(valid);
+    let mut samples: Vec<f64> = Vec::with_capacity(take);
+    for k in 0..take {
+        let x = col.f64_at(k * valid / take).expect("valid prefix");
+        if !x.is_nan() {
+            samples.push(x);
+        }
+    }
+
+    // 3. Allgather the samples; every rank derives the same w-1
+    //    splitters from the global sample's quantiles.
+    let gathered = allgather_bytes(comm, f64s_to_bytes(&samples))?;
+    let mut all: Vec<f64> = gathered.iter().flat_map(|b| bytes_to_f64s(b)).collect();
+    all.sort_by(|a, b| canonical_f64_total_cmp(*a, *b));
+    let pivots: Vec<f64> = if all.is_empty() {
+        // No non-null, non-NaN keys anywhere: splitter values are moot.
+        vec![0.0; w - 1]
+    } else {
+        (1..w).map(|r| all[(r * all.len() / w).min(all.len() - 1)]).collect()
+    };
+
+    // 4. Range-partition exchange, then order the received runs.
+    let exchanged = shuffle_by_range(comm, &sorted, key, &pivots)?;
+    sort(&exchanged, &keys)
+}
