@@ -62,6 +62,10 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(local::sort(&t, &[SortKey::asc("k"), SortKey::desc("v")])?);
         Ok(())
     })?;
+    bench("sort (utf8 key)", &mut || {
+        std::hint::black_box(local::sort(&t, &[SortKey::asc("s")])?);
+        Ok(())
+    })?;
     bench("groupby sum+count", &mut || {
         std::hint::black_box(local::groupby_aggregate(
             &t,
@@ -72,6 +76,22 @@ fn main() -> anyhow::Result<()> {
     })?;
     bench("drop_duplicates", &mut || {
         std::hint::black_box(local::drop_duplicates(&t, Some(&["k"]))?);
+        Ok(())
+    })?;
+    bench("union_all", &mut || {
+        std::hint::black_box(local::union_all(&t, &t2)?);
+        Ok(())
+    })?;
+    bench("union (distinct)", &mut || {
+        std::hint::black_box(local::union(&t, &t2)?);
+        Ok(())
+    })?;
+    bench("intersect", &mut || {
+        std::hint::black_box(local::intersect(&t, &t2)?);
+        Ok(())
+    })?;
+    bench("difference", &mut || {
+        std::hint::black_box(local::difference(&t, &t2)?);
         Ok(())
     })?;
     bench("isin (10% set)", &mut || {

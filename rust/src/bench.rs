@@ -1,6 +1,7 @@
 //! Minimal benchmark harness (criterion is not in the offline vendor
 //! mirror): warmup + N samples, median/min/max, aligned table output
-//! and TSV files under `bench_out/` for EXPERIMENTS.md.
+//! and TSV + machine-readable JSON files under `bench_out/` so
+//! `BENCH_*.json` trajectories can be diffed across PRs.
 //!
 //! Scaling benches report **simulated seconds** (per-rank thread CPU
 //! time + modeled comm, see `exec::bsp`), because this image has one
@@ -87,7 +88,29 @@ impl Report {
         out
     }
 
-    /// Print and write `bench_out/<name>.tsv`.
+    /// Machine-readable form: `{"name","scale","header","rows"}` — the
+    /// `BENCH_*.json` trajectory format ROADMAP tracks across PRs.
+    /// Cells stay strings (they are already formatted for the table);
+    /// `scale` records `HPTMT_BENCH_SCALE` so trajectories at different
+    /// scales are never diffed against each other. Parseable by
+    /// [`crate::util::json::Json`].
+    pub fn to_json(&self) -> String {
+        let arr = |cells: &[String]| -> String {
+            let items: Vec<String> =
+                cells.iter().map(|c| format!("\"{}\"", json_escape(c))).collect();
+            format!("[{}]", items.join(","))
+        };
+        let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
+        format!(
+            "{{\"name\":\"{}\",\"scale\":{},\"header\":{},\"rows\":[{}]}}",
+            json_escape(&self.name),
+            scale(),
+            arr(&self.header),
+            rows.join(",")
+        )
+    }
+
+    /// Print and write `bench_out/<name>.tsv` + `bench_out/<name>.json`.
     pub fn finish(&self) -> anyhow::Result<()> {
         print!("{}", self.render());
         let dir = PathBuf::from("bench_out");
@@ -97,17 +120,42 @@ impl Report {
         for r in &self.rows {
             writeln!(f, "{}", r.join("\t"))?;
         }
+        let mut j = std::fs::File::create(dir.join(format!("{}.json", self.name)))?;
+        writeln!(j, "{}", self.to_json())?;
         Ok(())
     }
 }
 
+/// Minimal JSON string escaping (the emit-side counterpart of
+/// `util::json`'s parser).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Benchmark scale factor from `HPTMT_BENCH_SCALE` (default 1.0).
 /// `cargo bench` at scale 1 finishes in minutes on this image; crank it
-/// up to approach the paper's row counts.
+/// up to approach the paper's row counts. Non-finite or negative values
+/// fall back to 1.0 — `scale` feeds row counts and the JSON trajectory
+/// header, neither of which can represent `inf`/`NaN`.
 pub fn scale() -> f64 {
     std::env::var("HPTMT_BENCH_SCALE")
         .ok()
         .and_then(|s| s.parse().ok())
+        .filter(|s: &f64| s.is_finite() && *s >= 0.0)
         .unwrap_or(1.0)
 }
 
@@ -143,5 +191,31 @@ mod tests {
         let s = r.render();
         assert!(s.contains("workers"));
         assert!(s.contains("0.25"));
+    }
+
+    #[test]
+    fn report_json_shape_parses() {
+        use crate::util::json::Json;
+        let mut r = Report::new("json_report", &["workers", "sim_s"]);
+        r.row(&["1".into(), "0.5".into()]);
+        r.row(&["2".into(), "a\"b\\c\n".into()]); // escape-heavy cell
+        let j = Json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "json_report");
+        assert_eq!(j.get("scale").unwrap().as_f64().unwrap(), scale());
+        let header = j.get("header").unwrap().as_arr().unwrap();
+        assert_eq!(header.len(), 2);
+        assert_eq!(header[0].as_str().unwrap(), "workers");
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].as_arr().unwrap()[1].as_str().unwrap(), "0.5");
+        assert_eq!(rows[1].as_arr().unwrap()[1].as_str().unwrap(), "a\"b\\c\n");
+    }
+
+    #[test]
+    fn empty_report_json_is_valid() {
+        use crate::util::json::Json;
+        let r = Report::new("empty", &["x"]);
+        let j = Json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 0);
     }
 }

@@ -231,6 +231,27 @@ impl DataFrame {
         Ok(Table::concat_tables(&tables)?.into())
     }
 
+    /// SQL UNION ALL: concatenation of union-compatible frames (names
+    /// and types must match positionally).
+    pub fn union_all(&self, other: &DataFrame) -> Result<DataFrame> {
+        Ok(local::union_all(&self.table, &other.table)?.into())
+    }
+
+    /// SQL UNION: concatenation with duplicates removed.
+    pub fn union(&self, other: &DataFrame) -> Result<DataFrame> {
+        Ok(local::union(&self.table, &other.table)?.into())
+    }
+
+    /// SQL INTERSECT: distinct rows present in both frames.
+    pub fn intersect(&self, other: &DataFrame) -> Result<DataFrame> {
+        Ok(local::intersect(&self.table, &other.table)?.into())
+    }
+
+    /// SQL EXCEPT: distinct rows of `self` absent from `other`.
+    pub fn difference(&self, other: &DataFrame) -> Result<DataFrame> {
+        Ok(local::difference(&self.table, &other.table)?.into())
+    }
+
     /// Train/test split after an optional shuffle.
     pub fn train_test_split(&self, test_frac: f64, rng: Option<&mut Rng>) -> Result<(DataFrame, DataFrame)> {
         let (a, b) = local::train_test_split(&self.table, test_frac, rng)?;
@@ -285,9 +306,38 @@ impl DataFrame {
             .into())
     }
 
-    /// Distributed sort on a numeric key (sample sort).
+    /// Distributed ascending sort on one key of any column type
+    /// (sample sort over splitter rows).
     pub fn sort_dist(&self, key: &str, env: &mut CylonEnv) -> Result<DataFrame> {
-        Ok(dist::dist_sort(env.comm(), &self.table, key)?.into())
+        self.sort_dist_by(&[SortKey::asc(key)], env)
+    }
+
+    /// Distributed sort with explicit multi-column keys (direction and
+    /// null placement per key, Utf8/Bool keys included).
+    pub fn sort_dist_by(&self, keys: &[SortKey], env: &mut CylonEnv) -> Result<DataFrame> {
+        Ok(dist::dist_sort(env.comm(), &self.table, keys)?.into())
+    }
+
+    /// Distributed UNION ALL (zero-wire: the global bag is already the
+    /// per-rank concatenation).
+    pub fn union_all_dist(&self, other: &DataFrame, env: &mut CylonEnv) -> Result<DataFrame> {
+        Ok(dist::dist_union_all(env.comm(), &self.table, &other.table)?.into())
+    }
+
+    /// Distributed UNION: each distinct row survives exactly once
+    /// across all ranks.
+    pub fn union_dist(&self, other: &DataFrame, env: &mut CylonEnv) -> Result<DataFrame> {
+        Ok(dist::dist_union(env.comm(), &self.table, &other.table)?.into())
+    }
+
+    /// Distributed INTERSECT.
+    pub fn intersect_dist(&self, other: &DataFrame, env: &mut CylonEnv) -> Result<DataFrame> {
+        Ok(dist::dist_intersect(env.comm(), &self.table, &other.table)?.into())
+    }
+
+    /// Distributed EXCEPT.
+    pub fn difference_dist(&self, other: &DataFrame, env: &mut CylonEnv) -> Result<DataFrame> {
+        Ok(dist::dist_difference(env.comm(), &self.table, &other.table)?.into())
     }
 
     /// Distributed group-by.
@@ -416,6 +466,45 @@ mod tests {
             assert_eq!(*total, 8);
             assert_eq!(*w, 2);
         }
+    }
+
+    #[test]
+    fn dist_sort_and_set_ops_through_the_api() {
+        let results = spawn_world(2, LinkProfile::zero(), |rank, comm| {
+            let mut env = CylonEnv::new(comm);
+            // overlapping shards: rank 0 holds a,b / c,d; rank 1 holds b,c / d,e
+            let a = DataFrame::from_columns(vec![(
+                "s",
+                Array::from_strs(if rank == 0 { &["b", "a"] } else { &["b", "c"] }),
+            )])?;
+            let b = DataFrame::from_columns(vec![(
+                "s",
+                Array::from_strs(if rank == 0 { &["c", "d"] } else { &["d", "e"] }),
+            )])?;
+            let sorted = a.union_all_dist(&b, &mut env)?.sort_dist_by(&[SortKey::desc("s")], &mut env)?;
+            let union = a.union_dist(&b, &mut env)?.num_rows_global(&mut env)?;
+            let inter = a.intersect_dist(&b, &mut env)?.num_rows_global(&mut env)?;
+            let diff = a.difference_dist(&b, &mut env)?.num_rows_global(&mut env)?;
+            Ok((sorted, union, inter, diff))
+        })
+        .unwrap();
+        for (_, union, inter, diff) in &results {
+            assert_eq!(*union, 5, "distinct of abcd ∪ bcde");
+            assert_eq!(*inter, 1, "only c appears on both sides globally");
+            assert_eq!(*diff, 2, "a and b survive the except");
+        }
+        // rank-order concatenation of the dist sort is globally desc
+        let mut seen = Vec::new();
+        for (sorted, ..) in &results {
+            for i in 0..sorted.num_rows() {
+                seen.push(sorted.table().cell(i, 0).as_str().unwrap().to_string());
+            }
+        }
+        let mut want = seen.clone();
+        want.sort();
+        want.reverse();
+        assert_eq!(seen, want, "descending global order");
+        assert_eq!(seen.len(), 8);
     }
 
     #[test]

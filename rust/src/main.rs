@@ -160,9 +160,11 @@ Table 4 — communication operators (comm):
 
 Table 5 — distributed compositions (ops::dist):
   Join    = partition + shuffle + local join      (dist_join)
-  Sort    = sample pivots + range shuffle + sort  (dist_sort)
+  Sort    = sample splitter ROWS + shuffle + sort (dist_sort: multi-key/Utf8)
   GroupBy = shuffle + local groupby               (dist_groupby[_partial])
-  Unique/set ops = shuffle + local kernel         (dist_unique, ...)
+  Unique  = local distinct + shuffle + distinct   (dist_unique, dist_drop_duplicates)
+  Set ops = local distinct + shuffle + set op     (dist_union[_all], dist_intersect,
+                                                   dist_difference)
   Vector add = AllReduce(SUM)                     (allreduce_f64)
 
 Tensors (Table 1 role): dl::trainer drives the AOT-compiled UNOMT

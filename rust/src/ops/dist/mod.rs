@@ -9,10 +9,11 @@
 //! |---|---|---|
 //! | Join | hash partition + shuffle + local join | [`dist_join`] |
 //! | Join, small side | allgather small side + local join | [`broadcast_join`] |
-//! | OrderBy | sample splitters + range shuffle + local sort | [`dist_sort`] |
+//! | OrderBy | sample splitter rows + comparator-routed shuffle + local sort | [`dist_sort`] |
 //! | GroupBy | shuffle + local group-by | [`dist_groupby`] |
 //! | GroupBy, combiner | partial agg + shuffle + final reduce | [`dist_groupby_partial`] |
 //! | Unique | local distinct + shuffle + local distinct | [`dist_unique`], [`dist_drop_duplicates`] |
+//! | Union / Intersect / Difference | local distinct + shuffle + local set op | [`dist_union`], [`dist_union_all`], [`dist_intersect`], [`dist_difference`] |
 //! | Partitioning | counts allreduce + targeted exchange | [`rebalance`], [`global_counts`] |
 //!
 //! Contracts shared by every operator (DESIGN.md §4):
@@ -36,7 +37,9 @@ pub mod sort;
 pub use groupby::{dist_groupby, dist_groupby_partial};
 pub use join::{broadcast_join, dist_join};
 pub use partition::{global_counts, rebalance};
-pub use setops::{dist_drop_duplicates, dist_unique};
+pub use setops::{
+    dist_difference, dist_drop_duplicates, dist_intersect, dist_union, dist_union_all, dist_unique,
+};
 pub use sort::dist_sort;
 
 #[cfg(test)]
@@ -44,7 +47,7 @@ mod tests {
     use super::*;
     use crate::comm::{spawn_world, Communicator, LinkProfile};
     use crate::ops::local::{self, Agg, AggSpec, JoinAlgorithm, JoinType, SortKey};
-    use crate::table::{ipc, Array, Table};
+    use crate::table::{ipc, Array, Scalar, Table};
     use crate::util::rng::Rng;
 
     fn keyed(rows: usize, domain: u64, seed: u64) -> Table {
@@ -60,6 +63,23 @@ mod tests {
         .unwrap()
     }
 
+    /// Utf8 + numeric keyed table with nulls in both key columns; small
+    /// key domains so set ops and sorts see real collisions.
+    fn keyed_utf8(rows: usize, domain: u64, seed: u64) -> Table {
+        let mut rng = Rng::new(seed);
+        let strs: Vec<Option<String>> = (0..rows)
+            .map(|_| if rng.bool(0.15) { None } else { Some(format!("s{}", rng.gen_range(domain))) })
+            .collect();
+        let nums: Vec<Option<i64>> = (0..rows)
+            .map(|_| if rng.bool(0.1) { None } else { Some(rng.gen_range(domain) as i64) })
+            .collect();
+        Table::from_columns(vec![
+            ("s", Array::from_opt_strs(strs.iter().map(|o| o.as_deref()).collect())),
+            ("n", Array::from_opt_i64(nums)),
+        ])
+        .unwrap()
+    }
+
     /// Satellite: every dist operator on a world of one must produce
     /// byte-identical output to its local counterpart with zero bytes
     /// on the wire.
@@ -68,6 +88,9 @@ mod tests {
         let res = spawn_world(1, LinkProfile::single_node(), |_, comm| {
             let t = keyed(64, 8, 1);
             let r = keyed(32, 8, 2);
+            let ts = keyed_utf8(48, 6, 3);
+            let us = keyed_utf8(40, 6, 4);
+            let multi = [SortKey::asc("s"), SortKey::desc("n")];
             let aggs = [
                 AggSpec::new("v", Agg::Sum),
                 AggSpec::new("v", Agg::Mean),
@@ -84,7 +107,16 @@ mod tests {
                     broadcast_join(comm, &t, &r, &["k"], &["k"], JoinType::Left)?,
                     local::join(&t, &r, &["k"], &["k"], JoinType::Left, JoinAlgorithm::Hash)?,
                 ),
-                ("dist_sort", dist_sort(comm, &t, "v")?, local::sort(&t, &[SortKey::asc("v")])?),
+                (
+                    "dist_sort",
+                    dist_sort(comm, &t, &[SortKey::asc("v")])?,
+                    local::sort(&t, &[SortKey::asc("v")])?,
+                ),
+                (
+                    "dist_sort multi-key utf8",
+                    dist_sort(comm, &ts, &multi)?,
+                    local::sort(&ts, &multi)?,
+                ),
                 (
                     "dist_groupby",
                     dist_groupby(comm, &t, &["k"], &aggs)?,
@@ -100,6 +132,22 @@ mod tests {
                     "dist_drop_duplicates",
                     dist_drop_duplicates(comm, &t, Some(&["k"]))?,
                     local::drop_duplicates(&t, Some(&["k"]))?,
+                ),
+                ("dist_union", dist_union(comm, &ts, &us)?, local::union(&ts, &us)?),
+                (
+                    "dist_union_all",
+                    dist_union_all(comm, &ts, &us)?,
+                    local::union_all(&ts, &us)?,
+                ),
+                (
+                    "dist_intersect",
+                    dist_intersect(comm, &ts, &us)?,
+                    local::intersect(&ts, &us)?,
+                ),
+                (
+                    "dist_difference",
+                    dist_difference(comm, &ts, &us)?,
+                    local::difference(&ts, &us)?,
                 ),
                 ("rebalance", rebalance(comm, &t)?, t.clone()),
             ];
@@ -243,7 +291,7 @@ mod tests {
                 _ => vec![2.5; 60],
             };
             let t = Table::from_columns(vec![("v", Array::from_f64(vals))])?;
-            dist_sort(comm, &t, "v")
+            dist_sort(comm, &t, &[SortKey::asc("v")])
         })
         .unwrap();
         let total: usize = res.iter().map(|t| t.num_rows()).sum();
@@ -259,10 +307,89 @@ mod tests {
     }
 
     #[test]
-    fn dist_sort_rejects_non_numeric_keys() {
+    fn dist_sort_rejects_bad_keys_but_accepts_utf8() {
         let _ = spawn_world(1, LinkProfile::zero(), |_, comm| {
             let t = Table::from_columns(vec![("s", Array::from_strs(&["b", "a"]))])?;
-            assert!(dist_sort(comm, &t, "s").is_err());
+            assert!(dist_sort(comm, &t, &[]).is_err(), "no keys");
+            assert!(dist_sort(comm, &t, &[SortKey::asc("nope")]).is_err(), "unknown column");
+            let sorted = dist_sort(comm, &t, &[SortKey::asc("s")])?;
+            assert_eq!(sorted.cell(0, 0), Scalar::Utf8("a".into()));
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn dist_sort_multikey_utf8_orders_globally() {
+        let keys = || [SortKey::asc("s"), SortKey::desc("n")];
+        let res = spawn_world(3, LinkProfile::zero(), move |rank, comm| {
+            let t = keyed_utf8(50 + 10 * rank, 5, 70 + rank as u64);
+            dist_sort(comm, &t, &keys())
+        })
+        .unwrap();
+        let total: usize = res.iter().map(|t| t.num_rows()).sum();
+        assert_eq!(total, 50 + 60 + 70);
+        // rank-order concatenation is globally sorted under the keys
+        let refs: Vec<&Table> = res.iter().collect();
+        let cat = Table::concat_tables(&refs).unwrap();
+        assert!(local::is_sorted(&cat, &keys()).unwrap());
+        // and it is a permutation of the inputs
+        let inputs: Vec<Table> = (0..3).map(|r| keyed_utf8(50 + 10 * r, 5, 70 + r as u64)).collect();
+        let in_refs: Vec<&Table> = inputs.iter().collect();
+        assert_eq!(sorted_rows(&refs), sorted_rows(&in_refs));
+    }
+
+    #[test]
+    fn dist_set_ops_match_local_on_concatenated_shards() {
+        let shard_a = |r: usize| keyed_utf8(30, 4, 500 + r as u64);
+        let shard_b = |r: usize| keyed_utf8(30, 4, 600 + r as u64);
+        let res = spawn_world(3, LinkProfile::zero(), move |rank, comm| {
+            let (a, b) = (shard_a(rank), shard_b(rank));
+            Ok((
+                dist_union(comm, &a, &b)?,
+                dist_intersect(comm, &a, &b)?,
+                dist_difference(comm, &a, &b)?,
+            ))
+        })
+        .unwrap();
+        let ga_parts: Vec<Table> = (0..3).map(shard_a).collect();
+        let gb_parts: Vec<Table> = (0..3).map(shard_b).collect();
+        let ga = Table::concat_tables(&ga_parts.iter().collect::<Vec<_>>()).unwrap();
+        let gb = Table::concat_tables(&gb_parts.iter().collect::<Vec<_>>()).unwrap();
+        let cases: [(&str, Vec<&Table>, Table); 3] = [
+            ("union", res.iter().map(|(u, _, _)| u).collect(), local::union(&ga, &gb).unwrap()),
+            (
+                "intersect",
+                res.iter().map(|(_, i, _)| i).collect(),
+                local::intersect(&ga, &gb).unwrap(),
+            ),
+            (
+                "difference",
+                res.iter().map(|(_, _, d)| d).collect(),
+                local::difference(&ga, &gb).unwrap(),
+            ),
+        ];
+        for (name, parts, oracle) in &cases {
+            let got = sorted_rows(parts);
+            assert_eq!(got, sorted_rows(&[oracle]), "{name} diverged from local oracle");
+            let mut dedup = got.clone();
+            dedup.dedup();
+            assert_eq!(dedup.len(), got.len(), "{name} result must be globally distinct");
+        }
+    }
+
+    #[test]
+    fn dist_set_ops_reject_mismatched_schemas_before_comm() {
+        let _ = spawn_world(2, LinkProfile::zero(), |rank, comm| {
+            let a = keyed_utf8(8, 3, 900 + rank as u64);
+            let renamed = a.rename("n", "m")?;
+            // Errors surface on every rank before any wire traffic, so
+            // the world stays in lockstep and no recv ever blocks.
+            assert!(dist_union(comm, &a, &renamed).is_err());
+            assert!(dist_union_all(comm, &a, &renamed).is_err());
+            assert!(dist_intersect(comm, &a, &renamed).is_err());
+            assert!(dist_difference(comm, &a, &renamed).is_err());
+            assert_eq!(comm.stats().bytes_sent, 0);
             Ok(())
         })
         .unwrap();

@@ -1,9 +1,16 @@
-//! Distributed duplicate elimination (Table 5: "Unique = local distinct
-//! + shuffle + local distinct" — the paper's "distributed unique
-//! operator to ensure no duplicate records across all processes",
-//! §4.3, which UNOMT stage 4 runs on the response table).
+//! Distributed duplicate elimination and relational set operators.
+//!
+//! Table 5: "Unique = local distinct + shuffle + local distinct" — the
+//! paper's "distributed unique operator to ensure no duplicate records
+//! across all processes" (§4.3, UNOMT stage 4 runs it on the response
+//! table). The set operators (Table 2: Union / Intersect / Difference)
+//! lift onto the same shuffle-then-local composition: hash-partition on
+//! *all* columns so equal rows co-locate, then run the local kernel —
+//! each local pre-pass is a combiner bounding wire traffic at one row
+//! per (rank, value).
 
 use crate::comm::{shuffle_by_hash, Communicator};
+use crate::ops::local::setops::{check_union_compatible, difference, intersect, union_all};
 use crate::ops::local::unique::{drop_duplicates, unique};
 use crate::table::Table;
 use anyhow::Result;
@@ -51,4 +58,80 @@ pub fn dist_drop_duplicates<C: Communicator + ?Sized>(
     let pre = drop_duplicates(table, Some(keys))?;
     let shuffled = shuffle_by_hash(comm, &pre, keys)?;
     drop_duplicates(&shuffled, Some(keys))
+}
+
+/// UNION ALL across ranks. With rows partitioned over ranks, the global
+/// bag concatenation *is* the per-rank concatenation, so no bytes touch
+/// the wire — the communicator is taken only so the operator sits on
+/// the same collective surface (schema errors still fail on every rank
+/// in lockstep).
+pub fn dist_union_all<C: Communicator + ?Sized>(
+    comm: &mut C,
+    a: &Table,
+    b: &Table,
+) -> Result<Table> {
+    let _ = comm.world_size(); // zero-wire by construction
+    union_all(a, b)
+}
+
+/// UNION across ranks (distinct rows of `a ⊎ b`, globally): concatenate
+/// locally, then the same local-distinct → hash-shuffle → local-distinct
+/// composition as [`dist_drop_duplicates`], so each distinct row
+/// survives exactly once across all ranks.
+pub fn dist_union<C: Communicator + ?Sized>(comm: &mut C, a: &Table, b: &Table) -> Result<Table> {
+    dist_drop_duplicates(comm, &union_all(a, b)?, None)
+}
+
+/// INTERSECT across ranks: deduplicate both sides locally (a combiner —
+/// the result is distinct anyway, so at most one row per (rank, value)
+/// crosses the wire), hash-shuffle both on all columns so equal rows
+/// co-locate, then run the local intersect. Hashing is value-based, so
+/// a row of `a` equal to a row of `b` lands on the same rank from
+/// either shuffle.
+pub fn dist_intersect<C: Communicator + ?Sized>(
+    comm: &mut C,
+    a: &Table,
+    b: &Table,
+) -> Result<Table> {
+    // Check compatibility before any communication: a rank-local schema
+    // mismatch must not desynchronise the collective sequence.
+    check_union_compatible(a, b)?;
+    if comm.world_size() == 1 {
+        return intersect(a, b);
+    }
+    let (sa, sb) = colocate_rows(comm, a, b)?;
+    intersect(&sa, &sb)
+}
+
+/// DIFFERENCE across ranks (EXCEPT): same co-locating composition as
+/// [`dist_intersect`] — after the shuffle, every copy of a value from
+/// either side lives on one rank, so the local kernel's verdict on
+/// "appears in b" is global.
+pub fn dist_difference<C: Communicator + ?Sized>(
+    comm: &mut C,
+    a: &Table,
+    b: &Table,
+) -> Result<Table> {
+    check_union_compatible(a, b)?;
+    if comm.world_size() == 1 {
+        return difference(a, b);
+    }
+    let (sa, sb) = colocate_rows(comm, a, b)?;
+    difference(&sa, &sb)
+}
+
+/// Shared exchange step of intersect/difference: local distinct on both
+/// sides, then hash-shuffle each on all of its columns.
+fn colocate_rows<C: Communicator + ?Sized>(
+    comm: &mut C,
+    a: &Table,
+    b: &Table,
+) -> Result<(Table, Table)> {
+    let names_a = a.schema().names();
+    let names_b = b.schema().names();
+    let da = drop_duplicates(a, None)?;
+    let db = drop_duplicates(b, None)?;
+    let sa = shuffle_by_hash(comm, &da, &names_a)?;
+    let sb = shuffle_by_hash(comm, &db, &names_b)?;
+    Ok((sa, sb))
 }

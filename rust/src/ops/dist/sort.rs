@@ -1,64 +1,113 @@
 //! Distributed sort (Table 5: "OrderBy = sample sort"): local sort →
-//! allgather splitter samples → range-partition shuffle → local sort.
-//! After the exchange, rank `r` holds exactly the rows between splitters
-//! `r-1` and `r`, so the concatenation of partitions in rank order is
-//! the globally sorted table.
+//! allgather serialized splitter *rows* → comparator-routed exchange →
+//! local sort. After the exchange, rank `r` holds exactly the rows
+//! between splitter rows `r-1` and `r` under the caller's key order, so
+//! the concatenation of partitions in rank order is the globally sorted
+//! table.
+//!
+//! Splitters are rows, not scalars: samples travel through the same IPC
+//! wire format the shuffle uses (`table::ipc` + `allgather_bytes`), and
+//! routing compares each local row against the splitter rows with the
+//! typed comparator shared with the local sort kernel
+//! (`table::rowcmp`). That makes the operator general over multi-key,
+//! Utf8/Bool and descending/nulls-first keys — null and NaN keys need no
+//! special-case routing because the comparator totally orders them.
 
-use crate::comm::collectives::{bytes_to_f64s, f64s_to_bytes};
-use crate::comm::{allgather_bytes, shuffle_by_range, Communicator};
+use crate::comm::{allgather_bytes, shuffle_tables, Communicator};
 use crate::ops::local::sort::{sort, SortKey};
-use crate::table::rowhash::canonical_f64_total_cmp;
-use crate::table::Table;
-use anyhow::{bail, Result};
+use crate::table::rowcmp::{cmp_rows, KeyOrder};
+use crate::table::{ipc, Array, Table};
+use anyhow::{bail, Context, Result};
+use std::cmp::Ordering;
 
-/// Per-rank sample budget is `OVERSAMPLE * world` key values; regular
+/// Per-rank sample budget is `OVERSAMPLE * world` key rows; regular
 /// sampling from the locally sorted run keeps the splitters close to
 /// the true quantiles even under skew (sample-sort's classic bound).
 const OVERSAMPLE: usize = 16;
 
-/// Distributed ascending sort on one numeric key column. Nulls sort
-/// last (Pandas convention) and are routed to the last rank.
-pub fn dist_sort<C: Communicator + ?Sized>(comm: &mut C, table: &Table, key: &str) -> Result<Table> {
-    let col = table.column_by_name(key)?;
-    if !col.data_type().is_numeric() {
-        bail!("dist_sort: key {key:?} must be numeric, got {}", col.data_type());
+/// Distributed sort by one or more keys of any column type. Global
+/// order is the same total order the local kernel uses (per-key
+/// direction and null placement; NaNs after every number), read off by
+/// concatenating the result partitions in rank order.
+pub fn dist_sort<C: Communicator + ?Sized>(
+    comm: &mut C,
+    table: &Table,
+    keys: &[SortKey],
+) -> Result<Table> {
+    if keys.is_empty() {
+        bail!("dist_sort: no sort keys");
     }
-    let keys = [SortKey::asc(key)];
+    let key_names: Vec<&str> = keys.iter().map(|k| k.column.as_str()).collect();
+    for k in &key_names {
+        // Resolve key columns up front: bad names must fail on every
+        // rank *before* any communication (collective lockstep).
+        table.column_by_name(k)?;
+    }
     if comm.world_size() == 1 {
-        return sort(table, &keys);
+        return sort(table, keys);
     }
     let w = comm.world_size();
+    let orders: Vec<KeyOrder> = keys.iter().map(|k| k.order()).collect();
 
-    // 1. Local sort; nulls sort last, so valid keys form a prefix.
-    let sorted = sort(table, &keys)?;
-    let col = sorted.column_by_name(key)?;
-    let valid = (0..sorted.num_rows()).take_while(|&i| col.is_valid(i)).count();
+    // 1. Local sort: regular positions of the sorted run are quantile
+    //    estimates of this rank's key distribution.
+    let sorted = sort(table, keys)?;
+    let n = sorted.num_rows();
 
-    // 2. Regular samples of this rank's key distribution (NaNs are
-    //    excluded: they order after every number and stay on the last
-    //    rank via the null/NaN routing below).
-    let take = (OVERSAMPLE * w).min(valid);
-    let mut samples: Vec<f64> = Vec::with_capacity(take);
-    for k in 0..take {
-        let x = col.f64_at(k * valid / take).expect("valid prefix");
-        if !x.is_nan() {
-            samples.push(x);
-        }
+    // 2. Sample key rows — `OVERSAMPLE * w` regularly spaced rows of
+    //    the sorted run, projected to the key columns (in key order, so
+    //    splitter columns later pair positionally with the key specs).
+    let take = (OVERSAMPLE * w).min(n);
+    let sample_idx: Vec<usize> = (0..take).map(|k| k * n / take).collect();
+    let local_sample = sorted.select_columns(&key_names)?.take(&sample_idx);
+
+    // 3. Exchange samples through the table wire format. Every rank
+    //    concatenates the same blobs in rank order and sorts them with
+    //    the same stable kernel, so all ranks derive identical
+    //    splitters without a designated root.
+    let blobs = allgather_bytes(comm, ipc::serialize(&local_sample))?;
+    let mut sample_parts = Vec::with_capacity(blobs.len());
+    for (r, blob) in blobs.iter().enumerate() {
+        sample_parts.push(
+            ipc::deserialize(blob).with_context(|| format!("dist_sort: sample from rank {r}"))?,
+        );
     }
+    let refs: Vec<&Table> = sample_parts.iter().collect();
+    let sample = sort(&Table::concat_tables(&refs)?, keys)?;
 
-    // 3. Allgather the samples; every rank derives the same w-1
-    //    splitters from the global sample's quantiles.
-    let gathered = allgather_bytes(comm, f64s_to_bytes(&samples))?;
-    let mut all: Vec<f64> = gathered.iter().flat_map(|b| bytes_to_f64s(b)).collect();
-    all.sort_by(|a, b| canonical_f64_total_cmp(*a, *b));
-    let pivots: Vec<f64> = if all.is_empty() {
-        // No non-null, non-NaN keys anywhere: splitter values are moot.
-        vec![0.0; w - 1]
+    // 4. Splitter rows: cut the global sample at its r/w quantiles,
+    //    r = 1..w. An empty global sample means every rank is empty, so
+    //    routing is moot and all (zero) rows stay in partition 0.
+    let m = sample.num_rows();
+    let split_idx: Vec<usize> = if m == 0 {
+        Vec::new()
     } else {
-        (1..w).map(|r| all[(r * all.len() / w).min(all.len() - 1)]).collect()
+        (1..w).map(|r| (r * m / w).min(m - 1)).collect()
     };
+    let split_cols: Vec<&Array> = sample.columns().iter().collect();
 
-    // 4. Range-partition exchange, then order the received runs.
-    let exchanged = shuffle_by_range(comm, &sorted, key, &pivots)?;
-    sort(&exchanged, &keys)
+    // 5. Route with a merge scan: the local run is sorted, so each
+    //    row's target rank (= number of splitter rows strictly below
+    //    it) is non-decreasing — advance a partition cursor instead of
+    //    binary-searching per row. Rows equal to splitter `r` land on
+    //    rank `r`, mirroring the scalar `partition_point` semantics.
+    let local_cols: Vec<&Array> = key_names
+        .iter()
+        .map(|k| sorted.column_by_name(k))
+        .collect::<Result<_>>()?;
+    let mut parts_idx: Vec<Vec<usize>> = vec![Vec::new(); w];
+    let mut p = 0usize;
+    for i in 0..n {
+        while p < split_idx.len()
+            && cmp_rows(&split_cols, split_idx[p], &local_cols, i, &orders) == Ordering::Less
+        {
+            p += 1;
+        }
+        parts_idx[p].push(i);
+    }
+    let parts: Vec<Table> = parts_idx.iter().map(|idx| sorted.take(idx)).collect();
+
+    // 6. Exchange, then order the received (per-source sorted) runs.
+    let exchanged = shuffle_tables(comm, parts)?;
+    sort(&exchanged, keys)
 }

@@ -11,16 +11,26 @@ use crate::table::{Array, Table};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
-fn check_compat(a: &Table, b: &Table) -> Result<()> {
-    if !a.schema().type_compatible(b.schema()) {
-        bail!("set op: incompatible schemas {} vs {}", a.schema(), b.schema());
+/// Strict union compatibility: column names AND types must match
+/// positionally. Positional type equality alone would silently zip
+/// unrelated columns together (e.g. after a rename); the set operators
+/// reject that. Shared with `ops::dist::setops`, which must fail on
+/// every rank *before* any communication.
+pub fn check_union_compatible(a: &Table, b: &Table) -> Result<()> {
+    if !a.schema().union_compatible(b.schema()) {
+        bail!(
+            "set op: union-incompatible schemas {} vs {} (column names and types must match \
+             positionally)",
+            a.schema(),
+            b.schema()
+        );
     }
     Ok(())
 }
 
 /// UNION ALL: vertical concatenation.
 pub fn union_all(a: &Table, b: &Table) -> Result<Table> {
-    check_compat(a, b)?;
+    check_union_compatible(a, b)?;
     Table::concat_tables(&[a, b])
 }
 
@@ -41,8 +51,9 @@ fn row_set(t: &Table) -> (Vec<&Array>, Vec<u64>, HashMap<u64, Vec<u32>>) {
 }
 
 /// Rows of `a` (distinct) that also appear in `b` (INTERSECT).
+/// Null cells match null cells, consistent with `drop_duplicates`.
 pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
-    check_compat(a, b)?;
+    check_union_compatible(a, b)?;
     let da = drop_duplicates(a, None)?;
     let (bcols, _, bset) = row_set(b);
     let acols: Vec<&Array> = da.columns().iter().collect();
@@ -58,8 +69,9 @@ pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
 }
 
 /// Rows of `a` (distinct) that do NOT appear in `b` (EXCEPT).
+/// Null cells match null cells, consistent with `drop_duplicates`.
 pub fn difference(a: &Table, b: &Table) -> Result<Table> {
-    check_compat(a, b)?;
+    check_union_compatible(a, b)?;
     let da = drop_duplicates(a, None)?;
     let (bcols, _, bset) = row_set(b);
     let acols: Vec<&Array> = da.columns().iter().collect();
@@ -146,6 +158,66 @@ mod tests {
         assert!(union(&ta(), &c).is_err());
         assert!(intersect(&ta(), &c).is_err());
         assert!(difference(&ta(), &c).is_err());
+    }
+
+    #[test]
+    fn mismatched_column_names_rejected() {
+        // Same types positionally, different name: must error, not
+        // silently zip "w" under "v".
+        let renamed = tb().rename("v", "w").unwrap();
+        assert!(union_all(&ta(), &renamed).is_err());
+        assert!(union(&ta(), &renamed).is_err());
+        assert!(intersect(&ta(), &renamed).is_err());
+        assert!(difference(&ta(), &renamed).is_err());
+    }
+
+    #[test]
+    fn mismatched_column_types_rejected() {
+        // Same names, different type for "k".
+        let retyped = Table::from_columns(vec![
+            ("k", Array::from_strs(&["2", "4"])),
+            ("v", Array::from_strs(&["b", "d"])),
+        ])
+        .unwrap();
+        assert!(union_all(&ta(), &retyped).is_err());
+        assert!(union(&ta(), &retyped).is_err());
+        assert!(intersect(&ta(), &retyped).is_err());
+        assert!(difference(&ta(), &retyped).is_err());
+    }
+
+    #[test]
+    fn null_bearing_key_columns() {
+        // Null == null in set-op semantics (same as drop_duplicates).
+        let a = Table::from_columns(vec![
+            ("k", Array::from_opt_i64(vec![Some(1), None, None])),
+            ("v", Array::from_strs(&["a", "n", "n"])),
+        ])
+        .unwrap();
+        let b = Table::from_columns(vec![
+            ("k", Array::from_opt_i64(vec![None, Some(2)])),
+            ("v", Array::from_strs(&["n", "b"])),
+        ])
+        .unwrap();
+        let i = intersect(&a, &b).unwrap();
+        assert_eq!(i.num_rows(), 1, "the (null, n) row matches across tables");
+        assert_eq!(i.cell(0, 0), Scalar::Null);
+        let d = difference(&a, &b).unwrap();
+        assert_eq!(d.num_rows(), 1); // only (1, a) survives
+        assert_eq!(d.cell(0, 0), Scalar::Int64(1));
+        let u = union(&a, &b).unwrap();
+        assert_eq!(u.num_rows(), 3); // (1,a), (null,n), (2,b)
+        assert_eq!(u.column_by_name("k").unwrap().null_count(), 1);
+    }
+
+    #[test]
+    fn empty_both_sides() {
+        let e = ta().slice(0, 0);
+        assert_eq!(union(&e, &e).unwrap().num_rows(), 0);
+        assert_eq!(union_all(&e, &e).unwrap().num_rows(), 0);
+        assert_eq!(intersect(&e, &e).unwrap().num_rows(), 0);
+        assert_eq!(difference(&e, &e).unwrap().num_rows(), 0);
+        // schema survives the empty set op
+        assert_eq!(union(&e, &e).unwrap().schema().names(), vec!["k", "v"]);
     }
 
     #[test]

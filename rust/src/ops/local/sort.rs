@@ -5,7 +5,7 @@
 //! dispatch); the general path uses a typed comparator chain. The sort
 //! is stable so secondary orderings and repeated sorts compose.
 
-use crate::table::rowhash::canonical_f64_total_cmp;
+use crate::table::rowcmp::{cmp_cells, KeyOrder};
 use crate::table::{Array, Table};
 use anyhow::Result;
 use std::cmp::Ordering;
@@ -27,47 +27,19 @@ impl SortKey {
     pub fn desc(column: impl Into<String>) -> SortKey {
         SortKey { column: column.into(), ascending: false, nulls_first: false }
     }
-}
 
-/// Compare two valid cells of the same column.
-#[inline]
-fn cmp_valid(col: &Array, i: usize, j: usize) -> Ordering {
-    match col {
-        Array::Int64(v, _) => v[i].cmp(&v[j]),
-        Array::Float64(v, _) => canonical_f64_total_cmp(v[i], v[j]),
-        Array::Utf8(d, _) => d.value(i).cmp(d.value(j)),
-        Array::Bool(v, _) => v[i].cmp(&v[j]),
+    /// The table-layer comparison spec for this key (shared with the
+    /// distributed sample sort's splitter routing).
+    pub fn order(&self) -> KeyOrder {
+        KeyOrder { ascending: self.ascending, nulls_first: self.nulls_first }
     }
 }
 
-/// Compare rows `i`, `j` under one key (null placement + direction).
+/// Compare rows `i`, `j` under one key (null placement + direction),
+/// via the shared typed comparator in [`crate::table::rowcmp`].
 #[inline]
 fn cmp_key(col: &Array, key: &SortKey, i: usize, j: usize) -> Ordering {
-    match (col.is_valid(i), col.is_valid(j)) {
-        (false, false) => Ordering::Equal,
-        (false, true) => {
-            if key.nulls_first {
-                Ordering::Less
-            } else {
-                Ordering::Greater
-            }
-        }
-        (true, false) => {
-            if key.nulls_first {
-                Ordering::Greater
-            } else {
-                Ordering::Less
-            }
-        }
-        (true, true) => {
-            let o = cmp_valid(col, i, j);
-            if key.ascending {
-                o
-            } else {
-                o.reverse()
-            }
-        }
-    }
+    cmp_cells(col, i, col, j, key.order())
 }
 
 /// The permutation that sorts `table` by `keys` (stable).
@@ -81,11 +53,15 @@ pub fn sort_indices(table: &Table, keys: &[SortKey]) -> Result<Vec<usize>> {
     let mut idx: Vec<usize> = (0..table.num_rows()).collect();
 
     // Fast path: single fully-valid i64 key — sort primitive pairs.
+    // Descending sorts by the reversed key (NOT sort-then-reverse,
+    // which would flip the relative order of equal keys and break the
+    // stability contract).
     if keys.len() == 1 && cols[0].null_count() == 0 {
         if let Array::Int64(v, _) = cols[0] {
-            idx.sort_by_key(|&i| v[i]);
-            if !keys[0].ascending {
-                idx.reverse(); // stable reverse of a stable ascending sort
+            if keys[0].ascending {
+                idx.sort_by_key(|&i| v[i]);
+            } else {
+                idx.sort_by_key(|&i| std::cmp::Reverse(v[i]));
             }
             return Ok(idx);
         }
@@ -188,6 +164,12 @@ mod tests {
         assert_eq!(fast, gen);
         let fast_desc = sort(&tbl, &[SortKey::desc("k")]).unwrap();
         assert!(is_sorted(&fast_desc, &[SortKey::desc("k")]).unwrap());
+        // stability on the desc fast path: equal keys keep input order
+        let gen_desc = sort(&tbl, &[SortKey::desc("k"), SortKey::desc("k")]).unwrap();
+        assert_eq!(fast_desc, gen_desc, "desc fast path must stay stable");
+        // desc order is 9,5,3,3,1; the tied 3s keep input order: b then d
+        assert_eq!(fast_desc.cell(2, 1), Scalar::Utf8("b".into()));
+        assert_eq!(fast_desc.cell(3, 1), Scalar::Utf8("d".into()));
     }
 
     #[test]

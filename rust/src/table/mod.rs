@@ -4,7 +4,8 @@
 //! this reproduction the substrate is implemented from scratch:
 //! validity-bitmap nullable arrays, UTF-8 offset arrays, schemas, typed
 //! builders, a CSV front door, an IPC wire format for shuffles, and the
-//! shared row-hash/row-equality kernels every hash-based operator uses.
+//! shared row-hash/row-equality ([`rowhash`]) and row-order ([`rowcmp`])
+//! kernels every hash- or sort-based operator uses.
 
 pub mod array;
 pub mod bitmap;
@@ -12,6 +13,7 @@ pub mod builder;
 pub mod csv;
 pub mod ipc;
 pub mod pretty;
+pub mod rowcmp;
 pub mod rowhash;
 pub mod scalar;
 pub mod schema;

@@ -1,0 +1,156 @@
+//! Typed row comparison across tables.
+//!
+//! This is the ordering counterpart of [`super::rowhash`]: where rowhash
+//! gives every hash-based operator one definition of "equal keys",
+//! rowcmp gives every order-based operator one definition of "key a
+//! sorts before key b" — shared by the local sort kernel and the
+//! distributed sample sort, whose splitter rows live in a *different*
+//! table (the allgathered sample) than the rows being routed. The f64
+//! order is the canonical total order from rowhash (`-0.0 == 0.0`, all
+//! NaNs equal and greater than every number), so sorting and hashing
+//! never disagree about ties.
+
+use super::array::Array;
+use super::rowhash::canonical_f64_total_cmp;
+use std::cmp::Ordering;
+
+/// Direction and null placement for one key column — the table-layer
+/// spec that `ops::local::sort::SortKey` lowers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KeyOrder {
+    pub ascending: bool,
+    /// Where nulls sort. Pandas default is "last" regardless of
+    /// direction, and null placement is NOT flipped by `ascending`.
+    pub nulls_first: bool,
+}
+
+impl KeyOrder {
+    pub const ASC: KeyOrder = KeyOrder { ascending: true, nulls_first: false };
+    pub const DESC: KeyOrder = KeyOrder { ascending: false, nulls_first: false };
+}
+
+/// Compare the valid cells `a[i]` and `b[j]`. The arrays must share a
+/// physical type (panics otherwise — callers compare columns of one
+/// schema, or of schemas already checked compatible).
+#[inline]
+pub fn cmp_cells_valid(a: &Array, i: usize, b: &Array, j: usize) -> Ordering {
+    match (a, b) {
+        (Array::Int64(x, _), Array::Int64(y, _)) => x[i].cmp(&y[j]),
+        (Array::Float64(x, _), Array::Float64(y, _)) => canonical_f64_total_cmp(x[i], y[j]),
+        (Array::Utf8(x, _), Array::Utf8(y, _)) => x.value(i).cmp(y.value(j)),
+        (Array::Bool(x, _), Array::Bool(y, _)) => x[i].cmp(&y[j]),
+        _ => panic!("rowcmp: dtype mismatch {} vs {}", a.data_type(), b.data_type()),
+    }
+}
+
+/// Compare cells `a[i]` and `b[j]` under one key order (null placement
+/// applied, then direction).
+#[inline]
+pub fn cmp_cells(a: &Array, i: usize, b: &Array, j: usize, ord: KeyOrder) -> Ordering {
+    match (a.is_valid(i), b.is_valid(j)) {
+        (false, false) => Ordering::Equal,
+        (false, true) => {
+            if ord.nulls_first {
+                Ordering::Less
+            } else {
+                Ordering::Greater
+            }
+        }
+        (true, false) => {
+            if ord.nulls_first {
+                Ordering::Greater
+            } else {
+                Ordering::Less
+            }
+        }
+        (true, true) => {
+            let o = cmp_cells_valid(a, i, b, j);
+            if ord.ascending {
+                o
+            } else {
+                o.reverse()
+            }
+        }
+    }
+}
+
+/// Lexicographic comparison of row `i` of the `left` key columns
+/// against row `j` of the `right` key columns (parallel column sets,
+/// one [`KeyOrder`] per key).
+#[inline]
+pub fn cmp_rows(
+    left: &[&Array],
+    i: usize,
+    right: &[&Array],
+    j: usize,
+    orders: &[KeyOrder],
+) -> Ordering {
+    debug_assert_eq!(left.len(), right.len(), "rowcmp: key column count mismatch");
+    debug_assert_eq!(left.len(), orders.len(), "rowcmp: key order count mismatch");
+    for ((a, b), ord) in left.iter().zip(right.iter()).zip(orders.iter()) {
+        let o = cmp_cells(a, i, b, j, *ord);
+        if o != Ordering::Equal {
+            return o;
+        }
+    }
+    Ordering::Equal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_cell_order() {
+        let i = Array::from_i64(vec![1, 2]);
+        let f = Array::from_f64(vec![0.5, f64::NAN]);
+        let s = Array::from_strs(&["ab", "b"]);
+        let b = Array::from_bools(vec![false, true]);
+        assert_eq!(cmp_cells_valid(&i, 0, &i, 1), Ordering::Less);
+        assert_eq!(cmp_cells_valid(&f, 0, &f, 1), Ordering::Less, "NaN sorts last");
+        assert_eq!(cmp_cells_valid(&f, 1, &f, 1), Ordering::Equal, "NaNs tie");
+        assert_eq!(cmp_cells_valid(&s, 0, &s, 1), Ordering::Less);
+        assert_eq!(cmp_cells_valid(&b, 1, &b, 0), Ordering::Greater);
+    }
+
+    #[test]
+    fn cross_array_comparison() {
+        // The sample-sort case: splitter rows live in another array.
+        let a = Array::from_strs(&["m"]);
+        let b = Array::from_strs(&["a", "m", "z"]);
+        assert_eq!(cmp_cells_valid(&a, 0, &b, 0), Ordering::Greater);
+        assert_eq!(cmp_cells_valid(&a, 0, &b, 1), Ordering::Equal);
+        assert_eq!(cmp_cells_valid(&a, 0, &b, 2), Ordering::Less);
+    }
+
+    #[test]
+    fn null_placement_and_direction() {
+        let a = Array::from_opt_i64(vec![Some(1), None]);
+        assert_eq!(cmp_cells(&a, 1, &a, 0, KeyOrder::ASC), Ordering::Greater, "nulls last");
+        assert_eq!(cmp_cells(&a, 1, &a, 0, KeyOrder::DESC), Ordering::Greater, "still last");
+        let first = KeyOrder { ascending: true, nulls_first: true };
+        assert_eq!(cmp_cells(&a, 1, &a, 0, first), Ordering::Less);
+        assert_eq!(cmp_cells(&a, 1, &a, 1, KeyOrder::ASC), Ordering::Equal);
+        assert_eq!(cmp_cells(&a, 0, &a, 0, KeyOrder::DESC), Ordering::Equal);
+    }
+
+    #[test]
+    fn lexicographic_rows() {
+        let s = Array::from_strs(&["a", "a", "b"]);
+        let n = Array::from_i64(vec![2, 1, 0]);
+        let cols: Vec<&Array> = vec![&s, &n];
+        let asc = [KeyOrder::ASC, KeyOrder::ASC];
+        assert_eq!(cmp_rows(&cols, 0, &cols, 1, &asc), Ordering::Greater, "tie broken by n");
+        assert_eq!(cmp_rows(&cols, 1, &cols, 2, &asc), Ordering::Less, "first key decides");
+        let mixed = [KeyOrder::ASC, KeyOrder::DESC];
+        assert_eq!(cmp_rows(&cols, 0, &cols, 1, &mixed), Ordering::Less, "desc second key");
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn mismatched_types_panic() {
+        let a = Array::from_i64(vec![1]);
+        let b = Array::from_strs(&["x"]);
+        cmp_cells_valid(&a, 0, &b, 0);
+    }
+}

@@ -101,7 +101,8 @@ impl Schema {
         Ok(Schema { fields })
     }
 
-    /// Two schemas are union-compatible when types match positionally.
+    /// Two schemas are concat-compatible when types match positionally
+    /// (names may differ — vertical concat keeps the first schema's).
     pub fn type_compatible(&self, other: &Schema) -> bool {
         self.fields.len() == other.fields.len()
             && self
@@ -109,6 +110,18 @@ impl Schema {
                 .iter()
                 .zip(other.fields.iter())
                 .all(|(a, b)| a.data_type == b.data_type)
+    }
+
+    /// Strict union compatibility for the relational set operators:
+    /// names AND types must match positionally, so differently-shaped
+    /// tables error instead of silently zipping columns by position.
+    pub fn union_compatible(&self, other: &Schema) -> bool {
+        self.fields.len() == other.fields.len()
+            && self
+                .fields
+                .iter()
+                .zip(other.fields.iter())
+                .all(|(a, b)| a.name == b.name && a.data_type == b.data_type)
     }
 }
 
@@ -165,5 +178,21 @@ mod tests {
         assert_eq!(sc.names()[0], "key");
         assert!(sc.type_compatible(&s()));
         assert!(!sc.project(&[0]).type_compatible(&s()));
+    }
+
+    #[test]
+    fn union_compat_requires_names_and_types() {
+        let sc = s();
+        assert!(sc.union_compatible(&s()));
+        let renamed = s().rename("id", "key").unwrap();
+        assert!(renamed.type_compatible(&sc), "types still line up");
+        assert!(!renamed.union_compatible(&sc), "but names differ");
+        let retyped = Schema::new(vec![
+            Field::new("id", DataType::Utf8),
+            Field::new("name", DataType::Utf8),
+            Field::new("score", DataType::Float64),
+        ]);
+        assert!(!retyped.union_compatible(&sc));
+        assert!(!sc.project(&[0, 1]).union_compatible(&sc));
     }
 }

@@ -1,0 +1,247 @@
+//! Differential harness: every `ops::dist` operator, run at
+//! `world_size ∈ {1, 2, 4, 7}` over the thread communicator on a
+//! partitioned table, must equal its local counterpart applied to the
+//! concatenation of the partitions — compared in canonical sorted-row
+//! form (distributed results are partitioned and unordered by
+//! contract).
+//!
+//! Inputs are seeded through `util::rng`; set `HPTMT_TEST_SEED` to
+//! reproduce a CI failure locally (CI pins it). Two generator choices
+//! make exact string comparison sound:
+//!
+//! * aggregate payloads are small *integers stored as f64*, so
+//!   distributed sums are exact in any accumulation order;
+//! * the payload column is a pure function of the key columns, so
+//!   "keep first" duplicate survivors are identical bytes no matter
+//!   which copy a rank keeps.
+
+use hptmt::comm::{spawn_world, LinkProfile};
+use hptmt::ops::dist::{
+    broadcast_join, dist_difference, dist_drop_duplicates, dist_groupby, dist_groupby_partial,
+    dist_intersect, dist_join, dist_sort, dist_union, dist_union_all, dist_unique,
+};
+use hptmt::ops::local::{self, Agg, AggSpec, JoinAlgorithm, JoinType, SortKey};
+use hptmt::table::{Array, Table};
+use hptmt::util::rng::Rng;
+
+const WORLDS: [usize; 4] = [1, 2, 4, 7];
+
+fn seed() -> u64 {
+    std::env::var("HPTMT_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20260727)
+}
+
+/// Global keyed table: Utf8 key `s` and i64 key `k` (both ~10% null,
+/// small domains so keys collide across ranks), payload `v` = integer
+/// function of the keys in f64.
+fn global_table(rows: usize, domain: u64, stream: u64) -> Table {
+    let mut rng = Rng::new(seed()).fork(stream);
+    let mut ss: Vec<Option<String>> = Vec::with_capacity(rows);
+    let mut ks: Vec<Option<i64>> = Vec::with_capacity(rows);
+    let mut vs: Vec<f64> = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let s = if rng.bool(0.1) { None } else { Some(format!("g{}", rng.gen_range(domain))) };
+        let k = if rng.bool(0.1) { None } else { Some(rng.gen_range(domain) as i64) };
+        let v = (s.as_deref().map_or(7i64, |x| x.bytes().map(i64::from).sum::<i64>()) * 31
+            + k.unwrap_or(-1))
+            % 997;
+        ss.push(s);
+        ks.push(k);
+        vs.push(v as f64);
+    }
+    Table::from_columns(vec![
+        ("s", Array::from_opt_strs(ss.iter().map(|o| o.as_deref()).collect())),
+        ("k", Array::from_opt_i64(ks)),
+        ("v", Array::from_f64(vs)),
+    ])
+    .unwrap()
+}
+
+/// Canonical form of a partitioned result: debug-formatted rows,
+/// sorted. Exact — float cells compare by shortest-round-trip text of
+/// identical bits.
+fn canon(parts: &[Table]) -> Vec<String> {
+    let mut rows: Vec<String> = parts
+        .iter()
+        .flat_map(|t| (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect::<Vec<_>>())
+        .collect();
+    rows.sort();
+    rows
+}
+
+/// Run `dist_op` over the row-partitions of `global` at every world
+/// size and compare against `local_out` in canonical form.
+fn assert_matches<F>(name: &str, global: &Table, local_out: &Table, dist_op: F) -> Vec<Vec<Table>>
+where
+    F: Fn(&mut hptmt::comm::ThreadComm, &Table) -> anyhow::Result<Table>
+        + Send
+        + Sync
+        + Clone
+        + 'static,
+{
+    let want = canon(std::slice::from_ref(local_out));
+    let mut all = Vec::new();
+    for w in WORLDS {
+        let parts_in = global.split(w);
+        let op = dist_op.clone();
+        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| op(comm, &parts_in[rank]))
+            .unwrap_or_else(|e| panic!("{name} w={w}: {e:#}"));
+        assert_eq!(canon(&out), want, "{name}: dist != local at w={w} (seed {})", seed());
+        all.push(out);
+    }
+    all
+}
+
+#[test]
+fn dist_join_matches_local() {
+    let l = global_table(240, 16, 1);
+    let r = global_table(160, 16, 2);
+    for jt in [JoinType::Inner, JoinType::Left] {
+        let oracle = local::join(&l, &r, &["k"], &["k"], jt, JoinAlgorithm::Hash).unwrap();
+        // both sides are partitioned: split r on the same rank layout
+        for w in WORLDS {
+            let (lp, rp) = (l.split(w), r.split(w));
+            let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                dist_join(comm, &lp[rank], &rp[rank], &["k"], &["k"], jt, JoinAlgorithm::Hash)
+            })
+            .unwrap();
+            assert_eq!(
+                canon(&out),
+                canon(std::slice::from_ref(&oracle)),
+                "dist_join {jt:?} w={w} (seed {})",
+                seed()
+            );
+        }
+    }
+}
+
+#[test]
+fn broadcast_join_matches_local() {
+    let l = global_table(240, 16, 3);
+    let r = global_table(60, 16, 4);
+    let oracle = local::join(&l, &r, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash).unwrap();
+    for w in WORLDS {
+        let (lp, rp) = (l.split(w), r.split(w));
+        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            broadcast_join(comm, &lp[rank], &rp[rank], &["k"], &["k"], JoinType::Inner)
+        })
+        .unwrap();
+        assert_eq!(
+            canon(&out),
+            canon(std::slice::from_ref(&oracle)),
+            "broadcast_join w={w} (seed {})",
+            seed()
+        );
+    }
+}
+
+#[test]
+fn dist_groupby_matches_local() {
+    let g = global_table(300, 12, 5);
+    // integer-valued f64 payloads → sums exact in any order; mean is
+    // one division of identical sum/count on every path.
+    let aggs = [
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Mean),
+        AggSpec::new("v", Agg::Min),
+        AggSpec::new("v", Agg::Max),
+    ];
+    let oracle = local::groupby_aggregate(&g, &["s", "k"], &aggs).unwrap();
+    let aggs_full = aggs.clone();
+    assert_matches("dist_groupby", &g, &oracle, move |comm, t| {
+        dist_groupby(comm, t, &["s", "k"], &aggs_full)
+    });
+    assert_matches("dist_groupby_partial", &g, &oracle, move |comm, t| {
+        dist_groupby_partial(comm, t, &["s", "k"], &aggs)
+    });
+}
+
+#[test]
+fn dist_unique_and_drop_duplicates_match_local() {
+    let g = global_table(300, 10, 6);
+    let u_oracle = local::unique(&g, &["s", "k"]).unwrap();
+    assert_matches("dist_unique", &g, &u_oracle, |comm, t| dist_unique(comm, t, &["s", "k"]));
+
+    // subset dedup: v is a function of (s, k), so every global
+    // duplicate carries identical payload and any survivor matches.
+    let d_oracle = local::drop_duplicates(&g, Some(&["s", "k"])).unwrap();
+    assert_matches("dist_drop_duplicates(subset)", &g, &d_oracle, |comm, t| {
+        dist_drop_duplicates(comm, t, Some(&["s", "k"]))
+    });
+
+    // all-column dedup: survivors are exact duplicates by definition.
+    let a_oracle = local::drop_duplicates(&g, None).unwrap();
+    assert_matches("dist_drop_duplicates(all)", &g, &a_oracle, |comm, t| {
+        dist_drop_duplicates(comm, t, None)
+    });
+}
+
+#[test]
+fn dist_sort_matches_local_single_numeric_key() {
+    let g = global_table(300, 200, 7);
+    let oracle = local::sort(&g, &[SortKey::asc("v")]).unwrap();
+    let per_world =
+        assert_matches("dist_sort(v)", &g, &oracle, |comm, t| dist_sort(comm, t, &[SortKey::asc("v")]));
+    for (w, parts) in WORLDS.iter().zip(per_world) {
+        let cat = Table::concat_tables(&parts.iter().collect::<Vec<_>>()).unwrap();
+        assert!(
+            local::is_sorted(&cat, &[SortKey::asc("v")]).unwrap(),
+            "rank concatenation not globally sorted at w={w}"
+        );
+    }
+}
+
+#[test]
+fn dist_sort_matches_local_utf8_plus_numeric_keys() {
+    // The acceptance-criteria case: two-key (Utf8 asc, numeric desc)
+    // sort with nulls in both key columns, at every world size.
+    let g = global_table(300, 12, 8);
+    let keys = || [SortKey::asc("s"), SortKey::desc("k")];
+    let oracle = local::sort(&g, &keys()).unwrap();
+    let per_world =
+        assert_matches("dist_sort(s,k)", &g, &oracle, move |comm, t| dist_sort(comm, t, &keys()));
+    for (w, parts) in WORLDS.iter().zip(per_world) {
+        let cat = Table::concat_tables(&parts.iter().collect::<Vec<_>>()).unwrap();
+        assert!(
+            local::is_sorted(&cat, &keys()).unwrap(),
+            "rank concatenation not globally sorted at w={w}"
+        );
+    }
+}
+
+#[test]
+fn dist_set_ops_match_local() {
+    // overlapping sides from one key domain
+    let a = global_table(220, 8, 9);
+    let b = global_table(180, 8, 10);
+    type SetOp = (
+        &'static str,
+        fn(&Table, &Table) -> anyhow::Result<Table>,
+        fn(&mut hptmt::comm::ThreadComm, &Table, &Table) -> anyhow::Result<Table>,
+    );
+    let cases: [SetOp; 4] = [
+        ("union", |x, y| local::union(x, y), |c, x, y| dist_union(c, x, y)),
+        ("union_all", |x, y| local::union_all(x, y), |c, x, y| dist_union_all(c, x, y)),
+        ("intersect", |x, y| local::intersect(x, y), |c, x, y| dist_intersect(c, x, y)),
+        ("difference", |x, y| local::difference(x, y), |c, x, y| dist_difference(c, x, y)),
+    ];
+    for (name, local_op, dist_op) in cases {
+        let oracle = local_op(&a, &b).unwrap();
+        for w in WORLDS {
+            let (ap, bp) = (a.split(w), b.split(w));
+            let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                dist_op(comm, &ap[rank], &bp[rank])
+            })
+            .unwrap();
+            assert_eq!(
+                canon(&out),
+                canon(std::slice::from_ref(&oracle)),
+                "{name}: dist != local at w={w} (seed {})",
+                seed()
+            );
+        }
+    }
+}

@@ -116,7 +116,7 @@ fn prop_dist_sort_is_globally_sorted_permutation() {
         let g = random_keyed(rng, size + w, 1_000_000, "s");
         let parts_in = g.split(w);
         let parts = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
-            dist_sort(comm, &parts_in[rank], "v")
+            dist_sort(comm, &parts_in[rank], &[SortKey::asc("v")])
         })
         .map_err(|e| e.to_string())?;
         // each part locally sorted; boundaries ordered
