@@ -14,7 +14,9 @@
 use hptmt::bench::{measure, scaled, Report};
 use hptmt::exec::asynch::{run_async, AsyncCost};
 use hptmt::exec::seq::run_seq;
-use hptmt::unomt::{pipeline, UnomtConfig};
+use hptmt::ops::local::{self, Agg, AggSpec};
+use hptmt::pipeline::Pipeline;
+use hptmt::unomt::{datagen, pipeline, UnomtConfig};
 
 fn main() -> anyhow::Result<()> {
     let rows = scaled(40_000);
@@ -58,5 +60,53 @@ fn main() -> anyhow::Result<()> {
             format!("{:.4}", s.cpu_seconds),
         ]);
     }
-    stages.finish()
+    stages.finish()?;
+
+    // Keyed-aggregate variant: per-drug response statistics computed as
+    // one batch group-by vs as a single-shard streaming keyed_aggregate
+    // stage folding the same rows batch by batch — the same partial
+    // plan, so the numbers agree and only the execution style differs.
+    let raw = datagen::response_shard(&cfg, 0, 1)?;
+    let aggs = [
+        AggSpec::new("GROWTH", Agg::Sum),
+        AggSpec::new("GROWTH", Agg::Count),
+        AggSpec::new("GROWTH", Agg::Mean),
+    ];
+    let batch_aggs = aggs.clone();
+    let batch_raw = raw.clone();
+    let batch_stat = measure(1, 3, move || {
+        let sw = hptmt::util::time::CpuStopwatch::start();
+        let g = local::groupby_aggregate(&batch_raw, &["DRUG_ID"], &batch_aggs)?;
+        anyhow::ensure!(g.num_rows() > 0);
+        Ok(sw.elapsed().as_secs_f64())
+    })?;
+    let stream_raw = raw.clone();
+    let stream_aggs = aggs.clone();
+    let batch_rows = 2000usize;
+    let stream_stat = measure(1, 3, move || {
+        let src = stream_raw.clone();
+        let aggs = stream_aggs.clone();
+        let run = Pipeline::new("fig12-keyed-stream")
+            .source("gen", 1, move |_, emit| {
+                let mut start = 0;
+                while start < src.num_rows() {
+                    let len = batch_rows.min(src.num_rows() - start);
+                    emit(src.slice(start, len))?;
+                    start += len;
+                }
+                Ok(())
+            })
+            .keyed_aggregate("per-drug", 1, &["DRUG_ID"], &aggs)
+            .run(8)?;
+        anyhow::ensure!(run.total_rows_out() > 0);
+        Ok(run.stages.iter().map(|s| s.cpu_seconds).sum())
+    })?;
+    let mut keyed = Report::new("fig12_keyed_aggregate", &["mode", "seconds", "vs_batch"]);
+    keyed.row(&["batch-groupby".into(), format!("{:.4}", batch_stat.median), "1.00x".into()]);
+    keyed.row(&[
+        "stream-keyed-agg".into(),
+        format!("{:.4}", stream_stat.median),
+        format!("{:.2}x", stream_stat.median / batch_stat.median),
+    ]);
+    keyed.finish()
 }

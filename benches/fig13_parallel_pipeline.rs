@@ -12,7 +12,9 @@ use hptmt::bench::{measure, scaled, Report};
 use hptmt::comm::LinkProfile;
 use hptmt::exec::asynch::{run_async, AsyncCost};
 use hptmt::exec::bsp::{run_bsp, BspConfig};
-use hptmt::unomt::{pipeline, UnomtConfig};
+use hptmt::ops::local::{Agg, AggSpec};
+use hptmt::pipeline::Pipeline;
+use hptmt::unomt::{datagen, pipeline, UnomtConfig};
 
 fn bsp_seconds(cfg: &UnomtConfig, w: usize) -> anyhow::Result<f64> {
     let cfg = cfg.clone();
@@ -56,5 +58,58 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t13.finish()?;
-    t14.finish()
+    t14.finish()?;
+
+    // Keyed-aggregate variant: the streaming group-by (sharded sources
+    // → keyed_aggregate over the shared partitioner) at matching shard
+    // counts. One physical core, so the honest metric is summed stage
+    // CPU seconds plus the peak per-shard aggregation state.
+    let raw = datagen::response_shard(&cfg, 0, 1)?;
+    let aggs = [
+        AggSpec::new("GROWTH", Agg::Sum),
+        AggSpec::new("GROWTH", Agg::Count),
+        AggSpec::new("GROWTH", Agg::Mean),
+    ];
+    // One pipeline definition shared by the timed and the
+    // state-inspection runs, so the numbers always describe the same
+    // pipeline.
+    fn keyed_stream(raw: &hptmt::table::Table, aggs: &[AggSpec], w: usize) -> Pipeline {
+        let shards = raw.split(w);
+        Pipeline::new("fig13-keyed-stream")
+            .source("gen", w, move |shard, emit| {
+                let t = &shards[shard];
+                let mut start = 0;
+                while start < t.num_rows() {
+                    let len = 2000.min(t.num_rows() - start);
+                    emit(t.slice(start, len))?;
+                    start += len;
+                }
+                Ok(())
+            })
+            .keyed_aggregate("per-drug", w, &["DRUG_ID"], aggs)
+    }
+    let mut keyed = Report::new(
+        "fig13_keyed_stream",
+        &["shards", "cpu_s", "state_rows", "state_kb", "groups"],
+    );
+    for &w in &[1usize, 2, 4, 8] {
+        let timed_raw = raw.clone();
+        let aggs_w = aggs.clone();
+        let stat = measure(0, 3, move || {
+            let run = keyed_stream(&timed_raw, &aggs_w, w).run(8)?;
+            anyhow::ensure!(run.total_rows_out() > 0);
+            Ok(run.stages.iter().map(|s| s.cpu_seconds).sum())
+        })?;
+        // one non-measured run for the state/group numbers
+        let run = keyed_stream(&raw, &aggs, w).run(8)?;
+        let agg = &run.stages[1];
+        keyed.row(&[
+            w.to_string(),
+            format!("{:.4}", stat.median),
+            agg.state_rows.to_string(),
+            format!("{:.1}", agg.state_bytes as f64 / 1024.0),
+            run.total_rows_out().to_string(),
+        ]);
+    }
+    keyed.finish()
 }

@@ -16,7 +16,7 @@ use hptmt::exec::bsp::{run_bsp, BspConfig};
 use hptmt::ops::dist::dist_join;
 use hptmt::ops::local::inner_join;
 use hptmt::ops::local::join::{JoinAlgorithm, JoinType};
-use hptmt::table::rowhash::{hash_columns, partition_indices};
+use hptmt::comm::HashPartitioner;
 use hptmt::table::{Array, Table};
 use hptmt::util::rng::Rng;
 
@@ -28,8 +28,7 @@ fn shard(rows: usize, key_domain: usize, seed: u64) -> Table {
 }
 
 fn hash_part(t: &Table, part: usize, nparts: usize) -> Table {
-    let h = hash_columns(&[t.column_by_name("k").unwrap()]);
-    let parts = partition_indices(&h, nparts);
+    let parts = HashPartitioner::new(["k"], nparts).partition_indices(t).unwrap();
     t.take(&parts[part])
 }
 

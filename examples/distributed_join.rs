@@ -103,8 +103,7 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn hash_part(t: &Table, part: usize, nparts: usize) -> Table {
-    use hptmt::table::rowhash::{hash_columns, partition_indices};
-    let h = hash_columns(&[t.column_by_name("k").unwrap()]);
-    let parts = partition_indices(&h, nparts);
+    use hptmt::comm::HashPartitioner;
+    let parts = HashPartitioner::new(["k"], nparts).partition_indices(t).unwrap();
     t.take(&parts[part])
 }

@@ -17,6 +17,7 @@ use hptmt::pipeline::{Pipeline, Routing};
 use hptmt::table::Table;
 use hptmt::unomt::{datagen, pipeline as unomt_pipeline, UnomtConfig};
 use hptmt::util::cli::Args;
+use std::sync::{Arc, Mutex};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(0);
@@ -75,6 +76,57 @@ fn main() -> anyhow::Result<()> {
     )?;
     println!("growth mean/count over stream:\n{}", hptmt::table::pretty::pretty(&agg, 3));
     anyhow::ensure!(out.num_rows() > 0);
+
+    // Second run: the stateful streaming group-by. A keyed_aggregate
+    // stage owns per-drug running statistics (its input edge is the
+    // shared hash partitioner, so each shard's state is disjoint) and a
+    // sink collects the flush batches — no output ever reaches the
+    // collector, exactly like a write-to-storage tail stage.
+    let stats: Arc<Mutex<Vec<Table>>> = Arc::new(Mutex::new(Vec::new()));
+    let stats_in_sink = stats.clone();
+    let gen_cfg2 = cfg.clone();
+    let run2 = Pipeline::new("unomt-drug-stats")
+        .source("gen", 2, move |shard, emit| {
+            for b in 0..batches / 2 {
+                let mut c = gen_cfg2.clone();
+                c.seed = gen_cfg2.seed ^ ((shard * 10_000 + b) as u64);
+                emit(datagen::response_shard(&c, 0, 1)?)?;
+            }
+            Ok(())
+        })
+        .map("clean", 2, Routing::Rebalance, |raw| {
+            let t = unomt_pipeline::clean_response(&raw)?;
+            Ok(if t.num_rows() == 0 { None } else { Some(t) })
+        })
+        .keyed_aggregate(
+            "drug-stats",
+            2,
+            &["DRUG_ID"],
+            &[
+                AggSpec::new("GROWTH", Agg::Mean),
+                AggSpec::new("GROWTH", Agg::Count),
+                AggSpec::new("GROWTH", Agg::Min),
+                AggSpec::new("GROWTH", Agg::Max),
+            ],
+        )
+        .sink("store", 1, Routing::Rebalance, move |t| {
+            stats_in_sink.lock().unwrap().push(t);
+            Ok(())
+        })
+        .run(8)?;
+
+    println!("\n== streaming group-by (keyed_aggregate -> sink) ==");
+    for s in &run2.stages {
+        println!(
+            "{:<10} in {:>8} rows   out {:>7} rows   cpu {:>6.3}s   state {:>6} rows / {:>7} B",
+            s.name, s.rows_in, s.rows_out, s.cpu_seconds, s.state_rows, s.state_bytes
+        );
+    }
+    let collected = stats.lock().unwrap();
+    let per_drug = Table::concat_tables(&collected.iter().collect::<Vec<_>>())?;
+    println!("per-drug stats: {} drugs\n{}", per_drug.num_rows(), hptmt::table::pretty::pretty(&per_drug, 5));
+    anyhow::ensure!(run2.output.is_empty(), "sink pipelines emit nothing");
+    anyhow::ensure!(per_drug.num_rows() > 0);
     println!("OK");
     Ok(())
 }

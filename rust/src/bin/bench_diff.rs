@@ -1,0 +1,162 @@
+//! `bench_diff` — compare two `bench::Report` JSON files and flag
+//! per-row regressions beyond a threshold (the BENCH_*.json trajectory
+//! tool from the ROADMAP).
+//!
+//! ```bash
+//! # current run vs the checked-in baseline from the previous PR
+//! cargo run --bin bench_diff -- bench_out/fig13_parallel_pipeline.json \
+//!     BENCH_fig13_parallel_pipeline.json --threshold 1.15
+//! ```
+//!
+//! Rows are matched by their first cell (the series/x column). Numeric
+//! cells are compared as `new / old`; a ratio above the threshold is a
+//! regression, below its inverse an improvement. Metrics are assumed
+//! cost-like (seconds — bigger is worse), matching every `bench::Report`
+//! this crate emits. Exits non-zero when any regression is found, so CI
+//! can gate on it. Files recorded at different `HPTMT_BENCH_SCALE`s are
+//! refused: their row counts are not comparable.
+
+use anyhow::{bail, Context, Result};
+use hptmt::util::cli::Args;
+use hptmt::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One parsed report: name, scale, header, rows keyed by first cell.
+struct ReportFile {
+    name: String,
+    scale: f64,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+fn load(path: &str) -> Result<ReportFile> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let strs = |key: &str| -> Result<Vec<String>> {
+        Ok(j.get(key)?
+            .as_arr()?
+            .iter()
+            .map(|c| c.as_str().map(str::to_string))
+            .collect::<Result<_>>()?)
+    };
+    let rows = j
+        .get("rows")?
+        .as_arr()?
+        .iter()
+        .map(|r| {
+            r.as_arr()?
+                .iter()
+                .map(|c| c.as_str().map(str::to_string))
+                .collect::<Result<Vec<String>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ReportFile {
+        name: j.get("name")?.as_str()?.to_string(),
+        scale: j.get("scale")?.as_f64()?,
+        header: strs("header")?,
+        rows,
+    })
+}
+
+/// Parse a report cell as a number, tolerating unit-ish suffixes the
+/// reports use ("1.23x", "45%", "0.5s").
+fn parse_numeric(cell: &str) -> Option<f64> {
+    let t = cell.trim();
+    if let Ok(v) = t.parse::<f64>() {
+        return Some(v);
+    }
+    let stripped = t.trim_end_matches(|c: char| c.is_alphabetic() || c == '%');
+    if stripped.len() < t.len() {
+        stripped.parse::<f64>().ok()
+    } else {
+        None
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(0);
+    let [new_path, base_path] = args.positional() else {
+        bail!("usage: bench_diff <bench_out/NAME.json> <BENCH_NAME.json> [--threshold 1.10]");
+    };
+    let threshold = args.f64_or("threshold", 1.10)?;
+    if threshold <= 1.0 {
+        bail!("--threshold must be > 1.0, got {threshold}");
+    }
+
+    let new = load(new_path)?;
+    let base = load(base_path)?;
+    if new.name != base.name {
+        bail!("bench name mismatch: {:?} vs {:?} — not the same trajectory", new.name, base.name);
+    }
+    if new.scale != base.scale {
+        bail!(
+            "scale mismatch: {} vs {} — runs at different HPTMT_BENCH_SCALE are not comparable",
+            new.scale,
+            base.scale
+        );
+    }
+    if new.header != base.header {
+        bail!("header mismatch: {:?} vs {:?} — schema changed, rebaseline", new.header, base.header);
+    }
+
+    let key_of = |row: &[String]| row.first().cloned().unwrap_or_default();
+    let base_rows: BTreeMap<String, &Vec<String>> =
+        base.rows.iter().map(|r| (key_of(r), r)).collect();
+
+    println!(
+        "== bench_diff {} (threshold {threshold:.2}x, scale {}) ==",
+        new.name, new.scale
+    );
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    for row in &new.rows {
+        let key = key_of(row);
+        let Some(old) = base_rows.get(&key) else {
+            println!("  {key:<24} NEW ROW (no baseline)");
+            continue;
+        };
+        for (c, col) in new.header.iter().enumerate().skip(1) {
+            let (Some(n), Some(o)) = (
+                row.get(c).and_then(|s| parse_numeric(s)),
+                old.get(c).and_then(|s| parse_numeric(s)),
+            ) else {
+                continue; // non-numeric cell (labels, notes)
+            };
+            compared += 1;
+            if o <= 0.0 {
+                continue; // zero/negative baselines have no meaningful ratio
+            }
+            let ratio = n / o;
+            let flag = if ratio > threshold {
+                regressions += 1;
+                "REGRESSION"
+            } else if ratio < 1.0 / threshold {
+                "improved"
+            } else {
+                "ok"
+            };
+            println!("  {key:<24} {col:<16} {o:>12.4} -> {n:>12.4}  {ratio:>6.2}x  {flag}");
+        }
+    }
+    // Baseline rows that vanished from the new run are coverage loss,
+    // not a pass: count them as failures so a renamed/dropped series
+    // cannot silently bypass the gate. (New rows are fine — they gain
+    // a baseline when BENCH_*.json is next refreshed.)
+    let mut missing = 0usize;
+    for row in &base.rows {
+        let key = key_of(row);
+        if !new.rows.iter().any(|r| key_of(r) == key) {
+            missing += 1;
+            println!("  {key:<24} MISSING (present in baseline only)");
+        }
+    }
+    if compared == 0 && !base.rows.is_empty() {
+        bail!("no numeric cells compared against a non-empty baseline — nothing was checked");
+    }
+    if regressions > 0 || missing > 0 {
+        println!("{regressions} regression(s) beyond {threshold:.2}x, {missing} missing row(s)");
+        std::process::exit(1);
+    }
+    println!("no regressions beyond {threshold:.2}x");
+    Ok(())
+}

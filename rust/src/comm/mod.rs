@@ -9,9 +9,15 @@
 //! the transport: the in-process [`thread_comm::ThreadComm`] stands in
 //! for MPI (DESIGN.md §3), with a [`profile::LinkProfile`] cost model
 //! supplying simulated cluster timing.
+//!
+//! Row routing — deciding which rank/shard a row belongs to — is not a
+//! transport concern and lives in exactly one place: [`partitioner`]
+//! (DESIGN.md §5). The batch [`shuffle`] and the streaming pipeline's
+//! keyed edges are both thin consumers of it.
 
 pub mod collectives;
 pub mod communicator;
+pub mod partitioner;
 pub mod profile;
 pub mod shuffle;
 pub mod thread_comm;
@@ -22,6 +28,7 @@ pub use collectives::{
     scatter_bytes, ReduceOp,
 };
 pub use communicator::{CommStats, Communicator, Tag};
+pub use partitioner::{HashPartitioner, RangePartitioner};
 pub use profile::{LinkCost, LinkProfile};
 pub use shuffle::{shuffle_by_hash, shuffle_by_range, shuffle_tables};
 pub use thread_comm::{spawn_world, ThreadComm};

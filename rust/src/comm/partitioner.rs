@@ -1,0 +1,368 @@
+//! The single row-routing core: every decision of "which shard/rank
+//! does this row go to" in the crate is made here (DESIGN.md §5).
+//!
+//! Two partitioning disciplines cover the paper's Table-5 compositions:
+//!
+//! * **Hash by key rows** ([`HashPartitioner`]) — equal keys (under
+//!   [`crate::table::rowhash`]'s row equality) always land in the same
+//!   partition. Used by the batch shuffle (`comm::shuffle`), the
+//!   streaming pipeline's keyed edges (`pipeline`), and through those by
+//!   every hash-routed distributed operator.
+//! * **Range by splitter rows** ([`RangePartitioner`]) — partition `p`
+//!   receives the rows between splitter rows `p-1` and `p` under a
+//!   typed multi-key order ([`crate::table::rowcmp`]). Used by the
+//!   distributed sample sort; [`pivot_partition_indices`] is the scalar
+//!   special case for caller-supplied numeric pivots.
+//!
+//! Keeping both here means batch and streaming consumers cannot drift:
+//! a key hashes to the same partition id no matter which layer asks,
+//! so a streaming keyed stage at parallelism `w` sees exactly the rows
+//! rank `r` of a `w`-rank batch shuffle would see.
+
+use crate::table::rowcmp::{cmp_rows, KeyOrder};
+use crate::table::rowhash::hash_columns;
+use crate::table::{Array, Table};
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+
+/// Map one row hash to one of `nparts` partitions.
+///
+/// Uses the high bits via 128-bit multiply (Lemire reduction) — cheaper
+/// and better distributed than `% nparts` on already-mixed hashes.
+#[inline]
+pub fn partition_of(hash: u64, nparts: usize) -> usize {
+    (((hash as u128) * (nparts as u128)) >> 64) as usize
+}
+
+/// Partition row indices by precomputed row hashes. Returns `nparts`
+/// index vectors (the shuffle send lists / keyed-edge batch splits).
+pub fn partition_indices(hashes: &[u64], nparts: usize) -> Vec<Vec<usize>> {
+    // Two passes: count then fill, so each Vec is allocated exactly once.
+    let mut counts = vec![0usize; nparts];
+    for &h in hashes {
+        counts[partition_of(h, nparts)] += 1;
+    }
+    let mut out: Vec<Vec<usize>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for (i, &h) in hashes.iter().enumerate() {
+        out[partition_of(h, nparts)].push(i);
+    }
+    out
+}
+
+/// Hash-by-key-rows partitioner: a reusable `(key columns, partition
+/// count)` spec. Equal key rows — including all-null key rows, which
+/// hash equal — always map to the same partition id, for any consumer
+/// that agrees on `nparts`.
+#[derive(Debug, Clone)]
+pub struct HashPartitioner {
+    keys: Vec<String>,
+    nparts: usize,
+}
+
+impl HashPartitioner {
+    /// Build a partitioner over named key columns.
+    pub fn new<I, S>(keys: I, nparts: usize) -> HashPartitioner
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let keys: Vec<String> = keys.into_iter().map(Into::into).collect();
+        assert!(nparts > 0, "HashPartitioner: zero partitions");
+        assert!(!keys.is_empty(), "HashPartitioner: no key columns");
+        HashPartitioner { keys, nparts }
+    }
+
+    /// Number of output partitions.
+    pub fn nparts(&self) -> usize {
+        self.nparts
+    }
+
+    /// Key column names this partitioner routes on.
+    pub fn keys(&self) -> &[String] {
+        &self.keys
+    }
+
+    /// Row indices of `table` per partition (`nparts` vectors; empty
+    /// partitions stay as empty vectors).
+    pub fn partition_indices(&self, table: &Table) -> Result<Vec<Vec<usize>>> {
+        let key_cols: Vec<&Array> = self
+            .keys
+            .iter()
+            .map(|k| table.column_by_name(k))
+            .collect::<Result<_>>()?;
+        let hashes = hash_columns(&key_cols);
+        Ok(partition_indices(&hashes, self.nparts))
+    }
+
+    /// Materialise the partitions of `table` (`nparts` tables; empty
+    /// partitions keep the schema).
+    pub fn partition(&self, table: &Table) -> Result<Vec<Table>> {
+        Ok(self
+            .partition_indices(table)?
+            .iter()
+            .map(|idx| table.take(idx))
+            .collect())
+    }
+}
+
+/// Range-by-splitter-rows partitioner: `nparts - 1` (or zero, when the
+/// source sample was empty) splitter rows, sorted under `orders`, cut
+/// the key space into `nparts` contiguous ranges.
+///
+/// A row's target partition is the number of splitter rows **strictly
+/// below** it under the typed key order — so rows equal to splitter `p`
+/// land in partition `p`, mirroring scalar `partition_point` semantics,
+/// and null/NaN keys need no special-case routing because the
+/// comparator totally orders them.
+pub struct RangePartitioner {
+    splitters: Table,
+    orders: Vec<KeyOrder>,
+    nparts: usize,
+}
+
+impl RangePartitioner {
+    /// Build from splitter rows (a key-columns-only table, sorted under
+    /// `orders`, one [`KeyOrder`] per column). `splitters` must hold at
+    /// most `nparts - 1` rows; fewer (including zero) is allowed and
+    /// leaves the trailing partitions empty.
+    pub fn from_splitter_rows(
+        splitters: Table,
+        orders: Vec<KeyOrder>,
+        nparts: usize,
+    ) -> Result<RangePartitioner> {
+        if nparts == 0 {
+            bail!("RangePartitioner: zero partitions");
+        }
+        if splitters.num_columns() != orders.len() {
+            bail!(
+                "RangePartitioner: {} splitter columns but {} key orders",
+                splitters.num_columns(),
+                orders.len()
+            );
+        }
+        if splitters.num_rows() + 1 > nparts {
+            bail!(
+                "RangePartitioner: {} splitter rows need at least {} partitions, got {nparts}",
+                splitters.num_rows(),
+                splitters.num_rows() + 1
+            );
+        }
+        Ok(RangePartitioner { splitters, orders, nparts })
+    }
+
+    /// Number of output partitions.
+    pub fn nparts(&self) -> usize {
+        self.nparts
+    }
+
+    fn splitter_cols(&self) -> Vec<&Array> {
+        self.splitters.columns().iter().collect()
+    }
+
+    fn target_with(&self, split_cols: &[&Array], key_cols: &[&Array], i: usize) -> usize {
+        let (mut lo, mut hi) = (0usize, self.splitters.num_rows());
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if cmp_rows(split_cols, mid, key_cols, i, &self.orders) == Ordering::Less {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Target partition of row `i` of `key_cols` (columns parallel to
+    /// the splitter columns): binary search for the first splitter not
+    /// strictly below the row.
+    pub fn target_of(&self, key_cols: &[&Array], i: usize) -> usize {
+        self.target_with(&self.splitter_cols(), key_cols, i)
+    }
+
+    /// Row indices per partition for arbitrarily ordered input (one
+    /// binary search per row).
+    pub fn partition_indices(&self, key_cols: &[&Array]) -> Vec<Vec<usize>> {
+        let n = key_cols.first().map_or(0, |c| c.len());
+        let split_cols = self.splitter_cols();
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); self.nparts];
+        for i in 0..n {
+            out[self.target_with(&split_cols, key_cols, i)].push(i);
+        }
+        out
+    }
+
+    /// Row indices per partition for input already sorted under the
+    /// partitioner's key order: targets are non-decreasing, so routing
+    /// is one merge scan over (rows × splitters) instead of a per-row
+    /// binary search. The caller guarantees sortedness (the sample
+    /// sort routes its locally sorted run).
+    pub fn partition_indices_sorted(&self, key_cols: &[&Array]) -> Vec<Vec<usize>> {
+        let n = key_cols.first().map_or(0, |c| c.len());
+        let split_cols = self.splitter_cols();
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); self.nparts];
+        let mut p = 0usize;
+        for i in 0..n {
+            while p < self.splitters.num_rows()
+                && cmp_rows(&split_cols, p, key_cols, i, &self.orders) == Ordering::Less
+            {
+                p += 1;
+            }
+            out[p].push(i);
+        }
+        out
+    }
+}
+
+/// Scalar-pivot range partition of one numeric column: `pivots` are
+/// ascending boundaries (`nparts = pivots.len() + 1`); partition `p`
+/// receives `pivots[p-1] < x <= pivots[p]`. Rows with null or NaN keys
+/// go to the **last** partition — both order after every number under
+/// the canonical total order, so a rank-order concatenation stays
+/// sorted. This is the caller-supplied-pivots special case of
+/// [`RangePartitioner`] kept for `comm::shuffle::shuffle_by_range`,
+/// where fractional pivots over integer keys have no row representation.
+pub fn pivot_partition_indices(col: &Array, pivots: &[f64]) -> Result<Vec<Vec<usize>>> {
+    if !col.data_type().is_numeric() {
+        bail!("pivot_partition_indices: key must be numeric, got {}", col.data_type());
+    }
+    let nparts = pivots.len() + 1;
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); nparts];
+    for i in 0..col.len() {
+        let p = match col.f64_at(i) {
+            Some(x) if !x.is_nan() => pivots.partition_point(|&pv| pv < x),
+            _ => nparts - 1,
+        };
+        out[p].push(i);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::rowcmp::KeyOrder;
+
+    #[test]
+    fn partition_of_in_range() {
+        for h in [0u64, 1, u64::MAX, 0xDEADBEEF] {
+            assert!(partition_of(h, 5) < 5);
+        }
+    }
+
+    #[test]
+    fn partitions_cover_all_rows() {
+        let a = Array::from_i64((0..1000).collect());
+        let h = hash_columns(&[&a]);
+        let parts = partition_indices(&h, 7);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 1000);
+        // every partition id in range, reasonably balanced (< 3x mean)
+        for p in &parts {
+            assert!(p.len() < 3 * 1000 / 7);
+        }
+    }
+
+    #[test]
+    fn hash_partitioner_matches_raw_routing() {
+        // The protocol invariant: the partitioner must agree with the
+        // raw hash → Lemire pipeline for any consumer with equal nparts.
+        let t = Table::from_columns(vec![
+            ("k", Array::from_opt_i64(vec![Some(3), None, Some(7), Some(3), None])),
+            ("v", Array::from_f64(vec![0.1, 0.2, 0.3, 0.4, 0.5])),
+        ])
+        .unwrap();
+        let hp = HashPartitioner::new(["k"], 4);
+        let got = hp.partition_indices(&t).unwrap();
+        let h = hash_columns(&[t.column_by_name("k").unwrap()]);
+        assert_eq!(got, partition_indices(&h, 4));
+        // equal keys (incl. null == null) share a partition
+        let part_of_row = |i: usize| got.iter().position(|p| p.contains(&i)).unwrap();
+        assert_eq!(part_of_row(0), part_of_row(3));
+        assert_eq!(part_of_row(1), part_of_row(4));
+        // materialised partitions keep schema and cover every row
+        let parts = hp.partition(&t).unwrap();
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts.iter().map(|p| p.num_rows()).sum::<usize>(), 5);
+        for p in &parts {
+            assert_eq!(p.schema().as_ref(), t.schema().as_ref());
+        }
+    }
+
+    #[test]
+    fn hash_partitioner_rejects_missing_key() {
+        let t = Table::from_columns(vec![("k", Array::from_i64(vec![1]))]).unwrap();
+        assert!(HashPartitioner::new(["nope"], 2).partition_indices(&t).is_err());
+    }
+
+    #[test]
+    fn range_partitioner_routes_by_splitter_rows() {
+        // splitters "f", "m" bound their partitions from above:
+        // p0 = (…, "f"], p1 = ("f", "m"], p2 = ("m", …) — the
+        // strictly-below rule sends exact splitter matches left,
+        // mirroring scalar partition_point semantics.
+        let splitters = Table::from_columns(vec![("s", Array::from_strs(&["f", "m"]))]).unwrap();
+        let rp = RangePartitioner::from_splitter_rows(splitters, vec![KeyOrder::ASC], 3).unwrap();
+        let keys = Array::from_strs(&["a", "f", "g", "m", "z"]);
+        let cols: Vec<&Array> = vec![&keys];
+        let general = rp.partition_indices(&cols);
+        assert_eq!(general, vec![vec![0, 1], vec![2, 3], vec![4]]);
+        // sorted input: the merge scan must agree with the binary search
+        assert_eq!(rp.partition_indices_sorted(&cols), general);
+    }
+
+    #[test]
+    fn range_partitioner_merge_scan_agrees_on_multikey_nulls() {
+        let splitters = Table::from_columns(vec![
+            ("s", Array::from_opt_strs(vec![Some("b"), None])),
+            ("n", Array::from_opt_i64(vec![Some(5), Some(1)])),
+        ])
+        .unwrap();
+        // nulls-last asc on s, desc on n — splitters sorted under that
+        let orders = vec![KeyOrder::ASC, KeyOrder::DESC];
+        let rp = RangePartitioner::from_splitter_rows(splitters, orders, 3).unwrap();
+        let s = Array::from_opt_strs(vec![Some("a"), Some("b"), Some("b"), Some("c"), None]);
+        let n = Array::from_opt_i64(vec![Some(9), Some(7), Some(5), Some(2), Some(3)]);
+        let cols: Vec<&Array> = vec![&s, &n];
+        // rows are sorted under (s asc nulls-last, n desc)
+        assert_eq!(rp.partition_indices_sorted(&cols), rp.partition_indices(&cols));
+        let parts = rp.partition_indices(&cols);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 5);
+        // ("b", 5) equals splitter row 0 → partition 0 (equal goes left)
+        assert_eq!(parts[0], vec![0, 1, 2]);
+        // ("c", 2) and (None, 3) sort after splitter 0, before/at 1
+        assert_eq!(parts[1], vec![3, 4]);
+        assert!(parts[2].is_empty());
+    }
+
+    #[test]
+    fn empty_splitters_route_everything_to_partition_zero() {
+        let empty =
+            Table::from_columns(vec![("k", Array::from_i64(vec![]))]).unwrap();
+        let rp = RangePartitioner::from_splitter_rows(empty, vec![KeyOrder::ASC], 4).unwrap();
+        let keys = Array::from_i64(vec![5, 1, 9]);
+        let cols: Vec<&Array> = vec![&keys];
+        let parts = rp.partition_indices(&cols);
+        assert_eq!(parts[0], vec![0, 1, 2]);
+        assert!(parts[1..].iter().all(|p| p.is_empty()));
+    }
+
+    #[test]
+    fn range_partitioner_validates_shape() {
+        let s = Table::from_columns(vec![("k", Array::from_i64(vec![1, 2]))]).unwrap();
+        // 2 splitters need >= 3 partitions
+        assert!(RangePartitioner::from_splitter_rows(s.clone(), vec![KeyOrder::ASC], 2).is_err());
+        // order count must match splitter columns
+        assert!(RangePartitioner::from_splitter_rows(s, vec![], 3).is_err());
+    }
+
+    #[test]
+    fn pivot_partition_sends_null_and_nan_last() {
+        let col = Array::from_f64(vec![0.1, 0.9, f64::NAN]);
+        let parts = pivot_partition_indices(&col, &[0.5]).unwrap();
+        assert_eq!(parts, vec![vec![0], vec![1, 2]]);
+        let with_null = Array::from_opt_i64(vec![Some(0), None, Some(1)]);
+        let parts = pivot_partition_indices(&with_null, &[0.5]).unwrap();
+        assert_eq!(parts, vec![vec![0], vec![1, 2]]);
+        let s = Array::from_strs(&["x"]);
+        assert!(pivot_partition_indices(&s, &[0.5]).is_err(), "non-numeric key");
+    }
+}

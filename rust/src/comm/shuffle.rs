@@ -8,9 +8,9 @@
 
 use super::collectives::alltoall_bytes;
 use super::communicator::Communicator;
-use crate::table::rowhash::{hash_columns, partition_indices};
-use crate::table::{ipc, Array, Table};
-use anyhow::{bail, Context, Result};
+use super::partitioner::{pivot_partition_indices, HashPartitioner};
+use crate::table::{ipc, Table};
+use anyhow::{Context, Result};
 
 /// Exchange pre-partitioned tables: `parts[r]` goes to rank `r`; the
 /// received partitions are concatenated (own partition avoids the wire).
@@ -46,19 +46,14 @@ pub fn shuffle_tables<C: Communicator + ?Sized>(
     Ok(out)
 }
 
-/// Hash-partition `local` on `keys` and shuffle so equal keys co-locate.
+/// Hash-partition `local` on `keys` (via the shared
+/// [`HashPartitioner`]) and shuffle so equal keys co-locate.
 pub fn shuffle_by_hash<C: Communicator + ?Sized>(
     comm: &mut C,
     local: &Table,
     keys: &[&str],
 ) -> Result<Table> {
-    let key_cols: Vec<&Array> = keys
-        .iter()
-        .map(|k| local.column_by_name(k))
-        .collect::<Result<_>>()?;
-    let hashes = hash_columns(&key_cols);
-    let parts_idx = partition_indices(&hashes, comm.world_size());
-    let parts: Vec<Table> = parts_idx.iter().map(|idx| local.take(idx)).collect();
+    let parts = HashPartitioner::new(keys.iter().copied(), comm.world_size()).partition(local)?;
     shuffle_tables(comm, parts)
 }
 
@@ -76,17 +71,8 @@ pub fn shuffle_by_range<C: Communicator + ?Sized>(
     let w = comm.world_size();
     assert_eq!(pivots.len() + 1, w, "need world-1 pivots");
     let col = local.column_by_name(key)?;
-    if !col.data_type().is_numeric() {
-        bail!("shuffle_by_range: key {key:?} must be numeric, got {}", col.data_type());
-    }
-    let mut parts_idx: Vec<Vec<usize>> = vec![Vec::new(); w];
-    for i in 0..local.num_rows() {
-        let p = match col.f64_at(i) {
-            Some(x) if !x.is_nan() => pivots.partition_point(|&pv| pv < x),
-            _ => w - 1,
-        };
-        parts_idx[p].push(i);
-    }
+    let parts_idx = pivot_partition_indices(col, pivots)
+        .with_context(|| format!("shuffle_by_range: key {key:?}"))?;
     let parts: Vec<Table> = parts_idx.iter().map(|idx| local.take(idx)).collect();
     shuffle_tables(comm, parts)
 }
@@ -96,7 +82,7 @@ mod tests {
     use super::*;
     use crate::comm::profile::LinkProfile;
     use crate::comm::thread_comm::spawn_world;
-    use crate::table::Scalar;
+    use crate::table::{Array, Scalar};
 
     fn local_table(rank: usize) -> Table {
         // keys 0..8 spread across ranks

@@ -3,9 +3,9 @@
 //! the map/combine/shuffle/reduce decomposition in arXiv 2010.06312).
 
 use crate::comm::{shuffle_by_hash, Communicator};
-use crate::ops::local::groupby::{groupby_aggregate, Agg, AggSpec};
-use crate::table::{Array, DataType, Field, Schema, Table};
-use anyhow::{bail, Result};
+use crate::ops::local::groupby::{groupby_aggregate, AggSpec, PartialAggPlan};
+use crate::table::Table;
+use anyhow::{Context, Result};
 
 /// Distributed group-by: shuffle all rows so equal keys co-locate, then
 /// run the local group-by kernel once. Moves every row over the wire —
@@ -25,47 +25,16 @@ pub fn dist_groupby<C: Communicator + ?Sized>(
     groupby_aggregate(&shuffled, keys, aggs)
 }
 
-/// How one requested aggregation is reassembled from the re-reduced
-/// partial columns.
-enum Plan {
-    /// The final column is the re-reduced partial, renamed to the
-    /// caller's output name.
-    Carry { part: String },
-    /// Mean = global sum / global count, null when the count is zero
-    /// (matching the local kernel's all-null-group behaviour).
-    Mean { sum: String, cnt: String },
-}
-
-/// Intern one partial column, shared across requests: overlapping specs
-/// (e.g. `Sum(v)` + `Mean(v)` + `Count(v)`) compute and shuffle each
-/// distinct `(column, partial)` exactly once.
-fn intern_partial(
-    column: &str,
-    kind: Agg,
-    reduce: Agg,
-    partial: &mut Vec<AggSpec>,
-    refine: &mut Vec<Agg>,
-    index: &mut std::collections::HashMap<(String, &'static str), String>,
-) -> String {
-    let slot = (column.to_string(), kind.name());
-    if let Some(name) = index.get(&slot) {
-        return name.clone();
-    }
-    let name = format!("__p{}_{}", partial.len(), kind.name());
-    index.insert(slot, name.clone());
-    partial.push(AggSpec::named(column, kind, name.clone()));
-    refine.push(reduce);
-    name
-}
-
 /// Distributed group-by with a map-side combiner: aggregate locally
 /// first so at most one row per (rank, group) crosses the wire, then
 /// shuffle the partials and reduce them to finals.
 ///
-/// Decompositions: `Sum -> sum of sums`, `Count -> sum of counts`,
-/// `Mean -> (sum of sums) / (sum of counts)`, `Min/Max -> min/max of
-/// partials`. `Std`/`Var`/`First`/`Last` do not decompose over this
-/// partial set — use [`dist_groupby`] for those.
+/// The decomposition (`Sum → sum of sums`, `Count → sum of counts`,
+/// `Mean → sums / counts`, `Min/Max → min/max of partials`) is the
+/// shared [`PartialAggPlan`] — the same plan the streaming pipeline's
+/// `keyed_aggregate` stage folds batches through, so batch and
+/// streaming aggregation cannot disagree. `Std`/`Var`/`First`/`Last`
+/// do not decompose over this partial set — use [`dist_groupby`].
 pub fn dist_groupby_partial<C: Communicator + ?Sized>(
     comm: &mut C,
     table: &Table,
@@ -76,79 +45,15 @@ pub fn dist_groupby_partial<C: Communicator + ?Sized>(
         return groupby_aggregate(table, keys, aggs);
     }
 
-    // 1. Decompose each request into partial aggregations + the final
-    //    re-reduce of each partial column. Partials are interned, so
-    //    overlapping requests share one column on the wire.
-    let mut partial: Vec<AggSpec> = Vec::new();
-    let mut refine: Vec<Agg> = Vec::new(); // parallel to `partial`
-    let mut index = std::collections::HashMap::new();
-    let mut plans: Vec<Plan> = Vec::with_capacity(aggs.len());
-    for spec in aggs {
-        let plan = match spec.agg {
-            Agg::Sum => Plan::Carry {
-                part: intern_partial(&spec.column, Agg::Sum, Agg::Sum, &mut partial, &mut refine, &mut index),
-            },
-            Agg::Count => Plan::Carry {
-                part: intern_partial(&spec.column, Agg::Count, Agg::Sum, &mut partial, &mut refine, &mut index),
-            },
-            Agg::Min => Plan::Carry {
-                part: intern_partial(&spec.column, Agg::Min, Agg::Min, &mut partial, &mut refine, &mut index),
-            },
-            Agg::Max => Plan::Carry {
-                part: intern_partial(&spec.column, Agg::Max, Agg::Max, &mut partial, &mut refine, &mut index),
-            },
-            Agg::Mean => Plan::Mean {
-                sum: intern_partial(&spec.column, Agg::Sum, Agg::Sum, &mut partial, &mut refine, &mut index),
-                cnt: intern_partial(&spec.column, Agg::Count, Agg::Sum, &mut partial, &mut refine, &mut index),
-            },
-            other => bail!(
-                "dist_groupby_partial: {} does not decompose into partial aggregates; \
-                 use dist_groupby",
-                other.name()
-            ),
-        };
-        plans.push(plan);
-    }
+    // Decompose before any communication: a non-decomposable request
+    // must fail on every rank in lockstep, with zero bytes sent.
+    let plan = PartialAggPlan::new(aggs).context("dist_groupby_partial")?;
 
-    // 2. Combine locally, shuffle the (small) partial table, reduce.
-    let local_partial = groupby_aggregate(table, keys, &partial)?;
+    // Combine locally, shuffle the (small) partial table, reduce, then
+    // reassemble the caller's layout (keys, then one column per
+    // requested aggregation, named as the local kernel would name it).
+    let local_partial = groupby_aggregate(table, keys, plan.partial_specs())?;
     let shuffled = shuffle_by_hash(comm, &local_partial, keys)?;
-    let final_specs: Vec<AggSpec> = partial
-        .iter()
-        .zip(&refine)
-        .map(|(p, agg)| AggSpec::named(p.out_name.clone(), *agg, p.out_name.clone()))
-        .collect();
-    let combined = groupby_aggregate(&shuffled, keys, &final_specs)?;
-
-    // 3. Reassemble in the caller's layout: keys, then one column per
-    //    requested aggregation, named exactly as the local kernel would.
-    let mut fields: Vec<Field> = Vec::new();
-    let mut cols: Vec<Array> = Vec::new();
-    for k in keys {
-        let a = combined.column_by_name(k)?;
-        fields.push(Field::new(*k, a.data_type()));
-        cols.push(a.clone());
-    }
-    for (spec, plan) in aggs.iter().zip(&plans) {
-        match plan {
-            Plan::Carry { part } => {
-                let a = combined.column_by_name(part)?;
-                fields.push(Field::new(spec.out_name.clone(), a.data_type()));
-                cols.push(a.clone());
-            }
-            Plan::Mean { sum, cnt } => {
-                let s = combined.column_by_name(sum)?;
-                let c = combined.column_by_name(cnt)?;
-                let vals: Vec<Option<f64>> = (0..combined.num_rows())
-                    .map(|i| match (s.f64_at(i), c.f64_at(i)) {
-                        (Some(sv), Some(cv)) if cv > 0.0 => Some(sv / cv),
-                        _ => None,
-                    })
-                    .collect();
-                fields.push(Field::new(spec.out_name.clone(), DataType::Float64));
-                cols.push(Array::from_opt_f64(vals));
-            }
-        }
-    }
-    Table::new(Schema::new(fields), cols)
+    let combined = groupby_aggregate(&shuffled, keys, plan.reduce_specs())?;
+    plan.finish(keys, &combined)
 }

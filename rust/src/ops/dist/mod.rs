@@ -27,6 +27,11 @@
 //! * **Partitioned output.** Result rows live on the rank the
 //!   composition's partitioning assigns them to; no rank materialises
 //!   the global result. `global_counts` gives the global view.
+//! * **One routing core.** Which rank a row is assigned to is always
+//!   decided by `comm::partitioner` (hash or splitter-row range —
+//!   DESIGN.md §5); no operator carries a private routing
+//!   implementation, so batch operators and the streaming pipeline's
+//!   keyed edges agree row-for-row.
 
 pub mod groupby;
 pub mod join;

@@ -7,18 +7,19 @@
 //!
 //! Splitters are rows, not scalars: samples travel through the same IPC
 //! wire format the shuffle uses (`table::ipc` + `allgather_bytes`), and
-//! routing compares each local row against the splitter rows with the
-//! typed comparator shared with the local sort kernel
-//! (`table::rowcmp`). That makes the operator general over multi-key,
-//! Utf8/Bool and descending/nulls-first keys — null and NaN keys need no
-//! special-case routing because the comparator totally orders them.
+//! routing goes through the shared range partitioner
+//! (`comm::partitioner::RangePartitioner`), which compares each local
+//! row against the splitter rows with the typed comparator shared with
+//! the local sort kernel (`table::rowcmp`). That makes the operator
+//! general over multi-key, Utf8/Bool and descending/nulls-first keys —
+//! null and NaN keys need no special-case routing because the
+//! comparator totally orders them.
 
-use crate::comm::{allgather_bytes, shuffle_tables, Communicator};
+use crate::comm::{allgather_bytes, shuffle_tables, Communicator, RangePartitioner};
 use crate::ops::local::sort::{sort, SortKey};
-use crate::table::rowcmp::{cmp_rows, KeyOrder};
+use crate::table::rowcmp::KeyOrder;
 use crate::table::{ipc, Array, Table};
 use anyhow::{bail, Context, Result};
-use std::cmp::Ordering;
 
 /// Per-rank sample budget is `OVERSAMPLE * world` key rows; regular
 /// sampling from the locally sorted run keeps the splitters close to
@@ -84,27 +85,19 @@ pub fn dist_sort<C: Communicator + ?Sized>(
     } else {
         (1..w).map(|r| (r * m / w).min(m - 1)).collect()
     };
-    let split_cols: Vec<&Array> = sample.columns().iter().collect();
+    let splitters = sample.take(&split_idx);
 
-    // 5. Route with a merge scan: the local run is sorted, so each
-    //    row's target rank (= number of splitter rows strictly below
-    //    it) is non-decreasing — advance a partition cursor instead of
-    //    binary-searching per row. Rows equal to splitter `r` land on
-    //    rank `r`, mirroring the scalar `partition_point` semantics.
+    // 5. Route through the shared range partitioner: target rank is the
+    //    number of splitter rows strictly below the row, and the local
+    //    run is already sorted, so routing is one merge scan (see
+    //    `comm::partitioner`). Rows equal to splitter `r` land on rank
+    //    `r`, mirroring the scalar `partition_point` semantics.
+    let router = RangePartitioner::from_splitter_rows(splitters, orders, w)?;
     let local_cols: Vec<&Array> = key_names
         .iter()
         .map(|k| sorted.column_by_name(k))
         .collect::<Result<_>>()?;
-    let mut parts_idx: Vec<Vec<usize>> = vec![Vec::new(); w];
-    let mut p = 0usize;
-    for i in 0..n {
-        while p < split_idx.len()
-            && cmp_rows(&split_cols, split_idx[p], &local_cols, i, &orders) == Ordering::Less
-        {
-            p += 1;
-        }
-        parts_idx[p].push(i);
-    }
+    let parts_idx = router.partition_indices_sorted(&local_cols);
     let parts: Vec<Table> = parts_idx.iter().map(|idx| sorted.take(idx)).collect();
 
     // 6. Exchange, then order the received (per-source sorted) runs.

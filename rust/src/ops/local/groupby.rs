@@ -299,6 +299,159 @@ pub fn groupby_aggregate(table: &Table, keys: &[&str], aggs: &[AggSpec]) -> Resu
     Table::new(Schema::new(out_fields), out_cols)
 }
 
+/// How one requested aggregation is reassembled from the re-reduced
+/// partial columns.
+#[derive(Debug, Clone)]
+enum FinishPlan {
+    /// The final column is the re-reduced partial, renamed to the
+    /// caller's output name.
+    Carry { part: String },
+    /// Mean = global sum / global count, null when the count is zero
+    /// (matching the local kernel's all-null-group behaviour).
+    Mean { sum: String, cnt: String },
+}
+
+/// A decomposition of aggregation requests into associative partials —
+/// the "combine" side of the map/combine/shuffle/reduce pattern
+/// (arXiv 2010.06312), shared by the distributed map-side-combine
+/// group-by (`ops::dist::dist_groupby_partial`) and the streaming
+/// pipeline's stateful `keyed_aggregate` stage.
+///
+/// The lifecycle is `partial → (merge…) → finish`:
+///
+/// 1. [`partial_specs`](Self::partial_specs) aggregates raw rows into
+///    one partial row per group (`Sum`/`Count`/`Min`/`Max` columns;
+///    `Mean` is carried as a sum + count pair, interned so overlapping
+///    requests share one column);
+/// 2. any number of partial tables (from other ranks, or from earlier
+///    stream batches) merge by concatenation + re-grouping with
+///    [`reduce_specs`](Self::reduce_specs) — each reduce writes back to
+///    the same column name, so merging is closed and can repeat
+///    (`fold` is the streaming form);
+/// 3. [`finish`](Self::finish) reassembles the caller's requested
+///    layout, deriving `Mean` from the sum/count pair.
+///
+/// `Std`/`Var`/`First`/`Last` do not decompose over this partial set
+/// and are rejected by [`new`](Self::new).
+#[derive(Debug, Clone)]
+pub struct PartialAggPlan {
+    requested: Vec<AggSpec>,
+    partial: Vec<AggSpec>,
+    reduce: Vec<AggSpec>,
+    plans: Vec<FinishPlan>,
+}
+
+impl PartialAggPlan {
+    /// Decompose `aggs`; errors on non-decomposable aggregations.
+    pub fn new(aggs: &[AggSpec]) -> Result<PartialAggPlan> {
+        let mut partial: Vec<AggSpec> = Vec::new();
+        let mut refine: Vec<Agg> = Vec::new(); // parallel to `partial`
+        let mut index: HashMap<(String, &'static str), String> = HashMap::new();
+        // Intern one partial column, shared across requests: overlapping
+        // specs (e.g. `Sum(v)` + `Mean(v)` + `Count(v)`) compute and
+        // ship each distinct `(column, partial)` exactly once.
+        let mut intern = |column: &str, kind: Agg, reduce: Agg| -> String {
+            let slot = (column.to_string(), kind.name());
+            if let Some(name) = index.get(&slot) {
+                return name.clone();
+            }
+            let name = format!("__p{}_{}", partial.len(), kind.name());
+            index.insert(slot, name.clone());
+            partial.push(AggSpec::named(column, kind, name.clone()));
+            refine.push(reduce);
+            name
+        };
+        let mut plans: Vec<FinishPlan> = Vec::with_capacity(aggs.len());
+        for spec in aggs {
+            let plan = match spec.agg {
+                Agg::Sum => FinishPlan::Carry { part: intern(&spec.column, Agg::Sum, Agg::Sum) },
+                Agg::Count => {
+                    FinishPlan::Carry { part: intern(&spec.column, Agg::Count, Agg::Sum) }
+                }
+                Agg::Min => FinishPlan::Carry { part: intern(&spec.column, Agg::Min, Agg::Min) },
+                Agg::Max => FinishPlan::Carry { part: intern(&spec.column, Agg::Max, Agg::Max) },
+                Agg::Mean => FinishPlan::Mean {
+                    sum: intern(&spec.column, Agg::Sum, Agg::Sum),
+                    cnt: intern(&spec.column, Agg::Count, Agg::Sum),
+                },
+                other => bail!(
+                    "{} does not decompose into partial aggregates; \
+                     use the full-shuffle group-by",
+                    other.name()
+                ),
+            };
+            plans.push(plan);
+        }
+        let reduce: Vec<AggSpec> = partial
+            .iter()
+            .zip(&refine)
+            .map(|(p, agg)| AggSpec::named(p.out_name.clone(), *agg, p.out_name.clone()))
+            .collect();
+        Ok(PartialAggPlan { requested: aggs.to_vec(), partial, reduce, plans })
+    }
+
+    /// Specs that turn raw rows into one partial row per group.
+    pub fn partial_specs(&self) -> &[AggSpec] {
+        &self.partial
+    }
+
+    /// Specs that merge concatenated partial tables (each writes back
+    /// to its own column name, so reducing is closed under repetition).
+    pub fn reduce_specs(&self) -> &[AggSpec] {
+        &self.reduce
+    }
+
+    /// Fold one raw batch into an optional running partial state (the
+    /// streaming form): aggregate the batch to partials, then merge
+    /// with the previous state by concat + re-reduce.
+    pub fn fold(&self, state: Option<Table>, batch: &Table, keys: &[&str]) -> Result<Table> {
+        let batch_partial = groupby_aggregate(batch, keys, &self.partial)?;
+        match state {
+            None => Ok(batch_partial),
+            Some(prev) => {
+                let cat = Table::concat_tables(&[&prev, &batch_partial])?;
+                groupby_aggregate(&cat, keys, &self.reduce)
+            }
+        }
+    }
+
+    /// Reassemble the fully-reduced partial table `combined` into the
+    /// caller's requested layout: key columns, then one column per
+    /// requested aggregation, named exactly as the one-shot local
+    /// kernel would name it.
+    pub fn finish(&self, keys: &[&str], combined: &Table) -> Result<Table> {
+        let mut fields: Vec<Field> = Vec::new();
+        let mut cols: Vec<Array> = Vec::new();
+        for k in keys {
+            let a = combined.column_by_name(k)?;
+            fields.push(Field::new(*k, a.data_type()));
+            cols.push(a.clone());
+        }
+        for (spec, plan) in self.requested.iter().zip(&self.plans) {
+            match plan {
+                FinishPlan::Carry { part } => {
+                    let a = combined.column_by_name(part)?;
+                    fields.push(Field::new(spec.out_name.clone(), a.data_type()));
+                    cols.push(a.clone());
+                }
+                FinishPlan::Mean { sum, cnt } => {
+                    let s = combined.column_by_name(sum)?;
+                    let c = combined.column_by_name(cnt)?;
+                    let vals: Vec<Option<f64>> = (0..combined.num_rows())
+                        .map(|i| match (s.f64_at(i), c.f64_at(i)) {
+                            (Some(sv), Some(cv)) if cv > 0.0 => Some(sv / cv),
+                            _ => None,
+                        })
+                        .collect();
+                    fields.push(Field::new(spec.out_name.clone(), DataType::Float64));
+                    cols.push(Array::from_opt_f64(vals));
+                }
+            }
+        }
+        Table::new(Schema::new(fields), cols)
+    }
+}
+
 /// Whole-table aggregation (no keys): one output row.
 pub fn aggregate(table: &Table, aggs: &[AggSpec]) -> Result<Table> {
     // Reuse the grouped path with a constant key, then drop it.
@@ -436,5 +589,54 @@ mod tests {
     fn type_errors() {
         assert!(groupby_aggregate(&t(), &["g"], &[AggSpec::new("g", Agg::Sum)]).is_err());
         assert!(groupby_aggregate(&t(), &[], &[AggSpec::new("x", Agg::Sum)]).is_err());
+    }
+
+    #[test]
+    fn partial_plan_interns_overlapping_requests() {
+        let plan = PartialAggPlan::new(&[
+            AggSpec::new("y", Agg::Sum),
+            AggSpec::new("y", Agg::Mean),
+            AggSpec::new("y", Agg::Count),
+        ])
+        .unwrap();
+        // mean reuses the sum and count partials: 2 columns, not 4
+        assert_eq!(plan.partial_specs().len(), 2);
+        assert_eq!(plan.reduce_specs().len(), 2);
+    }
+
+    #[test]
+    fn partial_plan_rejects_non_decomposable() {
+        for agg in [Agg::Std, Agg::Var, Agg::First, Agg::Last] {
+            assert!(PartialAggPlan::new(&[AggSpec::new("y", agg)]).is_err(), "{agg:?}");
+        }
+    }
+
+    #[test]
+    fn folding_batches_matches_one_shot_groupby() {
+        let aggs = [
+            AggSpec::new("y", Agg::Sum),
+            AggSpec::new("y", Agg::Mean),
+            AggSpec::new("x", Agg::Count),
+            AggSpec::new("x", Agg::Min),
+            AggSpec::new("y", Agg::Max),
+        ];
+        let full = t();
+        let want = groupby_aggregate(&full, &["g"], &aggs).unwrap();
+        let plan = PartialAggPlan::new(&aggs).unwrap();
+        // fold the table through in three uneven stream batches
+        let mut state = None;
+        for (start, len) in [(0usize, 2usize), (2, 1), (3, 2)] {
+            state = Some(plan.fold(state, &full.slice(start, len), &["g"]).unwrap());
+        }
+        let got = plan.finish(&["g"], &state.unwrap()).unwrap();
+        // same groups in first-seen order, same column names and values
+        assert_eq!(got.schema().names(), want.schema().names());
+        let canon = |t: &Table| {
+            let mut rows: Vec<String> =
+                (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect();
+            rows.sort();
+            rows
+        };
+        assert_eq!(canon(&got), canon(&want));
     }
 }

@@ -33,7 +33,7 @@ pub mod unique;
 pub mod window;
 
 pub use cast::{cast, cast_columns, to_numeric_table};
-pub use groupby::{aggregate, groupby_aggregate, Agg, AggSpec};
+pub use groupby::{aggregate, groupby_aggregate, Agg, AggSpec, PartialAggPlan};
 pub use isin::{filter_isin, filter_not_in, isin_mask};
 pub use join::{inner_join, join, JoinAlgorithm, JoinType};
 pub use map::{map_column_f64, map_column_utf8, min_max_scale, standard_scale, strip_chars};

@@ -1,6 +1,7 @@
 //! Streaming pipeline orchestrator — the L3 coordination layer for
 //! data-pipeline workloads: sharded stages, rebalancing or key-hash
-//! routing between stages, and bounded channels for backpressure.
+//! routing between stages, bounded channels for backpressure, and
+//! stateful keyed aggregation.
 //!
 //! The paper composes batch operators; production ingestion runs the
 //! same operators as a stream of table batches. This orchestrator keeps
@@ -8,14 +9,24 @@
 //! thread groups connected by channels, and routing is data-driven
 //! (hash or round-robin), exactly like a shuffle fixed at plan time.
 //!
+//! Batch and streaming share one routing core: a
+//! [`Routing::KeyPartition`] edge routes rows through the same
+//! `comm::partitioner::HashPartitioner` the batch shuffle uses
+//! (DESIGN.md §5), and a [`Pipeline::keyed_aggregate`] stage folds
+//! batches through the same partial-aggregation plan
+//! `ops::dist::dist_groupby_partial` shuffles — so a streaming run is
+//! provably consistent with its batch counterpart (asserted in
+//! `rust/tests/dist_vs_local.rs`).
+//!
 //! ```no_run
+//! use hptmt::ops::local::{Agg, AggSpec};
 //! use hptmt::pipeline::{Pipeline, Routing};
 //! # use hptmt::table::{Table, Array};
 //! let run = Pipeline::new("demo")
 //!     .source("gen", 2, |shard, emit| {
 //!         for b in 0..10 {
 //!             emit(Table::from_columns(vec![
-//!                 ("x", Array::from_i64(vec![shard as i64, b])),
+//!                 ("k", Array::from_i64(vec![shard as i64, b])),
 //!             ])?)?;
 //!         }
 //!         Ok(())
@@ -23,6 +34,7 @@
 //!     .map("double", 4, Routing::Rebalance, |t| {
 //!         Ok(Some(t)) // transform the batch
 //!     })
+//!     .keyed_aggregate("stats", 2, &["k"], &[AggSpec::new("k", Agg::Count)])
 //!     .run(8)
 //!     .unwrap();
 //! println!("{} rows out", run.total_rows_out());

@@ -1,7 +1,8 @@
 //! Pipeline stages, routing and the run loop.
 
-use crate::table::rowhash::{hash_columns, partition_indices};
-use crate::table::{Array, Table};
+use crate::comm::partitioner::HashPartitioner;
+use crate::ops::local::groupby::{AggSpec, PartialAggPlan};
+use crate::table::Table;
 use crate::util::time::CpuStopwatch;
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -14,16 +15,22 @@ pub enum Routing {
     /// Any shard may take any batch (work sharing — the rebalance edge).
     Rebalance,
     /// Rows are hash-partitioned on key columns so equal keys always
-    /// reach the same shard (the streaming shuffle edge).
+    /// reach the same shard (the streaming shuffle edge). Routing goes
+    /// through the same [`HashPartitioner`] the batch shuffle uses, so
+    /// a key's shard here equals its rank in a batch shuffle of the
+    /// same parallelism.
     KeyPartition(Vec<String>),
 }
 
 type SourceFn = Box<dyn FnMut(usize, &mut dyn FnMut(Table) -> Result<()>) -> Result<()> + Send>;
 type MapFn = Arc<dyn Fn(Table) -> Result<Option<Table>> + Send + Sync>;
+type SinkFn = Arc<dyn Fn(Table) -> Result<()> + Send + Sync>;
 
 enum StageKind {
     Source(Vec<SourceFn>), // one closure per shard
     Map { f: MapFn, routing: Routing },
+    KeyedAggregate { keys: Vec<String>, aggs: Vec<AggSpec> },
+    Sink { f: SinkFn, routing: Routing },
 }
 
 struct StageSpec {
@@ -35,14 +42,26 @@ struct StageSpec {
 /// Per-stage execution metrics (summed over shards).
 #[derive(Debug, Clone, Default)]
 pub struct StageMetrics {
+    /// Stage name as given to the builder.
     pub name: String,
+    /// Batches received from upstream (sources receive none).
     pub batches_in: u64,
+    /// Rows received from upstream.
     pub rows_in: u64,
+    /// Batches emitted downstream.
     pub batches_out: u64,
+    /// Rows emitted downstream.
     pub rows_out: u64,
+    /// Thread CPU seconds spent in stage code.
     pub cpu_seconds: f64,
     /// Wall seconds spent blocked sending downstream (backpressure).
     pub backpressure_seconds: f64,
+    /// Peak buffered state rows held by a stateful stage, summed over
+    /// shards (zero for stateless stages).
+    pub state_rows: u64,
+    /// Peak buffered state bytes (column data) held by a stateful
+    /// stage, summed over shards.
+    pub state_bytes: u64,
 }
 
 /// A linear pipeline of sharded stages.
@@ -54,14 +73,19 @@ pub struct Pipeline {
 /// Completed pipeline run.
 #[derive(Debug)]
 pub struct PipelineRun {
+    /// Pipeline name as given to [`Pipeline::new`].
     pub name: String,
+    /// Per-stage metrics, in stage order.
     pub stages: Vec<StageMetrics>,
-    /// Batches emitted by the last stage.
+    /// Batches emitted by the last stage (empty when the pipeline ends
+    /// in a [`Pipeline::sink`] stage).
     pub output: Vec<Table>,
+    /// End-to-end wall time of the run.
     pub wall_seconds: f64,
 }
 
 impl PipelineRun {
+    /// Rows emitted by the final stage (zero for sink-terminated runs).
     pub fn total_rows_out(&self) -> u64 {
         self.stages.last().map_or(0, |s| s.rows_out)
     }
@@ -76,8 +100,17 @@ impl PipelineRun {
 }
 
 impl Pipeline {
+    /// Start building a pipeline with the given display name.
     pub fn new(name: impl Into<String>) -> Pipeline {
         Pipeline { name: name.into(), stages: Vec::new() }
+    }
+
+    fn assert_open(&self, what: &str) {
+        assert!(!self.stages.is_empty(), "{what} needs an upstream stage");
+        assert!(
+            !matches!(self.stages.last().map(|s| &s.kind), Some(StageKind::Sink { .. })),
+            "{what} cannot follow a sink (sinks are terminal)"
+        );
     }
 
     /// Add a source stage: `f(shard, emit)` produces this shard's
@@ -101,12 +134,64 @@ impl Pipeline {
     where
         F: Fn(Table) -> Result<Option<Table>> + Send + Sync + 'static,
     {
-        assert!(!self.stages.is_empty(), "map needs an upstream stage");
+        self.assert_open("map");
         assert!(shards > 0);
         self.stages.push(StageSpec {
             name: name.into(),
             parallelism: shards,
             kind: StageKind::Map { f: Arc::new(f), routing },
+        });
+        self
+    }
+
+    /// Add a stateful keyed-aggregation stage: the streaming group-by.
+    ///
+    /// The input edge is implicitly [`Routing::KeyPartition`] on `keys`,
+    /// so every shard owns a disjoint key range. Each shard folds
+    /// incoming batches into a per-shard partial-aggregate state (the
+    /// shared [`PartialAggPlan`] — the same decomposition
+    /// `ops::dist::dist_groupby_partial` shuffles), and emits its
+    /// finalised aggregate table once, when upstream closes (flush).
+    /// Peak state size is reported in [`StageMetrics::state_rows`] /
+    /// [`StageMetrics::state_bytes`].
+    ///
+    /// Aggregations that do not decompose into partials
+    /// (`Std`/`Var`/`First`/`Last`) are rejected when the pipeline runs.
+    pub fn keyed_aggregate(
+        mut self,
+        name: impl Into<String>,
+        shards: usize,
+        keys: &[&str],
+        aggs: &[AggSpec],
+    ) -> Pipeline {
+        self.assert_open("keyed_aggregate");
+        assert!(shards > 0);
+        assert!(!keys.is_empty(), "keyed_aggregate needs key columns");
+        self.stages.push(StageSpec {
+            name: name.into(),
+            parallelism: shards,
+            kind: StageKind::KeyedAggregate {
+                keys: keys.iter().map(|k| k.to_string()).collect(),
+                aggs: aggs.to_vec(),
+            },
+        });
+        self
+    }
+
+    /// Add a terminal sink stage: `f(batch)` consumes each batch (write
+    /// to storage, update a dashboard, …) and nothing flows further —
+    /// the run's [`PipelineRun::output`] stays empty. No stage can be
+    /// added after a sink.
+    pub fn sink<F>(mut self, name: impl Into<String>, shards: usize, routing: Routing, f: F) -> Pipeline
+    where
+        F: Fn(Table) -> Result<()> + Send + Sync + 'static,
+    {
+        self.assert_open("sink");
+        assert!(shards > 0);
+        self.stages.push(StageSpec {
+            name: name.into(),
+            parallelism: shards,
+            kind: StageKind::Sink { f: Arc::new(f), routing },
         });
         self
     }
@@ -132,17 +217,18 @@ impl Pipeline {
         // the output collector.
         // Rebalance edge: one shared channel (receiver behind a mutex,
         // shards pull — work sharing).
-        // KeyPartition edge: one channel per downstream shard; the
-        // sender hash-routes rows (streaming shuffle).
+        // KeyPartition edge (explicit, or implied by a keyed-aggregate
+        // stage): one channel per downstream shard; the sender routes
+        // rows through the shared HashPartitioner (streaming shuffle).
         enum EdgeTx {
             Shared(SyncSender<Table>),
-            PerShard(Vec<SyncSender<Table>>, Vec<String>),
+            PerShard(Vec<SyncSender<Table>>, HashPartitioner),
         }
         impl Clone for EdgeTx {
             fn clone(&self) -> Self {
                 match self {
                     EdgeTx::Shared(s) => EdgeTx::Shared(s.clone()),
-                    EdgeTx::PerShard(v, k) => EdgeTx::PerShard(v.clone(), k.clone()),
+                    EdgeTx::PerShard(v, p) => EdgeTx::PerShard(v.clone(), p.clone()),
                 }
             }
         }
@@ -159,13 +245,8 @@ impl Pipeline {
                     s.send(batch).map_err(|_| anyhow::anyhow!("downstream closed"))?;
                     metrics.lock().unwrap().backpressure_seconds += t0.elapsed().as_secs_f64();
                 }
-                EdgeTx::PerShard(senders, keys) => {
-                    let key_refs: Vec<&Array> = keys
-                        .iter()
-                        .map(|k| batch.column_by_name(k))
-                        .collect::<Result<_>>()?;
-                    let hashes = hash_columns(&key_refs);
-                    let parts = partition_indices(&hashes, senders.len());
+                EdgeTx::PerShard(senders, partitioner) => {
+                    let parts = partitioner.partition_indices(&batch)?;
                     for (shard, idx) in parts.iter().enumerate() {
                         if idx.is_empty() {
                             continue;
@@ -182,6 +263,15 @@ impl Pipeline {
             Ok(())
         }
 
+        // Input routing of a non-source stage.
+        fn routing_of(kind: &StageKind) -> Routing {
+            match kind {
+                StageKind::Map { routing, .. } | StageKind::Sink { routing, .. } => routing.clone(),
+                StageKind::KeyedAggregate { keys, .. } => Routing::KeyPartition(keys.clone()),
+                StageKind::Source(_) => unreachable!("sources have no input edge"),
+            }
+        }
+
         let mut handles: Vec<std::thread::JoinHandle<Result<()>>> = Vec::new();
         let (out_tx, out_rx) = sync_channel::<Table>(capacity.max(1));
         let mut edge_tx: Vec<EdgeTx> = Vec::new();
@@ -189,14 +279,14 @@ impl Pipeline {
         let mut edge_rx_pershard: Vec<Option<Vec<Receiver<Table>>>> = Vec::new();
         for i in 1..nstages {
             let spec = &self.stages[i];
-            match &spec.kind {
-                StageKind::Map { routing: Routing::Rebalance, .. } => {
+            match routing_of(&spec.kind) {
+                Routing::Rebalance => {
                     let (tx, rx) = sync_channel(capacity.max(1));
                     edge_tx.push(EdgeTx::Shared(tx));
                     edge_rx_shared.push(Some(Arc::new(Mutex::new(rx))));
                     edge_rx_pershard.push(None);
                 }
-                StageKind::Map { routing: Routing::KeyPartition(keys), .. } => {
+                Routing::KeyPartition(keys) => {
                     let mut t = Vec::with_capacity(spec.parallelism);
                     let mut r = Vec::with_capacity(spec.parallelism);
                     for _ in 0..spec.parallelism {
@@ -204,11 +294,10 @@ impl Pipeline {
                         t.push(tx);
                         r.push(rx);
                     }
-                    edge_tx.push(EdgeTx::PerShard(t, keys.clone()));
+                    edge_tx.push(EdgeTx::PerShard(t, HashPartitioner::new(keys, spec.parallelism)));
                     edge_rx_shared.push(None);
                     edge_rx_pershard.push(Some(r));
                 }
-                StageKind::Source(_) => unreachable!("validated above"),
             }
         }
 
@@ -220,6 +309,34 @@ impl Pipeline {
             } else {
                 EdgeTx::Shared(out_tx.clone())
             };
+            // Per-shard input receivers for non-source stages.
+            let (shared_rx, mut pershard_rx) = if i > 0 {
+                (edge_rx_shared[i - 1].take(), edge_rx_pershard[i - 1].take())
+            } else {
+                (None, None)
+            };
+            // Hand each shard its input: its own channel on a keyed
+            // edge, the shared work-stealing channel otherwise.
+            let mut take_rx = || -> (Option<Arc<Mutex<Receiver<Table>>>>, Option<Receiver<Table>>) {
+                match pershard_rx.as_mut() {
+                    Some(v) => (None, Some(v.remove(0))),
+                    None => (shared_rx.clone(), None),
+                }
+            };
+            // Pull the next batch for this shard (None = upstream closed).
+            fn recv_next(
+                shared: &Option<Arc<Mutex<Receiver<Table>>>>,
+                own: &Option<Receiver<Table>>,
+            ) -> Option<Table> {
+                match (shared, own) {
+                    (Some(rx), None) => {
+                        let guard = rx.lock().unwrap();
+                        guard.recv().ok()
+                    }
+                    (None, Some(rx)) => rx.recv().ok(),
+                    _ => unreachable!("stage shard needs exactly one input"),
+                }
+            }
             match spec.kind {
                 StageKind::Source(fns) => {
                     for (shard, mut f) in fns.into_iter().enumerate() {
@@ -246,36 +363,18 @@ impl Pipeline {
                         );
                     }
                 }
-                StageKind::Map { f, routing } => {
-                    let shared_rx = edge_rx_shared[i - 1].take();
-                    let mut pershard_rx = edge_rx_pershard[i - 1].take();
+                StageKind::Map { f, routing: _ } => {
                     for shard in 0..spec.parallelism {
                         let m = m.clone();
                         let tx = downstream.clone();
                         let f = f.clone();
-                        let my_shared = shared_rx.clone();
-                        let my_rx: Option<Receiver<Table>> = match routing {
-                            Routing::Rebalance => None,
-                            Routing::KeyPartition(_) => {
-                                Some(pershard_rx.as_mut().unwrap().remove(0))
-                            }
-                        };
+                        let (my_shared, my_rx) = take_rx();
                         handles.push(
                             std::thread::Builder::new()
                                 .name(format!("{}-{shard}", spec.name))
                                 .spawn(move || -> Result<()> {
                                     let mut cpu = 0.0f64;
-                                    loop {
-                                        // Pull next batch for this shard.
-                                        let batch = match (&my_shared, &my_rx) {
-                                            (Some(rx), None) => {
-                                                let guard = rx.lock().unwrap();
-                                                guard.recv().ok()
-                                            }
-                                            (None, Some(rx)) => rx.recv().ok(),
-                                            _ => unreachable!(),
-                                        };
-                                        let Some(batch) = batch else { break };
+                                    while let Some(batch) = recv_next(&my_shared, &my_rx) {
                                         {
                                             let mut g = m.lock().unwrap();
                                             g.batches_in += 1;
@@ -297,6 +396,97 @@ impl Pipeline {
                                     Ok(())
                                 })
                                 .expect("spawn map shard"),
+                        );
+                    }
+                }
+                StageKind::KeyedAggregate { keys, aggs } => {
+                    // Decompose once; a non-decomposable request fails
+                    // the run before any thread spawns for this stage.
+                    let plan = Arc::new(
+                        PartialAggPlan::new(&aggs)
+                            .with_context(|| format!("keyed_aggregate stage {:?}", spec.name))?,
+                    );
+                    let keys = Arc::new(keys);
+                    for shard in 0..spec.parallelism {
+                        let m = m.clone();
+                        let tx = downstream.clone();
+                        let plan = plan.clone();
+                        let keys = keys.clone();
+                        let (my_shared, my_rx) = take_rx();
+                        handles.push(
+                            std::thread::Builder::new()
+                                .name(format!("{}-{shard}", spec.name))
+                                .spawn(move || -> Result<()> {
+                                    let key_refs: Vec<&str> =
+                                        keys.iter().map(String::as_str).collect();
+                                    let mut cpu = 0.0f64;
+                                    let mut state: Option<Table> = None;
+                                    let mut peak_rows = 0u64;
+                                    let mut peak_bytes = 0u64;
+                                    while let Some(batch) = recv_next(&my_shared, &my_rx) {
+                                        {
+                                            let mut g = m.lock().unwrap();
+                                            g.batches_in += 1;
+                                            g.rows_in += batch.num_rows() as u64;
+                                        }
+                                        let sw = CpuStopwatch::start();
+                                        let next = plan
+                                            .fold(state.take(), &batch, &key_refs)
+                                            .context("keyed_aggregate fold")?;
+                                        cpu += sw.elapsed().as_secs_f64();
+                                        peak_rows = peak_rows.max(next.num_rows() as u64);
+                                        peak_bytes = peak_bytes.max(next.nbytes() as u64);
+                                        state = Some(next);
+                                    }
+                                    // Flush: upstream closed — finalise
+                                    // this shard's keys and emit once.
+                                    if let Some(s) = state {
+                                        let sw = CpuStopwatch::start();
+                                        let out = plan
+                                            .finish(&key_refs, &s)
+                                            .context("keyed_aggregate flush")?;
+                                        cpu += sw.elapsed().as_secs_f64();
+                                        {
+                                            let mut g = m.lock().unwrap();
+                                            g.batches_out += 1;
+                                            g.rows_out += out.num_rows() as u64;
+                                        }
+                                        send_routed(&tx, out, &m)?;
+                                    }
+                                    let mut g = m.lock().unwrap();
+                                    g.cpu_seconds += cpu;
+                                    g.state_rows += peak_rows;
+                                    g.state_bytes += peak_bytes;
+                                    Ok(())
+                                })
+                                .expect("spawn keyed_aggregate shard"),
+                        );
+                    }
+                }
+                StageKind::Sink { f, routing: _ } => {
+                    for shard in 0..spec.parallelism {
+                        let m = m.clone();
+                        let f = f.clone();
+                        let (my_shared, my_rx) = take_rx();
+                        handles.push(
+                            std::thread::Builder::new()
+                                .name(format!("{}-{shard}", spec.name))
+                                .spawn(move || -> Result<()> {
+                                    let mut cpu = 0.0f64;
+                                    while let Some(batch) = recv_next(&my_shared, &my_rx) {
+                                        {
+                                            let mut g = m.lock().unwrap();
+                                            g.batches_in += 1;
+                                            g.rows_in += batch.num_rows() as u64;
+                                        }
+                                        let sw = CpuStopwatch::start();
+                                        f(batch).context("sink stage")?;
+                                        cpu += sw.elapsed().as_secs_f64();
+                                    }
+                                    m.lock().unwrap().cpu_seconds += cpu;
+                                    Ok(())
+                                })
+                                .expect("spawn sink shard"),
                         );
                     }
                 }
@@ -334,8 +524,9 @@ impl Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::local::{filter_cmp, Cmp};
-    use crate::table::Scalar;
+    use crate::ops::local::groupby::Agg;
+    use crate::ops::local::{self, filter_cmp, Cmp};
+    use crate::table::{Array, Scalar};
 
     fn batch(shard: usize, b: usize, n: usize) -> Table {
         let v: Vec<i64> = (0..n).map(|i| (shard * 1000 + b * 100 + i) as i64).collect();
@@ -418,6 +609,138 @@ mod tests {
         for (k, shards) in seen.lock().unwrap().iter() {
             assert_eq!(shards.len(), 1, "key {k} seen on shards {shards:?}");
         }
+    }
+
+    #[test]
+    fn keyed_edge_agrees_with_batch_partitioner() {
+        // The tentpole invariant: the streaming keyed edge at
+        // parallelism w must send key k to the shard the batch
+        // HashPartitioner assigns it at nparts = w.
+        use std::collections::HashMap;
+        use std::sync::Mutex as StdMutex;
+        let w = 3usize;
+        let seen: Arc<StdMutex<HashMap<i64, usize>>> = Arc::new(StdMutex::new(HashMap::new()));
+        let seen2 = seen.clone();
+        let _ = Pipeline::new("t")
+            .source("gen", 1, |_, emit| {
+                emit(Table::from_columns(vec![("k", Array::from_i64((0..64).collect()))]).unwrap())
+            })
+            .map("keyed", w, Routing::KeyPartition(vec!["k".into()]), move |t| {
+                let shard: usize = std::thread::current()
+                    .name().unwrap().rsplit('-').next().unwrap().parse().unwrap();
+                let mut g = seen2.lock().unwrap();
+                for i in 0..t.num_rows() {
+                    g.insert(t.cell(i, 0).as_i64().unwrap(), shard);
+                }
+                Ok(Some(t))
+            })
+            .run(4)
+            .unwrap();
+        let reference = Table::from_columns(vec![("k", Array::from_i64((0..64).collect()))]).unwrap();
+        let parts = HashPartitioner::new(["k"], w).partition_indices(&reference).unwrap();
+        let seen = seen.lock().unwrap();
+        for (shard, idx) in parts.iter().enumerate() {
+            for &i in idx {
+                assert_eq!(seen[&(i as i64)], shard, "key {i}: stream shard != batch partition");
+            }
+        }
+    }
+
+    fn keyed_batch(offset: usize, n: usize) -> Table {
+        let k: Vec<i64> = (0..n).map(|i| ((offset + i) % 7) as i64).collect();
+        let v: Vec<f64> = (0..n).map(|i| ((offset + i) % 13) as f64).collect();
+        Table::from_columns(vec![("k", Array::from_i64(k)), ("v", Array::from_f64(v))]).unwrap()
+    }
+
+    #[test]
+    fn keyed_aggregate_matches_local_groupby() {
+        let aggs = [
+            AggSpec::new("v", Agg::Sum),
+            AggSpec::new("v", Agg::Count),
+            AggSpec::new("v", Agg::Mean),
+            AggSpec::new("v", Agg::Min),
+            AggSpec::new("v", Agg::Max),
+        ];
+        let run = Pipeline::new("t")
+            .source("gen", 2, |shard, emit| {
+                for b in 0..5 {
+                    emit(keyed_batch(shard * 50 + b * 10, 20))?;
+                }
+                Ok(())
+            })
+            .keyed_aggregate("agg", 3, &["k"], &aggs)
+            .run(4)
+            .unwrap();
+        // one flush batch per non-empty shard, disjoint key sets
+        let out = run.output_table().unwrap();
+        assert_eq!(out.num_rows(), 7, "7 distinct keys overall");
+        // oracle: local group-by over the concatenation of all inputs
+        let mut inputs = Vec::new();
+        for shard in 0..2 {
+            for b in 0..5 {
+                inputs.push(keyed_batch(shard * 50 + b * 10, 20));
+            }
+        }
+        let all = Table::concat_tables(&inputs.iter().collect::<Vec<_>>()).unwrap();
+        let want = local::groupby_aggregate(&all, &["k"], &aggs).unwrap();
+        let canon = |t: &Table| {
+            let mut rows: Vec<String> =
+                (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect();
+            rows.sort();
+            rows
+        };
+        assert_eq!(canon(&out), canon(&want), "stream != batch group-by");
+        assert_eq!(out.schema().names(), want.schema().names());
+        // state metrics recorded
+        let agg_stage = &run.stages[1];
+        assert!(agg_stage.state_rows > 0, "state rows should be tracked: {agg_stage:?}");
+        assert!(agg_stage.state_bytes > 0, "state bytes should be tracked");
+        assert_eq!(agg_stage.rows_in, 200);
+        assert_eq!(agg_stage.rows_out, 7);
+    }
+
+    #[test]
+    fn keyed_aggregate_rejects_non_decomposable_aggs() {
+        let res = Pipeline::new("t")
+            .source("gen", 1, |_, emit| emit(keyed_batch(0, 8)))
+            .keyed_aggregate("agg", 2, &["k"], &[AggSpec::new("v", Agg::Std)])
+            .run(2);
+        assert!(res.is_err());
+        assert!(format!("{:#}", res.err().unwrap()).contains("decompose"));
+    }
+
+    #[test]
+    fn sink_consumes_without_output() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let rows_seen = Arc::new(AtomicU64::new(0));
+        let rows_seen2 = rows_seen.clone();
+        let run = Pipeline::new("t")
+            .source("gen", 2, |shard, emit| {
+                for b in 0..3 {
+                    emit(batch(shard, b, 10))?;
+                }
+                Ok(())
+            })
+            .sink("store", 2, Routing::Rebalance, move |t| {
+                rows_seen2.fetch_add(t.num_rows() as u64, Ordering::Relaxed);
+                Ok(())
+            })
+            .run(4)
+            .unwrap();
+        assert_eq!(rows_seen.load(Ordering::Relaxed), 60);
+        assert!(run.output.is_empty(), "sink pipelines emit no batches");
+        assert_eq!(run.total_rows_out(), 0);
+        assert_eq!(run.stages[1].rows_in, 60);
+        assert!(run.output_table().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot follow a sink")]
+    fn stage_after_sink_panics() {
+        let _ = Pipeline::new("t")
+            .source("gen", 1, |shard, emit| emit(batch(shard, 0, 1)))
+            .sink("store", 1, Routing::Rebalance, |_| Ok(()))
+            .map("late", 1, Routing::Rebalance, |t| Ok(Some(t)));
     }
 
     #[test]

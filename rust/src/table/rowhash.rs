@@ -5,6 +5,11 @@
 //! all bottom out here. Hashes are computed column-at-a-time
 //! (vectorised) and combined per row, so the hot loop never branches on
 //! data type per cell.
+//!
+//! Mapping hashes to destination partitions is deliberately NOT here:
+//! that is a routing decision, owned by `crate::comm::partitioner`
+//! (DESIGN.md §5) so batch shuffle and streaming keyed edges cannot
+//! drift apart.
 
 use super::array::Array;
 
@@ -133,30 +138,6 @@ pub fn any_null(cols: &[&Array], i: usize) -> bool {
     cols.iter().any(|c| c.is_null(i))
 }
 
-/// Map row hashes to `nparts` partitions.
-///
-/// Uses the high bits via 128-bit multiply (Lemire reduction) — cheaper
-/// and better distributed than `% nparts` on already-mixed hashes.
-#[inline]
-pub fn partition_of(hash: u64, nparts: usize) -> usize {
-    (((hash as u128) * (nparts as u128)) >> 64) as usize
-}
-
-/// Partition row indices of a table by key-column hash.
-/// Returns `nparts` index vectors (the shuffle send lists).
-pub fn partition_indices(hashes: &[u64], nparts: usize) -> Vec<Vec<usize>> {
-    // Two passes: count then fill, so each Vec is allocated exactly once.
-    let mut counts = vec![0usize; nparts];
-    for &h in hashes {
-        counts[partition_of(h, nparts)] += 1;
-    }
-    let mut out: Vec<Vec<usize>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
-    for (i, &h) in hashes.iter().enumerate() {
-        out[partition_of(h, nparts)].push(i);
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,22 +183,4 @@ mod tests {
         assert!(!rows_eq(&[&a1, &b1], 0, &[&a2, &b2], 0));
     }
 
-    #[test]
-    fn partitions_cover_all_rows() {
-        let a = Array::from_i64((0..1000).collect());
-        let h = hash_columns(&[&a]);
-        let parts = partition_indices(&h, 7);
-        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 1000);
-        // every partition id in range, reasonably balanced (< 3x mean)
-        for p in &parts {
-            assert!(p.len() < 3 * 1000 / 7);
-        }
-    }
-
-    #[test]
-    fn partition_of_in_range() {
-        for h in [0u64, 1, u64::MAX, 0xDEADBEEF] {
-            assert!(partition_of(h, 5) < 5);
-        }
-    }
 }

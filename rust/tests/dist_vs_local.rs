@@ -18,9 +18,11 @@
 use hptmt::comm::{spawn_world, LinkProfile};
 use hptmt::ops::dist::{
     broadcast_join, dist_difference, dist_drop_duplicates, dist_groupby, dist_groupby_partial,
-    dist_intersect, dist_join, dist_sort, dist_union, dist_union_all, dist_unique,
+    dist_intersect, dist_join, dist_sort, dist_union, dist_union_all, dist_unique, global_counts,
+    rebalance,
 };
 use hptmt::ops::local::{self, Agg, AggSpec, JoinAlgorithm, JoinType, SortKey};
+use hptmt::pipeline::Pipeline;
 use hptmt::table::{Array, Table};
 use hptmt::util::rng::Rng;
 
@@ -209,6 +211,115 @@ fn dist_sort_matches_local_utf8_plus_numeric_keys() {
             local::is_sorted(&cat, &keys()).unwrap(),
             "rank concatenation not globally sorted at w={w}"
         );
+    }
+}
+
+#[test]
+fn rebalance_preserves_global_order_and_equalises() {
+    let g = global_table(231, 16, 11);
+    // deliberately skewed partitions: rank 0 holds most rows, the last
+    // rank may hold none
+    for w in WORLDS {
+        let mut parts_in: Vec<Table> = Vec::with_capacity(w);
+        let mut start = 0usize;
+        for r in 0..w {
+            let len = if r == 0 { g.num_rows() - (w - 1) * 10 } else { 10 };
+            let len = if r + 1 == w { g.num_rows() - start } else { len };
+            parts_in.push(g.slice(start, len));
+            start += len;
+        }
+        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            rebalance(comm, &parts_in[rank])
+        })
+        .unwrap_or_else(|e| panic!("rebalance w={w}: {e:#}"));
+        // counts equalise to within one row
+        let ns: Vec<usize> = out.iter().map(|t| t.num_rows()).collect();
+        assert_eq!(ns.iter().sum::<usize>(), g.num_rows(), "rows conserved at w={w}");
+        assert!(
+            ns.iter().max().unwrap() - ns.iter().min().unwrap() <= 1,
+            "uneven after rebalance at w={w}: {ns:?}"
+        );
+        // global row order is preserved: reading the partitions in rank
+        // order replays the input rows exactly
+        let got: Vec<String> = out
+            .iter()
+            .flat_map(|t| (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect::<Vec<_>>())
+            .collect();
+        let want: Vec<String> = (0..g.num_rows()).map(|i| format!("{:?}", g.row(i))).collect();
+        assert_eq!(got, want, "rebalance must preserve global order at w={w} (seed {})", seed());
+        for t in &out {
+            assert_eq!(t.schema().as_ref(), g.schema().as_ref(), "schema survives at w={w}");
+        }
+    }
+}
+
+#[test]
+fn global_counts_match_partition_sizes_on_every_rank() {
+    let g = global_table(157, 16, 12);
+    for w in WORLDS {
+        let parts_in = g.split(w);
+        let sizes: Vec<usize> = parts_in.iter().map(|t| t.num_rows()).collect();
+        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            global_counts(comm, &parts_in[rank])
+        })
+        .unwrap_or_else(|e| panic!("global_counts w={w}: {e:#}"));
+        for (rank, per_rank) in out.iter().enumerate() {
+            assert_eq!(per_rank, &sizes, "rank {rank} sees wrong counts at w={w}");
+        }
+    }
+}
+
+/// The streaming-vs-batch acceptance case: a keyed pipeline (sources →
+/// keyed_aggregate over the shared partitioner) must equal the local
+/// group-by on the concatenation of all source input, at every world
+/// size. Payloads are integer-valued f64, so partial sums are exact in
+/// any fold order and the comparison is string-exact.
+#[test]
+fn streaming_keyed_pipeline_matches_batch_groupby() {
+    let g = global_table(280, 10, 13);
+    let aggs = [
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Mean),
+        AggSpec::new("v", Agg::Min),
+        AggSpec::new("v", Agg::Max),
+    ];
+    let oracle = local::groupby_aggregate(&g, &["s", "k"], &aggs).unwrap();
+    let want = canon(std::slice::from_ref(&oracle));
+    for w in WORLDS {
+        // one source shard per "rank"; each streams its partition in
+        // small uneven batches
+        let parts_in = g.split(w);
+        let aggs = aggs.clone();
+        let run = Pipeline::new(format!("stream-w{w}"))
+            .source("gen", w, move |shard, emit| {
+                let t = &parts_in[shard];
+                let mut start = 0usize;
+                let mut step = 17usize;
+                while start < t.num_rows() {
+                    let len = step.min(t.num_rows() - start);
+                    emit(t.slice(start, len))?;
+                    start += len;
+                    step = if step == 17 { 29 } else { 17 };
+                }
+                Ok(())
+            })
+            .keyed_aggregate("agg", w, &["s", "k"], &aggs)
+            .run(4)
+            .unwrap_or_else(|e| panic!("stream w={w}: {e:#}"));
+        assert_eq!(
+            canon(&run.output),
+            want,
+            "streaming keyed pipeline != batch groupby at w={w} (seed {})",
+            seed()
+        );
+        // the flush batches partition the key space: no key on two shards
+        let dedup: std::collections::HashSet<String> = run
+            .output
+            .iter()
+            .flat_map(|t| (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect::<Vec<_>>())
+            .collect();
+        assert_eq!(dedup.len(), oracle.num_rows(), "duplicate keys across shards at w={w}");
     }
 }
 
