@@ -15,7 +15,7 @@ use hptmt::bench::{measure, scaled, Report};
 use hptmt::exec::asynch::{run_async, AsyncCost};
 use hptmt::exec::seq::run_seq;
 use hptmt::ops::local::{self, Agg, AggSpec};
-use hptmt::pipeline::Pipeline;
+use hptmt::pipeline::{Pipeline, WindowSpec};
 use hptmt::unomt::{datagen, pipeline, UnomtConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -108,5 +108,53 @@ fn main() -> anyhow::Result<()> {
         format!("{:.4}", stream_stat.median),
         format!("{:.2}x", stream_stat.median / batch_stat.median),
     ]);
-    keyed.finish()
+    keyed.finish()?;
+
+    // Windowed variant: the same stream emitting continuously — a
+    // tumbling window restarting every 2 batches and a sliding window
+    // of 4 batches advancing by 2 (sum/count/mean, so the sliding path
+    // is exact subtract-on-evict). "windows" counts emitted tables:
+    // deterministic given the row count, which makes it a trajectory
+    // cell `bench_diff` can gate on across machines.
+    let mut windowed = Report::new("fig12_keyed_windowed", &["mode", "seconds", "windows"]);
+    for (label, spec) in [
+        ("tumbling-2batch", WindowSpec::tumbling_batches(2)),
+        ("sliding-4x2batch", WindowSpec::sliding_batches(4, 2)),
+    ] {
+        let run_once = {
+            let src = raw.clone();
+            let aggs = aggs.clone();
+            let spec = spec.clone();
+            move || {
+                Pipeline::new("fig12-keyed-windowed")
+                    .source("gen", 1, {
+                        let src = src.clone();
+                        move |_, emit| {
+                            let mut start = 0;
+                            while start < src.num_rows() {
+                                let len = batch_rows.min(src.num_rows() - start);
+                                emit(src.slice(start, len))?;
+                                start += len;
+                            }
+                            Ok(())
+                        }
+                    })
+                    .keyed_aggregate_windowed("per-drug", 1, &["DRUG_ID"], &aggs, spec.clone())
+                    .run(8)
+            }
+        };
+        let timed = run_once.clone();
+        let stat = measure(1, 3, move || {
+            let run = timed()?;
+            anyhow::ensure!(run.total_rows_out() > 0);
+            Ok(run.stages.iter().map(|s| s.cpu_seconds).sum())
+        })?;
+        let run = run_once()?;
+        windowed.row(&[
+            label.into(),
+            format!("{:.4}", stat.median),
+            run.output.len().to_string(),
+        ]);
+    }
+    windowed.finish()
 }

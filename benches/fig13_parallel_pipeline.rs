@@ -13,7 +13,7 @@ use hptmt::comm::LinkProfile;
 use hptmt::exec::asynch::{run_async, AsyncCost};
 use hptmt::exec::bsp::{run_bsp, BspConfig};
 use hptmt::ops::local::{Agg, AggSpec};
-use hptmt::pipeline::Pipeline;
+use hptmt::pipeline::{Pipeline, WindowSpec};
 use hptmt::unomt::{datagen, pipeline, UnomtConfig};
 
 fn bsp_seconds(cfg: &UnomtConfig, w: usize) -> anyhow::Result<f64> {
@@ -111,5 +111,56 @@ fn main() -> anyhow::Result<()> {
             run.total_rows_out().to_string(),
         ]);
     }
-    keyed.finish()
+    keyed.finish()?;
+
+    // Windowed streaming group-by at matching shard counts: a sliding
+    // window of 4 batches advancing by 2 per shard, subtract-on-evict
+    // (sum/count/mean retract exactly). "windows" — total emitted
+    // tables across shards — is deterministic for a given scale, so the
+    // BENCH_fig13.json trajectory can gate on it; peak window state is
+    // the honest memory metric (bounded by the window, not the stream).
+    fn windowed_stream(raw: &hptmt::table::Table, aggs: &[AggSpec], w: usize) -> Pipeline {
+        let shards = raw.split(w);
+        Pipeline::new("fig13-keyed-windowed")
+            .source("gen", w, move |shard, emit| {
+                let t = &shards[shard];
+                let mut start = 0;
+                while start < t.num_rows() {
+                    let len = 2000.min(t.num_rows() - start);
+                    emit(t.slice(start, len))?;
+                    start += len;
+                }
+                Ok(())
+            })
+            .keyed_aggregate_windowed(
+                "per-drug",
+                w,
+                &["DRUG_ID"],
+                aggs,
+                WindowSpec::sliding_batches(4, 2),
+            )
+    }
+    let mut windowed = Report::new(
+        "fig13_keyed_windowed",
+        &["shards", "cpu_s", "windows", "state_rows", "state_kb"],
+    );
+    for &w in &[1usize, 2, 4] {
+        let timed_raw = raw.clone();
+        let aggs_w = aggs.clone();
+        let stat = measure(0, 3, move || {
+            let run = windowed_stream(&timed_raw, &aggs_w, w).run(8)?;
+            anyhow::ensure!(run.total_rows_out() > 0);
+            Ok(run.stages.iter().map(|s| s.cpu_seconds).sum())
+        })?;
+        let run = windowed_stream(&raw, &aggs, w).run(8)?;
+        let agg = &run.stages[1];
+        windowed.row(&[
+            w.to_string(),
+            format!("{:.4}", stat.median),
+            run.output.len().to_string(),
+            agg.state_rows.to_string(),
+            format!("{:.1}", agg.state_bytes as f64 / 1024.0),
+        ]);
+    }
+    windowed.finish()
 }

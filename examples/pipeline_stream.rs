@@ -13,7 +13,7 @@
 //! (here: running response statistics) is shard-local — no coordinator.
 
 use hptmt::ops::local::groupby::{Agg, AggSpec};
-use hptmt::pipeline::{Pipeline, Routing};
+use hptmt::pipeline::{Pipeline, Routing, WindowSpec};
 use hptmt::table::Table;
 use hptmt::unomt::{datagen, pipeline as unomt_pipeline, UnomtConfig};
 use hptmt::util::cli::Args;
@@ -127,6 +127,73 @@ fn main() -> anyhow::Result<()> {
     println!("per-drug stats: {} drugs\n{}", per_drug.num_rows(), hptmt::table::pretty::pretty(&per_drug, 5));
     anyhow::ensure!(run2.output.is_empty(), "sink pipelines emit nothing");
     anyhow::ensure!(per_drug.num_rows() > 0);
+    drop(collected);
+
+    // Third and fourth runs: *windowed* streaming group-by — the
+    // continuous-dashboard mode. The stage emits an aggregate table per
+    // window while the source is still producing (the bounded channels
+    // force interleaving), instead of a single flush at close: a
+    // tumbling window restarts its state every 4 batches, the sliding
+    // window covers the last 6 batches advancing by 3 with exact
+    // subtract-on-evict (sum/count/mean retract; the ordinal column
+    // numbers each shard's windows).
+    for (label, spec) in [
+        ("tumbling 4-batch", WindowSpec::tumbling_batches(4)),
+        ("sliding 6-batch step 3", WindowSpec::sliding_batches(6, 3)),
+    ] {
+        let windows: Arc<Mutex<Vec<Table>>> = Arc::new(Mutex::new(Vec::new()));
+        let windows_in_sink = windows.clone();
+        let gen_cfg3 = cfg.clone();
+        let run3 = Pipeline::new("unomt-drug-stats-windowed")
+            .source("gen", 2, move |shard, emit| {
+                for b in 0..batches / 2 {
+                    let mut c = gen_cfg3.clone();
+                    c.seed = gen_cfg3.seed ^ ((shard * 10_000 + b) as u64);
+                    emit(datagen::response_shard(&c, 0, 1)?)?;
+                }
+                Ok(())
+            })
+            .map("clean", 2, Routing::Rebalance, |raw| {
+                let t = unomt_pipeline::clean_response(&raw)?;
+                Ok(if t.num_rows() == 0 { None } else { Some(t) })
+            })
+            .keyed_aggregate_windowed(
+                "drug-window",
+                2,
+                &["DRUG_ID"],
+                &[
+                    AggSpec::new("GROWTH", Agg::Mean),
+                    AggSpec::new("GROWTH", Agg::Count),
+                    AggSpec::new("GROWTH", Agg::Sum),
+                ],
+                spec.with_ordinal("window"),
+            )
+            .sink("dashboard", 1, Routing::Rebalance, move |t| {
+                windows_in_sink.lock().unwrap().push(t);
+                Ok(())
+            })
+            .run(8)?;
+
+        let wins = windows.lock().unwrap();
+        println!("\n== windowed streaming group-by ({label}) ==");
+        for s in &run3.stages {
+            println!(
+                "{:<12} in {:>8} rows   out {:>7} rows / {:>3} windows   cpu {:>6.3}s   state {:>6} rows",
+                s.name, s.rows_in, s.rows_out, s.batches_out, s.cpu_seconds, s.state_rows
+            );
+        }
+        println!(
+            "{} window tables emitted while the source streamed (first window below)",
+            wins.len()
+        );
+        if let Some(first) = wins.first() {
+            println!("{}", hptmt::table::pretty::pretty(first, 3));
+        }
+        anyhow::ensure!(
+            wins.len() > 1,
+            "windowed keyed_aggregate must emit multiple windows before the source closes"
+        );
+    }
     println!("OK");
     Ok(())
 }

@@ -12,9 +12,13 @@
 //! cells are compared as `new / old`; a ratio above the threshold is a
 //! regression, below its inverse an improvement. Metrics are assumed
 //! cost-like (seconds — bigger is worse), matching every `bench::Report`
-//! this crate emits. Exits non-zero when any regression is found, so CI
-//! can gate on it. Files recorded at different `HPTMT_BENCH_SCALE`s are
-//! refused: their row counts are not comparable.
+//! this crate emits. Columns named in `--strict-cols a,b` are exempt
+//! from that asymmetry: they hold deterministic counts (emitted
+//! windows, groups) where *any* change — including a drop the ratio
+//! rule would praise as "improved" — is a failure. Exits non-zero when
+//! any regression is found, so CI can gate on it. Files recorded at
+//! different `HPTMT_BENCH_SCALE`s are refused: their row counts are
+//! not comparable.
 
 use anyhow::{bail, Context, Result};
 use hptmt::util::cli::Args;
@@ -76,12 +80,19 @@ fn parse_numeric(cell: &str) -> Option<f64> {
 fn main() -> Result<()> {
     let args = Args::from_env(0);
     let [new_path, base_path] = args.positional() else {
-        bail!("usage: bench_diff <bench_out/NAME.json> <BENCH_NAME.json> [--threshold 1.10]");
+        bail!(
+            "usage: bench_diff <bench_out/NAME.json> <BENCH_NAME.json> \
+             [--threshold 1.10] [--strict-cols windows,groups]"
+        );
     };
     let threshold = args.f64_or("threshold", 1.10)?;
     if threshold <= 1.0 {
         bail!("--threshold must be > 1.0, got {threshold}");
     }
+    let strict_cols: Vec<String> = args
+        .get("strict-cols")
+        .map(|s| s.split(',').map(|c| c.trim().to_string()).filter(|c| !c.is_empty()).collect())
+        .unwrap_or_default();
 
     let new = load(new_path)?;
     let base = load(base_path)?;
@@ -116,6 +127,28 @@ fn main() -> Result<()> {
             continue;
         };
         for (c, col) in new.header.iter().enumerate().skip(1) {
+            if strict_cols.iter().any(|s| s == col) {
+                // Deterministic cell: any change is a failure — drops
+                // included (fewer emitted windows is lost coverage, not
+                // an improvement), and so is a cell that went missing
+                // or stopped parsing as the baseline's text.
+                compared += 1;
+                let (nv, ov) = (row.get(c), old.get(c));
+                let flag = match (nv, ov) {
+                    (Some(n), Some(o)) if n == o => "ok",
+                    _ => {
+                        regressions += 1;
+                        "CHANGED (strict)"
+                    }
+                };
+                println!(
+                    "  {key:<24} {col:<16} {:>12} -> {:>12}  {:>7}  {flag}",
+                    ov.map_or("<missing>", String::as_str),
+                    nv.map_or("<missing>", String::as_str),
+                    "exact"
+                );
+                continue;
+            }
             let (Some(n), Some(o)) = (
                 row.get(c).and_then(|s| parse_numeric(s)),
                 old.get(c).and_then(|s| parse_numeric(s)),

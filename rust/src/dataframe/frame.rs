@@ -215,6 +215,23 @@ impl DataFrame {
         Ok(local::groupby_aggregate(&self.table, keys, aggs)?.into())
     }
 
+    /// Windowed group-by over this frame's rows in order: one frame per
+    /// window of `spec` (tumbling or sliding). This is the batch-side
+    /// twin of the pipeline's `keyed_aggregate_windowed` stage — each
+    /// returned frame equals the aggregate a streaming shard would emit
+    /// for that window of the same row stream.
+    pub fn groupby_windows(
+        &self,
+        keys: &[&str],
+        aggs: &[AggSpec],
+        spec: &local::WindowSpec,
+    ) -> Result<Vec<DataFrame>> {
+        Ok(local::windowed_groupby(&self.table, keys, aggs, spec)?
+            .into_iter()
+            .map(DataFrame::from)
+            .collect())
+    }
+
     /// Drop duplicate rows (`df.drop_duplicates`).
     pub fn drop_duplicates(&self, subset: Option<&[&str]>) -> Result<DataFrame> {
         Ok(local::drop_duplicates(&self.table, subset)?.into())
@@ -505,6 +522,26 @@ mod tests {
         want.reverse();
         assert_eq!(seen, want, "descending global order");
         assert_eq!(seen.len(), 8);
+    }
+
+    #[test]
+    fn groupby_windows_slices_in_row_order() {
+        use crate::ops::local::groupby::Agg;
+        use crate::ops::local::WindowSpec;
+        let df = DataFrame::from_columns(vec![
+            ("k", Array::from_i64((0..12).map(|i| i % 3).collect())),
+            ("v", Array::from_f64((0..12).map(|i| i as f64).collect())),
+        ])
+        .unwrap();
+        let aggs = [AggSpec::new("v", Agg::Sum)];
+        let wins = df.groupby_windows(&["k"], &aggs, &WindowSpec::tumbling_rows(5)).unwrap();
+        assert_eq!(wins.len(), 3, "[0,5) [5,10) [10,12)");
+        for (i, w) in wins.iter().enumerate() {
+            let (a, b) = (i * 5, (i * 5 + 5).min(12));
+            let want =
+                local::groupby_aggregate(&df.table().slice(a, b - a), &["k"], &aggs).unwrap();
+            assert_eq!(w.table().num_rows(), want.num_rows(), "window {i}");
+        }
     }
 
     #[test]

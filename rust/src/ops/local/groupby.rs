@@ -4,10 +4,11 @@
 //! accumulation. The distributed group-by (shuffle by key hash + local
 //! group-by) reuses this kernel.
 
+use super::select::{filter_cmp, Cmp};
 use crate::table::rowhash::{hash_columns, rows_eq};
-use crate::table::{Array, ArrayBuilder, DataType, Field, Schema, Table};
+use crate::table::{Array, ArrayBuilder, DataType, Field, Scalar, Schema, Table};
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Aggregation function.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -309,6 +310,28 @@ enum FinishPlan {
     /// Mean = global sum / global count, null when the count is zero
     /// (matching the local kernel's all-null-group behaviour).
     Mean { sum: String, cnt: String },
+    /// Retractable sum: the partial sum is NaN-sanitised, the NaN
+    /// occurrences counted separately; the final sum is NaN whenever
+    /// any survived — identical to folding the raw values.
+    SumNan { sum: String, nan: String },
+    /// Retractable mean: sum/count pair plus the NaN occurrence count.
+    MeanNan { sum: String, cnt: String, nan: String },
+}
+
+/// Synthetic input columns a retractable plan adds to every batch
+/// before partial aggregation (see [`PartialAggPlan::new_retractable`]).
+#[derive(Debug, Clone)]
+struct RetractCols {
+    /// All-ones input column: its per-group sum counts every row of the
+    /// group (nulls included), so retraction knows when a key's rows
+    /// have all expired.
+    ones_input: String,
+    /// Partial column holding that per-group row count.
+    rows_part: String,
+    /// `(source column, indicator input column)` for every retractable
+    /// sum source: the indicator counts NaN payloads while the source
+    /// itself is zeroed where NaN, keeping partial sums finite.
+    nan_inputs: Vec<(String, String)>,
 }
 
 /// A decomposition of aggregation requests into associative partials —
@@ -333,46 +356,78 @@ enum FinishPlan {
 ///
 /// `Std`/`Var`/`First`/`Last` do not decompose over this partial set
 /// and are rejected by [`new`](Self::new).
+///
+/// A plan built with [`new_retractable`](Self::new_retractable)
+/// additionally supports [`unfold`](Self::unfold) — the exact inverse
+/// of `fold` — which sliding windows use to subtract evicted batches
+/// from a running state instead of recomputing the window.
 #[derive(Debug, Clone)]
 pub struct PartialAggPlan {
     requested: Vec<AggSpec>,
     partial: Vec<AggSpec>,
     reduce: Vec<AggSpec>,
     plans: Vec<FinishPlan>,
+    /// `Some` for retractable plans: the synthetic-column bookkeeping
+    /// that makes subtraction exact (row presence + NaN counts).
+    retract: Option<RetractCols>,
+}
+
+/// Shared scaffolding of both [`PartialAggPlan`] constructors: interns
+/// partial columns (so overlapping requests like `Sum(v)` + `Mean(v)` +
+/// `Count(v)` compute and ship each distinct `(column, partial)` exactly
+/// once) and derives the reduce specs that write every partial back
+/// onto its own name.
+#[derive(Default)]
+struct PlanBuilder {
+    partial: Vec<AggSpec>,
+    refine: Vec<Agg>, // parallel to `partial`
+    index: HashMap<(String, &'static str), String>,
+}
+
+impl PlanBuilder {
+    fn intern(&mut self, column: &str, kind: Agg, reduce: Agg) -> String {
+        let slot = (column.to_string(), kind.name());
+        if let Some(name) = self.index.get(&slot) {
+            return name.clone();
+        }
+        let name = format!("__p{}_{}", self.partial.len(), kind.name());
+        self.index.insert(slot, name.clone());
+        self.partial.push(AggSpec::named(column, kind, name.clone()));
+        self.refine.push(reduce);
+        name
+    }
+
+    fn reduce_specs(&self) -> Vec<AggSpec> {
+        self.partial
+            .iter()
+            .zip(&self.refine)
+            .map(|(p, agg)| AggSpec::named(p.out_name.clone(), *agg, p.out_name.clone()))
+            .collect()
+    }
 }
 
 impl PartialAggPlan {
     /// Decompose `aggs`; errors on non-decomposable aggregations.
     pub fn new(aggs: &[AggSpec]) -> Result<PartialAggPlan> {
-        let mut partial: Vec<AggSpec> = Vec::new();
-        let mut refine: Vec<Agg> = Vec::new(); // parallel to `partial`
-        let mut index: HashMap<(String, &'static str), String> = HashMap::new();
-        // Intern one partial column, shared across requests: overlapping
-        // specs (e.g. `Sum(v)` + `Mean(v)` + `Count(v)`) compute and
-        // ship each distinct `(column, partial)` exactly once.
-        let mut intern = |column: &str, kind: Agg, reduce: Agg| -> String {
-            let slot = (column.to_string(), kind.name());
-            if let Some(name) = index.get(&slot) {
-                return name.clone();
-            }
-            let name = format!("__p{}_{}", partial.len(), kind.name());
-            index.insert(slot, name.clone());
-            partial.push(AggSpec::named(column, kind, name.clone()));
-            refine.push(reduce);
-            name
-        };
+        let mut b = PlanBuilder::default();
         let mut plans: Vec<FinishPlan> = Vec::with_capacity(aggs.len());
         for spec in aggs {
             let plan = match spec.agg {
-                Agg::Sum => FinishPlan::Carry { part: intern(&spec.column, Agg::Sum, Agg::Sum) },
-                Agg::Count => {
-                    FinishPlan::Carry { part: intern(&spec.column, Agg::Count, Agg::Sum) }
+                Agg::Sum => {
+                    FinishPlan::Carry { part: b.intern(&spec.column, Agg::Sum, Agg::Sum) }
                 }
-                Agg::Min => FinishPlan::Carry { part: intern(&spec.column, Agg::Min, Agg::Min) },
-                Agg::Max => FinishPlan::Carry { part: intern(&spec.column, Agg::Max, Agg::Max) },
+                Agg::Count => {
+                    FinishPlan::Carry { part: b.intern(&spec.column, Agg::Count, Agg::Sum) }
+                }
+                Agg::Min => {
+                    FinishPlan::Carry { part: b.intern(&spec.column, Agg::Min, Agg::Min) }
+                }
+                Agg::Max => {
+                    FinishPlan::Carry { part: b.intern(&spec.column, Agg::Max, Agg::Max) }
+                }
                 Agg::Mean => FinishPlan::Mean {
-                    sum: intern(&spec.column, Agg::Sum, Agg::Sum),
-                    cnt: intern(&spec.column, Agg::Count, Agg::Sum),
+                    sum: b.intern(&spec.column, Agg::Sum, Agg::Sum),
+                    cnt: b.intern(&spec.column, Agg::Count, Agg::Sum),
                 },
                 other => bail!(
                     "{} does not decompose into partial aggregates; \
@@ -382,12 +437,94 @@ impl PartialAggPlan {
             };
             plans.push(plan);
         }
-        let reduce: Vec<AggSpec> = partial
-            .iter()
-            .zip(&refine)
-            .map(|(p, agg)| AggSpec::named(p.out_name.clone(), *agg, p.out_name.clone()))
-            .collect();
-        Ok(PartialAggPlan { requested: aggs.to_vec(), partial, reduce, plans })
+        Ok(PartialAggPlan {
+            requested: aggs.to_vec(),
+            reduce: b.reduce_specs(),
+            partial: b.partial,
+            plans,
+            retract: None,
+        })
+    }
+
+    /// Decompose `aggs` into partials that also subtract exactly, so a
+    /// sliding window can evict old batches from a running state via
+    /// [`unfold`](Self::unfold) instead of recomputing the window.
+    ///
+    /// Only `Sum`/`Count`/`Mean` qualify. Two synthetic partials make
+    /// the subtraction an exact inverse of [`fold`](Self::fold):
+    ///
+    /// * a per-group **row count** (`__ones` summed) tracks key
+    ///   liveness — a key whose rows have all expired is dropped, which
+    ///   plain sum/count columns cannot express (they just reach zero);
+    /// * per retractable-sum source, a **NaN count** while the source
+    ///   values are zeroed where NaN — `x + NaN` is irreversible, so
+    ///   sums stay finite in the state and [`finish`](Self::finish)
+    ///   re-poisons totals whose window still contains a NaN.
+    ///
+    /// Float sums retract bit-exactly when payload magnitudes are
+    /// integral (the harness convention); arbitrary reals subtract to
+    /// within rounding, like any running-sum implementation.
+    pub fn new_retractable(aggs: &[AggSpec]) -> Result<PartialAggPlan> {
+        let mut b = PlanBuilder::default();
+        let mut plans: Vec<FinishPlan> = Vec::with_capacity(aggs.len());
+        let mut nan_src: Vec<String> = Vec::new();
+        for spec in aggs {
+            let nan = if matches!(spec.agg, Agg::Sum | Agg::Mean) {
+                if !nan_src.contains(&spec.column) {
+                    nan_src.push(spec.column.clone());
+                }
+                Some(b.intern(&format!("__nan_{}", spec.column), Agg::Sum, Agg::Sum))
+            } else {
+                None
+            };
+            let plan = match spec.agg {
+                Agg::Sum => {
+                    let sum = b.intern(&spec.column, Agg::Sum, Agg::Sum);
+                    FinishPlan::SumNan { sum, nan: nan.unwrap() }
+                }
+                Agg::Count => {
+                    FinishPlan::Carry { part: b.intern(&spec.column, Agg::Count, Agg::Sum) }
+                }
+                Agg::Mean => {
+                    let sum = b.intern(&spec.column, Agg::Sum, Agg::Sum);
+                    let cnt = b.intern(&spec.column, Agg::Count, Agg::Sum);
+                    FinishPlan::MeanNan { sum, cnt, nan: nan.unwrap() }
+                }
+                other => bail!(
+                    "{} does not retract exactly on an unbounded stream; sliding \
+                     windows rebuild min/max per window from the bounded segment \
+                     ring (Eviction::Auto or Eviction::Rebuild), and \
+                     std/var/first/last do not decompose at all",
+                    other.name()
+                ),
+            };
+            plans.push(plan);
+        }
+        let ones_input = "__ones".to_string();
+        let rows_part = b.intern(&ones_input, Agg::Sum, Agg::Sum);
+        let nan_inputs =
+            nan_src.into_iter().map(|c| (c.clone(), format!("__nan_{c}"))).collect();
+        Ok(PartialAggPlan {
+            requested: aggs.to_vec(),
+            reduce: b.reduce_specs(),
+            partial: b.partial,
+            plans,
+            retract: Some(RetractCols { ones_input, rows_part, nan_inputs }),
+        })
+    }
+
+    /// Whether this plan was built with
+    /// [`new_retractable`](Self::new_retractable) and therefore has an
+    /// [`unfold`](Self::unfold) path.
+    pub fn is_retractable(&self) -> bool {
+        self.retract.is_some()
+    }
+
+    /// Whether every aggregation in `aggs` subtracts exactly
+    /// (`Sum`/`Count`/`Mean`) — the gate for choosing subtract-on-evict
+    /// over per-window rebuild.
+    pub fn aggs_retract_exactly(aggs: &[AggSpec]) -> bool {
+        aggs.iter().all(|s| matches!(s.agg, Agg::Sum | Agg::Count | Agg::Mean))
     }
 
     /// Specs that turn raw rows into one partial row per group.
@@ -401,18 +538,123 @@ impl PartialAggPlan {
         &self.reduce
     }
 
-    /// Fold one raw batch into an optional running partial state (the
-    /// streaming form): aggregate the batch to partials, then merge
-    /// with the previous state by concat + re-reduce.
-    pub fn fold(&self, state: Option<Table>, batch: &Table, keys: &[&str]) -> Result<Table> {
-        let batch_partial = groupby_aggregate(batch, keys, &self.partial)?;
+    /// Synthesise the extra input columns a retractable plan aggregates:
+    /// the `__ones` row counter, and per retractable-sum source a NaN
+    /// indicator while NaN payloads are zeroed out of the source copy.
+    /// Only the columns the partial set actually reads (keys + agg
+    /// sources) are copied — this runs per batch on the streaming hot
+    /// path.
+    fn prepare(&self, batch: &Table, keys: &[&str]) -> Result<Table> {
+        let Some(r) = &self.retract else {
+            return Ok(batch.clone());
+        };
+        // Fail fast on name collisions: Schema allows duplicate field
+        // names and lookups return the first match, so a user column
+        // shadowing a synthetic one would silently corrupt liveness /
+        // NaN accounting instead of erroring.
+        for reserved in std::iter::once(&r.ones_input).chain(r.nan_inputs.iter().map(|(_, i)| i))
+        {
+            if batch.schema().contains(reserved) {
+                bail!(
+                    "retractable aggregation reserves the column name {reserved:?} \
+                     for its internal bookkeeping; rename that input column"
+                );
+            }
+        }
+        let mut names: Vec<&str> = keys.to_vec();
+        for p in &self.partial {
+            let c = p.column.as_str();
+            let synthetic = c == r.ones_input || r.nan_inputs.iter().any(|(_, i)| i == c);
+            if !synthetic && !names.contains(&c) {
+                names.push(c);
+            }
+        }
+        let batch = batch.select_columns(&names)?;
+        let n = batch.num_rows();
+        let mut fields: Vec<Field> = batch.schema().fields().to_vec();
+        let mut cols: Vec<Array> = batch.columns().to_vec();
+        for (src, ind) in &r.nan_inputs {
+            let idx = batch.schema().index_of(src)?;
+            let mut flags = vec![0i64; n];
+            if let Array::Float64(vals, valid) = &cols[idx] {
+                let valid = valid.clone();
+                let mut sane = vals.clone();
+                for (i, flag) in flags.iter_mut().enumerate() {
+                    let ok = valid.as_ref().map_or(true, |b| b.get(i));
+                    if ok && sane[i].is_nan() {
+                        *flag = 1;
+                        sane[i] = 0.0;
+                    }
+                }
+                cols[idx] = Array::Float64(sane, valid);
+            }
+            fields.push(Field::new(ind.clone(), DataType::Int64));
+            cols.push(Array::from_i64(flags));
+        }
+        fields.push(Field::new(r.ones_input.clone(), DataType::Int64));
+        cols.push(Array::from_i64(vec![1; n]));
+        Table::new(Schema::new(fields), cols)
+    }
+
+    /// Aggregate one raw batch into a standalone partial table (one row
+    /// per group present in the batch).
+    pub fn partial(&self, batch: &Table, keys: &[&str]) -> Result<Table> {
+        match &self.retract {
+            None => groupby_aggregate(batch, keys, &self.partial),
+            Some(_) => groupby_aggregate(&self.prepare(batch, keys)?, keys, &self.partial),
+        }
+    }
+
+    /// Merge one partial table into an optional running partial state
+    /// by concatenation + re-reduce (closed under repetition).
+    pub fn merge(&self, state: Option<Table>, partial: &Table, keys: &[&str]) -> Result<Table> {
         match state {
-            None => Ok(batch_partial),
+            None => Ok(partial.clone()),
             Some(prev) => {
-                let cat = Table::concat_tables(&[&prev, &batch_partial])?;
+                let cat = Table::concat_tables(&[&prev, partial])?;
                 groupby_aggregate(&cat, keys, &self.reduce)
             }
         }
+    }
+
+    /// Fold one raw batch into an optional running partial state (the
+    /// streaming form): [`partial`](Self::partial) then
+    /// [`merge`](Self::merge).
+    pub fn fold(&self, state: Option<Table>, batch: &Table, keys: &[&str]) -> Result<Table> {
+        let p = self.partial(batch, keys)?;
+        match state {
+            None => Ok(p),
+            Some(prev) => self.merge(Some(prev), &p, keys),
+        }
+    }
+
+    /// Subtract previously-folded partials from a running state — the
+    /// exact inverse of [`fold`](Self::fold) for plans built with
+    /// [`new_retractable`](Self::new_retractable). Keys whose row
+    /// presence drops to zero leave the state entirely, so repeated
+    /// fold/unfold cycles stay bounded by the live window, not the
+    /// stream.
+    pub fn unfold(&self, state: &Table, evicted: &Table, keys: &[&str]) -> Result<Table> {
+        let Some(r) = &self.retract else {
+            bail!(
+                "unfold needs a retractable plan; build it with \
+                 PartialAggPlan::new_retractable"
+            );
+        };
+        // Negate every partial column of the evicted table (keys pass
+        // through), then retraction is just another merge.
+        let part_names: HashSet<&str> =
+            self.partial.iter().map(|p| p.out_name.as_str()).collect();
+        let mut fields = Vec::with_capacity(evicted.num_columns());
+        let mut cols = Vec::with_capacity(evicted.num_columns());
+        for (f, c) in evicted.schema().fields().iter().zip(evicted.columns()) {
+            let col = if part_names.contains(f.name.as_str()) { negate(c)? } else { c.clone() };
+            fields.push(f.clone());
+            cols.push(col);
+        }
+        let neg = Table::new(Schema::new(fields), cols)?;
+        let red = self.merge(Some(state.clone()), &neg, keys)?;
+        filter_cmp(&red, &r.rows_part, Cmp::Gt, &Scalar::Int64(0))
     }
 
     /// Reassemble the fully-reduced partial table `combined` into the
@@ -446,10 +688,61 @@ impl PartialAggPlan {
                     fields.push(Field::new(spec.out_name.clone(), DataType::Float64));
                     cols.push(Array::from_opt_f64(vals));
                 }
+                FinishPlan::SumNan { sum, nan } => {
+                    let s = combined.column_by_name(sum)?;
+                    let nn = combined.column_by_name(nan)?;
+                    match s {
+                        Array::Float64(v, _) => {
+                            let vals: Vec<f64> = (0..combined.num_rows())
+                                .map(|i| {
+                                    if nn.f64_at(i).unwrap_or(0.0) > 0.0 {
+                                        f64::NAN
+                                    } else {
+                                        v[i]
+                                    }
+                                })
+                                .collect();
+                            fields.push(Field::new(spec.out_name.clone(), DataType::Float64));
+                            cols.push(Array::from_f64(vals));
+                        }
+                        // Integer sums never see NaN: carry directly.
+                        _ => {
+                            fields.push(Field::new(spec.out_name.clone(), s.data_type()));
+                            cols.push(s.clone());
+                        }
+                    }
+                }
+                FinishPlan::MeanNan { sum, cnt, nan } => {
+                    let s = combined.column_by_name(sum)?;
+                    let c = combined.column_by_name(cnt)?;
+                    let nn = combined.column_by_name(nan)?;
+                    let vals: Vec<Option<f64>> = (0..combined.num_rows())
+                        .map(|i| match (s.f64_at(i), c.f64_at(i)) {
+                            (_, Some(cv)) if cv > 0.0 && nn.f64_at(i).unwrap_or(0.0) > 0.0 => {
+                                Some(f64::NAN)
+                            }
+                            (Some(sv), Some(cv)) if cv > 0.0 => Some(sv / cv),
+                            _ => None,
+                        })
+                        .collect();
+                    fields.push(Field::new(spec.out_name.clone(), DataType::Float64));
+                    cols.push(Array::from_opt_f64(vals));
+                }
             }
         }
         Table::new(Schema::new(fields), cols)
     }
+}
+
+/// Negate a numeric partial column so retraction reduces to a merge.
+fn negate(a: &Array) -> Result<Array> {
+    Ok(match a {
+        Array::Int64(v, valid) => Array::Int64(v.iter().map(|x| -x).collect(), valid.clone()),
+        Array::Float64(v, valid) => {
+            Array::Float64(v.iter().map(|x| -x).collect(), valid.clone())
+        }
+        other => bail!("cannot retract a {} partial", other.data_type()),
+    })
 }
 
 /// Whole-table aggregation (no keys): one output row.
@@ -611,6 +904,102 @@ mod tests {
         }
     }
 
+    fn canon_rows(t: &Table) -> Vec<String> {
+        let mut rows: Vec<String> =
+            (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect();
+        rows.sort();
+        rows
+    }
+
+    #[test]
+    fn retractable_unfold_inverts_fold() {
+        let aggs = [
+            AggSpec::new("v", Agg::Sum),
+            AggSpec::new("v", Agg::Count),
+            AggSpec::new("v", Agg::Mean),
+        ];
+        let plan = PartialAggPlan::new_retractable(&aggs).unwrap();
+        assert!(plan.is_retractable());
+        let batch = |ks: &[i64], vs: &[f64]| {
+            Table::from_columns(vec![
+                ("k", Array::from_i64(ks.to_vec())),
+                ("v", Array::from_f64(vs.to_vec())),
+            ])
+            .unwrap()
+        };
+        let a = batch(&[1, 2, 1], &[10.0, 20.0, 30.0]);
+        let b = batch(&[2, 3], &[5.0, 7.0]);
+        let c = batch(&[1, 3], &[2.0, 3.0]);
+        // fold a, b, c then retract a == fold b, c
+        let mut st = None;
+        for t in [&a, &b, &c] {
+            st = Some(plan.fold(st, t, &["k"]).unwrap());
+        }
+        let retracted = plan.unfold(&st.unwrap(), &plan.partial(&a, &["k"]).unwrap(), &["k"]).unwrap();
+        let want = plan.fold(Some(plan.partial(&b, &["k"]).unwrap()), &c, &["k"]).unwrap();
+        assert_eq!(
+            canon_rows(&plan.finish(&["k"], &retracted).unwrap()),
+            canon_rows(&plan.finish(&["k"], &want).unwrap())
+        );
+    }
+
+    #[test]
+    fn retractable_unfold_drops_dead_keys_and_recovers_from_nan() {
+        let plan = PartialAggPlan::new_retractable(&[
+            AggSpec::new("v", Agg::Sum),
+            AggSpec::new("v", Agg::Mean),
+        ])
+        .unwrap();
+        // key 9 exists only in the evicted batch (with a NaN payload
+        // that poisons the running sum until it is retracted); key 1
+        // has a null payload in the surviving batch, so it must stay
+        // with sum 0.
+        let a = Table::from_columns(vec![
+            ("k", Array::from_i64(vec![9, 9, 1])),
+            ("v", Array::from_opt_f64(vec![Some(f64::NAN), Some(4.0), Some(6.0)])),
+        ])
+        .unwrap();
+        let b = Table::from_columns(vec![
+            ("k", Array::from_i64(vec![1, 1])),
+            ("v", Array::from_opt_f64(vec![None, None])),
+        ])
+        .unwrap();
+        let st = plan.fold(Some(plan.partial(&a, &["k"]).unwrap()), &b, &["k"]).unwrap();
+        // while a is in the window, key 9's sum is NaN
+        let full = plan.finish(&["k"], &st).unwrap();
+        let nine = (0..full.num_rows())
+            .find(|&i| full.cell(i, 0) == Scalar::Int64(9))
+            .unwrap();
+        assert!(full.cell(nine, 1).as_f64().unwrap().is_nan(), "sum not NaN-poisoned");
+        // retract a: key 9 disappears; key 1 survives on null rows only
+        let after = plan.unfold(&st, &plan.partial(&a, &["k"]).unwrap(), &["k"]).unwrap();
+        let out = plan.finish(&["k"], &after).unwrap();
+        assert_eq!(out.num_rows(), 1);
+        assert_eq!(out.cell(0, 0), Scalar::Int64(1));
+        assert_eq!(out.cell(0, 1), Scalar::Float64(0.0), "sum over all-null rows");
+        assert_eq!(out.cell(0, 2), Scalar::Null, "mean over zero valid values");
+    }
+
+    #[test]
+    fn retractable_plan_rejects_non_subtractable() {
+        for agg in [Agg::Min, Agg::Max, Agg::Std, Agg::First] {
+            let err = PartialAggPlan::new_retractable(&[AggSpec::new("y", agg)])
+                .err()
+                .map(|e| format!("{e:#}"))
+                .unwrap_or_else(|| panic!("{agg:?} accepted"));
+            assert!(err.contains("retract"), "unactionable message: {err}");
+        }
+        // unfold on a plain plan is an error, not silent corruption
+        let plain = PartialAggPlan::new(&[AggSpec::new("y", Agg::Sum)]).unwrap();
+        let t = Table::from_columns(vec![
+            ("k", Array::from_i64(vec![1])),
+            ("y", Array::from_f64(vec![1.0])),
+        ])
+        .unwrap();
+        let p = plain.partial(&t, &["k"]).unwrap();
+        assert!(plain.unfold(&p, &p, &["k"]).is_err());
+    }
+
     #[test]
     fn folding_batches_matches_one_shot_groupby() {
         let aggs = [
@@ -631,12 +1020,6 @@ mod tests {
         let got = plan.finish(&["g"], &state.unwrap()).unwrap();
         // same groups in first-seen order, same column names and values
         assert_eq!(got.schema().names(), want.schema().names());
-        let canon = |t: &Table| {
-            let mut rows: Vec<String> =
-                (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect();
-            rows.sort();
-            rows
-        };
-        assert_eq!(canon(&got), canon(&want));
+        assert_eq!(canon_rows(&got), canon_rows(&want));
     }
 }

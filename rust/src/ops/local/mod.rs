@@ -43,4 +43,7 @@ pub use select::{filter_cmp, filter_mask, Cmp};
 pub use setops::{cartesian, difference, intersect, union, union_all};
 pub use sort::{is_sorted, sort, sort_by_columns, SortKey};
 pub use unique::{drop_duplicates, n_unique, unique};
-pub use window::{rolling, with_rolling, RollAgg};
+pub use window::{
+    rolling, windowed_groupby, windowed_groupby_stream, with_rolling, Eviction, RollAgg,
+    SegmentRing, WindowSpec, WindowUnit,
+};

@@ -249,3 +249,89 @@ fn prop_cast_roundtrip_int_utf8() {
         Ok(())
     });
 }
+
+/// Random payload batch for the retraction property: keys from a small
+/// domain (collisions guaranteed), f64 payloads mixing nulls, NaNs and
+/// small integral values (so sums subtract bit-exactly).
+fn payload_batch(rng: &mut Rng, size: usize) -> Table {
+    let n = rng.usize_in(1, size + 2);
+    let keys: Vec<Option<i64>> = (0..n)
+        .map(|_| if rng.bool(0.1) { None } else { Some(rng.gen_range(5) as i64) })
+        .collect();
+    let vals: Vec<Option<f64>> = (0..n)
+        .map(|_| match rng.gen_range(10) {
+            0 => None,
+            1 => Some(f64::NAN),
+            _ => Some(rng.gen_range(21) as f64 - 10.0),
+        })
+        .collect();
+    Table::from_columns(vec![
+        ("k", Array::from_opt_i64(keys)),
+        ("v", Array::from_opt_f64(vals)),
+    ])
+    .unwrap()
+}
+
+/// Sliding subtract-on-evict state must equal a from-scratch fold of
+/// the live batches after any interleaving of pushes and evictions —
+/// including NaN poisoning and recovery, compared under the canonical
+/// f64 total order (all NaNs equal), which the debug row text respects.
+#[test]
+fn prop_sliding_retract_state_equals_recompute() {
+    let aggs = [
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Mean),
+    ];
+    let plan = PartialAggPlan::new_retractable(&aggs).unwrap();
+    let canon = |t: &Option<Table>| -> Vec<String> {
+        t.as_ref().map_or(Vec::new(), |t| {
+            let mut rows: Vec<String> =
+                (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect();
+            rows.sort();
+            rows
+        })
+    };
+    check(Config::default().cases(60).max_size(40), "retract state == recompute", |rng, size| {
+        let mut window: std::collections::VecDeque<Table> = Default::default();
+        let mut state: Option<Table> = None;
+        for step in 0..12 {
+            if window.is_empty() || rng.bool(0.6) {
+                // a new batch enters the window
+                let b = payload_batch(rng, size);
+                let p = plan.partial(&b, &["k"]).map_err(|e| e.to_string())?;
+                state = Some(plan.merge(state.take(), &p, &["k"]).map_err(|e| e.to_string())?);
+                window.push_back(b);
+            } else {
+                // the oldest batch is evicted: subtract its partials
+                let b = window.pop_front().unwrap();
+                let p = plan.partial(&b, &["k"]).map_err(|e| e.to_string())?;
+                let st = state.take().ok_or("no state to retract from")?;
+                state = Some(plan.unfold(&st, &p, &["k"]).map_err(|e| e.to_string())?);
+            }
+            let mut fresh: Option<Table> = None;
+            for b in &window {
+                fresh = Some(plan.fold(fresh.take(), b, &["k"]).map_err(|e| e.to_string())?);
+            }
+            let got = match &state {
+                Some(s) if s.num_rows() > 0 => {
+                    Some(plan.finish(&["k"], s).map_err(|e| e.to_string())?)
+                }
+                _ => None,
+            };
+            let want = match &fresh {
+                Some(s) => Some(plan.finish(&["k"], s).map_err(|e| e.to_string())?),
+                None => None,
+            };
+            if canon(&got) != canon(&want) {
+                return Err(format!(
+                    "state diverged at step {step} ({} live batches):\n  got  {:?}\n  want {:?}",
+                    window.len(),
+                    canon(&got),
+                    canon(&want)
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,8 +1,21 @@
-//! Rolling-window operators (Pandas `rolling` role): the dose–response
-//! smoothing UNOMT-style analyses apply before curve fitting.
+//! Window operators, batch and streaming.
+//!
+//! Two families share this module:
+//!
+//! * [`rolling`] — the Pandas `rolling` role over one column of a
+//!   static table (the dose–response smoothing UNOMT-style analyses
+//!   apply before curve fitting), with an O(n) monotonic-deque kernel
+//!   for min/max;
+//! * the windowed group-by substrate — [`WindowSpec`] (tumbling and
+//!   sliding count triggers), the [`SegmentRing`] eviction structure,
+//!   and the [`windowed_groupby_stream`] batch oracle — shared by the
+//!   pipeline's `keyed_aggregate_windowed` stage (DESIGN.md §5.4) and
+//!   the differential tests that pin it down.
 
+use super::groupby::{groupby_aggregate, AggSpec, PartialAggPlan};
 use crate::table::{Array, Bitmap, Table};
 use anyhow::{bail, Result};
+use std::collections::VecDeque;
 
 /// Rolling aggregation over a numeric column.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,8 +49,9 @@ pub fn rolling(
     let mut out = vec![0.0f64; n];
     let mut validity = Bitmap::new_null(n);
 
-    // O(n·w) direct evaluation for min/max; O(n) sliding sums for
-    // sum/mean. Window sizes in practice are small (dose ladders).
+    // O(n) for every aggregate: sliding sums for sum/mean, a monotonic
+    // deque for min/max (the same eviction kernel the streaming window
+    // stage leans on — amortised one push + pop per row).
     match agg {
         RollAgg::Sum | RollAgg::Mean => {
             let mut sum = 0.0f64;
@@ -60,28 +74,323 @@ pub fn rolling(
             }
         }
         RollAgg::Min | RollAgg::Max => {
+            let want_max = agg == RollAgg::Max;
+            // Candidate indices with monotone values (front = current
+            // extremum). NaN payloads are swallowed by min/max exactly
+            // like the direct fold (`f64::max(NaN, x) == x`), so they
+            // never enter the deque; an all-NaN window yields NaN.
+            let mut deque: VecDeque<usize> = VecDeque::new();
+            let mut count = 0usize; // valid values in window, NaN included
             for i in 0..n {
-                let lo = (i + 1).saturating_sub(window);
-                let mut acc: Option<f64> = None;
-                let mut count = 0usize;
-                for j in lo..=i {
-                    if let Some(x) = col.f64_at(j) {
-                        count += 1;
-                        acc = Some(match acc {
-                            None => x,
-                            Some(a) if agg == RollAgg::Max => a.max(x),
-                            Some(a) => a.min(x),
-                        });
+                if let Some(x) = col.f64_at(i) {
+                    count += 1;
+                    if !x.is_nan() {
+                        while let Some(&b) = deque.back() {
+                            let bx = col.f64_at(b).unwrap();
+                            let dominated = if want_max { bx <= x } else { bx >= x };
+                            if dominated {
+                                deque.pop_back();
+                            } else {
+                                break;
+                            }
+                        }
+                        deque.push_back(i);
                     }
                 }
+                if i >= window {
+                    if col.f64_at(i - window).is_some() {
+                        count -= 1;
+                    }
+                }
+                let lo = (i + 1).saturating_sub(window);
+                while deque.front().is_some_and(|&f| f < lo) {
+                    deque.pop_front();
+                }
                 if count >= min_periods {
-                    out[i] = acc.unwrap();
+                    out[i] = match deque.front() {
+                        Some(&f) => col.f64_at(f).unwrap(),
+                        None => f64::NAN, // only NaNs among the valid values
+                    };
                     validity.set(i, true);
                 }
             }
         }
     }
     Ok(Array::Float64(out, Some(validity)).normalize_validity())
+}
+
+/// Unit in which a [`WindowSpec`]'s `size` and `step` are counted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowUnit {
+    /// Count individual rows; a batch straddling a boundary is split.
+    Rows,
+    /// Count whole batches as delivered (one received batch = one unit).
+    Batches,
+}
+
+impl WindowUnit {
+    /// Lowercase unit name for error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WindowUnit::Rows => "rows",
+            WindowUnit::Batches => "batches",
+        }
+    }
+}
+
+/// How a sliding window sheds expired input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Eviction {
+    /// Subtract-on-evict when every aggregate retracts exactly
+    /// (sum/count/mean), per-window rebuild otherwise.
+    Auto,
+    /// Require exact subtraction; rejected at build time when any
+    /// aggregate cannot retract (min/max/std/…).
+    Retract,
+    /// Always rebuild each window from the bounded segment ring (the
+    /// only sound choice for min/max, whose old extrema are
+    /// unrecoverable once evicted).
+    Rebuild,
+}
+
+/// Count-triggered window specification for keyed streaming
+/// aggregation: tumbling (`step == size`) or sliding (`step < size`)
+/// over rows or batches, watermark-free.
+///
+/// Windows cover the half-open unit spans `[j·step, j·step + size)` of
+/// each shard's routed input, in arrival order; a window emits when its
+/// end boundary is reached, and stream close flushes the oldest
+/// still-open window truncated at the final unit (see
+/// [`spans`](Self::spans), which is the whole semantics).
+#[derive(Debug, Clone)]
+pub struct WindowSpec {
+    /// Whether `size`/`step` count rows or whole batches.
+    pub unit: WindowUnit,
+    /// Window length in units (must be > 0).
+    pub size: usize,
+    /// Distance between consecutive window starts (0 < step <= size;
+    /// `step == size` is tumbling).
+    pub step: usize,
+    /// Eviction policy for sliding windows (ignored for tumbling,
+    /// which just resets its state).
+    pub eviction: Eviction,
+    /// When set, every emitted window table gains an Int64 column of
+    /// this name holding the per-shard window ordinal.
+    pub ordinal: Option<String>,
+}
+
+impl WindowSpec {
+    fn new(unit: WindowUnit, size: usize, step: usize) -> WindowSpec {
+        WindowSpec { unit, size, step, eviction: Eviction::Auto, ordinal: None }
+    }
+
+    /// Tumbling window of `size` rows.
+    pub fn tumbling_rows(size: usize) -> WindowSpec {
+        WindowSpec::new(WindowUnit::Rows, size, size)
+    }
+
+    /// Tumbling window of `size` batches.
+    pub fn tumbling_batches(size: usize) -> WindowSpec {
+        WindowSpec::new(WindowUnit::Batches, size, size)
+    }
+
+    /// Sliding window of `size` rows advancing `step` rows per emission.
+    pub fn sliding_rows(size: usize, step: usize) -> WindowSpec {
+        WindowSpec::new(WindowUnit::Rows, size, step)
+    }
+
+    /// Sliding window of `size` batches advancing `step` batches.
+    pub fn sliding_batches(size: usize, step: usize) -> WindowSpec {
+        WindowSpec::new(WindowUnit::Batches, size, step)
+    }
+
+    /// Override the eviction policy (sliding windows only).
+    pub fn with_eviction(mut self, eviction: Eviction) -> WindowSpec {
+        self.eviction = eviction;
+        self
+    }
+
+    /// Tag emitted windows with an Int64 ordinal column of this name.
+    pub fn with_ordinal(mut self, name: impl Into<String>) -> WindowSpec {
+        self.ordinal = Some(name.into());
+        self
+    }
+
+    /// `step == size`: state resets at each boundary, nothing retracts.
+    pub fn is_tumbling(&self) -> bool {
+        self.step == self.size
+    }
+
+    /// Check the spec against the requested aggregations; every
+    /// violation is reported before any data flows.
+    pub fn validate(&self, aggs: &[AggSpec]) -> Result<()> {
+        if self.size == 0 {
+            bail!("window size must be > 0 (a zero-{} window can never fill)", self.unit.name());
+        }
+        if self.step == 0 {
+            bail!("window step must be > 0 (a zero step would re-emit the same window forever)");
+        }
+        if self.step > self.size {
+            bail!(
+                "sliding step {} > window size {}: the {} between consecutive windows \
+                 would never be aggregated; use step <= size (step == size is tumbling)",
+                self.step,
+                self.size,
+                self.unit.name()
+            );
+        }
+        if self.eviction == Eviction::Retract && !PartialAggPlan::aggs_retract_exactly(aggs) {
+            let offender = aggs
+                .iter()
+                .find(|s| !PartialAggPlan::aggs_retract_exactly(std::slice::from_ref(s)))
+                .expect("some agg does not retract");
+            bail!(
+                "Eviction::Retract requires aggregations that subtract exactly \
+                 (sum/count/mean), but {} cannot retract on an unbounded stream; \
+                 use Eviction::Auto or Eviction::Rebuild for a bounded per-window rebuild",
+                offender.agg.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// The `[start, end)` unit spans this spec emits over a closed
+    /// stream of `total` units — full windows `[j·step, j·step + size)`
+    /// in order, then the oldest still-open window truncated at `total`
+    /// (the flush). This function *is* the window semantics: the
+    /// streaming stage and the batch oracle both follow it.
+    pub fn spans(&self, total: usize) -> Vec<(usize, usize)> {
+        let (s, p) = (self.size, self.step);
+        let mut out = Vec::new();
+        let mut j = 0usize;
+        while j * p + s <= total {
+            out.push((j * p, j * p + s));
+            j += 1;
+        }
+        if j * p < total {
+            out.push((j * p, total));
+        }
+        out
+    }
+}
+
+/// Bounded ring of per-segment partial-aggregate tables — the eviction
+/// structure behind sliding windows. Segments are pushed in stream
+/// order tagged with their end unit; eviction pops every segment whose
+/// span has fully expired. The subtract-on-evict path unfolds the
+/// popped partials from its running state; the rebuild path re-reduces
+/// whatever remains.
+#[derive(Debug, Default)]
+pub struct SegmentRing {
+    segs: VecDeque<(u64, Table)>,
+}
+
+impl SegmentRing {
+    /// Empty ring.
+    pub fn new() -> SegmentRing {
+        SegmentRing { segs: VecDeque::new() }
+    }
+
+    /// Append a segment whose span ends at `end_unit` (exclusive).
+    pub fn push(&mut self, end_unit: u64, partial: Table) {
+        debug_assert!(self.segs.back().map_or(true, |(e, _)| *e < end_unit));
+        self.segs.push_back((end_unit, partial));
+    }
+
+    /// Pop and return every segment that ends at or before `floor`
+    /// (its units are all outside a window starting at `floor`).
+    pub fn evict_through(&mut self, floor: u64) -> Vec<Table> {
+        let mut out = Vec::new();
+        while self.segs.front().is_some_and(|(e, _)| *e <= floor) {
+            out.push(self.segs.pop_front().unwrap().1);
+        }
+        out
+    }
+
+    /// The retained segment partials, oldest first.
+    pub fn partials(&self) -> impl Iterator<Item = &Table> {
+        self.segs.iter().map(|(_, t)| t)
+    }
+
+    /// Number of retained segments.
+    pub fn len(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Whether the ring holds no segments.
+    pub fn is_empty(&self) -> bool {
+        self.segs.is_empty()
+    }
+
+    /// Total buffered partial rows across retained segments.
+    pub fn state_rows(&self) -> u64 {
+        self.segs.iter().map(|(_, t)| t.num_rows() as u64).sum()
+    }
+
+    /// Total buffered partial bytes across retained segments.
+    pub fn state_bytes(&self) -> u64 {
+        self.segs.iter().map(|(_, t)| t.nbytes() as u64).sum()
+    }
+}
+
+/// Batch-side oracle for windowed keyed aggregation: apply `spec` to a
+/// closed stream of `batches` and compute each window with the one-shot
+/// [`groupby_aggregate`] kernel. One output table per non-empty window,
+/// ordinal column appended when the spec asks for one. This is the
+/// reference the streaming stage is differentially tested against.
+pub fn windowed_groupby_stream(
+    batches: &[Table],
+    keys: &[&str],
+    aggs: &[AggSpec],
+    spec: &WindowSpec,
+) -> Result<Vec<Table>> {
+    spec.validate(aggs)?;
+    if batches.is_empty() {
+        return Ok(Vec::new());
+    }
+    let refs: Vec<&Table> = batches.iter().collect();
+    let all = Table::concat_tables(&refs)?;
+    // Unit spans map to row ranges: directly for Rows, via batch row
+    // offsets for Batches.
+    let mut offsets = Vec::with_capacity(batches.len() + 1);
+    let mut acc = 0usize;
+    offsets.push(acc);
+    for b in batches {
+        acc += b.num_rows();
+        offsets.push(acc);
+    }
+    let total = match spec.unit {
+        WindowUnit::Rows => all.num_rows(),
+        WindowUnit::Batches => batches.len(),
+    };
+    let mut out = Vec::new();
+    for (j, (a, b)) in spec.spans(total).into_iter().enumerate() {
+        let (ra, rb) = match spec.unit {
+            WindowUnit::Rows => (a, b),
+            WindowUnit::Batches => (offsets[a], offsets[b]),
+        };
+        if rb == ra {
+            continue; // empty window emits nothing
+        }
+        let mut g = groupby_aggregate(&all.slice(ra, rb - ra), keys, aggs)?;
+        if let Some(name) = &spec.ordinal {
+            g = g.with_column(name, Array::from_i64(vec![j as i64; g.num_rows()]))?;
+        }
+        out.push(g);
+    }
+    Ok(out)
+}
+
+/// Windowed group-by over one table's rows in order (the
+/// `DataFrame::groupby_windows` kernel). With [`WindowUnit::Batches`]
+/// the whole table counts as a single batch.
+pub fn windowed_groupby(
+    table: &Table,
+    keys: &[&str],
+    aggs: &[AggSpec],
+    spec: &WindowSpec,
+) -> Result<Vec<Table>> {
+    windowed_groupby_stream(std::slice::from_ref(table), keys, aggs, spec)
 }
 
 /// Attach a rolling aggregate as a new column named
@@ -108,6 +417,7 @@ pub fn with_rolling(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ops::local::groupby::Agg as RAgg;
     use crate::table::Scalar;
 
     fn t() -> Table {
@@ -176,5 +486,154 @@ mod tests {
         assert!(rolling(&t(), "x", 0, None, RollAgg::Mean).is_err());
         let s = Table::from_columns(vec![("s", Array::from_strs(&["a"]))]).unwrap();
         assert!(rolling(&s, "s", 2, None, RollAgg::Mean).is_err());
+    }
+
+    /// Brute-force rolling min/max with the pre-deque semantics
+    /// (`f64::max` folding, which swallows NaN unless the window's
+    /// valid values are all NaN).
+    fn direct_minmax(vals: &[Option<f64>], window: usize, min_periods: usize, want_max: bool) -> Vec<Option<f64>> {
+        (0..vals.len())
+            .map(|i| {
+                let lo = (i + 1).saturating_sub(window);
+                let mut acc: Option<f64> = None;
+                let mut count = 0usize;
+                for v in vals[lo..=i].iter().flatten() {
+                    count += 1;
+                    acc = Some(match acc {
+                        None => *v,
+                        Some(a) if want_max => a.max(*v),
+                        Some(a) => a.min(*v),
+                    });
+                }
+                if count >= min_periods { acc } else { None }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_minmax_deque_matches_direct() {
+        use crate::table::rowhash::canonical_f64_total_cmp;
+        use crate::util::prop::{check, Config};
+        check(Config::default().cases(80).max_size(80), "rolling deque == direct", |rng, size| {
+            let n = rng.usize_in(0, size + 1);
+            let vals: Vec<Option<f64>> = (0..n)
+                .map(|_| match rng.gen_range(10) {
+                    0 => None,
+                    1 => Some(f64::NAN),
+                    _ => Some(rng.gen_range(13) as f64 - 6.0),
+                })
+                .collect();
+            let window = rng.usize_in(1, 9);
+            let min_periods = rng.usize_in(1, window + 1);
+            let t = Table::from_columns(vec![("x", Array::from_opt_f64(vals.clone()))])
+                .map_err(|e| e.to_string())?;
+            for want_max in [false, true] {
+                let agg = if want_max { RollAgg::Max } else { RollAgg::Min };
+                let got = rolling(&t, "x", window, Some(min_periods), agg)
+                    .map_err(|e| e.to_string())?;
+                let want = direct_minmax(&vals, window, min_periods, want_max);
+                for i in 0..n {
+                    let ok = match (got.get(i), &want[i]) {
+                        (Scalar::Null, None) => true,
+                        (Scalar::Float64(g), Some(w)) => {
+                            canonical_f64_total_cmp(g, *w) == std::cmp::Ordering::Equal
+                        }
+                        _ => false,
+                    };
+                    if !ok {
+                        return Err(format!(
+                            "row {i} ({agg:?} w={window} mp={min_periods}): {:?} != {:?}",
+                            got.get(i),
+                            want[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spans_follow_the_documented_semantics() {
+        // tumbling: full windows then truncated remainder
+        assert_eq!(WindowSpec::tumbling_rows(4).spans(10), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(WindowSpec::tumbling_rows(5).spans(10), vec![(0, 5), (5, 10)]);
+        assert_eq!(WindowSpec::tumbling_rows(4).spans(0), vec![]);
+        // sliding: starts every `step`, flush truncates the next window
+        assert_eq!(
+            WindowSpec::sliding_rows(4, 2).spans(10),
+            vec![(0, 4), (2, 6), (4, 8), (6, 10), (8, 10)]
+        );
+        // stream shorter than one window: flush only
+        assert_eq!(WindowSpec::sliding_rows(6, 2).spans(3), vec![(0, 3)]);
+        // step that does not divide size
+        assert_eq!(WindowSpec::sliding_rows(3, 2).spans(7), vec![(0, 3), (2, 5), (4, 7), (6, 7)]);
+    }
+
+    #[test]
+    fn window_spec_guards_are_actionable() {
+        let aggs = [AggSpec::new("x", RAgg::Sum)];
+        let msg = |s: WindowSpec| format!("{:#}", s.validate(&aggs).err().unwrap());
+        assert!(msg(WindowSpec::tumbling_rows(0)).contains("size must be > 0"));
+        assert!(msg(WindowSpec::sliding_rows(4, 0)).contains("step must be > 0"));
+        assert!(msg(WindowSpec::sliding_rows(2, 5)).contains("step 5 > window size 2"));
+        let m = format!(
+            "{:#}",
+            WindowSpec::sliding_rows(4, 2)
+                .with_eviction(Eviction::Retract)
+                .validate(&[AggSpec::new("x", RAgg::Min)])
+                .err()
+                .unwrap()
+        );
+        assert!(m.contains("min cannot retract"), "unactionable: {m}");
+        // sliding with retractable aggs passes under every policy
+        for ev in [Eviction::Auto, Eviction::Retract, Eviction::Rebuild] {
+            WindowSpec::sliding_rows(4, 2).with_eviction(ev).validate(&aggs).unwrap();
+        }
+    }
+
+    #[test]
+    fn segment_ring_evicts_whole_segments() {
+        let part = |v: i64| {
+            Table::from_columns(vec![("k", Array::from_i64(vec![v]))]).unwrap()
+        };
+        let mut ring = SegmentRing::new();
+        ring.push(2, part(0));
+        ring.push(4, part(1));
+        ring.push(5, part(2));
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.state_rows(), 3);
+        let evicted = ring.evict_through(4);
+        assert_eq!(evicted.len(), 2, "segments ending at or before the floor go");
+        assert_eq!(ring.len(), 1);
+        assert!(ring.evict_through(4).is_empty());
+        assert_eq!(ring.partials().count(), 1);
+    }
+
+    #[test]
+    fn windowed_groupby_matches_manual_slices() {
+        let n = 23usize;
+        let t = Table::from_columns(vec![
+            ("k", Array::from_i64((0..n as i64).map(|i| i % 3).collect())),
+            ("v", Array::from_f64((0..n).map(|i| i as f64).collect())),
+        ])
+        .unwrap();
+        let aggs = [AggSpec::new("v", RAgg::Sum), AggSpec::new("v", RAgg::Max)];
+        let spec = WindowSpec::sliding_rows(10, 4).with_ordinal("w");
+        let wins = windowed_groupby(&t, &["k"], &aggs, &spec).unwrap();
+        let spans = spec.spans(n);
+        assert_eq!(wins.len(), spans.len());
+        for (win, (a, b)) in wins.iter().zip(spans) {
+            let want = groupby_aggregate(&t.slice(a, b - a), &["k"], &aggs).unwrap();
+            assert_eq!(win.num_rows(), want.num_rows(), "span [{a},{b})");
+            assert!(win.schema().contains("w"));
+        }
+        // batch-unit oracle: three uneven batches, tumbling by 2 batches
+        let batches = [t.slice(0, 9), t.slice(9, 4), t.slice(13, 10)];
+        let spec_b = WindowSpec::tumbling_batches(2);
+        let wins_b = windowed_groupby_stream(&batches, &["k"], &aggs, &spec_b).unwrap();
+        assert_eq!(wins_b.len(), 2, "[0,2) then the [2,3) flush");
+        let want0 = groupby_aggregate(&t.slice(0, 13), &["k"], &aggs).unwrap();
+        assert_eq!(wins_b[0].num_rows(), want0.num_rows());
     }
 }

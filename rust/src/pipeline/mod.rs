@@ -18,6 +18,14 @@
 //! provably consistent with its batch counterpart (asserted in
 //! `rust/tests/dist_vs_local.rs`).
 //!
+//! Unbounded sources pair with
+//! [`Pipeline::keyed_aggregate_windowed`]: a [`WindowSpec`] (tumbling
+//! or sliding, counted in rows or batches) makes the stage emit an
+//! aggregate table per window instead of once at close — sum/count/mean
+//! evict by exact subtraction, min/max by bounded per-window rebuild
+//! (DESIGN.md §5.4), and every emitted window equals the one-shot local
+//! group-by over exactly that window's rows.
+//!
 //! ```no_run
 //! use hptmt::ops::local::{Agg, AggSpec};
 //! use hptmt::pipeline::{Pipeline, Routing};
@@ -42,4 +50,5 @@
 
 mod stage;
 
+pub use crate::ops::local::window::{Eviction, WindowSpec, WindowUnit};
 pub use stage::{Pipeline, PipelineRun, Routing, StageMetrics};

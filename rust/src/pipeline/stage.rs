@@ -2,7 +2,8 @@
 
 use crate::comm::partitioner::HashPartitioner;
 use crate::ops::local::groupby::{AggSpec, PartialAggPlan};
-use crate::table::Table;
+use crate::ops::local::window::{Eviction, SegmentRing, WindowSpec, WindowUnit};
+use crate::table::{Array, Table};
 use crate::util::time::CpuStopwatch;
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -29,7 +30,7 @@ type SinkFn = Arc<dyn Fn(Table) -> Result<()> + Send + Sync>;
 enum StageKind {
     Source(Vec<SourceFn>), // one closure per shard
     Map { f: MapFn, routing: Routing },
-    KeyedAggregate { keys: Vec<String>, aggs: Vec<AggSpec> },
+    KeyedAggregate { keys: Vec<String>, aggs: Vec<AggSpec>, window: Option<WindowSpec> },
     Sink { f: SinkFn, routing: Routing },
 }
 
@@ -99,6 +100,205 @@ impl PipelineRun {
     }
 }
 
+/// Per-shard state machine for a windowed keyed-aggregate stage.
+///
+/// Input units (rows or batches) are absorbed into an open segment
+/// partial; segments close at every eviction boundary (multiples of
+/// `step`) and at every emission boundary (`j·step + size`), so every
+/// window tiles exactly onto whole segments of the [`SegmentRing`].
+/// The subtract-on-evict path additionally merges closed segments into
+/// a running state and unfolds them when they expire; the rebuild path
+/// re-reduces the retained ring per emission. Tumbling windows skip
+/// the ring entirely and just reset their running state.
+struct WindowMachine {
+    spec: WindowSpec,
+    plan: Arc<PartialAggPlan>,
+    retract: bool,
+    /// Units consumed so far.
+    upos: u64,
+    /// Windows closed so far — the ordinal of the next window.
+    closed: u64,
+    /// Open segment partial (sliding only).
+    seg: Option<Table>,
+    /// Running state: the current window (retract path and tumbling).
+    state: Option<Table>,
+    /// Closed segments awaiting expiry (sliding only).
+    ring: SegmentRing,
+}
+
+impl WindowMachine {
+    fn new(spec: WindowSpec, plan: Arc<PartialAggPlan>, retract: bool) -> WindowMachine {
+        WindowMachine {
+            spec,
+            plan,
+            retract,
+            upos: 0,
+            closed: 0,
+            seg: None,
+            state: None,
+            ring: SegmentRing::new(),
+        }
+    }
+
+    /// Next unit position where a segment closes or a window emits.
+    fn next_cut(&self) -> u64 {
+        let p = self.spec.step as u64;
+        let s = self.spec.size as u64;
+        if self.spec.is_tumbling() {
+            return (self.upos / s + 1) * s;
+        }
+        let next_p = (self.upos / p + 1) * p;
+        let next_e = self.closed * p + s;
+        debug_assert!(next_e > self.upos, "missed an emission boundary");
+        next_p.min(next_e)
+    }
+
+    /// Fold one already-aggregated partial covering `units` input units.
+    fn absorb(&mut self, partial: &Table, units: u64, keys: &[&str]) -> Result<()> {
+        if self.spec.is_tumbling() {
+            self.state = Some(self.plan.merge(self.state.take(), partial, keys)?);
+        } else {
+            self.seg = Some(self.plan.merge(self.seg.take(), partial, keys)?);
+        }
+        self.upos += units;
+        Ok(())
+    }
+
+    /// Absorb one received batch, pushing any windows it completes.
+    fn ingest(&mut self, batch: &Table, keys: &[&str], outs: &mut Vec<Table>) -> Result<()> {
+        match self.spec.unit {
+            WindowUnit::Batches => {
+                let p = self.plan.partial(batch, keys)?;
+                self.absorb(&p, 1, keys)?;
+                self.roll(keys, outs)
+            }
+            WindowUnit::Rows => {
+                let n = batch.num_rows() as u64;
+                let mut offset = 0u64;
+                while offset < n {
+                    let len = (self.next_cut() - self.upos).min(n - offset);
+                    let p =
+                        self.plan.partial(&batch.slice(offset as usize, len as usize), keys)?;
+                    self.absorb(&p, len, keys)?;
+                    offset += len;
+                    self.roll(keys, outs)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// React to the current unit position: close the open segment at
+    /// cut boundaries, emit at emission boundaries.
+    fn roll(&mut self, keys: &[&str], outs: &mut Vec<Table>) -> Result<()> {
+        let s = self.spec.size as u64;
+        if self.spec.is_tumbling() {
+            if self.upos > 0 && self.upos % s == 0 {
+                if let Some(st) = self.state.take() {
+                    if st.num_rows() > 0 {
+                        outs.push(self.finish_window(&st, keys)?);
+                    }
+                }
+                self.closed += 1;
+            }
+            return Ok(());
+        }
+        let p = self.spec.step as u64;
+        let at_step = self.upos > 0 && self.upos % p == 0;
+        let at_emit = self.upos == self.closed * p + s;
+        if at_step || at_emit {
+            if let Some(seg) = self.seg.take() {
+                if self.retract {
+                    self.state = Some(self.plan.merge(self.state.take(), &seg, keys)?);
+                }
+                self.ring.push(self.upos, seg);
+            }
+        }
+        if at_emit {
+            self.emit(self.closed * p, keys, outs)?;
+            self.closed += 1;
+        }
+        Ok(())
+    }
+
+    /// Emit the window starting at `floor`, evicting everything older.
+    fn emit(&mut self, floor: u64, keys: &[&str], outs: &mut Vec<Table>) -> Result<()> {
+        let evicted = self.ring.evict_through(floor);
+        if self.retract {
+            for ev in &evicted {
+                if let Some(st) = self.state.take() {
+                    self.state = Some(self.plan.unfold(&st, ev, keys)?);
+                }
+            }
+            if let Some(st) = &self.state {
+                if st.num_rows() > 0 {
+                    outs.push(self.finish_window(st, keys)?);
+                }
+            }
+        } else {
+            let mut st: Option<Table> = None;
+            for part in self.ring.partials() {
+                st = Some(self.plan.merge(st, part, keys)?);
+            }
+            if let Some(st) = st {
+                if st.num_rows() > 0 {
+                    outs.push(self.finish_window(&st, keys)?);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Upstream closed: flush the oldest still-open window, truncated
+    /// at the final unit (mirrors the tail span of [`WindowSpec::spans`]).
+    fn flush(&mut self, keys: &[&str], outs: &mut Vec<Table>) -> Result<()> {
+        if self.spec.is_tumbling() {
+            if let Some(st) = self.state.take() {
+                if st.num_rows() > 0 {
+                    outs.push(self.finish_window(&st, keys)?);
+                }
+            }
+            return Ok(());
+        }
+        let p = self.spec.step as u64;
+        if self.closed * p >= self.upos {
+            return Ok(()); // every consumed unit was already emitted
+        }
+        if let Some(seg) = self.seg.take() {
+            if self.retract {
+                self.state = Some(self.plan.merge(self.state.take(), &seg, keys)?);
+            }
+            self.ring.push(self.upos, seg);
+        }
+        self.emit(self.closed * p, keys, outs)?;
+        self.closed += 1;
+        Ok(())
+    }
+
+    fn finish_window(&self, st: &Table, keys: &[&str]) -> Result<Table> {
+        let mut out = self.plan.finish(keys, st)?;
+        if let Some(name) = &self.spec.ordinal {
+            out =
+                out.with_column(name, Array::from_i64(vec![self.closed as i64; out.num_rows()]))?;
+        }
+        Ok(out)
+    }
+
+    /// Buffered state rows: running state + open segment + ring.
+    fn state_rows(&self) -> u64 {
+        self.ring.state_rows()
+            + self.state.as_ref().map_or(0, |t| t.num_rows() as u64)
+            + self.seg.as_ref().map_or(0, |t| t.num_rows() as u64)
+    }
+
+    /// Buffered state bytes: running state + open segment + ring.
+    fn state_bytes(&self) -> u64 {
+        self.ring.state_bytes()
+            + self.state.as_ref().map_or(0, |t| t.nbytes() as u64)
+            + self.seg.as_ref().map_or(0, |t| t.nbytes() as u64)
+    }
+}
+
 impl Pipeline {
     /// Start building a pipeline with the given display name.
     pub fn new(name: impl Into<String>) -> Pipeline {
@@ -158,21 +358,60 @@ impl Pipeline {
     /// Aggregations that do not decompose into partials
     /// (`Std`/`Var`/`First`/`Last`) are rejected when the pipeline runs.
     pub fn keyed_aggregate(
-        mut self,
+        self,
         name: impl Into<String>,
         shards: usize,
         keys: &[&str],
         aggs: &[AggSpec],
     ) -> Pipeline {
+        self.keyed_agg_inner(name.into(), shards, keys, aggs, None)
+    }
+
+    /// Windowed variant of [`keyed_aggregate`](Self::keyed_aggregate):
+    /// instead of one flush on close, each shard emits an aggregate
+    /// table per [`WindowSpec`] window of its routed input — the
+    /// continuous-dashboard operator, no watermark machinery, count
+    /// triggers only.
+    ///
+    /// Tumbling windows reset their state at every boundary and accept
+    /// any decomposable aggregation. Sliding windows shed expired input
+    /// per the spec's [`Eviction`] policy: sum/count/mean subtract
+    /// exactly (the retractable [`PartialAggPlan`]), min/max rebuild
+    /// each window from a bounded segment ring, and requesting
+    /// [`Eviction::Retract`] for a non-subtractable aggregation fails
+    /// when the pipeline is built — before any thread spawns — as do
+    /// zero sizes and `step > size` (see [`WindowSpec::validate`]).
+    /// Stream close flushes the oldest still-open window truncated at
+    /// the final unit.
+    pub fn keyed_aggregate_windowed(
+        self,
+        name: impl Into<String>,
+        shards: usize,
+        keys: &[&str],
+        aggs: &[AggSpec],
+        window: WindowSpec,
+    ) -> Pipeline {
+        self.keyed_agg_inner(name.into(), shards, keys, aggs, Some(window))
+    }
+
+    fn keyed_agg_inner(
+        mut self,
+        name: String,
+        shards: usize,
+        keys: &[&str],
+        aggs: &[AggSpec],
+        window: Option<WindowSpec>,
+    ) -> Pipeline {
         self.assert_open("keyed_aggregate");
         assert!(shards > 0);
         assert!(!keys.is_empty(), "keyed_aggregate needs key columns");
         self.stages.push(StageSpec {
-            name: name.into(),
+            name,
             parallelism: shards,
             kind: StageKind::KeyedAggregate {
                 keys: keys.iter().map(|k| k.to_string()).collect(),
                 aggs: aggs.to_vec(),
+                window,
             },
         });
         self
@@ -399,19 +638,41 @@ impl Pipeline {
                         );
                     }
                 }
-                StageKind::KeyedAggregate { keys, aggs } => {
-                    // Decompose once; a non-decomposable request fails
-                    // the run before any thread spawns for this stage.
-                    let plan = Arc::new(
-                        PartialAggPlan::new(&aggs)
-                            .with_context(|| format!("keyed_aggregate stage {:?}", spec.name))?,
-                    );
+                StageKind::KeyedAggregate { keys, aggs, window } => {
+                    // Decompose once; a non-decomposable request or an
+                    // invalid window spec fails the run before any
+                    // thread spawns for this stage.
+                    let (plan, retract) = (|| -> Result<(PartialAggPlan, bool)> {
+                        match &window {
+                            None => Ok((PartialAggPlan::new(&aggs)?, false)),
+                            Some(w) => {
+                                w.validate(&aggs)?;
+                                let retract = !w.is_tumbling()
+                                    && match w.eviction {
+                                        Eviction::Retract => true,
+                                        Eviction::Rebuild => false,
+                                        Eviction::Auto => {
+                                            PartialAggPlan::aggs_retract_exactly(&aggs)
+                                        }
+                                    };
+                                let plan = if retract {
+                                    PartialAggPlan::new_retractable(&aggs)?
+                                } else {
+                                    PartialAggPlan::new(&aggs)?
+                                };
+                                Ok((plan, retract))
+                            }
+                        }
+                    })()
+                    .with_context(|| format!("keyed_aggregate stage {:?}", spec.name))?;
+                    let plan = Arc::new(plan);
                     let keys = Arc::new(keys);
                     for shard in 0..spec.parallelism {
                         let m = m.clone();
                         let tx = downstream.clone();
                         let plan = plan.clone();
                         let keys = keys.clone();
+                        let window = window.clone();
                         let (my_shared, my_rx) = take_rx();
                         handles.push(
                             std::thread::Builder::new()
@@ -420,38 +681,84 @@ impl Pipeline {
                                     let key_refs: Vec<&str> =
                                         keys.iter().map(String::as_str).collect();
                                     let mut cpu = 0.0f64;
-                                    let mut state: Option<Table> = None;
                                     let mut peak_rows = 0u64;
                                     let mut peak_bytes = 0u64;
-                                    while let Some(batch) = recv_next(&my_shared, &my_rx) {
-                                        {
-                                            let mut g = m.lock().unwrap();
-                                            g.batches_in += 1;
-                                            g.rows_in += batch.num_rows() as u64;
-                                        }
-                                        let sw = CpuStopwatch::start();
-                                        let next = plan
-                                            .fold(state.take(), &batch, &key_refs)
-                                            .context("keyed_aggregate fold")?;
-                                        cpu += sw.elapsed().as_secs_f64();
-                                        peak_rows = peak_rows.max(next.num_rows() as u64);
-                                        peak_bytes = peak_bytes.max(next.nbytes() as u64);
-                                        state = Some(next);
-                                    }
-                                    // Flush: upstream closed — finalise
-                                    // this shard's keys and emit once.
-                                    if let Some(s) = state {
-                                        let sw = CpuStopwatch::start();
-                                        let out = plan
-                                            .finish(&key_refs, &s)
-                                            .context("keyed_aggregate flush")?;
-                                        cpu += sw.elapsed().as_secs_f64();
+                                    let send_out = |out: Table| -> Result<()> {
                                         {
                                             let mut g = m.lock().unwrap();
                                             g.batches_out += 1;
                                             g.rows_out += out.num_rows() as u64;
                                         }
-                                        send_routed(&tx, out, &m)?;
+                                        send_routed(&tx, out, &m)
+                                    };
+                                    match window {
+                                        None => {
+                                            // Fold-once: aggregate the whole
+                                            // stream, emit at close.
+                                            let mut state: Option<Table> = None;
+                                            while let Some(batch) = recv_next(&my_shared, &my_rx)
+                                            {
+                                                {
+                                                    let mut g = m.lock().unwrap();
+                                                    g.batches_in += 1;
+                                                    g.rows_in += batch.num_rows() as u64;
+                                                }
+                                                let sw = CpuStopwatch::start();
+                                                let next = plan
+                                                    .fold(state.take(), &batch, &key_refs)
+                                                    .context("keyed_aggregate fold")?;
+                                                cpu += sw.elapsed().as_secs_f64();
+                                                peak_rows = peak_rows.max(next.num_rows() as u64);
+                                                peak_bytes = peak_bytes.max(next.nbytes() as u64);
+                                                state = Some(next);
+                                            }
+                                            if let Some(s) = state {
+                                                let sw = CpuStopwatch::start();
+                                                let out = plan
+                                                    .finish(&key_refs, &s)
+                                                    .context("keyed_aggregate flush")?;
+                                                cpu += sw.elapsed().as_secs_f64();
+                                                send_out(out)?;
+                                            }
+                                        }
+                                        Some(wspec) => {
+                                            // Windowed: emit continuously at
+                                            // window boundaries, flush the
+                                            // open tail at close.
+                                            let mut machine = WindowMachine::new(
+                                                wspec,
+                                                plan.clone(),
+                                                retract,
+                                            );
+                                            let mut outs: Vec<Table> = Vec::new();
+                                            while let Some(batch) = recv_next(&my_shared, &my_rx)
+                                            {
+                                                {
+                                                    let mut g = m.lock().unwrap();
+                                                    g.batches_in += 1;
+                                                    g.rows_in += batch.num_rows() as u64;
+                                                }
+                                                let sw = CpuStopwatch::start();
+                                                machine
+                                                    .ingest(&batch, &key_refs, &mut outs)
+                                                    .context("windowed keyed_aggregate")?;
+                                                cpu += sw.elapsed().as_secs_f64();
+                                                peak_rows = peak_rows.max(machine.state_rows());
+                                                peak_bytes =
+                                                    peak_bytes.max(machine.state_bytes());
+                                                for out in outs.drain(..) {
+                                                    send_out(out)?;
+                                                }
+                                            }
+                                            let sw = CpuStopwatch::start();
+                                            machine
+                                                .flush(&key_refs, &mut outs)
+                                                .context("windowed keyed_aggregate flush")?;
+                                            cpu += sw.elapsed().as_secs_f64();
+                                            for out in outs.drain(..) {
+                                                send_out(out)?;
+                                            }
+                                        }
                                     }
                                     let mut g = m.lock().unwrap();
                                     g.cpu_seconds += cpu;
@@ -707,6 +1014,134 @@ mod tests {
             .run(2);
         assert!(res.is_err());
         assert!(format!("{:#}", res.err().unwrap()).contains("decompose"));
+    }
+
+    /// Run a single-shard windowed pipeline over fixed batches and
+    /// return its emitted window tables in canonical form.
+    fn windowed_run(batches: Vec<Table>, aggs: &[AggSpec], spec: WindowSpec) -> Vec<Vec<String>> {
+        let run = Pipeline::new("t")
+            .source("gen", 1, move |_, emit| {
+                for b in &batches {
+                    emit(b.clone())?;
+                }
+                Ok(())
+            })
+            .keyed_aggregate_windowed("win", 1, &["k"], aggs, spec)
+            .run(4)
+            .unwrap();
+        run.output
+            .iter()
+            .map(|t| {
+                let mut rows: Vec<String> =
+                    (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect();
+                rows.sort();
+                rows
+            })
+            .collect()
+    }
+
+    fn stream_batches() -> Vec<Table> {
+        // uneven batch sizes so row windows straddle batch boundaries
+        [(0usize, 13usize), (13, 7), (20, 22), (42, 5), (47, 30)]
+            .iter()
+            .map(|&(off, n)| keyed_batch(off, n))
+            .collect()
+    }
+
+    #[test]
+    fn windowed_emissions_match_the_batch_oracle() {
+        use crate::ops::local::window::windowed_groupby_stream;
+        let aggs = [
+            AggSpec::new("v", Agg::Sum),
+            AggSpec::new("v", Agg::Count),
+            AggSpec::new("v", Agg::Mean),
+            AggSpec::new("v", Agg::Min),
+            AggSpec::new("v", Agg::Max),
+        ];
+        let specs = [
+            WindowSpec::tumbling_rows(20),
+            WindowSpec::sliding_rows(30, 10),
+            WindowSpec::sliding_rows(25, 10), // step does not divide size
+            WindowSpec::tumbling_batches(2),
+            WindowSpec::sliding_batches(3, 1),
+        ];
+        for spec in specs {
+            let spec = spec.with_ordinal("w");
+            let batches = stream_batches();
+            let want: Vec<Vec<String>> =
+                windowed_groupby_stream(&batches, &["k"], &aggs, &spec)
+                    .unwrap()
+                    .iter()
+                    .map(|t| {
+                        let mut rows: Vec<String> =
+                            (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect();
+                        rows.sort();
+                        rows
+                    })
+                    .collect();
+            assert!(want.len() > 1, "oracle must emit multiple windows: {spec:?}");
+            let got = windowed_run(batches, &aggs, spec.clone());
+            assert_eq!(got, want, "stream windows != batch oracle for {spec:?}");
+        }
+    }
+
+    #[test]
+    fn sliding_retract_and_rebuild_agree() {
+        let aggs = [
+            AggSpec::new("v", Agg::Sum),
+            AggSpec::new("v", Agg::Count),
+            AggSpec::new("v", Agg::Mean),
+        ];
+        let base = WindowSpec::sliding_rows(24, 8).with_ordinal("w");
+        let retract = windowed_run(
+            stream_batches(),
+            &aggs,
+            base.clone().with_eviction(Eviction::Retract),
+        );
+        let rebuild =
+            windowed_run(stream_batches(), &aggs, base.with_eviction(Eviction::Rebuild));
+        assert!(retract.len() > 2);
+        assert_eq!(retract, rebuild, "subtract-on-evict != per-window rebuild");
+    }
+
+    #[test]
+    fn windowed_builder_guards_fail_before_data_flows() {
+        let run_with = |aggs: Vec<AggSpec>, spec: WindowSpec| -> String {
+            let res = Pipeline::new("t")
+                .source("gen", 1, |_, emit| emit(keyed_batch(0, 8)))
+                .keyed_aggregate_windowed("win", 2, &["k"], &aggs, spec)
+                .run(2);
+            format!("{:#}", res.err().expect("guard must reject"))
+        };
+        let sum = || vec![AggSpec::new("v", Agg::Sum)];
+        assert!(run_with(sum(), WindowSpec::tumbling_rows(0)).contains("size must be > 0"));
+        assert!(run_with(sum(), WindowSpec::sliding_rows(4, 0)).contains("step must be > 0"));
+        assert!(
+            run_with(sum(), WindowSpec::sliding_rows(3, 9)).contains("step 9 > window size 3")
+        );
+        // retraction requested for aggregates that cannot subtract
+        let m = run_with(
+            vec![AggSpec::new("v", Agg::Max)],
+            WindowSpec::sliding_rows(4, 2).with_eviction(Eviction::Retract),
+        );
+        assert!(m.contains("max cannot retract"), "unactionable: {m}");
+        let m = run_with(
+            vec![AggSpec::new("v", Agg::Std)],
+            WindowSpec::sliding_rows(4, 2).with_eviction(Eviction::Retract),
+        );
+        assert!(m.contains("std cannot retract"), "unactionable: {m}");
+        // min/max are fine when the window can rebuild
+        Pipeline::new("t")
+            .source("gen", 1, |_, emit| emit(keyed_batch(0, 8)))
+            .keyed_aggregate_windowed(
+                "win",
+                2,
+                &["k"],
+                &[AggSpec::new("v", Agg::Max)],
+                WindowSpec::sliding_rows(4, 2),
+            )
+            .run(2)
+            .unwrap();
     }
 
     #[test]

@@ -15,13 +15,16 @@
 //!   "keep first" duplicate survivors are identical bytes no matter
 //!   which copy a rank keeps.
 
-use hptmt::comm::{spawn_world, LinkProfile};
+use hptmt::comm::{spawn_world, HashPartitioner, LinkProfile};
 use hptmt::ops::dist::{
     broadcast_join, dist_difference, dist_drop_duplicates, dist_groupby, dist_groupby_partial,
     dist_intersect, dist_join, dist_sort, dist_union, dist_union_all, dist_unique, global_counts,
     rebalance,
 };
-use hptmt::ops::local::{self, Agg, AggSpec, JoinAlgorithm, JoinType, SortKey};
+use hptmt::ops::local::{
+    self, windowed_groupby_stream, Agg, AggSpec, Eviction, JoinAlgorithm, JoinType, SortKey,
+    WindowSpec,
+};
 use hptmt::pipeline::Pipeline;
 use hptmt::table::{Array, Table};
 use hptmt::util::rng::Rng;
@@ -320,6 +323,147 @@ fn streaming_keyed_pipeline_matches_batch_groupby() {
             .flat_map(|t| (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect::<Vec<_>>())
             .collect();
         assert_eq!(dedup.len(), oracle.num_rows(), "duplicate keys across shards at w={w}");
+    }
+}
+
+/// The windowed streaming acceptance case: a windowed keyed pipeline
+/// (one deterministic source → `keyed_aggregate_windowed` at w shards)
+/// must emit, for every window, exactly the local group-by over that
+/// window's rows — where a shard's windows are counted over its routed
+/// sub-stream of the concatenated source stream (at w = 1 that IS the
+/// concatenated stream). A single source shard keeps each shard's
+/// arrival order deterministic, so the expected window contents are
+/// computable by replaying the shared `HashPartitioner` routing.
+#[test]
+fn windowed_streaming_matches_local_groupby_per_window() {
+    let g = global_table(260, 10, 14);
+    let keys = ["s", "k"];
+    // chop the stream exactly like the pipeline source below
+    let source_batches = |g: &Table| -> Vec<Table> {
+        let mut out = Vec::new();
+        let (mut start, mut step) = (0usize, 17usize);
+        while start < g.num_rows() {
+            let len = step.min(g.num_rows() - start);
+            out.push(g.slice(start, len));
+            start += len;
+            step = if step == 17 { 29 } else { 17 };
+        }
+        out
+    };
+    // (spec, aggs): tumbling + sliding in both units; the sum/count/mean
+    // set exercises exact subtract-on-evict, the min/max set the
+    // bounded per-window rebuild.
+    let scm = || vec![
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Mean),
+    ];
+    let full = || {
+        let mut a = scm();
+        a.push(AggSpec::new("v", Agg::Min));
+        a.push(AggSpec::new("v", Agg::Max));
+        a
+    };
+    let cases: Vec<(WindowSpec, Vec<AggSpec>)> = vec![
+        (WindowSpec::tumbling_rows(45), full()),
+        (WindowSpec::sliding_rows(60, 25), full()),
+        (WindowSpec::sliding_rows(60, 25).with_eviction(Eviction::Retract), scm()),
+        (WindowSpec::tumbling_batches(3), full()),
+        (WindowSpec::sliding_batches(4, 2), scm()),
+    ];
+    for (spec, aggs) in cases {
+        let spec = spec.with_ordinal("__w");
+        for w in WORLDS {
+            // expected: replay the keyed edge's routing per shard, then
+            // window each shard's sub-stream with the batch oracle
+            let partitioner = HashPartitioner::new(keys, w);
+            let mut shard_streams: Vec<Vec<Table>> = vec![Vec::new(); w];
+            for batch in source_batches(&g) {
+                let parts = partitioner.partition_indices(&batch).unwrap();
+                for (shard, idx) in parts.iter().enumerate() {
+                    if !idx.is_empty() {
+                        shard_streams[shard].push(batch.take(idx));
+                    }
+                }
+            }
+            let ordinal_of = |t: &Table| -> usize {
+                let c = t.schema().index_of("__w").unwrap();
+                let ord = t.cell(0, c).as_i64().unwrap() as usize;
+                for i in 1..t.num_rows() {
+                    assert_eq!(t.cell(i, c).as_i64().unwrap() as usize, ord, "mixed ordinals");
+                }
+                ord
+            };
+            let mut want: std::collections::HashMap<(usize, usize), Vec<String>> =
+                std::collections::HashMap::new();
+            for (shard, stream) in shard_streams.iter().enumerate() {
+                let wins = windowed_groupby_stream(stream, &keys, &aggs, &spec)
+                    .unwrap_or_else(|e| panic!("oracle {spec:?} w={w}: {e:#}"));
+                for t in &wins {
+                    want.insert((shard, ordinal_of(t)), canon(std::slice::from_ref(t)));
+                }
+            }
+            assert!(
+                want.len() > 1,
+                "degenerate case: oracle emits <2 windows for {spec:?} at w={w}"
+            );
+            // actual: run the windowed pipeline
+            let gg = g.clone();
+            let run = Pipeline::new(format!("windowed-w{w}"))
+                .source("gen", 1, move |_, emit| {
+                    let (mut start, mut step) = (0usize, 17usize);
+                    while start < gg.num_rows() {
+                        let len = step.min(gg.num_rows() - start);
+                        emit(gg.slice(start, len))?;
+                        start += len;
+                        step = if step == 17 { 29 } else { 17 };
+                    }
+                    Ok(())
+                })
+                .keyed_aggregate_windowed("agg", w, &keys, &aggs, spec.clone())
+                .run(4)
+                .unwrap_or_else(|e| panic!("windowed stream {spec:?} w={w}: {e:#}"));
+            // group emitted windows by (owning shard, ordinal); the
+            // shard of an emitted table is recomputable from any of its
+            // key rows because routing is deterministic
+            let mut got: std::collections::HashMap<(usize, usize), Vec<String>> =
+                std::collections::HashMap::new();
+            for t in &run.output {
+                assert!(t.num_rows() > 0, "empty windows must not be emitted");
+                let parts = partitioner.partition_indices(t).unwrap();
+                let shard = parts
+                    .iter()
+                    .position(|idx| !idx.is_empty())
+                    .expect("window has rows");
+                assert_eq!(
+                    parts.iter().filter(|idx| !idx.is_empty()).count(),
+                    1,
+                    "keys of one emitted window span shards at w={w}"
+                );
+                let key = (shard, ordinal_of(t));
+                let dup = got.insert(key, canon(std::slice::from_ref(t)));
+                assert!(dup.is_none(), "window {key:?} emitted twice at w={w}");
+            }
+            let mut missing: Vec<_> = want.keys().filter(|k| !got.contains_key(*k)).collect();
+            let mut extra: Vec<_> = got.keys().filter(|k| !want.contains_key(*k)).collect();
+            missing.sort();
+            extra.sort();
+            assert!(
+                missing.is_empty() && extra.is_empty(),
+                "window set mismatch at w={w} ({spec:?}, seed {}): missing {missing:?}, \
+                 extra {extra:?}",
+                seed()
+            );
+            for (key, w_win) in &want {
+                assert_eq!(
+                    &got[key],
+                    w_win,
+                    "window {key:?} (shard, ordinal): stream != local groupby \
+                     ({spec:?} w={w}, seed {})",
+                    seed()
+                );
+            }
+        }
     }
 }
 
