@@ -33,8 +33,11 @@ fn main() -> anyhow::Result<()> {
     let workers = [16usize, 32, 48, 64, 96];
     println!("# Fig 15: UNOMT preprocessing, {rows} rows, 16 ranks/node cluster profile");
 
+    // Named "fig15" so `finish()` emits bench_out/fig15.json — the
+    // trajectory CI diffs against the checked-in BENCH_fig15.json
+    // baseline (node-count cells strict, timing cells advisory).
     let mut report = Report::new(
-        "fig15_multinode",
+        "fig15",
         &["workers", "nodes", "bsp_s", "bsp_speedup", "modin_role"],
     );
     let mut base = 0.0;

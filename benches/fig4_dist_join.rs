@@ -13,11 +13,14 @@ use hptmt::bench::{measure, scaled, Report};
 use hptmt::comm::{Communicator, LinkProfile, ReduceOp};
 use hptmt::exec::asynch::{run_async, AsyncCost, TaskGraph};
 use hptmt::exec::bsp::{run_bsp, BspConfig};
-use hptmt::ops::dist::dist_join;
+use hptmt::ops::dist::{dist_groupby, dist_join};
+use hptmt::ops::local::groupby::{Agg, AggSpec};
 use hptmt::ops::local::inner_join;
 use hptmt::ops::local::join::{JoinAlgorithm, JoinType};
+use hptmt::ops::local::{filter_cmp, Cmp};
 use hptmt::comm::HashPartitioner;
-use hptmt::table::{Array, Table};
+use hptmt::plan::LazyFrame;
+use hptmt::table::{Array, Scalar, Table};
 use hptmt::util::rng::Rng;
 
 fn shard(rows: usize, key_domain: usize, seed: u64) -> Table {
@@ -97,6 +100,106 @@ fn async_join_seconds(total_rows: usize, key_domain: usize, w: usize) -> anyhow:
     Ok((run.sim.wall_seconds - gen_cpu / w as f64).max(0.0))
 }
 
+/// Full-width shard for the planner-pushdown report: join/filter/agg
+/// touch only `k`/`v`; `p1`/`p2`/`tag` exist to be shuffled by the
+/// eager path and pruned by the planner.
+fn wide_shard(rows: usize, key_domain: usize, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let keys: Vec<i64> = (0..rows).map(|_| rng.gen_range(key_domain as u64) as i64).collect();
+    let vals: Vec<f64> = (0..rows).map(|_| rng.f64()).collect();
+    let p1: Vec<f64> = (0..rows).map(|_| rng.f64()).collect();
+    let p2: Vec<f64> = (0..rows).map(|_| rng.f64()).collect();
+    let tags: Vec<String> = keys.iter().map(|k| format!("tag-{:06}", k % 997)).collect();
+    Table::from_columns(vec![
+        ("k", Array::from_i64(keys)),
+        ("v", Array::from_f64(vals)),
+        ("p1", Array::from_f64(p1)),
+        ("p2", Array::from_f64(p2)),
+        ("tag", Array::from_strs(&tags)),
+    ])
+    .unwrap()
+}
+
+/// One run of the join → filter → group-by chain over full-width
+/// shards; returns (total shuffled bytes across ranks, slowest-rank
+/// cpu+comm seconds). `planned` executes through `plan::` (filter
+/// pushdown below the shuffles, scans pruned to live columns, map-side
+/// combining); eager executes the operators in written order.
+fn chain_run(total_rows: usize, key_domain: usize, w: usize, planned: bool) -> anyhow::Result<(u64, f64)> {
+    let rows_per_rank = total_rows / w;
+    let aggs = [AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)];
+    let run = run_bsp(&BspConfig::new(w).with_profile(LinkProfile::cluster(16)), move |rank, comm| {
+        let left = wide_shard(rows_per_rank, key_domain, 300 + rank as u64);
+        let right = wide_shard(rows_per_rank, key_domain, 700 + rank as u64);
+        comm.reset_stats();
+        let sw = hptmt::util::time::CpuStopwatch::start();
+        let out = if planned {
+            LazyFrame::from_table(left)
+                .join(&LazyFrame::from_table(right), &["k"], &["k"])
+                .filter("v", Cmp::Ge, 0.5f64)
+                .groupby(&["k"], &aggs)
+                .collect_comm_with(comm, LinkProfile::cluster(16))?
+                .into_table()
+        } else {
+            let joined = dist_join(comm, &left, &right, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?;
+            let filtered = filter_cmp(&joined, "v", Cmp::Ge, &Scalar::Float64(0.5))?;
+            dist_groupby(comm, &filtered, &["k"], &aggs)?
+        };
+        let secs = sw.elapsed().as_secs_f64() + comm.stats().sim_comm_seconds;
+        std::hint::black_box(out.num_rows());
+        Ok((comm.stats().bytes_sent, secs))
+    })?;
+    let bytes: u64 = run.results.iter().map(|(b, _)| b).sum();
+    let secs = run.results.iter().map(|(_, s)| *s).fold(0.0, f64::max);
+    Ok((bytes, secs))
+}
+
+/// The planner-pushdown report: shuffled-bytes cells, eager vs planned,
+/// for the same written program (`join → filter → groupby`).
+fn planner_pushdown_report(total_rows: usize, key_domain: usize) -> anyhow::Result<()> {
+    // Show the optimized plan once: pruned scans, the filter fused
+    // below the join's shuffle edges, PartialAgg below the final
+    // shuffle.
+    let demo = LazyFrame::from_table(wide_shard(1024, 128, 1))
+        .join(&LazyFrame::from_table(wide_shard(1024, 128, 2)), &["k"], &["k"])
+        .filter("v", Cmp::Ge, 0.5f64)
+        .groupby(&["k"], &[AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)]);
+    println!("# optimized plan (w=8 cluster profile):");
+    print!("{}", demo.explain_for(8, LinkProfile::cluster(16)));
+
+    let mut report = Report::new(
+        "fig4_planner_pushdown",
+        &["workers", "eager_MB", "planned_MB", "bytes_ratio", "eager_s", "planned_s"],
+    );
+    for &w in &[2usize, 4, 8, 16] {
+        let mut eager_bytes = 0u64;
+        let eager = measure(0, 3, || {
+            let (b, s) = chain_run(total_rows, key_domain, w, false)?;
+            eager_bytes = b;
+            Ok(s)
+        })?;
+        let mut planned_bytes = 0u64;
+        let planned = measure(0, 3, || {
+            let (b, s) = chain_run(total_rows, key_domain, w, true)?;
+            planned_bytes = b;
+            Ok(s)
+        })?;
+        let mb = |b: u64| b as f64 / (1024.0 * 1024.0);
+        report.row(&[
+            w.to_string(),
+            format!("{:.2}", mb(eager_bytes)),
+            format!("{:.2}", mb(planned_bytes)),
+            format!(
+                "{:.2}x",
+                if planned_bytes > 0 { eager_bytes as f64 / planned_bytes as f64 } else { f64::NAN }
+            ),
+            format!("{:.4}", eager.median),
+            format!("{:.4}", planned.median),
+        ]);
+    }
+    report.finish()
+}
+
 fn main() -> anyhow::Result<()> {
     let total_rows = scaled(400_000);
     let key_domain = total_rows / 10; // 10% uniqueness (paper)
@@ -126,5 +229,13 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", async1 / asy.median),
         ]);
     }
-    report.finish()
+    report.finish()?;
+
+    // Planner pushdown: same written program, eager vs plan::-optimized
+    // execution — the shuffled-bytes cells show the projection-pruning
+    // + filter-pushdown + partial-agg win (half the rows this chain
+    // touches are filtered out below the shuffle, and only 2 of 5
+    // columns are live).
+    let pr_rows = scaled(200_000);
+    planner_pushdown_report(pr_rows, pr_rows / 10)
 }

@@ -38,6 +38,28 @@ fn main() -> anyhow::Result<()> {
     )?;
     println!("== revenue by region (orders > 8.0) ==\n{}", by_region.sort_values(&["region"])?.show(10));
 
+    // ---- the same chain, lazily planned -----------------------------------
+    // `lazy()` records the operators instead of running them; the
+    // optimizer pushes the filter below the join's shuffle edges,
+    // prunes the scans to the live columns and picks the map-side
+    // combiner for the aggregation. `explain()` shows all three.
+    let plan = sales
+        .lazy()
+        .join(&customers.lazy(), &["customer"], &["name"])
+        .filter("amount", Cmp::Gt, 8.0f64)
+        .groupby(
+            &["region"],
+            &[AggSpec::new("amount", Agg::Sum), AggSpec::new("amount", Agg::Count)],
+        );
+    println!("== optimized plan (explain) ==\n{}", plan.explain());
+    let lazy_by_region = plan.collect()?.sort_values(&["region"])?;
+    println!("== same revenue table, via the planner ==\n{}", lazy_by_region.show(10));
+    assert_eq!(
+        lazy_by_region.num_rows(),
+        by_region.num_rows(),
+        "planned and eager execution must agree"
+    );
+
     // ---- the same operators, distributed (4 BSP ranks) --------------------
     println!("== distributed: 4 ranks, global groupby ==");
     let results = spawn_world(4, LinkProfile::single_node(), |rank, comm| {

@@ -384,6 +384,18 @@ impl DataFrame {
         Ok(dist::global_counts(env.comm(), &self.table)?.iter().sum())
     }
 
+    // ---- lazy execution (the plan:: layer) -----------------------------------
+
+    /// Switch to deferred execution: subsequent operators build a
+    /// [`crate::plan::LogicalPlan`] that the optimizer rewrites
+    /// (projection pruning, filter pushdown, partial-agg pushdown,
+    /// join-strategy costing) before anything runs. `collect()` /
+    /// `collect_dist()` execute the optimized plan; `explain()` renders
+    /// it.
+    pub fn lazy(&self) -> crate::plan::LazyFrame {
+        crate::plan::LazyFrame::from_table(self.table.clone())
+    }
+
     // ---- tensor handoff (stage 3 of the paper's workflow) --------------------
 
     /// Materialise numeric columns as a row-major f64 buffer plus shape

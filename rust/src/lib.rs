@@ -12,6 +12,7 @@
 //! * `comm` — MPI-analog communicator and collectives
 //! * `exec` — BSP executor + async central-scheduler baseline
 //! * `dataframe` — PyCylon-analog user API
+//! * [`plan`] — lazy, cost-based query planner over the operator layers
 //! * `pipeline` — streaming orchestrator
 //! * [`runtime`] — PJRT loader/executor for AOT-compiled JAX models
 //! * `dl` — distributed-data-parallel training driver
@@ -24,6 +25,7 @@ pub mod dl;
 pub mod exec;
 pub mod ops;
 pub mod pipeline;
+pub mod plan;
 pub mod runtime;
 pub mod table;
 pub mod unomt;

@@ -580,7 +580,10 @@ impl PartialAggPlan {
                 let valid = valid.clone();
                 let mut sane = vals.clone();
                 for (i, flag) in flags.iter_mut().enumerate() {
-                    let ok = valid.as_ref().map_or(true, |b| b.get(i));
+                    let ok = match valid.as_ref() {
+                        None => true,
+                        Some(b) => b.get(i),
+                    };
                     if ok && sane[i].is_nan() {
                         *flag = 1;
                         sane[i] = 0.0;

@@ -20,7 +20,7 @@ pub fn isin_mask(column: &Array, values: &Array) -> Vec<bool> {
     (0..column.len())
         .map(|i| {
             column.is_valid(i)
-                && set.get(&ch[i]).map_or(false, |cands| {
+                && set.get(&ch[i]).is_some_and(|cands| {
                     cands.iter().any(|&j| cell_eq(column, i, values, j as usize))
                 })
         })

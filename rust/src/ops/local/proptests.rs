@@ -207,7 +207,7 @@ fn prop_isin_matches_naive() {
         let set = Array::from_i64(set_v.clone());
         let mask = isin_mask(&col, &set);
         for (i, c) in col_v.iter().enumerate() {
-            let want = c.map_or(false, |v| set_v.contains(&v));
+            let want = c.is_some_and(|v| set_v.contains(&v));
             if mask[i] != want {
                 return Err(format!("row {i}: {:?} in {:?} -> {} want {want}", c, set_v, mask[i]));
             }

@@ -187,7 +187,7 @@ mod tests {
     #[test]
     fn filter_by_pred() {
         let tbl = t();
-        let f = filter_by(&tbl, |i| tbl.cell(i, 0).as_i64().map_or(false, |v| v % 2 == 0));
+        let f = filter_by(&tbl, |i| tbl.cell(i, 0).as_i64().is_some_and(|v| v % 2 == 0));
         assert_eq!(f.num_rows(), 2);
     }
 

@@ -60,7 +60,7 @@ pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
     let ah = hash_columns(&acols);
     let idx: Vec<usize> = (0..da.num_rows())
         .filter(|&i| {
-            bset.get(&ah[i]).map_or(false, |cands| {
+            bset.get(&ah[i]).is_some_and(|cands| {
                 cands.iter().any(|&j| rows_eq(&acols, i, &bcols, j as usize))
             })
         })
@@ -78,7 +78,7 @@ pub fn difference(a: &Table, b: &Table) -> Result<Table> {
     let ah = hash_columns(&acols);
     let idx: Vec<usize> = (0..da.num_rows())
         .filter(|&i| {
-            !bset.get(&ah[i]).map_or(false, |cands| {
+            !bset.get(&ah[i]).is_some_and(|cands| {
                 cands.iter().any(|&j| rows_eq(&acols, i, &bcols, j as usize))
             })
         })

@@ -293,7 +293,10 @@ impl SegmentRing {
 
     /// Append a segment whose span ends at `end_unit` (exclusive).
     pub fn push(&mut self, end_unit: u64, partial: Table) {
-        debug_assert!(self.segs.back().map_or(true, |(e, _)| *e < end_unit));
+        debug_assert!(match self.segs.back() {
+            None => true,
+            Some((e, _)) => *e < end_unit,
+        });
         self.segs.push_back((end_unit, partial));
     }
 

@@ -1,0 +1,530 @@
+//! `LazyFrame` — the deferred-execution twin of
+//! [`crate::dataframe::DataFrame`].
+//!
+//! Every method records a [`LogicalPlan`] node instead of executing;
+//! `collect*` optimizes the whole graph (filter pushdown, projection
+//! pruning, strategy costing — `super::optimize`), lowers it
+//! (`super::physical`) and runs it. The same plan runs:
+//!
+//! * locally (`collect`) — every shuffle short-circuits;
+//! * distributed (`collect_dist` / `collect_comm`) — this rank holds
+//!   one partition of each scanned table, and all ranks must collect
+//!   the same plan in the same order (the `ops::dist` collective
+//!   contract);
+//! * as a stream (`collect_stream`) — keyed-aggregate plans retarget
+//!   onto the [`crate::pipeline`] engine, folding scan batches through
+//!   the same `PartialAggPlan` the batch combiner shuffles.
+
+use super::logical::{
+    GroupStrategy, JoinStrategy, LogicalPlan, SetOpKind,
+};
+use super::optimize::{optimize, CostEnv};
+use super::physical::{apply_steps, lower, LocalStep, PhysicalPlan};
+use crate::comm::{Communicator, LinkProfile};
+use crate::dataframe::{CylonEnv, DataFrame};
+use crate::ops::local::groupby::AggSpec;
+use crate::ops::local::join::{JoinAlgorithm, JoinType};
+use crate::ops::local::sort::SortKey;
+use crate::ops::local::window::WindowSpec;
+use crate::ops::local::Cmp;
+use crate::pipeline::{Pipeline, Routing};
+use crate::table::{Scalar, Table};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// A lazily-built query over one or more source tables. Cheap to
+/// clone; nothing executes until `collect*` / `explain*`.
+#[derive(Clone)]
+pub struct LazyFrame {
+    plan: LogicalPlan,
+}
+
+fn owned(names: &[&str]) -> Vec<String> {
+    names.iter().map(|s| s.to_string()).collect()
+}
+
+impl LazyFrame {
+    /// Start a plan from a materialized table (this rank's partition).
+    pub fn from_table(table: Table) -> LazyFrame {
+        LazyFrame {
+            plan: LogicalPlan::Scan { table: Arc::new(table), projection: None },
+        }
+    }
+
+    /// The underlying logical plan (for inspection and tests).
+    pub fn plan(&self) -> &LogicalPlan {
+        &self.plan
+    }
+
+    fn wrap(plan: LogicalPlan) -> LazyFrame {
+        LazyFrame { plan }
+    }
+
+    // ---- operator builders (all deferred) ------------------------------
+
+    /// Keep the named columns, in order (relational Project).
+    pub fn select(self, columns: &[&str]) -> LazyFrame {
+        Self::wrap(LogicalPlan::Select {
+            input: Box::new(self.plan),
+            columns: owned(columns),
+        })
+    }
+
+    /// Keep rows where `column <op> lit` (relational Select).
+    pub fn filter(self, column: &str, op: Cmp, lit: impl Into<Scalar>) -> LazyFrame {
+        Self::wrap(LogicalPlan::Filter {
+            input: Box::new(self.plan),
+            column: column.to_string(),
+            op,
+            lit: lit.into(),
+        })
+    }
+
+    /// Map a numeric column element-wise.
+    pub fn map_f64(
+        self,
+        column: &str,
+        f: impl Fn(f64) -> f64 + Send + Sync + 'static,
+    ) -> LazyFrame {
+        Self::wrap(LogicalPlan::MapF64 {
+            input: Box::new(self.plan),
+            column: column.to_string(),
+            f: Arc::new(f),
+        })
+    }
+
+    /// Map a string column element-wise.
+    pub fn map_utf8(
+        self,
+        column: &str,
+        f: impl Fn(&str) -> String + Send + Sync + 'static,
+    ) -> LazyFrame {
+        Self::wrap(LogicalPlan::MapUtf8 {
+            input: Box::new(self.plan),
+            column: column.to_string(),
+            f: Arc::new(f),
+        })
+    }
+
+    /// Inner hash join with automatic strategy selection.
+    pub fn join(self, right: &LazyFrame, left_on: &[&str], right_on: &[&str]) -> LazyFrame {
+        self.join_with(
+            right,
+            left_on,
+            right_on,
+            JoinType::Inner,
+            JoinAlgorithm::Hash,
+            JoinStrategy::Auto,
+        )
+    }
+
+    /// Join with explicit type, local algorithm and exchange strategy.
+    pub fn join_with(
+        self,
+        right: &LazyFrame,
+        left_on: &[&str],
+        right_on: &[&str],
+        jt: JoinType,
+        algo: JoinAlgorithm,
+        strategy: JoinStrategy,
+    ) -> LazyFrame {
+        Self::wrap(LogicalPlan::Join {
+            left: Box::new(self.plan),
+            right: Box::new(right.plan.clone()),
+            left_on: owned(left_on),
+            right_on: owned(right_on),
+            jt,
+            algo,
+            strategy,
+        })
+    }
+
+    /// Group by + aggregate with automatic combiner selection.
+    pub fn groupby(self, keys: &[&str], aggs: &[AggSpec]) -> LazyFrame {
+        self.groupby_with(keys, aggs, GroupStrategy::Auto)
+    }
+
+    /// Group by + aggregate with an explicit shuffle strategy.
+    pub fn groupby_with(
+        self,
+        keys: &[&str],
+        aggs: &[AggSpec],
+        strategy: GroupStrategy,
+    ) -> LazyFrame {
+        Self::wrap(LogicalPlan::GroupBy {
+            input: Box::new(self.plan),
+            keys: owned(keys),
+            aggs: aggs.to_vec(),
+            strategy,
+        })
+    }
+
+    /// Ascending sort by column names.
+    pub fn sort_values(self, columns: &[&str]) -> LazyFrame {
+        let keys: Vec<SortKey> = columns.iter().map(|c| SortKey::asc(*c)).collect();
+        self.sort_by(&keys)
+    }
+
+    /// Sort by explicit keys.
+    pub fn sort_by(self, keys: &[SortKey]) -> LazyFrame {
+        Self::wrap(LogicalPlan::Sort { input: Box::new(self.plan), keys: keys.to_vec() })
+    }
+
+    fn set_op(self, other: &LazyFrame, kind: SetOpKind) -> LazyFrame {
+        Self::wrap(LogicalPlan::SetOp {
+            kind,
+            left: Box::new(self.plan),
+            right: Box::new(other.plan.clone()),
+        })
+    }
+
+    /// SQL UNION (distinct).
+    pub fn union(self, other: &LazyFrame) -> LazyFrame {
+        self.set_op(other, SetOpKind::Union)
+    }
+
+    /// SQL UNION ALL.
+    pub fn union_all(self, other: &LazyFrame) -> LazyFrame {
+        self.set_op(other, SetOpKind::UnionAll)
+    }
+
+    /// SQL INTERSECT.
+    pub fn intersect(self, other: &LazyFrame) -> LazyFrame {
+        self.set_op(other, SetOpKind::Intersect)
+    }
+
+    /// SQL EXCEPT.
+    pub fn difference(self, other: &LazyFrame) -> LazyFrame {
+        self.set_op(other, SetOpKind::Difference)
+    }
+
+    /// Distinct values of the key columns.
+    pub fn unique(self, keys: &[&str]) -> LazyFrame {
+        Self::wrap(LogicalPlan::Unique { input: Box::new(self.plan), keys: owned(keys) })
+    }
+
+    /// Drop duplicate rows (whole-row, or by a subset key).
+    pub fn drop_duplicates(self, subset: Option<&[&str]>) -> LazyFrame {
+        Self::wrap(LogicalPlan::DropDuplicates {
+            input: Box::new(self.plan),
+            subset: subset.map(owned),
+        })
+    }
+
+    /// Windowed group-by over the (shuffled) partition's rows in order;
+    /// `spec` must carry an ordinal column
+    /// ([`WindowSpec::with_ordinal`]) so the concatenated windows stay
+    /// distinguishable.
+    pub fn window(self, keys: &[&str], aggs: &[AggSpec], spec: WindowSpec) -> LazyFrame {
+        Self::wrap(LogicalPlan::Window {
+            input: Box::new(self.plan),
+            keys: owned(keys),
+            aggs: aggs.to_vec(),
+            spec,
+        })
+    }
+
+    // ---- optimize / explain --------------------------------------------
+
+    /// Optimize and lower for the given cost environment.
+    pub fn physical_plan(&self, env: &CostEnv) -> PhysicalPlan {
+        lower(&optimize(&self.plan, env))
+    }
+
+    /// Render the optimized physical plan for single-rank execution.
+    pub fn explain(&self) -> String {
+        self.explain_for(1, LinkProfile::zero())
+    }
+
+    /// Render the optimized physical plan as it would execute on a
+    /// world of `world` ranks under `profile`.
+    pub fn explain_for(&self, world: usize, profile: LinkProfile) -> String {
+        self.physical_plan(&CostEnv::new(world, profile)).render()
+    }
+
+    /// Render the *unoptimized* logical plan (for before/after diffing).
+    pub fn explain_logical(&self) -> String {
+        self.plan.render()
+    }
+
+    // ---- execution ------------------------------------------------------
+
+    /// Optimize and execute single-rank.
+    pub fn collect(&self) -> Result<DataFrame> {
+        Ok(self.physical_plan(&CostEnv::local()).execute_local()?.into())
+    }
+
+    /// Execute eagerly with no optimization (the differential oracle).
+    pub fn collect_unoptimized(&self) -> Result<DataFrame> {
+        Ok(self.plan.execute_naive()?.into())
+    }
+
+    /// Optimize for `comm`'s world (zero-cost link profile: strategy
+    /// ties break on modeled bytes) and execute this rank's share.
+    pub fn collect_comm<C: Communicator + ?Sized>(&self, comm: &mut C) -> Result<DataFrame> {
+        self.collect_comm_with(comm, LinkProfile::zero())
+    }
+
+    /// Optimize under an explicit link profile and execute on `comm`.
+    ///
+    /// Strategy agreement: rewrite passes depend only on schemas (which
+    /// are identical on every rank of a world), but `Auto` join
+    /// strategies are costed from rank-local partition sizes and could
+    /// diverge on skewed partitions near the broadcast/shuffle
+    /// crossover — a split plan would desynchronise the collective
+    /// sequence. Before executing, every rank adopts rank 0's join
+    /// choices (one broadcast of one byte per join).
+    pub fn collect_comm_with<C: Communicator + ?Sized>(
+        &self,
+        comm: &mut C,
+        profile: LinkProfile,
+    ) -> Result<DataFrame> {
+        let env = CostEnv::new(comm.world_size(), profile);
+        let mut optimized = optimize(&self.plan, &env);
+        if comm.world_size() > 1 {
+            let mut mine = Vec::new();
+            super::optimize::join_strategy_bytes(&optimized, &mut mine);
+            if !mine.is_empty() {
+                // Plan shape — and so the number of joins — is the same
+                // on every rank, so this branch is taken in lockstep.
+                let agreed = crate::comm::broadcast_bytes(comm, 0, Some(mine))?;
+                let mut idx = 0;
+                optimized =
+                    super::optimize::with_join_strategies(optimized, &agreed, &mut idx);
+            }
+        }
+        Ok(lower(&optimized).execute(comm)?.into())
+    }
+
+    /// Execute distributed through a [`CylonEnv`] (the paper's
+    /// Listing-1 shape, lazily).
+    pub fn collect_dist(&self, env: &mut CylonEnv) -> Result<DataFrame> {
+        self.collect_comm(env.comm())
+    }
+
+    /// Retarget a keyed-aggregate plan onto the streaming
+    /// [`Pipeline`] engine: the scan is replayed as `batch_rows`-row
+    /// batches, fused per-partition steps run in a `map` stage, and the
+    /// aggregation folds through the pipeline's stateful
+    /// `keyed_aggregate` over `shards` key-partitioned shards — the
+    /// same `PartialAggPlan` the batch combiner shuffles, so the
+    /// concatenated shard outputs equal the batch `collect` up to row
+    /// order.
+    ///
+    /// Only plans of shape `GroupBy(per-partition chain(Scan))` with
+    /// decomposable aggregations stream; anything else errors.
+    pub fn collect_stream(
+        &self,
+        shards: usize,
+        batch_rows: usize,
+        capacity: usize,
+    ) -> Result<DataFrame> {
+        if batch_rows == 0 {
+            bail!("collect_stream: batch_rows must be > 0");
+        }
+        let phys = self.physical_plan(&CostEnv::local());
+        let PhysicalPlan::Agg { input, keys, aggs, partial } = phys else {
+            bail!(
+                "collect_stream: only keyed-aggregate plans target the pipeline \
+                 (plan root is not a group-by); use collect()/collect_dist()"
+            );
+        };
+        if !partial {
+            bail!(
+                "collect_stream: the aggregations do not decompose into partials \
+                 (std/var/first/last); the streaming engine cannot fold them"
+            );
+        }
+        // The input must be a per-partition chain over one scan.
+        let (scan, steps): (PhysicalPlan, Vec<LocalStep>) = match *input {
+            PhysicalPlan::Fused { input, steps } => match *input {
+                s @ PhysicalPlan::Scan { .. } => (s, steps),
+                _ => bail!(
+                    "collect_stream: the group-by input must be a per-partition \
+                     select/filter/map chain over one scan"
+                ),
+            },
+            s @ PhysicalPlan::Scan { .. } => (s, Vec::new()),
+            _ => bail!(
+                "collect_stream: the group-by input must be a per-partition \
+                 select/filter/map chain over one scan"
+            ),
+        };
+        let source = scan
+            .execute_local()
+            .context("collect_stream: scan materialization")?;
+        let out_schema = self.plan.schema()?;
+        let steps = Arc::new(steps);
+        let key_names = keys.clone();
+        let run = {
+            let mut p = Pipeline::new("lazy-stream").source("scan", 1, move |_, emit| {
+                let mut start = 0usize;
+                while start < source.num_rows() {
+                    let len = batch_rows.min(source.num_rows() - start);
+                    emit(source.slice(start, len))?;
+                    start += len;
+                }
+                Ok(())
+            });
+            if !steps.is_empty() {
+                let steps = steps.clone();
+                p = p.map("fused", shards, Routing::Rebalance, move |t| {
+                    let out = apply_steps(&t, &steps)?;
+                    Ok(if out.num_rows() == 0 { None } else { Some(out) })
+                });
+            }
+            let key_refs: Vec<&str> = key_names.iter().map(String::as_str).collect();
+            p.keyed_aggregate("agg", shards, &key_refs, &aggs).run(capacity)?
+        };
+        if run.output.is_empty() {
+            return Ok(Table::empty((*out_schema).clone()).into());
+        }
+        let refs: Vec<&Table> = run.output.iter().collect();
+        Ok(Table::concat_tables(&refs)?.into())
+    }
+}
+
+impl From<DataFrame> for LazyFrame {
+    fn from(df: DataFrame) -> LazyFrame {
+        LazyFrame::from_table(df.into_table())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::local::groupby::Agg;
+    use crate::table::Array;
+
+    fn df() -> DataFrame {
+        let n = 240usize;
+        DataFrame::from_columns(vec![
+            ("k", Array::from_i64((0..n).map(|i| (i % 7) as i64).collect())),
+            ("v", Array::from_f64((0..n).map(|i| (i % 11) as f64).collect())),
+            ("pad", Array::from_f64(vec![0.5; n])),
+            ("s", Array::from_strs(&(0..n).map(|i| if i % 2 == 0 { "e" } else { "o" }).collect::<Vec<_>>())),
+        ])
+        .unwrap()
+    }
+
+    fn canon(t: &Table) -> Vec<String> {
+        let mut rows: Vec<String> =
+            (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect();
+        rows.sort();
+        rows
+    }
+
+    #[test]
+    fn lazy_chain_matches_eager_chain() {
+        let lazy = df()
+            .lazy()
+            .filter("v", Cmp::Gt, 2.0f64)
+            .select(&["k", "v", "s"])
+            .groupby(&["k", "s"], &[AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)])
+            .collect()
+            .unwrap();
+        let eager = df()
+            .filter("v", Cmp::Gt, 2.0f64)
+            .unwrap()
+            .select(&["k", "v", "s"])
+            .unwrap()
+            .groupby(&["k", "s"], &[AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)])
+            .unwrap();
+        assert_eq!(canon(lazy.table()), canon(eager.table()));
+        assert_eq!(lazy.column_names(), eager.column_names());
+    }
+
+    #[test]
+    fn collect_matches_unoptimized_collect() {
+        let frame = df()
+            .lazy()
+            .filter("s", Cmp::Eq, "e")
+            .join(&df().lazy().select(&["k", "pad"]), &["k"], &["k"])
+            .select(&["k", "v", "pad_r"])
+            .sort_values(&["k", "v"]);
+        let opt = frame.collect().unwrap();
+        let naive = frame.collect_unoptimized().unwrap();
+        assert_eq!(canon(opt.table()), canon(naive.table()));
+        assert_eq!(opt.column_names(), naive.column_names());
+    }
+
+    #[test]
+    fn explain_shows_both_rewrites() {
+        let frame = df()
+            .lazy()
+            .filter("v", Cmp::Ge, 1.0f64)
+            .groupby(&["k"], &[AggSpec::new("v", Agg::Mean)]);
+        let ex = frame.explain();
+        assert!(ex.contains("PartialAgg"), "partial-agg pushdown missing:\n{ex}");
+        assert!(ex.contains("pruned to 2 of 4 cols"), "projection pruning missing:\n{ex}");
+        let shuffle_line = ex.lines().position(|l| l.contains("Shuffle")).unwrap();
+        let partial_line = ex.lines().position(|l| l.contains("PartialAgg")).unwrap();
+        assert!(partial_line > shuffle_line, "PartialAgg must sit below the shuffle:\n{ex}");
+    }
+
+    #[test]
+    fn explain_for_shows_broadcast_choice() {
+        let small = DataFrame::from_columns(vec![
+            ("k", Array::from_i64(vec![0, 1, 2])),
+            ("tag", Array::from_strs(&["a", "b", "c"])),
+        ])
+        .unwrap();
+        let ex = df()
+            .lazy()
+            .join(&small.lazy(), &["k"], &["k"])
+            .explain_for(8, LinkProfile::cluster(4));
+        assert!(ex.contains("broadcast right"), "small side should broadcast:\n{ex}");
+        assert!(ex.contains("Broadcast[allgather"), "{ex}");
+    }
+
+    #[test]
+    fn stream_target_matches_batch_collect() {
+        let frame = df()
+            .lazy()
+            .filter("v", Cmp::Gt, 1.0f64)
+            .groupby(&["k", "s"], &[
+                AggSpec::new("v", Agg::Sum),
+                AggSpec::new("v", Agg::Count),
+                AggSpec::new("v", Agg::Mean),
+            ]);
+        let batch = frame.collect().unwrap();
+        for shards in [1usize, 3] {
+            let streamed = frame.collect_stream(shards, 17, 4).unwrap();
+            assert_eq!(
+                canon(streamed.table()),
+                canon(batch.table()),
+                "stream != batch at {shards} shards"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_target_rejects_non_aggregate_plans() {
+        let sorted = df().lazy().sort_values(&["v"]);
+        assert!(sorted.collect_stream(2, 16, 2).is_err());
+        let std = df()
+            .lazy()
+            .groupby(&["k"], &[AggSpec::new("v", Agg::Std)]);
+        assert!(std.collect_stream(2, 16, 2).is_err(), "std does not decompose");
+        let frame = df().lazy().groupby(&["k"], &[AggSpec::new("v", Agg::Sum)]);
+        assert!(frame.collect_stream(2, 0, 2).is_err(), "zero batch rows");
+    }
+
+    #[test]
+    fn window_plan_collects_per_window_aggregates() {
+        let spec = WindowSpec::tumbling_rows(60).with_ordinal("__w");
+        let out = df()
+            .lazy()
+            .window(&["k"], &[AggSpec::new("v", Agg::Sum)], spec.clone())
+            .collect()
+            .unwrap();
+        // 240 rows / 60 per window = 4 windows × 7 keys
+        assert_eq!(out.num_rows(), 28);
+        let naive = df()
+            .lazy()
+            .window(&["k"], &[AggSpec::new("v", Agg::Sum)], spec)
+            .collect_unoptimized()
+            .unwrap();
+        assert_eq!(canon(out.table()), canon(naive.table()));
+    }
+}

@@ -1,0 +1,456 @@
+//! The logical plan: a DAG of relational operator nodes built by the
+//! lazy [`crate::plan::LazyFrame`] API.
+//!
+//! A `LogicalPlan` records *what* to compute, never *how*: scan nodes
+//! hold the source partitions, every other node names its inputs and
+//! parameters. The optimizer (`super::optimize`) rewrites the DAG
+//! (projection pruning, filter pushdown, strategy selection) and the
+//! lowering (`super::physical`) turns it into an executable
+//! [`super::PhysicalPlan`] over the existing `ops::local` / `ops::dist`
+//! primitives.
+//!
+//! Two interpreters live here because they double as the oracle and the
+//! validator:
+//!
+//! * [`LogicalPlan::execute_naive`] runs the plan eagerly with local
+//!   kernels, exactly as the fluent eager `DataFrame` API would — the
+//!   reference the property tests compare optimized execution against;
+//! * [`LogicalPlan::schema`] runs the same interpreter over zero-row
+//!   scans, so a plan's output schema is *defined* by the kernels it
+//!   lowers to and can never drift from them.
+
+use crate::ops::local::groupby::AggSpec;
+use crate::ops::local::join::{JoinAlgorithm, JoinType};
+use crate::ops::local::sort::SortKey;
+use crate::ops::local::window::WindowSpec;
+use crate::ops::local::{self, Cmp};
+use crate::table::{Array, Scalar, SchemaRef, Table};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Scalar map UDF over a numeric column (`df.map_f64` in plan form).
+pub type MapF64Udf = Arc<dyn Fn(f64) -> f64 + Send + Sync>;
+/// Scalar map UDF over a string column (`df.map_utf8` in plan form).
+pub type MapUtf8Udf = Arc<dyn Fn(&str) -> String + Send + Sync>;
+
+/// How a join is executed; `Auto` lets the optimizer cost
+/// hash-shuffle against broadcast using table stats and the link
+/// profile (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinStrategy {
+    /// Costed at optimize time.
+    Auto,
+    /// Hash-partition both sides and shuffle (`ops::dist::dist_join`).
+    Hash,
+    /// Allgather the right side (`ops::dist::broadcast_join`); only
+    /// valid for `Inner`/`Left` joins.
+    Broadcast,
+}
+
+/// How a group-by is executed; `Auto` picks the map-side combiner
+/// whenever the requested aggregations decompose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupStrategy {
+    /// Resolved at optimize time.
+    Auto,
+    /// Shuffle every raw row, then aggregate (`ops::dist::dist_groupby`).
+    FullShuffle,
+    /// Partial-aggregate below the shuffle so at most one row per
+    /// (rank, group) crosses the wire
+    /// (`ops::dist::dist_groupby_partial`).
+    PartialShuffle,
+}
+
+/// Relational set operation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetOpKind {
+    Union,
+    UnionAll,
+    Intersect,
+    Difference,
+}
+
+impl SetOpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SetOpKind::Union => "union",
+            SetOpKind::UnionAll => "union_all",
+            SetOpKind::Intersect => "intersect",
+            SetOpKind::Difference => "difference",
+        }
+    }
+}
+
+/// One node of the lazy operator DAG. Built via [`crate::plan::LazyFrame`];
+/// errors (unknown columns, type mismatches) surface at `collect` /
+/// `explain` time, when the kernels first see the schema.
+#[derive(Clone)]
+pub enum LogicalPlan {
+    /// Leaf: this rank's partition of a source table. `projection`
+    /// (written by the optimizer) narrows the scan to the named
+    /// columns, in the given order.
+    Scan { table: Arc<Table>, projection: Option<Vec<String>> },
+    /// Relational Project: keep `columns`, in order.
+    Select { input: Box<LogicalPlan>, columns: Vec<String> },
+    /// Relational Select: keep rows where `column <op> lit`.
+    Filter { input: Box<LogicalPlan>, column: String, op: Cmp, lit: Scalar },
+    /// Per-row numeric transform of one column (column type preserved
+    /// by `ops::local::map_column_f64`).
+    MapF64 { input: Box<LogicalPlan>, column: String, f: MapF64Udf },
+    /// Per-row string transform of one column.
+    MapUtf8 { input: Box<LogicalPlan>, column: String, f: MapUtf8Udf },
+    /// Join on parallel key lists (`ops::local::join` naming rules:
+    /// right columns get `_r` appended on name collision).
+    Join {
+        left: Box<LogicalPlan>,
+        right: Box<LogicalPlan>,
+        left_on: Vec<String>,
+        right_on: Vec<String>,
+        jt: JoinType,
+        algo: JoinAlgorithm,
+        strategy: JoinStrategy,
+    },
+    /// Group by `keys`, compute `aggs` (keys then aggs, first-seen key
+    /// order — the `ops::local::groupby_aggregate` contract).
+    GroupBy {
+        input: Box<LogicalPlan>,
+        keys: Vec<String>,
+        aggs: Vec<AggSpec>,
+        strategy: GroupStrategy,
+    },
+    /// Total order under multi-key comparison.
+    Sort { input: Box<LogicalPlan>, keys: Vec<SortKey> },
+    /// SQL set operation over union-compatible inputs.
+    SetOp { kind: SetOpKind, left: Box<LogicalPlan>, right: Box<LogicalPlan> },
+    /// Distinct values of the key columns (output = key columns only).
+    Unique { input: Box<LogicalPlan>, keys: Vec<String> },
+    /// First row per duplicate class (`subset` columns, or whole rows).
+    DropDuplicates { input: Box<LogicalPlan>, subset: Option<Vec<String>> },
+    /// Windowed group-by over the partition's rows in order: one
+    /// aggregate table per window of `spec`, concatenated, each row
+    /// tagged with the window ordinal column `spec.ordinal` (required —
+    /// without it the concatenated windows would be indistinguishable).
+    Window {
+        input: Box<LogicalPlan>,
+        keys: Vec<String>,
+        aggs: Vec<AggSpec>,
+        spec: WindowSpec,
+    },
+}
+
+/// Borrow a `Vec<String>` as the `&[&str]` the kernel APIs take.
+pub(crate) fn as_strs(v: &[String]) -> Vec<&str> {
+    v.iter().map(String::as_str).collect()
+}
+
+impl LogicalPlan {
+    /// Children of this node, in evaluation order.
+    pub fn inputs(&self) -> Vec<&LogicalPlan> {
+        match self {
+            LogicalPlan::Scan { .. } => vec![],
+            LogicalPlan::Select { input, .. }
+            | LogicalPlan::Filter { input, .. }
+            | LogicalPlan::MapF64 { input, .. }
+            | LogicalPlan::MapUtf8 { input, .. }
+            | LogicalPlan::GroupBy { input, .. }
+            | LogicalPlan::Sort { input, .. }
+            | LogicalPlan::Unique { input, .. }
+            | LogicalPlan::DropDuplicates { input, .. }
+            | LogicalPlan::Window { input, .. } => vec![input],
+            LogicalPlan::Join { left, right, .. } | LogicalPlan::SetOp { left, right, .. } => {
+                vec![left, right]
+            }
+        }
+    }
+
+    /// Evaluate with local kernels. `empty_scans` replaces every scan
+    /// with its zero-row slice — the schema/validation probe.
+    fn eval_local(&self, empty_scans: bool) -> Result<Table> {
+        match self {
+            LogicalPlan::Scan { table, projection } => {
+                let t = if empty_scans { table.slice(0, 0) } else { table.as_ref().clone() };
+                match projection {
+                    None => Ok(t),
+                    Some(cols) => t.select_columns(&as_strs(cols)),
+                }
+            }
+            LogicalPlan::Select { input, columns } => {
+                input.eval_local(empty_scans)?.select_columns(&as_strs(columns))
+            }
+            LogicalPlan::Filter { input, column, op, lit } => {
+                local::filter_cmp(&input.eval_local(empty_scans)?, column, *op, lit)
+            }
+            LogicalPlan::MapF64 { input, column, f } => {
+                local::map_column_f64(&input.eval_local(empty_scans)?, column, f.as_ref())
+            }
+            LogicalPlan::MapUtf8 { input, column, f } => {
+                local::map_column_utf8(&input.eval_local(empty_scans)?, column, f.as_ref())
+            }
+            LogicalPlan::Join { left, right, left_on, right_on, jt, algo, .. } => local::join(
+                &left.eval_local(empty_scans)?,
+                &right.eval_local(empty_scans)?,
+                &as_strs(left_on),
+                &as_strs(right_on),
+                *jt,
+                *algo,
+            ),
+            LogicalPlan::GroupBy { input, keys, aggs, .. } => {
+                local::groupby_aggregate(&input.eval_local(empty_scans)?, &as_strs(keys), aggs)
+            }
+            LogicalPlan::Sort { input, keys } => {
+                local::sort(&input.eval_local(empty_scans)?, keys)
+            }
+            LogicalPlan::SetOp { kind, left, right } => {
+                let (l, r) =
+                    (left.eval_local(empty_scans)?, right.eval_local(empty_scans)?);
+                match kind {
+                    SetOpKind::Union => local::union(&l, &r),
+                    SetOpKind::UnionAll => local::union_all(&l, &r),
+                    SetOpKind::Intersect => local::intersect(&l, &r),
+                    SetOpKind::Difference => local::difference(&l, &r),
+                }
+            }
+            LogicalPlan::Unique { input, keys } => {
+                local::unique(&input.eval_local(empty_scans)?, &as_strs(keys))
+            }
+            LogicalPlan::DropDuplicates { input, subset } => {
+                let strs = subset.as_ref().map(|s| as_strs(s));
+                local::drop_duplicates(&input.eval_local(empty_scans)?, strs.as_deref())
+            }
+            LogicalPlan::Window { input, keys, aggs, spec } => {
+                windowed_concat(&input.eval_local(empty_scans)?, keys, aggs, spec)
+            }
+        }
+    }
+
+    /// Execute the plan eagerly with local kernels, with no
+    /// optimization — the oracle the property tests and the
+    /// planned-vs-eager wall compare against (single-rank semantics).
+    pub fn execute_naive(&self) -> Result<Table> {
+        self.eval_local(false)
+    }
+
+    /// Output schema, derived by running the kernels over zero-row
+    /// scans. Also validates column references and type compatibility —
+    /// the same errors `collect` would raise, but before any data moves.
+    pub fn schema(&self) -> Result<SchemaRef> {
+        Ok(self.eval_local(true)?.schema().clone())
+    }
+
+    /// Output column names (schema probe).
+    pub fn output_names(&self) -> Result<Vec<String>> {
+        Ok(self.schema()?.names().iter().map(|s| s.to_string()).collect())
+    }
+
+    /// One-line label for plan rendering.
+    pub fn label(&self) -> String {
+        match self {
+            LogicalPlan::Scan { table, projection } => match projection {
+                None => format!(
+                    "Scan[{} rows; {} cols]",
+                    table.num_rows(),
+                    table.num_columns()
+                ),
+                Some(cols) => format!(
+                    "Scan[{} rows; {} of {} cols: {}]",
+                    table.num_rows(),
+                    cols.len(),
+                    table.num_columns(),
+                    cols.join(",")
+                ),
+            },
+            LogicalPlan::Select { columns, .. } => format!("Select[{}]", columns.join(",")),
+            LogicalPlan::Filter { column, op, lit, .. } => {
+                format!("Filter[{column} {} {lit}]", cmp_symbol(*op))
+            }
+            LogicalPlan::MapF64 { column, .. } => format!("MapF64[{column}]"),
+            LogicalPlan::MapUtf8 { column, .. } => format!("MapUtf8[{column}]"),
+            LogicalPlan::Join { left_on, right_on, jt, strategy, .. } => format!(
+                "Join[{jt:?} on {}={}; {strategy:?}]",
+                left_on.join(","),
+                right_on.join(",")
+            ),
+            LogicalPlan::GroupBy { keys, aggs, strategy, .. } => format!(
+                "GroupBy[{}; {}; {strategy:?}]",
+                keys.join(","),
+                agg_list(aggs)
+            ),
+            LogicalPlan::Sort { keys, .. } => format!("Sort[{}]", sort_list(keys)),
+            LogicalPlan::SetOp { kind, .. } => format!("SetOp[{}]", kind.name()),
+            LogicalPlan::Unique { keys, .. } => format!("Unique[{}]", keys.join(",")),
+            LogicalPlan::DropDuplicates { subset, .. } => match subset {
+                None => "DropDuplicates[all]".to_string(),
+                Some(s) => format!("DropDuplicates[{}]", s.join(",")),
+            },
+            LogicalPlan::Window { keys, aggs, spec, .. } => format!(
+                "Window[{}; {}; size={} step={} {:?}]",
+                keys.join(","),
+                agg_list(aggs),
+                spec.size,
+                spec.step,
+                spec.unit
+            ),
+        }
+    }
+
+    /// Indented rendering of the logical DAG (pre-order, children
+    /// indented below their parent).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out
+    }
+
+    fn render_into(&self, out: &mut String, indent: usize) {
+        out.push_str(&"  ".repeat(indent));
+        out.push_str(&self.label());
+        out.push('\n');
+        for child in self.inputs() {
+            child.render_into(out, indent + 1);
+        }
+    }
+}
+
+/// Render one comparison operator for explain output.
+pub(crate) fn cmp_symbol(op: Cmp) -> &'static str {
+    match op {
+        Cmp::Eq => "==",
+        Cmp::Ne => "!=",
+        Cmp::Lt => "<",
+        Cmp::Le => "<=",
+        Cmp::Gt => ">",
+        Cmp::Ge => ">=",
+    }
+}
+
+pub(crate) fn agg_list(aggs: &[AggSpec]) -> String {
+    aggs.iter()
+        .map(|a| format!("{}({})", a.agg.name(), a.column))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+pub(crate) fn sort_list(keys: &[SortKey]) -> String {
+    keys.iter()
+        .map(|k| {
+            format!("{} {}", k.column, if k.ascending { "asc" } else { "desc" })
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// The Window node's kernel form: per-window local group-bys over the
+/// partition's rows in order, concatenated, each window tagged with its
+/// ordinal. Zero input rows produce the empty table of the output
+/// schema (zero windows), which is also how the schema probe sees it.
+pub(crate) fn windowed_concat(
+    t: &Table,
+    keys: &[String],
+    aggs: &[AggSpec],
+    spec: &WindowSpec,
+) -> Result<Table> {
+    let Some(ordinal) = spec.ordinal.clone() else {
+        bail!(
+            "plan: Window requires an ordinal column (WindowSpec::with_ordinal) so \
+             concatenated windows stay distinguishable"
+        );
+    };
+    let key_strs = as_strs(keys);
+    let wins = local::windowed_groupby(t, &key_strs, aggs, spec)?;
+    if wins.is_empty() {
+        // Synthesise the empty output: the group-by schema plus the
+        // ordinal column the per-window tables would carry.
+        let empty = local::groupby_aggregate(&t.slice(0, 0), &key_strs, aggs)?;
+        return empty.with_column(&ordinal, Array::from_i64(Vec::new()));
+    }
+    let refs: Vec<&Table> = wins.iter().collect();
+    Table::concat_tables(&refs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::local::groupby::Agg;
+
+    fn scan() -> LogicalPlan {
+        LogicalPlan::Scan {
+            table: Arc::new(
+                Table::from_columns(vec![
+                    ("k", Array::from_i64(vec![1, 2, 1, 3])),
+                    ("v", Array::from_f64(vec![10.0, 20.0, 30.0, 40.0])),
+                    ("s", Array::from_strs(&["a", "b", "c", "d"])),
+                ])
+                .unwrap(),
+            ),
+            projection: None,
+        }
+    }
+
+    #[test]
+    fn schema_probe_matches_kernel_output() {
+        let plan = LogicalPlan::GroupBy {
+            input: Box::new(LogicalPlan::Filter {
+                input: Box::new(scan()),
+                column: "v".into(),
+                op: Cmp::Gt,
+                lit: Scalar::Float64(15.0),
+            }),
+            keys: vec!["k".into()],
+            aggs: vec![AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)],
+            strategy: GroupStrategy::Auto,
+        };
+        let schema = plan.schema().unwrap();
+        let out = plan.execute_naive().unwrap();
+        assert_eq!(schema.as_ref(), out.schema().as_ref());
+        assert_eq!(schema.names(), vec!["k", "v_sum", "v_count"]);
+    }
+
+    #[test]
+    fn schema_probe_surfaces_bad_references() {
+        let plan = LogicalPlan::Select {
+            input: Box::new(scan()),
+            columns: vec!["nope".into()],
+        };
+        assert!(plan.schema().is_err(), "unknown column must fail the probe");
+        let plan = LogicalPlan::Filter {
+            input: Box::new(scan()),
+            column: "s".into(),
+            op: Cmp::Lt,
+            lit: Scalar::Int64(3),
+        };
+        assert!(plan.schema().is_err(), "utf8 vs int comparison must fail the probe");
+    }
+
+    #[test]
+    fn window_node_requires_ordinal_and_concats() {
+        let spec = WindowSpec::tumbling_rows(2);
+        let plan = LogicalPlan::Window {
+            input: Box::new(scan()),
+            keys: vec!["k".into()],
+            aggs: vec![AggSpec::new("v", Agg::Sum)],
+            spec: spec.clone(),
+        };
+        assert!(plan.execute_naive().is_err(), "ordinal-less window must be rejected");
+        let plan = LogicalPlan::Window {
+            input: Box::new(scan()),
+            keys: vec!["k".into()],
+            aggs: vec![AggSpec::new("v", Agg::Sum)],
+            spec: spec.with_ordinal("__w"),
+        };
+        let out = plan.execute_naive().unwrap();
+        assert_eq!(out.schema().names(), vec!["k", "v_sum", "__w"]);
+        // [0,2) has keys {1,2}; [2,4) has keys {1,3} → 4 window rows
+        assert_eq!(out.num_rows(), 4);
+        assert_eq!(plan.schema().unwrap().as_ref(), out.schema().as_ref());
+    }
+
+    #[test]
+    fn render_indents_children() {
+        let plan = LogicalPlan::Sort {
+            input: Box::new(scan()),
+            keys: vec![SortKey::desc("v")],
+        };
+        let r = plan.render();
+        assert!(r.contains("Sort[v desc]\n  Scan["), "got: {r}");
+    }
+}

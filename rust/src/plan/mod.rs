@@ -1,0 +1,49 @@
+//! `plan` — the lazy, cost-based query planner (L2.5).
+//!
+//! The eager [`crate::dataframe::DataFrame`] API executes every call
+//! immediately, so a `select → filter → join → groupby` chain shuffles
+//! full-width tables and never reorders anything. This layer makes the
+//! whole composition visible before anything runs:
+//!
+//! 1. [`DataFrame::lazy`](crate::dataframe::DataFrame::lazy) starts a
+//!    [`LazyFrame`], whose methods record [`LogicalPlan`] nodes
+//!    (scan / select / filter / map / join / groupby / sort / set ops /
+//!    window) instead of executing;
+//! 2. the optimizer ([`optimize()`]) rewrites the DAG: **filter
+//!    pushdown** below the future shuffle edges, **projection pruning**
+//!    into the scans, **partial-aggregate pushdown** through the shared
+//!    [`crate::ops::local::PartialAggPlan`], and **hash-vs-broadcast
+//!    join selection** costed from table stats and the
+//!    [`crate::comm::LinkProfile`];
+//! 3. lowering ([`lower`]) fuses adjacent per-partition nodes into one
+//!    pass and emits a [`PhysicalPlan`] that executes through the
+//!    existing `ops::local` / `ops::dist` / `comm` primitives — or
+//!    retargets keyed-aggregate plans onto the streaming
+//!    [`crate::pipeline`] engine
+//!    ([`LazyFrame::collect_stream`]).
+//!
+//! `explain()` renders the optimized operator tree with its
+//! communication edges, so both headline rewrites are observable: the
+//! pruned scan lists its surviving columns, and the combined group-by
+//! shows its `PartialAgg` node *below* the `Shuffle` edge.
+//!
+//! Every plan executed via `collect_comm`/`collect_dist` is
+//! differential-tested against the eager operator path (byte-identical
+//! at world sizes 1/2/4/7 — `rust/tests/dist_vs_local.rs`), and random
+//! operator chains are property-tested against naive eager evaluation
+//! (`proptests` below). DESIGN.md §8 documents the node taxonomy,
+//! rewrite rules, costing inputs and lowering rules.
+
+mod lazy;
+mod logical;
+pub mod optimize;
+mod physical;
+#[cfg(test)]
+mod proptests;
+
+pub use lazy::LazyFrame;
+pub use logical::{
+    GroupStrategy, JoinStrategy, LogicalPlan, MapF64Udf, MapUtf8Udf, SetOpKind,
+};
+pub use optimize::{optimize, stats, CostEnv, Stats};
+pub use physical::{lower, LocalStep, PhysicalPlan};

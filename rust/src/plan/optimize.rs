@@ -1,0 +1,989 @@
+//! Rewrite rules and costing over [`LogicalPlan`] (DESIGN.md §8).
+//!
+//! Three passes run in order, each preserving the plan's observable
+//! result (the root's schema and rows):
+//!
+//! 1. **Filter pushdown** — filters slide below every node they commute
+//!    with (projection, map on another column, sort, set ops, group-by
+//!    on a key column, dedup, and the legal join sides), moving row
+//!    reduction below the shuffle edges the lowering will insert.
+//! 2. **Projection pruning** — a top-down required-column walk narrows
+//!    every `Scan` to the columns some narrowing ancestor (Select,
+//!    GroupBy, Unique, join keys…) actually observes, so shuffles move
+//!    only live columns. `None` means "all columns observed" and
+//!    disables pruning, which makes the pass sound by construction:
+//!    nothing narrows unless an ancestor provably drops the rest.
+//! 3. **Strategy resolution** — `Auto` join/group-by strategies are
+//!    fixed using bottom-up table stats and the cluster
+//!    [`LinkProfile`]: group-bys take the map-side combiner whenever
+//!    the aggregations decompose over [`PartialAggPlan`]; joins take
+//!    broadcast when the modeled allgather beats the two-sided shuffle.
+
+use super::logical::{GroupStrategy, JoinStrategy, LogicalPlan, SetOpKind};
+use crate::comm::profile::{LinkCost, LinkProfile};
+use crate::ops::local::groupby::PartialAggPlan;
+use crate::ops::local::join::JoinType;
+use crate::ops::local::Cmp;
+use std::collections::BTreeSet;
+
+/// Inputs the cost-based rules see: the execution world size and the
+/// link profile the communicator will charge.
+#[derive(Debug, Clone, Copy)]
+pub struct CostEnv {
+    pub world: usize,
+    pub profile: LinkProfile,
+}
+
+impl CostEnv {
+    /// Single-rank environment: every shuffle is a no-op, so strategy
+    /// choices degenerate (joins stay hash).
+    pub fn local() -> CostEnv {
+        CostEnv { world: 1, profile: LinkProfile::zero() }
+    }
+
+    pub fn new(world: usize, profile: LinkProfile) -> CostEnv {
+        CostEnv { world, profile }
+    }
+
+    /// The link class a collective pays under this world size: intra
+    /// while the world fits one node, inter otherwise (worst-link
+    /// approximation; DESIGN.md §8).
+    fn link(&self) -> LinkCost {
+        if self.world <= self.profile.ranks_per_node {
+            self.profile.intra
+        } else {
+            self.profile.inter
+        }
+    }
+
+    /// Alpha-beta seconds for `bytes` total moved in `msgs` messages.
+    fn seconds(&self, bytes: f64, msgs: f64) -> f64 {
+        let link = self.link();
+        msgs * link.latency + bytes / link.bandwidth
+    }
+}
+
+/// Estimated global size of a node's output.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub rows: f64,
+    pub bytes: f64,
+}
+
+/// Selectivity heuristic per comparison operator (documented in
+/// DESIGN.md §8; deterministic so plans are stable across runs).
+fn selectivity(op: Cmp) -> f64 {
+    match op {
+        Cmp::Eq => 0.1,
+        Cmp::Ne => 0.9,
+        Cmp::Lt | Cmp::Le | Cmp::Gt | Cmp::Ge => 0.5,
+    }
+}
+
+/// Bottom-up size estimation. Exact at scans, heuristic above them —
+/// good enough to order broadcast against shuffle, which is what the
+/// optimizer uses it for.
+pub fn stats(plan: &LogicalPlan) -> Stats {
+    match plan {
+        LogicalPlan::Scan { table, projection } => {
+            let rows = table.num_rows() as f64;
+            let bytes = match projection {
+                None => table.nbytes() as f64,
+                Some(cols) => cols
+                    .iter()
+                    .filter_map(|c| table.column_by_name(c).ok())
+                    .map(|a| a.nbytes() as f64)
+                    .sum(),
+            };
+            Stats { rows, bytes }
+        }
+        LogicalPlan::Select { input, columns } => {
+            let s = stats(input);
+            let ncols = input
+                .schema()
+                .map(|sch| sch.len().max(1))
+                .unwrap_or(columns.len().max(1));
+            let keep = (columns.len() as f64 / ncols as f64).min(1.0);
+            Stats { rows: s.rows, bytes: s.bytes * keep }
+        }
+        LogicalPlan::Filter { input, op, .. } => {
+            let s = stats(input);
+            let sel = selectivity(*op);
+            Stats { rows: s.rows * sel, bytes: s.bytes * sel }
+        }
+        LogicalPlan::MapF64 { input, .. } | LogicalPlan::MapUtf8 { input, .. } => stats(input),
+        LogicalPlan::Join { left, right, .. } => {
+            let (l, r) = (stats(left), stats(right));
+            Stats { rows: l.rows.max(r.rows), bytes: l.bytes + r.bytes }
+        }
+        LogicalPlan::GroupBy { input, .. } | LogicalPlan::Unique { input, .. } => {
+            let s = stats(input);
+            // √n distinct-groups heuristic.
+            let rows = s.rows.sqrt().ceil().max(1.0).min(s.rows.max(1.0));
+            let shrink = if s.rows > 0.0 { rows / s.rows } else { 1.0 };
+            Stats { rows, bytes: s.bytes * shrink }
+        }
+        LogicalPlan::Sort { input, .. } | LogicalPlan::Window { input, .. } => stats(input),
+        LogicalPlan::SetOp { kind, left, right } => {
+            let (l, r) = (stats(left), stats(right));
+            match kind {
+                SetOpKind::UnionAll => Stats { rows: l.rows + r.rows, bytes: l.bytes + r.bytes },
+                SetOpKind::Union => {
+                    Stats { rows: (l.rows + r.rows) * 0.75, bytes: (l.bytes + r.bytes) * 0.75 }
+                }
+                SetOpKind::Intersect => Stats {
+                    rows: l.rows.min(r.rows) * 0.5,
+                    bytes: l.bytes.min(r.bytes) * 0.5,
+                },
+                SetOpKind::Difference => Stats { rows: l.rows * 0.5, bytes: l.bytes * 0.5 },
+            }
+        }
+        LogicalPlan::DropDuplicates { input, .. } => {
+            let s = stats(input);
+            Stats { rows: s.rows * 0.5, bytes: s.bytes * 0.5 }
+        }
+    }
+}
+
+/// Run every rewrite pass. The returned plan computes the same result
+/// as `plan` (asserted property-style in `super::proptests`).
+pub fn optimize(plan: &LogicalPlan, env: &CostEnv) -> LogicalPlan {
+    let mut p = plan.clone();
+    loop {
+        let (next, changed) = push_once(p);
+        p = next;
+        if !changed {
+            break;
+        }
+    }
+    let p = prune(p, None);
+    resolve(p, env)
+}
+
+// ---- pass 1: filter pushdown -------------------------------------------
+
+/// One bottom-up sweep that slides each filter at most one node deeper.
+/// The caller loops to a fixpoint; termination is guaranteed because
+/// every swap strictly increases a filter's depth and no rule moves one
+/// up.
+fn push_once(plan: LogicalPlan) -> (LogicalPlan, bool) {
+    use LogicalPlan as LP;
+    // Recurse into children first.
+    let (plan, mut changed) = match plan {
+        scan @ LP::Scan { .. } => (scan, false),
+        LP::Select { input, columns } => {
+            let (i, c) = push_once(*input);
+            (LP::Select { input: Box::new(i), columns }, c)
+        }
+        LP::Filter { input, column, op, lit } => {
+            let (i, c) = push_once(*input);
+            (LP::Filter { input: Box::new(i), column, op, lit }, c)
+        }
+        LP::MapF64 { input, column, f } => {
+            let (i, c) = push_once(*input);
+            (LP::MapF64 { input: Box::new(i), column, f }, c)
+        }
+        LP::MapUtf8 { input, column, f } => {
+            let (i, c) = push_once(*input);
+            (LP::MapUtf8 { input: Box::new(i), column, f }, c)
+        }
+        LP::Join { left, right, left_on, right_on, jt, algo, strategy } => {
+            let (l, cl) = push_once(*left);
+            let (r, cr) = push_once(*right);
+            (
+                LP::Join {
+                    left: Box::new(l),
+                    right: Box::new(r),
+                    left_on,
+                    right_on,
+                    jt,
+                    algo,
+                    strategy,
+                },
+                cl || cr,
+            )
+        }
+        LP::GroupBy { input, keys, aggs, strategy } => {
+            let (i, c) = push_once(*input);
+            (LP::GroupBy { input: Box::new(i), keys, aggs, strategy }, c)
+        }
+        LP::Sort { input, keys } => {
+            let (i, c) = push_once(*input);
+            (LP::Sort { input: Box::new(i), keys }, c)
+        }
+        LP::SetOp { kind, left, right } => {
+            let (l, cl) = push_once(*left);
+            let (r, cr) = push_once(*right);
+            (LP::SetOp { kind, left: Box::new(l), right: Box::new(r) }, cl || cr)
+        }
+        LP::Unique { input, keys } => {
+            let (i, c) = push_once(*input);
+            (LP::Unique { input: Box::new(i), keys }, c)
+        }
+        LP::DropDuplicates { input, subset } => {
+            let (i, c) = push_once(*input);
+            (LP::DropDuplicates { input: Box::new(i), subset }, c)
+        }
+        LP::Window { input, keys, aggs, spec } => {
+            let (i, c) = push_once(*input);
+            (LP::Window { input: Box::new(i), keys, aggs, spec }, c)
+        }
+    };
+
+    // Then try to slide this node, if it is a filter, one step down.
+    let (input, column, op, lit) = match plan {
+        LP::Filter { input, column, op, lit } => (input, column, op, lit),
+        other => return (other, changed),
+    };
+    let filt = |inner: LP, col: String| LP::Filter {
+        input: Box::new(inner),
+        column: col,
+        op,
+        lit: lit.clone(),
+    };
+    let pushed = match *input {
+        // Filter ∘ Project → Project ∘ Filter (the filter column is in
+        // the projection, else the plan was invalid to begin with).
+        LP::Select { input: inner, columns } if columns.contains(&column) => Some(LP::Select {
+            input: Box::new(filt(*inner, column.clone())),
+            columns,
+        }),
+        // Filter commutes with a map of a *different* column.
+        LP::MapF64 { input: inner, column: mc, f } if mc != column => Some(LP::MapF64 {
+            input: Box::new(filt(*inner, column.clone())),
+            column: mc,
+            f,
+        }),
+        LP::MapUtf8 { input: inner, column: mc, f } if mc != column => Some(LP::MapUtf8 {
+            input: Box::new(filt(*inner, column.clone())),
+            column: mc,
+            f,
+        }),
+        // Stable sort of the filtered rows == filter of the sorted rows.
+        LP::Sort { input: inner, keys } => Some(LP::Sort {
+            input: Box::new(filt(*inner, column.clone())),
+            keys,
+        }),
+        // Row predicates distribute over every set operation (the
+        // predicate is a pure function of the row value, and each
+        // operator's survivor set is value-based).
+        LP::SetOp { kind, left, right } => Some(LP::SetOp {
+            kind,
+            left: Box::new(filt(*left, column.clone())),
+            right: Box::new(filt(*right, column.clone())),
+        }),
+        // HAVING on a key column → WHERE below the group-by.
+        LP::GroupBy { input: inner, keys, aggs, strategy } if keys.contains(&column) => {
+            Some(LP::GroupBy {
+                input: Box::new(filt(*inner, column.clone())),
+                keys,
+                aggs,
+                strategy,
+            })
+        }
+        LP::Unique { input: inner, keys } if keys.contains(&column) => Some(LP::Unique {
+            input: Box::new(filt(*inner, column.clone())),
+            keys,
+        }),
+        // Dedup keeps the first row per class; the filter commutes when
+        // the class fixes the filter column's value (whole-row dedup, or
+        // the column is part of the subset key).
+        LP::DropDuplicates { input: inner, subset }
+            if subset_fixes_column(&subset, &column) =>
+        {
+            Some(LP::DropDuplicates {
+                input: Box::new(filt(*inner, column.clone())),
+                subset,
+            })
+        }
+        // Join: push into the side that owns the column, where the join
+        // type keeps that side's rows filterable (a pushed filter must
+        // not resurrect or drop outer padding rows).
+        LP::Join { left, right, left_on, right_on, jt, algo, strategy } => {
+            let side = join_side_of(&column, &left, &right);
+            let rebuilt = |l: LP, r: LP| LP::Join {
+                left: Box::new(l),
+                right: Box::new(r),
+                left_on: left_on.clone(),
+                right_on: right_on.clone(),
+                jt,
+                algo,
+                strategy,
+            };
+            match side {
+                Some(JoinSide::Left(col)) if matches!(jt, JoinType::Inner | JoinType::Left) => {
+                    Some(rebuilt(filt(*left, col), *right))
+                }
+                Some(JoinSide::Right(col)) if matches!(jt, JoinType::Inner | JoinType::Right) => {
+                    Some(rebuilt(*left, filt(*right, col)))
+                }
+                _ => {
+                    // Re-box without pushing.
+                    let node = rebuilt(*left, *right);
+                    return (filt(node, column), changed);
+                }
+            }
+        }
+        other => {
+            return (filt(other, column), changed);
+        }
+    };
+    match pushed {
+        Some(p) => {
+            changed = true;
+            (p, changed)
+        }
+        None => unreachable!("every arm either pushes or returns"),
+    }
+}
+
+/// Whether the dedup class fixes the filter column's value: whole-row
+/// dedup always does; subset dedup only when the column is part of the
+/// subset key (duplicates then share the column value, so "filter the
+/// survivor" equals "filter then dedup").
+fn subset_fixes_column(subset: &Option<Vec<String>>, column: &str) -> bool {
+    match subset {
+        None => true,
+        Some(s) => s.iter().any(|c| c == column),
+    }
+}
+
+/// Which join input owns an output column name, under the
+/// `ops::local::join` naming rule (left names verbatim; right names get
+/// `_r` appended when they collide with a left name).
+enum JoinSide {
+    Left(String),
+    Right(String),
+}
+
+fn join_side_of(column: &str, left: &LogicalPlan, right: &LogicalPlan) -> Option<JoinSide> {
+    let lnames = left.output_names().ok()?;
+    let rnames = right.output_names().ok()?;
+    if lnames.iter().any(|n| n == column) {
+        return Some(JoinSide::Left(column.to_string()));
+    }
+    if rnames.iter().any(|n| n == column) {
+        return Some(JoinSide::Right(column.to_string()));
+    }
+    if let Some(base) = column.strip_suffix("_r") {
+        if rnames.iter().any(|n| n == base) && lnames.iter().any(|n| n == base) {
+            return Some(JoinSide::Right(base.to_string()));
+        }
+    }
+    None
+}
+
+// ---- pass 2: projection pruning ----------------------------------------
+
+type Required = Option<BTreeSet<String>>;
+
+fn set_of<I: IntoIterator<Item = String>>(names: I) -> BTreeSet<String> {
+    names.into_iter().collect()
+}
+
+/// Top-down required-column walk; `None` = every column is observed.
+fn prune(plan: LogicalPlan, required: Required) -> LogicalPlan {
+    use LogicalPlan as LP;
+    match plan {
+        LP::Scan { table, projection } => {
+            let Some(req) = required else {
+                return LP::Scan { table, projection };
+            };
+            let current: Vec<String> = match &projection {
+                Some(cols) => cols.clone(),
+                None => table.schema().names().iter().map(|s| s.to_string()).collect(),
+            };
+            let kept: Vec<String> =
+                current.iter().filter(|c| req.contains(*c)).cloned().collect();
+            if kept.is_empty() || kept.len() == current.len() {
+                // Nothing observed (degenerate) or nothing to drop.
+                LP::Scan { table, projection }
+            } else {
+                LP::Scan { table, projection: Some(kept) }
+            }
+        }
+        LP::Select { input, columns } => {
+            // The select list *is* the narrowing point: everything below
+            // only needs what it names.
+            let below = set_of(columns.iter().cloned());
+            LP::Select { input: Box::new(prune(*input, Some(below))), columns }
+        }
+        LP::Filter { input, column, op, lit } => {
+            let below = required.map(|mut r| {
+                r.insert(column.clone());
+                r
+            });
+            LP::Filter { input: Box::new(prune(*input, below)), column, op, lit }
+        }
+        LP::MapF64 { input, column, f } => {
+            let below = required.map(|mut r| {
+                r.insert(column.clone());
+                r
+            });
+            LP::MapF64 { input: Box::new(prune(*input, below)), column, f }
+        }
+        LP::MapUtf8 { input, column, f } => {
+            let below = required.map(|mut r| {
+                r.insert(column.clone());
+                r
+            });
+            LP::MapUtf8 { input: Box::new(prune(*input, below)), column, f }
+        }
+        LP::Sort { input, keys } => {
+            let below = required.map(|mut r| {
+                for k in &keys {
+                    r.insert(k.column.clone());
+                }
+                r
+            });
+            LP::Sort { input: Box::new(prune(*input, below)), keys }
+        }
+        LP::GroupBy { input, keys, aggs, strategy } => {
+            let mut below = set_of(keys.iter().cloned());
+            below.extend(aggs.iter().map(|a| a.column.clone()));
+            LP::GroupBy { input: Box::new(prune(*input, Some(below))), keys, aggs, strategy }
+        }
+        LP::Unique { input, keys } => {
+            let below = set_of(keys.iter().cloned());
+            LP::Unique { input: Box::new(prune(*input, Some(below))), keys }
+        }
+        LP::DropDuplicates { input, subset } => {
+            // Whole-row dedup observes everything; subset dedup keeps
+            // all output columns the parent observes plus the subset.
+            let below = match (&subset, required) {
+                (None, _) | (_, None) => None,
+                (Some(s), Some(mut r)) => {
+                    r.extend(s.iter().cloned());
+                    Some(r)
+                }
+            };
+            LP::DropDuplicates { input: Box::new(prune(*input, below)), subset }
+        }
+        LP::Window { input, keys, aggs, spec } => {
+            let mut below = set_of(keys.iter().cloned());
+            below.extend(aggs.iter().map(|a| a.column.clone()));
+            LP::Window { input: Box::new(prune(*input, Some(below))), keys, aggs, spec }
+        }
+        LP::SetOp { kind, left, right } => {
+            // Set semantics compare whole rows positionally: both sides
+            // must keep every column.
+            LP::SetOp {
+                kind,
+                left: Box::new(prune(*left, None)),
+                right: Box::new(prune(*right, None)),
+            }
+        }
+        LP::Join { left, right, left_on, right_on, jt, algo, strategy } => {
+            let (lreq, rreq) = match &required {
+                None => (None, None),
+                Some(req) => match join_requirements(req, &left, &right, &left_on, &right_on) {
+                    Some((l, r)) => (Some(l), Some(r)),
+                    None => (None, None), // unresolvable name: prune nothing
+                },
+            };
+            LP::Join {
+                left: Box::new(prune(*left, lreq)),
+                right: Box::new(prune(*right, rreq)),
+                left_on,
+                right_on,
+                jt,
+                algo,
+                strategy,
+            }
+        }
+    }
+}
+
+/// Split the parent's required set across the two join inputs. Returns
+/// `None` when any required name cannot be resolved to a side (the walk
+/// then falls back to keeping everything — sound, just less pruned).
+/// Kept right columns whose names collide with left columns force the
+/// left copy to stay too, preserving the `_r` rename the downstream
+/// names rely on.
+fn join_requirements(
+    req: &BTreeSet<String>,
+    left: &LogicalPlan,
+    right: &LogicalPlan,
+    left_on: &[String],
+    right_on: &[String],
+) -> Option<(BTreeSet<String>, BTreeSet<String>)> {
+    let lnames = left.output_names().ok()?;
+    let rnames = right.output_names().ok()?;
+    let mut lreq = set_of(left_on.iter().cloned());
+    let mut rreq = set_of(right_on.iter().cloned());
+    for c in req {
+        if lnames.iter().any(|n| n == c) {
+            lreq.insert(c.clone());
+        } else if rnames.iter().any(|n| n == c) {
+            rreq.insert(c.clone());
+        } else if let Some(base) = c.strip_suffix("_r") {
+            if rnames.iter().any(|n| n == base) && lnames.iter().any(|n| n == base) {
+                rreq.insert(base.to_string());
+            } else {
+                return None;
+            }
+        } else {
+            return None;
+        }
+    }
+    // Preserve collisions: a kept right column that shares its name
+    // with a left column only renames to `_r` while the left copy
+    // exists.
+    for c in rreq.clone() {
+        if lnames.iter().any(|n| n == &c) {
+            lreq.insert(c);
+        }
+    }
+    Some((lreq, rreq))
+}
+
+// ---- pass 3: strategy resolution ----------------------------------------
+
+fn resolve(plan: LogicalPlan, env: &CostEnv) -> LogicalPlan {
+    use LogicalPlan as LP;
+    match plan {
+        scan @ LP::Scan { .. } => scan,
+        LP::Select { input, columns } => {
+            LP::Select { input: Box::new(resolve(*input, env)), columns }
+        }
+        LP::Filter { input, column, op, lit } => {
+            LP::Filter { input: Box::new(resolve(*input, env)), column, op, lit }
+        }
+        LP::MapF64 { input, column, f } => {
+            LP::MapF64 { input: Box::new(resolve(*input, env)), column, f }
+        }
+        LP::MapUtf8 { input, column, f } => {
+            LP::MapUtf8 { input: Box::new(resolve(*input, env)), column, f }
+        }
+        LP::Sort { input, keys } => LP::Sort { input: Box::new(resolve(*input, env)), keys },
+        LP::Unique { input, keys } => {
+            LP::Unique { input: Box::new(resolve(*input, env)), keys }
+        }
+        LP::DropDuplicates { input, subset } => {
+            LP::DropDuplicates { input: Box::new(resolve(*input, env)), subset }
+        }
+        LP::Window { input, keys, aggs, spec } => {
+            LP::Window { input: Box::new(resolve(*input, env)), keys, aggs, spec }
+        }
+        LP::SetOp { kind, left, right } => LP::SetOp {
+            kind,
+            left: Box::new(resolve(*left, env)),
+            right: Box::new(resolve(*right, env)),
+        },
+        LP::GroupBy { input, keys, aggs, strategy } => {
+            let strategy = match strategy {
+                GroupStrategy::Auto => {
+                    if PartialAggPlan::new(&aggs).is_ok() {
+                        GroupStrategy::PartialShuffle
+                    } else {
+                        GroupStrategy::FullShuffle
+                    }
+                }
+                fixed => fixed,
+            };
+            LP::GroupBy { input: Box::new(resolve(*input, env)), keys, aggs, strategy }
+        }
+        LP::Join { left, right, left_on, right_on, jt, algo, strategy } => {
+            let left = Box::new(resolve(*left, env));
+            let right = Box::new(resolve(*right, env));
+            let strategy = match strategy {
+                JoinStrategy::Auto => pick_join_strategy(&left, &right, jt, env),
+                fixed => fixed,
+            };
+            LP::Join { left, right, left_on, right_on, jt, algo, strategy }
+        }
+    }
+}
+
+/// Collect every join's resolved strategy in a fixed traversal order
+/// (children first, left before right), encoded one byte per join
+/// (1 = broadcast). Plan *shape* is schema-derived and therefore
+/// identical on every rank of a world; only these costed choices can
+/// differ (they read rank-local partition sizes), so agreeing on this
+/// byte vector is all distributed execution needs.
+pub(crate) fn join_strategy_bytes(plan: &LogicalPlan, out: &mut Vec<u8>) {
+    if let LogicalPlan::Join { left, right, strategy, .. } = plan {
+        join_strategy_bytes(left, out);
+        join_strategy_bytes(right, out);
+        out.push(u8::from(*strategy == JoinStrategy::Broadcast));
+    } else {
+        for child in plan.inputs() {
+            join_strategy_bytes(child, out);
+        }
+    }
+}
+
+/// Rewrite every join's strategy from the agreed byte vector, consuming
+/// it in the same traversal order [`join_strategy_bytes`] produced.
+pub(crate) fn with_join_strategies(
+    plan: LogicalPlan,
+    bytes: &[u8],
+    idx: &mut usize,
+) -> LogicalPlan {
+    use LogicalPlan as LP;
+    match plan {
+        scan @ LP::Scan { .. } => scan,
+        LP::Select { input, columns } => {
+            LP::Select { input: Box::new(with_join_strategies(*input, bytes, idx)), columns }
+        }
+        LP::Filter { input, column, op, lit } => LP::Filter {
+            input: Box::new(with_join_strategies(*input, bytes, idx)),
+            column,
+            op,
+            lit,
+        },
+        LP::MapF64 { input, column, f } => {
+            LP::MapF64 { input: Box::new(with_join_strategies(*input, bytes, idx)), column, f }
+        }
+        LP::MapUtf8 { input, column, f } => {
+            LP::MapUtf8 { input: Box::new(with_join_strategies(*input, bytes, idx)), column, f }
+        }
+        LP::Sort { input, keys } => {
+            LP::Sort { input: Box::new(with_join_strategies(*input, bytes, idx)), keys }
+        }
+        LP::GroupBy { input, keys, aggs, strategy } => LP::GroupBy {
+            input: Box::new(with_join_strategies(*input, bytes, idx)),
+            keys,
+            aggs,
+            strategy,
+        },
+        LP::Unique { input, keys } => {
+            LP::Unique { input: Box::new(with_join_strategies(*input, bytes, idx)), keys }
+        }
+        LP::DropDuplicates { input, subset } => LP::DropDuplicates {
+            input: Box::new(with_join_strategies(*input, bytes, idx)),
+            subset,
+        },
+        LP::Window { input, keys, aggs, spec } => LP::Window {
+            input: Box::new(with_join_strategies(*input, bytes, idx)),
+            keys,
+            aggs,
+            spec,
+        },
+        LP::SetOp { kind, left, right } => LP::SetOp {
+            kind,
+            left: Box::new(with_join_strategies(*left, bytes, idx)),
+            right: Box::new(with_join_strategies(*right, bytes, idx)),
+        },
+        LP::Join { left, right, left_on, right_on, jt, algo, strategy } => {
+            let left = Box::new(with_join_strategies(*left, bytes, idx));
+            let right = Box::new(with_join_strategies(*right, bytes, idx));
+            let strategy = match bytes.get(*idx) {
+                Some(1) => JoinStrategy::Broadcast,
+                Some(_) => JoinStrategy::Hash,
+                None => strategy, // length mismatch: keep the local pick
+            };
+            *idx += 1;
+            LP::Join { left, right, left_on, right_on, jt, algo, strategy }
+        }
+    }
+}
+
+/// Cost hash-shuffle against broadcast for one join (DESIGN.md §8).
+///
+/// * shuffle moves `(|L| + |R|) · (w−1)/w` bytes in `2·w·(w−1)`
+///   pairwise messages (both sides re-partition);
+/// * broadcast moves `|R| · w` bytes (gather to root ≈ `|R|`, then a
+///   binomial-tree broadcast of the concatenation along `w−1` edges) in
+///   `2·(w−1)` messages, and is only legal for Inner/Left joins.
+fn pick_join_strategy(
+    left: &LogicalPlan,
+    right: &LogicalPlan,
+    jt: JoinType,
+    env: &CostEnv,
+) -> JoinStrategy {
+    if env.world <= 1 || !matches!(jt, JoinType::Inner | JoinType::Left) {
+        return JoinStrategy::Hash;
+    }
+    let (l, r) = (stats(left), stats(right));
+    let w = env.world as f64;
+    let shuffle_bytes = (l.bytes + r.bytes) * (w - 1.0) / w;
+    let shuffle_msgs = 2.0 * w * (w - 1.0);
+    let bcast_bytes = r.bytes * w;
+    let bcast_msgs = 2.0 * (w - 1.0);
+    let ss = env.seconds(shuffle_bytes, shuffle_msgs);
+    let bs = env.seconds(bcast_bytes, bcast_msgs);
+    // Zero-cost profiles (tests) tie at 0 s; fall back to raw bytes.
+    let broadcast_wins = bs < ss || (bs == ss && bcast_bytes < shuffle_bytes);
+    if broadcast_wins {
+        JoinStrategy::Broadcast
+    } else {
+        JoinStrategy::Hash
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::local::groupby::{Agg, AggSpec};
+    use crate::ops::local::join::JoinAlgorithm;
+    use crate::ops::local::sort::SortKey;
+    use crate::table::{Array, Scalar, Table};
+    use std::sync::Arc;
+
+    fn wide_scan(rows: usize) -> LogicalPlan {
+        let n = rows;
+        LogicalPlan::Scan {
+            table: Arc::new(
+                Table::from_columns(vec![
+                    ("k", Array::from_i64((0..n as i64).collect())),
+                    ("v", Array::from_f64((0..n).map(|i| i as f64).collect())),
+                    ("a", Array::from_f64(vec![0.0; n])),
+                    ("b", Array::from_f64(vec![1.0; n])),
+                    ("s", Array::from_strs(&vec!["x"; n])),
+                ])
+                .unwrap(),
+            ),
+            projection: None,
+        }
+    }
+
+    fn scan_projection(plan: &LogicalPlan) -> Option<Vec<String>> {
+        match plan {
+            LogicalPlan::Scan { projection, .. } => projection.clone(),
+            _ => plan.inputs().first().and_then(|i| scan_projection(i)),
+        }
+    }
+
+    #[test]
+    fn projection_pruning_narrows_the_scan() {
+        // select k,v after a filter on v: scan needs only {k, v}.
+        let plan = LogicalPlan::Select {
+            input: Box::new(LogicalPlan::Filter {
+                input: Box::new(wide_scan(10)),
+                column: "v".into(),
+                op: Cmp::Gt,
+                lit: Scalar::Float64(3.0),
+            }),
+            columns: vec!["k".into(), "v".into()],
+        };
+        let opt = optimize(&plan, &CostEnv::local());
+        assert_eq!(
+            scan_projection(&opt),
+            Some(vec!["k".to_string(), "v".to_string()]),
+            "scan must be pruned to the observed columns\n{}",
+            opt.render()
+        );
+        // the result is unchanged
+        let want = plan.execute_naive().unwrap();
+        let got = opt.execute_naive().unwrap();
+        assert_eq!(
+            crate::table::ipc::serialize(&got),
+            crate::table::ipc::serialize(&want)
+        );
+    }
+
+    #[test]
+    fn groupby_prunes_to_keys_and_agg_inputs() {
+        let plan = LogicalPlan::GroupBy {
+            input: Box::new(wide_scan(10)),
+            keys: vec!["k".into()],
+            aggs: vec![AggSpec::new("v", Agg::Sum)],
+            strategy: GroupStrategy::Auto,
+        };
+        let opt = optimize(&plan, &CostEnv::local());
+        assert_eq!(scan_projection(&opt), Some(vec!["k".to_string(), "v".to_string()]));
+    }
+
+    #[test]
+    fn root_without_narrowing_keeps_every_column() {
+        let plan = LogicalPlan::Sort { input: Box::new(wide_scan(10)), keys: vec![SortKey::asc("v")] };
+        let opt = optimize(&plan, &CostEnv::local());
+        assert_eq!(scan_projection(&opt), None, "no narrowing ancestor → no pruning");
+    }
+
+    #[test]
+    fn filter_pushes_below_sort_and_setop() {
+        let plan = LogicalPlan::Filter {
+            input: Box::new(LogicalPlan::Sort {
+                input: Box::new(LogicalPlan::SetOp {
+                    kind: SetOpKind::UnionAll,
+                    left: Box::new(wide_scan(8)),
+                    right: Box::new(wide_scan(8)),
+                }),
+                keys: vec![SortKey::asc("v")],
+            }),
+            column: "v".into(),
+            op: Cmp::Le,
+            lit: Scalar::Float64(3.0),
+        };
+        let opt = optimize(&plan, &CostEnv::local());
+        // after two pushes the filters sit directly on the scans
+        let r = opt.render();
+        let sort_at = r.find("Sort").unwrap();
+        let setop_at = r.find("SetOp").unwrap();
+        let filter_at = r.find("Filter").unwrap();
+        assert!(
+            sort_at < setop_at && setop_at < filter_at,
+            "filter must sink below sort and the set op:\n{r}"
+        );
+        assert_eq!(r.matches("Filter").count(), 2, "one filter per set-op side:\n{r}");
+        let want = plan.execute_naive().unwrap();
+        let got = opt.execute_naive().unwrap();
+        assert_eq!(
+            crate::table::ipc::serialize(&got),
+            crate::table::ipc::serialize(&want),
+            "pushdown changed the result"
+        );
+    }
+
+    fn join(jt: JoinType, strategy: JoinStrategy, lrows: usize, rrows: usize) -> LogicalPlan {
+        LogicalPlan::Join {
+            left: Box::new(wide_scan(lrows)),
+            right: Box::new(wide_scan(rrows)),
+            left_on: vec!["k".into()],
+            right_on: vec!["k".into()],
+            jt,
+            algo: JoinAlgorithm::Hash,
+            strategy,
+        }
+    }
+
+    #[test]
+    fn filter_pushes_into_the_owning_join_side() {
+        // column "v" exists on both sides → output "v" is the LEFT copy;
+        // "v_r" names the right copy.
+        let plan = LogicalPlan::Filter {
+            input: Box::new(join(JoinType::Inner, JoinStrategy::Auto, 10, 10)),
+            column: "v_r".into(),
+            op: Cmp::Gt,
+            lit: Scalar::Float64(2.0),
+        };
+        let opt = optimize(&plan, &CostEnv::local());
+        let LogicalPlan::Join { left, right, .. } = &opt else {
+            panic!("filter did not sink below the join:\n{}", opt.render())
+        };
+        assert!(matches!(**left, LogicalPlan::Scan { .. }), "left side must stay bare");
+        assert!(
+            matches!(**right, LogicalPlan::Filter { ref column, .. } if column == "v"),
+            "right side must gain the de-renamed filter:\n{}",
+            opt.render()
+        );
+        let want = plan.execute_naive().unwrap();
+        let got = opt.execute_naive().unwrap();
+        assert_eq!(
+            crate::table::ipc::serialize(&got),
+            crate::table::ipc::serialize(&want)
+        );
+    }
+
+    #[test]
+    fn outer_join_blocks_the_unsafe_side() {
+        // Left join: a RIGHT-column filter must NOT sink (it would
+        // resurrect unmatched left rows the post-filter drops).
+        let plan = LogicalPlan::Filter {
+            input: Box::new(join(JoinType::Left, JoinStrategy::Hash, 10, 10)),
+            column: "v_r".into(),
+            op: Cmp::Gt,
+            lit: Scalar::Float64(2.0),
+        };
+        let opt = optimize(&plan, &CostEnv::local());
+        assert!(
+            matches!(opt, LogicalPlan::Filter { .. }),
+            "right-side filter must stay above a left join:\n{}",
+            opt.render()
+        );
+        // ...but a LEFT-column filter sinks fine.
+        let plan = LogicalPlan::Filter {
+            input: Box::new(join(JoinType::Left, JoinStrategy::Hash, 10, 10)),
+            column: "v".into(),
+            op: Cmp::Gt,
+            lit: Scalar::Float64(2.0),
+        };
+        let opt = optimize(&plan, &CostEnv::local());
+        assert!(matches!(opt, LogicalPlan::Join { .. }), "left filter sinks:\n{}", opt.render());
+    }
+
+    #[test]
+    fn groupby_auto_resolves_by_decomposability() {
+        let mk = |aggs: Vec<AggSpec>| LogicalPlan::GroupBy {
+            input: Box::new(wide_scan(10)),
+            keys: vec!["k".into()],
+            aggs,
+            strategy: GroupStrategy::Auto,
+        };
+        let opt = optimize(&mk(vec![AggSpec::new("v", Agg::Sum)]), &CostEnv::local());
+        assert!(matches!(
+            opt,
+            LogicalPlan::GroupBy { strategy: GroupStrategy::PartialShuffle, .. }
+        ));
+        let opt = optimize(&mk(vec![AggSpec::new("v", Agg::Std)]), &CostEnv::local());
+        assert!(matches!(
+            opt,
+            LogicalPlan::GroupBy { strategy: GroupStrategy::FullShuffle, .. }
+        ));
+    }
+
+    #[test]
+    fn join_auto_costs_broadcast_vs_shuffle() {
+        let env = CostEnv::new(8, LinkProfile::cluster(4));
+        // tiny right side: broadcast wins
+        let opt = resolve(join(JoinType::Inner, JoinStrategy::Auto, 50_000, 16), &env);
+        assert!(matches!(
+            opt,
+            LogicalPlan::Join { strategy: JoinStrategy::Broadcast, .. }
+        ));
+        // comparable sides big enough for bytes (not latency) to
+        // dominate: shuffle wins
+        let opt = resolve(join(JoinType::Inner, JoinStrategy::Auto, 50_000, 50_000), &env);
+        assert!(matches!(opt, LogicalPlan::Join { strategy: JoinStrategy::Hash, .. }));
+        // broadcast is illegal under right/full-outer joins
+        let opt = resolve(join(JoinType::Right, JoinStrategy::Auto, 50_000, 16), &env);
+        assert!(matches!(opt, LogicalPlan::Join { strategy: JoinStrategy::Hash, .. }));
+        // a world of one never broadcasts
+        let opt = resolve(
+            join(JoinType::Inner, JoinStrategy::Auto, 50_000, 16),
+            &CostEnv::local(),
+        );
+        assert!(matches!(opt, LogicalPlan::Join { strategy: JoinStrategy::Hash, .. }));
+    }
+
+    #[test]
+    fn join_strategy_bytes_round_trip_and_override() {
+        // nested two-join plan: traversal order must be stable
+        let inner = join(JoinType::Inner, JoinStrategy::Hash, 10, 10);
+        let plan = LogicalPlan::Join {
+            left: Box::new(inner),
+            right: Box::new(wide_scan(10)),
+            left_on: vec!["k".into()],
+            right_on: vec!["k".into()],
+            jt: JoinType::Inner,
+            algo: JoinAlgorithm::Hash,
+            strategy: JoinStrategy::Broadcast,
+        };
+        let mut bytes = Vec::new();
+        join_strategy_bytes(&plan, &mut bytes);
+        assert_eq!(bytes, vec![0, 1], "children-first: inner hash, outer broadcast");
+        // applying the same bytes is a no-op; applying flipped bytes
+        // overrides both picks (the rank-0 agreement path)
+        let mut idx = 0;
+        let same = with_join_strategies(plan.clone(), &bytes, &mut idx);
+        let mut same_bytes = Vec::new();
+        join_strategy_bytes(&same, &mut same_bytes);
+        assert_eq!(same_bytes, bytes);
+        let mut idx = 0;
+        let flipped = with_join_strategies(plan, &[1, 0], &mut idx);
+        let mut got = Vec::new();
+        join_strategy_bytes(&flipped, &mut got);
+        assert_eq!(got, vec![1, 0]);
+        assert_eq!(idx, 2, "every join consumed exactly one byte");
+    }
+
+    #[test]
+    fn stats_shrink_through_filters_and_projections() {
+        let base = stats(&wide_scan(100));
+        let filtered = stats(&LogicalPlan::Filter {
+            input: Box::new(wide_scan(100)),
+            column: "v".into(),
+            op: Cmp::Eq,
+            lit: Scalar::Float64(1.0),
+        });
+        assert!(filtered.rows < base.rows && filtered.bytes < base.bytes);
+        let selected = stats(&LogicalPlan::Select {
+            input: Box::new(wide_scan(100)),
+            columns: vec!["k".into()],
+        });
+        assert_eq!(selected.rows, base.rows);
+        assert!(selected.bytes < base.bytes);
+    }
+}

@@ -1,0 +1,674 @@
+//! The physical plan: the optimized logical DAG lowered onto the
+//! existing execution primitives, plus `explain()` rendering.
+//!
+//! Lowering adds nothing new to the runtime — every node executes
+//! through `ops::local`, `ops::dist` or `comm` exactly as the eager
+//! `DataFrame` path would, which is what makes the planned-vs-eager
+//! differential wall in `rust/tests/dist_vs_local.rs` byte-exact:
+//!
+//! * adjacent per-partition Select/Filter/Map nodes fuse into one
+//!   [`Fused`](PhysicalPlan::Fused) pass (consecutive filters evaluate
+//!   as one combined mask and a single gather);
+//! * joins lower to [`crate::ops::dist::dist_join`] or
+//!   [`crate::ops::dist::broadcast_join`] per the optimizer's strategy;
+//! * group-bys lower to [`crate::ops::dist::dist_groupby`] or the
+//!   combiner [`crate::ops::dist::dist_groupby_partial`] — `explain()` renders
+//!   the combiner's decomposition (partial aggregate **below** the
+//!   shuffle edge, reduce above it);
+//! * sorts, set ops and dedups lower to their Table-5 compositions;
+//! * windowed aggregates lower to a hash shuffle plus the per-partition
+//!   window kernel (the streaming pipeline target for the same plans
+//!   lives in [`super::lazy`]).
+//!
+//! All ranks of a world execute the same plan in the same order, so the
+//! loosely-synchronous collective contract of `ops::dist` carries over
+//! unchanged.
+
+use super::logical::{
+    agg_list, as_strs, cmp_symbol, sort_list, windowed_concat, GroupStrategy, JoinStrategy,
+    LogicalPlan, MapF64Udf, MapUtf8Udf, SetOpKind,
+};
+use crate::comm::communicator::{CommStats, Communicator, Tag};
+use crate::ops::dist;
+use crate::ops::local::groupby::{AggSpec, PartialAggPlan};
+use crate::ops::local::join::{JoinAlgorithm, JoinType};
+use crate::ops::local::select::{and_masks, cmp_mask};
+use crate::ops::local::sort::SortKey;
+use crate::ops::local::window::WindowSpec;
+use crate::ops::local::{self, Cmp};
+use crate::table::{Scalar, Table};
+use anyhow::{bail, Result};
+use std::borrow::Cow;
+use std::sync::Arc;
+
+/// One step of a fused per-partition pass.
+#[derive(Clone)]
+pub enum LocalStep {
+    /// Keep the named columns, in order.
+    Project(Vec<String>),
+    /// Keep rows where `column <op> lit`.
+    Filter { column: String, op: Cmp, lit: Scalar },
+    /// Numeric per-row map of one column.
+    MapF64 { column: String, f: MapF64Udf },
+    /// String per-row map of one column.
+    MapUtf8 { column: String, f: MapUtf8Udf },
+}
+
+impl LocalStep {
+    fn label(&self) -> String {
+        match self {
+            LocalStep::Project(cols) => format!("project {}", cols.join(",")),
+            LocalStep::Filter { column, op, lit } => {
+                format!("filter {column} {} {lit}", cmp_symbol(*op))
+            }
+            LocalStep::MapF64 { column, .. } => format!("map_f64 {column}"),
+            LocalStep::MapUtf8 { column, .. } => format!("map_utf8 {column}"),
+        }
+    }
+}
+
+/// Executable operator tree. Construct via [`lower`].
+#[derive(Clone)]
+pub enum PhysicalPlan {
+    /// Leaf partition, optionally narrowed by projection pruning.
+    Scan { table: Arc<Table>, projection: Option<Vec<String>> },
+    /// One per-partition pass over fused select/filter/map steps.
+    Fused { input: Box<PhysicalPlan>, steps: Vec<LocalStep> },
+    /// Distributed join of the two materialized inputs.
+    Join {
+        left: Box<PhysicalPlan>,
+        right: Box<PhysicalPlan>,
+        left_on: Vec<String>,
+        right_on: Vec<String>,
+        jt: JoinType,
+        algo: JoinAlgorithm,
+        broadcast: bool,
+    },
+    /// Distributed group-by; `partial` selects the map-side combiner.
+    Agg {
+        input: Box<PhysicalPlan>,
+        keys: Vec<String>,
+        aggs: Vec<AggSpec>,
+        partial: bool,
+    },
+    /// Distributed sample sort.
+    SampleSort { input: Box<PhysicalPlan>, keys: Vec<SortKey> },
+    /// Distributed set operation (local distinct + shuffle + local op).
+    SetOp { kind: SetOpKind, left: Box<PhysicalPlan>, right: Box<PhysicalPlan> },
+    /// Distributed distinct key values.
+    Unique { input: Box<PhysicalPlan>, keys: Vec<String> },
+    /// Distributed drop_duplicates.
+    Distinct { input: Box<PhysicalPlan>, subset: Option<Vec<String>> },
+    /// Hash shuffle on the window keys, then the per-partition window
+    /// kernel over the shard's rows in order.
+    WindowAgg {
+        input: Box<PhysicalPlan>,
+        keys: Vec<String>,
+        aggs: Vec<AggSpec>,
+        spec: WindowSpec,
+    },
+}
+
+/// Lower an optimized [`LogicalPlan`]. Unresolved `Auto` strategies
+/// degrade safely (hash join; combiner iff the aggregations decompose).
+pub fn lower(plan: &LogicalPlan) -> PhysicalPlan {
+    match plan {
+        LogicalPlan::Scan { table, projection } => {
+            PhysicalPlan::Scan { table: table.clone(), projection: projection.clone() }
+        }
+        LogicalPlan::Select { input, columns } => {
+            fuse(lower(input), LocalStep::Project(columns.clone()))
+        }
+        LogicalPlan::Filter { input, column, op, lit } => fuse(
+            lower(input),
+            LocalStep::Filter { column: column.clone(), op: *op, lit: lit.clone() },
+        ),
+        LogicalPlan::MapF64 { input, column, f } => fuse(
+            lower(input),
+            LocalStep::MapF64 { column: column.clone(), f: f.clone() },
+        ),
+        LogicalPlan::MapUtf8 { input, column, f } => fuse(
+            lower(input),
+            LocalStep::MapUtf8 { column: column.clone(), f: f.clone() },
+        ),
+        LogicalPlan::Join { left, right, left_on, right_on, jt, algo, strategy } => {
+            PhysicalPlan::Join {
+                left: Box::new(lower(left)),
+                right: Box::new(lower(right)),
+                left_on: left_on.clone(),
+                right_on: right_on.clone(),
+                jt: *jt,
+                algo: *algo,
+                broadcast: *strategy == JoinStrategy::Broadcast,
+            }
+        }
+        LogicalPlan::GroupBy { input, keys, aggs, strategy } => {
+            let partial = match strategy {
+                GroupStrategy::PartialShuffle => true,
+                GroupStrategy::FullShuffle => false,
+                GroupStrategy::Auto => PartialAggPlan::new(aggs).is_ok(),
+            };
+            PhysicalPlan::Agg {
+                input: Box::new(lower(input)),
+                keys: keys.clone(),
+                aggs: aggs.clone(),
+                partial,
+            }
+        }
+        LogicalPlan::Sort { input, keys } => {
+            PhysicalPlan::SampleSort { input: Box::new(lower(input)), keys: keys.clone() }
+        }
+        LogicalPlan::SetOp { kind, left, right } => PhysicalPlan::SetOp {
+            kind: *kind,
+            left: Box::new(lower(left)),
+            right: Box::new(lower(right)),
+        },
+        LogicalPlan::Unique { input, keys } => {
+            PhysicalPlan::Unique { input: Box::new(lower(input)), keys: keys.clone() }
+        }
+        LogicalPlan::DropDuplicates { input, subset } => PhysicalPlan::Distinct {
+            input: Box::new(lower(input)),
+            subset: subset.clone(),
+        },
+        LogicalPlan::Window { input, keys, aggs, spec } => PhysicalPlan::WindowAgg {
+            input: Box::new(lower(input)),
+            keys: keys.clone(),
+            aggs: aggs.clone(),
+            spec: spec.clone(),
+        },
+    }
+}
+
+/// Append one step to an existing fused pass, or start a new one.
+fn fuse(input: PhysicalPlan, step: LocalStep) -> PhysicalPlan {
+    match input {
+        PhysicalPlan::Fused { input, mut steps } => {
+            steps.push(step);
+            PhysicalPlan::Fused { input, steps }
+        }
+        other => PhysicalPlan::Fused { input: Box::new(other), steps: vec![step] },
+    }
+}
+
+/// Apply a fused step chain in one per-partition pass; consecutive
+/// filters evaluate as one AND-combined mask and a single gather.
+/// Shared with the streaming target, which runs the same steps per
+/// batch inside a pipeline `map` stage. The input is borrowed so a
+/// scan feeding a fused pass is never deep-copied first.
+pub(crate) fn apply_steps(input: &Table, steps: &[LocalStep]) -> Result<Table> {
+    let mut owned: Option<Table> = None;
+    let mut i = 0;
+    while i < steps.len() {
+        let t: &Table = owned.as_ref().unwrap_or(input);
+        let next = match &steps[i] {
+            LocalStep::Filter { column, op, lit } => {
+                let mut mask = cmp_mask(t.column_by_name(column)?, *op, lit)?;
+                i += 1;
+                while let Some(LocalStep::Filter { column, op, lit }) = steps.get(i) {
+                    let m = cmp_mask(t.column_by_name(column)?, *op, lit)?;
+                    mask = and_masks(&mask, &m);
+                    i += 1;
+                }
+                let idx: Vec<usize> = mask
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(r, m)| if *m == Some(true) { Some(r) } else { None })
+                    .collect();
+                t.take(&idx)
+            }
+            LocalStep::Project(cols) => {
+                i += 1;
+                t.select_columns(&as_strs(cols))?
+            }
+            LocalStep::MapF64 { column, f } => {
+                i += 1;
+                local::map_column_f64(t, column, f.as_ref())?
+            }
+            LocalStep::MapUtf8 { column, f } => {
+                i += 1;
+                local::map_column_utf8(t, column, f.as_ref())?
+            }
+        };
+        owned = Some(next);
+    }
+    Ok(match owned {
+        Some(t) => t,
+        None => input.clone(), // empty step list (not produced by `fuse`)
+    })
+}
+
+impl PhysicalPlan {
+    /// Execute on this rank. All ranks of `comm`'s world must execute
+    /// the same plan (the `ops::dist` collective contract); a world of
+    /// one runs fully local with zero wire bytes.
+    pub fn execute<C: Communicator + ?Sized>(&self, comm: &mut C) -> Result<Table> {
+        Ok(self.execute_ref(comm)?.into_owned())
+    }
+
+    /// Internal execution returning `Cow`: a bare scan is handed to its
+    /// consumer by reference (every operator takes `&Table`), so
+    /// planned execution never deep-copies a partition the eager path
+    /// would have passed by reference.
+    fn execute_ref<'a, C: Communicator + ?Sized>(
+        &'a self,
+        comm: &mut C,
+    ) -> Result<Cow<'a, Table>> {
+        Ok(match self {
+            PhysicalPlan::Scan { table, projection } => match projection {
+                None => Cow::Borrowed(table.as_ref()),
+                Some(cols) => Cow::Owned(table.select_columns(&as_strs(cols))?),
+            },
+            PhysicalPlan::Fused { input, steps } => {
+                let t = input.execute_ref(comm)?;
+                Cow::Owned(apply_steps(&t, steps)?)
+            }
+            PhysicalPlan::Join { left, right, left_on, right_on, jt, algo, broadcast } => {
+                let l = left.execute_ref(comm)?;
+                let r = right.execute_ref(comm)?;
+                Cow::Owned(if *broadcast {
+                    dist::broadcast_join(
+                        comm,
+                        &l,
+                        &r,
+                        &as_strs(left_on),
+                        &as_strs(right_on),
+                        *jt,
+                    )?
+                } else {
+                    dist::dist_join(
+                        comm,
+                        &l,
+                        &r,
+                        &as_strs(left_on),
+                        &as_strs(right_on),
+                        *jt,
+                        *algo,
+                    )?
+                })
+            }
+            PhysicalPlan::Agg { input, keys, aggs, partial } => {
+                let t = input.execute_ref(comm)?;
+                Cow::Owned(if *partial {
+                    dist::dist_groupby_partial(comm, &t, &as_strs(keys), aggs)?
+                } else {
+                    dist::dist_groupby(comm, &t, &as_strs(keys), aggs)?
+                })
+            }
+            PhysicalPlan::SampleSort { input, keys } => {
+                let t = input.execute_ref(comm)?;
+                Cow::Owned(dist::dist_sort(comm, &t, keys)?)
+            }
+            PhysicalPlan::SetOp { kind, left, right } => {
+                let l = left.execute_ref(comm)?;
+                let r = right.execute_ref(comm)?;
+                Cow::Owned(match kind {
+                    SetOpKind::Union => dist::dist_union(comm, &l, &r)?,
+                    SetOpKind::UnionAll => dist::dist_union_all(comm, &l, &r)?,
+                    SetOpKind::Intersect => dist::dist_intersect(comm, &l, &r)?,
+                    SetOpKind::Difference => dist::dist_difference(comm, &l, &r)?,
+                })
+            }
+            PhysicalPlan::Unique { input, keys } => {
+                let t = input.execute_ref(comm)?;
+                Cow::Owned(dist::dist_unique(comm, &t, &as_strs(keys))?)
+            }
+            PhysicalPlan::Distinct { input, subset } => {
+                let t = input.execute_ref(comm)?;
+                let strs = subset.as_ref().map(|s| as_strs(s));
+                Cow::Owned(dist::dist_drop_duplicates(comm, &t, strs.as_deref())?)
+            }
+            PhysicalPlan::WindowAgg { input, keys, aggs, spec } => {
+                let t = input.execute_ref(comm)?;
+                let shuffled = crate::comm::shuffle_by_hash(comm, &t, &as_strs(keys))?;
+                Cow::Owned(windowed_concat(&shuffled, keys, aggs, spec)?)
+            }
+        })
+    }
+
+    /// Execute single-rank without spawning a world (the `collect()`
+    /// path): every shuffle short-circuits, nothing touches a wire.
+    pub fn execute_local(&self) -> Result<Table> {
+        self.execute(&mut SoloComm::default())
+    }
+
+    /// Indented operator-tree rendering — the `explain()` output.
+    /// Communication edges render as explicit `Shuffle` / `Broadcast`
+    /// lines so pushdown wins are visible: a pruned scan lists the
+    /// surviving columns, a combined group-by shows its `PartialAgg`
+    /// node *below* the shuffle edge and the reduce above it.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out
+    }
+
+    fn render_into(&self, out: &mut String, indent: usize) {
+        let line = |out: &mut String, ind: usize, s: String| {
+            out.push_str(&"  ".repeat(ind));
+            out.push_str(&s);
+            out.push('\n');
+        };
+        match self {
+            PhysicalPlan::Scan { table, projection } => match projection {
+                None => line(
+                    out,
+                    indent,
+                    format!("Scan[{} rows; {} cols]", table.num_rows(), table.num_columns()),
+                ),
+                Some(cols) => line(
+                    out,
+                    indent,
+                    format!(
+                        "Scan[{} rows; pruned to {} of {} cols: {}]",
+                        table.num_rows(),
+                        cols.len(),
+                        table.num_columns(),
+                        cols.join(",")
+                    ),
+                ),
+            },
+            PhysicalPlan::Fused { input, steps } => {
+                let chain: Vec<String> = steps.iter().map(LocalStep::label).collect();
+                line(out, indent, format!("Fused[{}]", chain.join(" → ")));
+                input.render_into(out, indent + 1);
+            }
+            PhysicalPlan::Join { left, right, left_on, right_on, jt, algo, broadcast } => {
+                if *broadcast {
+                    line(
+                        out,
+                        indent,
+                        format!(
+                            "HashJoin[{jt:?} on {}={}; broadcast right]",
+                            left_on.join(","),
+                            right_on.join(",")
+                        ),
+                    );
+                    left.render_into(out, indent + 1);
+                    line(out, indent + 1, "Broadcast[allgather the small side]".into());
+                    right.render_into(out, indent + 2);
+                } else {
+                    line(
+                        out,
+                        indent,
+                        format!(
+                            "{:?}Join[{jt:?} on {}={}]",
+                            algo,
+                            left_on.join(","),
+                            right_on.join(",")
+                        ),
+                    );
+                    line(out, indent + 1, format!("Shuffle[hash {}]", left_on.join(",")));
+                    left.render_into(out, indent + 2);
+                    line(out, indent + 1, format!("Shuffle[hash {}]", right_on.join(",")));
+                    right.render_into(out, indent + 2);
+                }
+            }
+            PhysicalPlan::Agg { input, keys, aggs, partial } => {
+                if *partial {
+                    line(out, indent, format!("Reduce[{}; finish {}]", keys.join(","), agg_list(aggs)));
+                    line(out, indent + 1, format!("Shuffle[hash {}]", keys.join(",")));
+                    line(
+                        out,
+                        indent + 2,
+                        format!("PartialAgg[{}; {}]", keys.join(","), agg_list(aggs)),
+                    );
+                    input.render_into(out, indent + 3);
+                } else {
+                    line(out, indent, format!("HashAgg[{}; {}]", keys.join(","), agg_list(aggs)));
+                    line(out, indent + 1, format!("Shuffle[hash {}]", keys.join(",")));
+                    input.render_into(out, indent + 2);
+                }
+            }
+            PhysicalPlan::SampleSort { input, keys } => {
+                line(
+                    out,
+                    indent,
+                    format!("SampleSort[{}; splitter-row range shuffle]", sort_list(keys)),
+                );
+                input.render_into(out, indent + 1);
+            }
+            PhysicalPlan::SetOp { kind, left, right } => {
+                line(
+                    out,
+                    indent,
+                    format!("SetOp[{}; local distinct + hash shuffle + local {}]",
+                        kind.name(), kind.name()),
+                );
+                left.render_into(out, indent + 1);
+                right.render_into(out, indent + 1);
+            }
+            PhysicalPlan::Unique { input, keys } => {
+                line(out, indent, format!("Unique[{}; distinct + shuffle + distinct]", keys.join(",")));
+                input.render_into(out, indent + 1);
+            }
+            PhysicalPlan::Distinct { input, subset } => {
+                let what = match subset {
+                    None => "all columns".to_string(),
+                    Some(s) => s.join(","),
+                };
+                line(out, indent, format!("DropDuplicates[{what}]"));
+                input.render_into(out, indent + 1);
+            }
+            PhysicalPlan::WindowAgg { input, keys, aggs, spec } => {
+                line(
+                    out,
+                    indent,
+                    format!(
+                        "WindowAgg[{}; {}; size={} step={} {:?}]",
+                        keys.join(","),
+                        agg_list(aggs),
+                        spec.size,
+                        spec.step,
+                        spec.unit
+                    ),
+                );
+                line(out, indent + 1, format!("Shuffle[hash {}]", keys.join(",")));
+                input.render_into(out, indent + 2);
+            }
+        }
+    }
+}
+
+/// A world-of-one communicator for plan execution without a spawned
+/// world: every `ops::dist` operator and collective short-circuits at
+/// `world_size == 1` before touching a wire, so point-to-point traffic
+/// is unreachable (and errors if ever attempted).
+#[derive(Default)]
+pub(crate) struct SoloComm {
+    tag: u64,
+}
+
+impl Communicator for SoloComm {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn world_size(&self) -> usize {
+        1
+    }
+
+    fn send(&mut self, to: usize, _tag: Tag, _bytes: Vec<u8>) -> Result<()> {
+        bail!("solo communicator has no peer to send to (rank {to})")
+    }
+
+    fn recv(&mut self, from: usize, _tag: Tag) -> Result<Vec<u8>> {
+        bail!("solo communicator has no peer to receive from (rank {from})")
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn next_collective_tag(&mut self) -> Tag {
+        self.tag += 1;
+        Tag(Tag::USER_MAX + self.tag)
+    }
+
+    fn stats(&self) -> CommStats {
+        CommStats::default()
+    }
+
+    fn reset_stats(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::local::groupby::Agg;
+    use crate::plan::optimize::{optimize, CostEnv};
+    use crate::table::{ipc, Array};
+
+    fn scan() -> LogicalPlan {
+        LogicalPlan::Scan {
+            table: Arc::new(
+                Table::from_columns(vec![
+                    ("k", Array::from_i64(vec![1, 2, 1, 3, 2, 1])),
+                    ("v", Array::from_f64(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])),
+                    ("w", Array::from_f64(vec![9.0; 6])),
+                    ("s", Array::from_strs(&["a", "b", "a", "c", "b", "a"])),
+                ])
+                .unwrap(),
+            ),
+            projection: None,
+        }
+    }
+
+    /// Indent (in two-space units) of the first line containing `pat`.
+    fn indent_of(render: &str, pat: &str) -> Option<usize> {
+        render.lines().find(|l| l.contains(pat)).map(|l| {
+            (l.len() - l.trim_start().len()) / 2
+        })
+    }
+
+    fn line_no(render: &str, pat: &str) -> Option<usize> {
+        render.lines().position(|l| l.contains(pat))
+    }
+
+    #[test]
+    fn partial_agg_renders_below_the_shuffle_edge() {
+        let plan = LogicalPlan::GroupBy {
+            input: Box::new(scan()),
+            keys: vec!["k".into()],
+            aggs: vec![AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Mean)],
+            strategy: GroupStrategy::Auto,
+        };
+        let r = lower(&optimize(&plan, &CostEnv::local())).render();
+        let (sh, pa) = (line_no(&r, "Shuffle").unwrap(), line_no(&r, "PartialAgg").unwrap());
+        assert!(pa > sh, "PartialAgg must render below the shuffle edge:\n{r}");
+        assert!(
+            indent_of(&r, "PartialAgg").unwrap() > indent_of(&r, "Shuffle").unwrap(),
+            "PartialAgg must be a child of the shuffle edge:\n{r}"
+        );
+        assert!(line_no(&r, "Reduce").unwrap() < sh, "Reduce sits above the shuffle:\n{r}");
+        // non-decomposable aggregations keep the full shuffle
+        let full = LogicalPlan::GroupBy {
+            input: Box::new(scan()),
+            keys: vec!["k".into()],
+            aggs: vec![AggSpec::new("v", Agg::Std)],
+            strategy: GroupStrategy::Auto,
+        };
+        let r = lower(&optimize(&full, &CostEnv::local())).render();
+        assert!(r.contains("HashAgg") && !r.contains("PartialAgg"), "{r}");
+    }
+
+    #[test]
+    fn adjacent_local_nodes_fuse_into_one_pass() {
+        let plan = LogicalPlan::Select {
+            input: Box::new(LogicalPlan::MapF64 {
+                input: Box::new(LogicalPlan::Filter {
+                    input: Box::new(LogicalPlan::Filter {
+                        input: Box::new(scan()),
+                        column: "v".into(),
+                        op: Cmp::Gt,
+                        lit: Scalar::Float64(1.5),
+                    }),
+                    column: "k".into(),
+                    op: Cmp::Le,
+                    lit: Scalar::Int64(2),
+                }),
+                column: "v".into(),
+                f: Arc::new(|x| x * 10.0),
+            }),
+            columns: vec!["k".into(), "v".into()],
+        };
+        let phys = lower(&plan);
+        let PhysicalPlan::Fused { steps, .. } = &phys else {
+            panic!("chain did not fuse:\n{}", phys.render())
+        };
+        assert_eq!(steps.len(), 4, "two filters + map + project fuse into one node");
+        let r = phys.render();
+        assert_eq!(r.lines().count(), 2, "one fused line over one scan line:\n{r}");
+        assert!(r.contains("filter v > 1.5 → filter k <= 2 → map_f64 v → project k,v"), "{r}");
+        // fused execution (merged filter masks) == naive eager execution
+        let got = phys.execute_local().unwrap();
+        let want = plan.execute_naive().unwrap();
+        assert_eq!(ipc::serialize(&got), ipc::serialize(&want));
+    }
+
+    #[test]
+    fn solo_execution_matches_naive_for_every_node_kind() {
+        let join = LogicalPlan::Join {
+            left: Box::new(scan()),
+            right: Box::new(LogicalPlan::Select {
+                input: Box::new(scan()),
+                columns: vec!["k".into(), "w".into()],
+            }),
+            left_on: vec!["k".into()],
+            right_on: vec!["k".into()],
+            jt: JoinType::Inner,
+            algo: JoinAlgorithm::Hash,
+            strategy: JoinStrategy::Auto,
+        };
+        let plans = vec![
+            join.clone(),
+            LogicalPlan::Sort { input: Box::new(scan()), keys: vec![SortKey::desc("v")] },
+            LogicalPlan::SetOp {
+                kind: SetOpKind::Intersect,
+                left: Box::new(scan()),
+                right: Box::new(scan()),
+            },
+            LogicalPlan::Unique { input: Box::new(scan()), keys: vec!["s".into()] },
+            LogicalPlan::DropDuplicates {
+                input: Box::new(scan()),
+                subset: Some(vec!["k".into()]),
+            },
+            LogicalPlan::Window {
+                input: Box::new(scan()),
+                keys: vec!["k".into()],
+                aggs: vec![AggSpec::new("v", Agg::Sum)],
+                spec: WindowSpec::tumbling_rows(4).with_ordinal("__w"),
+            },
+            LogicalPlan::GroupBy {
+                input: Box::new(join),
+                keys: vec!["s".into()],
+                aggs: vec![AggSpec::new("w", Agg::Count), AggSpec::new("v", Agg::Max)],
+                strategy: GroupStrategy::Auto,
+            },
+        ];
+        for plan in plans {
+            let want = plan.execute_naive().unwrap();
+            let got = lower(&optimize(&plan, &CostEnv::local())).execute_local().unwrap();
+            assert_eq!(
+                ipc::serialize(&got),
+                ipc::serialize(&want),
+                "solo physical execution diverged:\n{}",
+                lower(&optimize(&plan, &CostEnv::local())).render()
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_scan_names_surviving_columns_in_explain() {
+        let plan = LogicalPlan::GroupBy {
+            input: Box::new(scan()),
+            keys: vec!["k".into()],
+            aggs: vec![AggSpec::new("v", Agg::Sum)],
+            strategy: GroupStrategy::Auto,
+        };
+        let r = lower(&optimize(&plan, &CostEnv::local())).render();
+        assert!(
+            r.contains("pruned to 2 of 4 cols: k,v"),
+            "projection pruning must be visible in explain:\n{r}"
+        );
+    }
+}

@@ -1,0 +1,186 @@
+//! Property wall for the planner: random operator chains over random
+//! tables must execute byte-identically through the optimized physical
+//! path and the naive eager path.
+//!
+//! Byte-identity (IPC serialization, not just canonical row sets) is
+//! deliberate: every rewrite the optimizer performs — filter pushdown,
+//! projection pruning, fusion, partial-agg selection — preserves row
+//! order and value bits, not merely the result as a set (the
+//! pushdown/pruning soundness arguments are in `super::optimize`).
+
+use super::lazy::LazyFrame;
+use crate::ops::local::groupby::{Agg, AggSpec};
+use crate::ops::local::sort::SortKey;
+use crate::ops::local::Cmp;
+use crate::table::{ipc, Array, Scalar, Table};
+use crate::util::prop::{check, Config};
+use crate::util::rng::Rng;
+
+/// Random keyed table: nullable small-domain i64 `k` and Utf8 `s`,
+/// integer-valued f64 payload `v` (sums exact in any order), constant
+/// prunable payload `w`.
+fn random_table(rng: &mut Rng, size: usize) -> Table {
+    let rows = 1 + rng.usize_in(0, size.max(1)) + size / 2;
+    let domain = 2 + (size as u64) / 8;
+    let mut ks: Vec<Option<i64>> = Vec::with_capacity(rows);
+    let mut ss: Vec<Option<String>> = Vec::with_capacity(rows);
+    let mut vs: Vec<f64> = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        ks.push(if rng.bool(0.1) { None } else { Some(rng.gen_range(domain) as i64) });
+        ss.push(if rng.bool(0.1) { None } else { Some(format!("s{}", rng.gen_range(4))) });
+        vs.push(rng.gen_range(100) as f64);
+    }
+    Table::from_columns(vec![
+        ("k", Array::from_opt_i64(ks)),
+        ("s", Array::from_opt_strs(ss.iter().map(|o| o.as_deref()).collect())),
+        ("v", Array::from_f64(vs)),
+        ("w", Array::from_f64(vec![7.0; rows])),
+    ])
+    .unwrap()
+}
+
+/// One random non-terminal operator; the running frame always keeps
+/// columns {k, s, v} so later operators stay valid.
+fn random_op(rng: &mut Rng, frame: LazyFrame) -> LazyFrame {
+    match rng.gen_range(6) {
+        0 => frame.select(&["k", "s", "v"]),
+        1 => frame.filter("v", random_cmp(rng), Scalar::Float64(rng.gen_range(100) as f64)),
+        2 => frame.filter("k", random_cmp(rng), Scalar::Int64(rng.gen_range(8) as i64)),
+        3 => frame.map_f64("v", |x| x * 2.0 + 1.0),
+        4 => {
+            let keys = match rng.gen_range(3) {
+                0 => vec![SortKey::asc("k")],
+                1 => vec![SortKey::desc("v"), SortKey::asc("k")],
+                _ => vec![SortKey::asc("s"), SortKey::desc("k")],
+            };
+            frame.sort_by(&keys)
+        }
+        _ => {
+            let subset: Option<&[&str]> = match rng.gen_range(3) {
+                0 => None,
+                1 => Some(&["k"]),
+                _ => Some(&["k", "s"]),
+            };
+            frame.drop_duplicates(subset)
+        }
+    }
+}
+
+fn random_cmp(rng: &mut Rng) -> Cmp {
+    match rng.gen_range(6) {
+        0 => Cmp::Eq,
+        1 => Cmp::Ne,
+        2 => Cmp::Lt,
+        3 => Cmp::Le,
+        4 => Cmp::Gt,
+        _ => Cmp::Ge,
+    }
+}
+
+/// Optional terminal: a narrowing operator that lets projection
+/// pruning and partial-agg pushdown fire.
+fn random_terminal(rng: &mut Rng, frame: LazyFrame) -> LazyFrame {
+    match rng.gen_range(4) {
+        0 => frame,
+        1 => {
+            let keys: &[&str] = if rng.bool(0.5) { &["k"] } else { &["k", "s"] };
+            let mut aggs = vec![AggSpec::new("v", Agg::Sum)];
+            if rng.bool(0.5) {
+                aggs.push(AggSpec::new("v", Agg::Count));
+                aggs.push(AggSpec::new("v", Agg::Mean));
+            }
+            if rng.bool(0.4) {
+                aggs.push(AggSpec::new("v", Agg::Min));
+                aggs.push(AggSpec::new("v", Agg::Max));
+            }
+            if rng.bool(0.25) {
+                // non-decomposable: exercises the full-shuffle strategy
+                aggs.push(AggSpec::new("v", Agg::Std));
+            }
+            frame.groupby(keys, &aggs)
+        }
+        2 => frame.unique(&["k", "s"]),
+        _ => frame.select(&["v", "k"]),
+    }
+}
+
+#[test]
+fn optimized_execution_equals_naive_execution() {
+    check(
+        Config::default().cases(48).max_size(96),
+        "plan: optimize ∘ lower ∘ execute == naive eager execution",
+        |rng, size| {
+            let mut frame = LazyFrame::from_table(random_table(rng, size));
+            // occasionally a two-source plan: join or set op
+            match rng.gen_range(4) {
+                0 => {
+                    let right = LazyFrame::from_table(random_table(rng, size / 2 + 1));
+                    frame = frame.join(&right, &["k"], &["k"]);
+                    // restore the {k,s,v} invariant after the join's
+                    // `_r`-renamed columns appear
+                    frame = frame.select(&["k", "s", "v"]);
+                }
+                1 => {
+                    let right = LazyFrame::from_table(random_table(rng, size / 2 + 1));
+                    frame = frame.union_all(&right);
+                }
+                _ => {}
+            }
+            let nops = rng.usize_in(0, 4);
+            for _ in 0..nops {
+                frame = random_op(rng, frame);
+            }
+            frame = random_terminal(rng, frame);
+
+            let naive = frame
+                .collect_unoptimized()
+                .map_err(|e| format!("naive execution failed: {e:#}"))?;
+            let optimized = frame
+                .collect()
+                .map_err(|e| {
+                    format!("optimized execution failed: {e:#}\nplan:\n{}", frame.explain())
+                })?;
+            if ipc::serialize(optimized.table()) != ipc::serialize(naive.table()) {
+                return Err(format!(
+                    "optimized output != naive output\nplan (optimized):\n{}\nlogical:\n{}\n\
+                     naive schema {:?} rows {}, optimized schema {:?} rows {}",
+                    frame.explain(),
+                    frame.explain_logical(),
+                    naive.column_names(),
+                    naive.num_rows(),
+                    optimized.column_names(),
+                    optimized.num_rows(),
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn optimization_is_idempotent_on_random_chains() {
+    use super::optimize::{optimize, CostEnv};
+    check(
+        Config::default().cases(24).max_size(64),
+        "plan: optimize(optimize(p)) == optimize(p) (rendered form)",
+        |rng, size| {
+            let mut frame = LazyFrame::from_table(random_table(rng, size));
+            for _ in 0..rng.usize_in(0, 4) {
+                frame = random_op(rng, frame);
+            }
+            frame = random_terminal(rng, frame);
+            let env = CostEnv::local();
+            let once = optimize(frame.plan(), &env);
+            let twice = optimize(&once, &env);
+            if super::physical::lower(&once).render() != super::physical::lower(&twice).render()
+            {
+                return Err(format!(
+                    "second optimization pass changed the plan:\n{}\nvs\n{}",
+                    super::physical::lower(&once).render(),
+                    super::physical::lower(&twice).render()
+                ));
+            }
+            Ok(())
+        },
+    );
+}

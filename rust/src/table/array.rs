@@ -188,7 +188,10 @@ impl Array {
 
     #[inline]
     pub fn is_valid(&self, i: usize) -> bool {
-        self.validity().map_or(true, |b| b.get(i))
+        match self.validity() {
+            None => true,
+            Some(b) => b.get(i),
+        }
     }
 
     #[inline]

@@ -27,7 +27,7 @@ impl Args {
                     out.opts.insert(k.to_string(), v.to_string());
                 } else if known_flags.contains(&rest) {
                     out.flags.push(rest.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     out.opts.insert(rest.to_string(), it.next().unwrap());
                 } else {
                     out.flags.push(rest.to_string());

@@ -22,11 +22,12 @@ use hptmt::ops::dist::{
     rebalance,
 };
 use hptmt::ops::local::{
-    self, windowed_groupby_stream, Agg, AggSpec, Eviction, JoinAlgorithm, JoinType, SortKey,
+    self, windowed_groupby_stream, Agg, AggSpec, Cmp, Eviction, JoinAlgorithm, JoinType, SortKey,
     WindowSpec,
 };
 use hptmt::pipeline::Pipeline;
-use hptmt::table::{Array, Table};
+use hptmt::plan::{GroupStrategy, JoinStrategy, LazyFrame};
+use hptmt::table::{ipc, Array, Table};
 use hptmt::util::rng::Rng;
 
 const WORLDS: [usize; 4] = [1, 2, 4, 7];
@@ -478,10 +479,10 @@ fn dist_set_ops_match_local() {
         fn(&mut hptmt::comm::ThreadComm, &Table, &Table) -> anyhow::Result<Table>,
     );
     let cases: [SetOp; 4] = [
-        ("union", |x, y| local::union(x, y), |c, x, y| dist_union(c, x, y)),
-        ("union_all", |x, y| local::union_all(x, y), |c, x, y| dist_union_all(c, x, y)),
-        ("intersect", |x, y| local::intersect(x, y), |c, x, y| dist_intersect(c, x, y)),
-        ("difference", |x, y| local::difference(x, y), |c, x, y| dist_difference(c, x, y)),
+        ("union", local::union, dist_union),
+        ("union_all", local::union_all, dist_union_all),
+        ("intersect", local::intersect, dist_intersect),
+        ("difference", local::difference, dist_difference),
     ];
     for (name, local_op, dist_op) in cases {
         let oracle = local_op(&a, &b).unwrap();
@@ -498,5 +499,317 @@ fn dist_set_ops_match_local() {
                 seed()
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The planned-vs-eager wall (third column of this harness): every
+// operator covered above, executed through the `plan::` layer
+// (LazyFrame → optimize → lower → execute), must produce BYTE-identical
+// per-rank tables to the hand-wired eager `ops::dist` call at every
+// world size. The physical executor lowers onto the very same
+// primitives, so any divergence is a planner bug, not float noise —
+// hence `ipc::serialize` equality per rank, not canonical row sets.
+// ---------------------------------------------------------------------------
+
+/// Run `eager` and `planned` back to back on the same world (all ranks
+/// issue the same collective sequence, so lockstep holds) and require
+/// byte equality on every rank.
+fn assert_planned_eager_bytes<E, P>(name: &'static str, w: usize, eager: E, planned: P)
+where
+    E: Fn(&mut hptmt::comm::ThreadComm, usize) -> anyhow::Result<Table>
+        + Send
+        + Sync
+        + Clone
+        + 'static,
+    P: Fn(&mut hptmt::comm::ThreadComm, usize) -> anyhow::Result<Table>
+        + Send
+        + Sync
+        + Clone
+        + 'static,
+{
+    let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+        let e = eager(comm, rank)?;
+        let p = planned(comm, rank)?;
+        Ok((ipc::serialize(&e), ipc::serialize(&p)))
+    })
+    .unwrap_or_else(|e| panic!("{name} w={w}: {e:#}"));
+    for (rank, (e, p)) in out.iter().enumerate() {
+        assert_eq!(
+            e, p,
+            "{name}: planned != eager bytes on rank {rank} at w={w} (seed {})",
+            seed()
+        );
+    }
+}
+
+#[test]
+fn planned_join_and_groupby_are_byte_identical_to_eager() {
+    let l = global_table(240, 16, 20);
+    let r = global_table(160, 16, 21);
+    let aggs = [
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Mean),
+        AggSpec::new("v", Agg::Min),
+        AggSpec::new("v", Agg::Max),
+    ];
+    for w in WORLDS {
+        let (lp, rp) = (l.split(w), r.split(w));
+
+        let (le, re) = (lp.clone(), rp.clone());
+        let (ll, rl) = (lp.clone(), rp.clone());
+        assert_planned_eager_bytes(
+            "dist_join",
+            w,
+            move |comm, rank| {
+                dist_join(comm, &le[rank], &re[rank], &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)
+            },
+            move |comm, rank| {
+                Ok(LazyFrame::from_table(ll[rank].clone())
+                    .join_with(
+                        &LazyFrame::from_table(rl[rank].clone()),
+                        &["k"],
+                        &["k"],
+                        JoinType::Inner,
+                        JoinAlgorithm::Hash,
+                        JoinStrategy::Hash,
+                    )
+                    .collect_comm(comm)?
+                    .into_table())
+            },
+        );
+
+        let (le, re) = (lp.clone(), rp.clone());
+        let (ll, rl) = (lp.clone(), rp.clone());
+        assert_planned_eager_bytes(
+            "broadcast_join",
+            w,
+            move |comm, rank| {
+                broadcast_join(comm, &le[rank], &re[rank], &["k"], &["k"], JoinType::Inner)
+            },
+            move |comm, rank| {
+                Ok(LazyFrame::from_table(ll[rank].clone())
+                    .join_with(
+                        &LazyFrame::from_table(rl[rank].clone()),
+                        &["k"],
+                        &["k"],
+                        JoinType::Inner,
+                        JoinAlgorithm::Hash,
+                        JoinStrategy::Broadcast,
+                    )
+                    .collect_comm(comm)?
+                    .into_table())
+            },
+        );
+
+        for (name, strategy) in [
+            ("dist_groupby", GroupStrategy::FullShuffle),
+            ("dist_groupby_partial", GroupStrategy::PartialShuffle),
+        ] {
+            let ge = lp.clone();
+            let gl = lp.clone();
+            let (ae, al) = (aggs.clone(), aggs.clone());
+            assert_planned_eager_bytes(
+                name,
+                w,
+                move |comm, rank| match strategy {
+                    GroupStrategy::FullShuffle => dist_groupby(comm, &ge[rank], &["s", "k"], &ae),
+                    _ => dist_groupby_partial(comm, &ge[rank], &["s", "k"], &ae),
+                },
+                move |comm, rank| {
+                    Ok(LazyFrame::from_table(gl[rank].clone())
+                        .groupby_with(&["s", "k"], &al, strategy)
+                        .collect_comm(comm)?
+                        .into_table())
+                },
+            );
+        }
+    }
+    // Auto strategy must resolve to the combiner for decomposable aggs,
+    // observably in explain().
+    let ex = LazyFrame::from_table(l).groupby(&["s", "k"], &aggs).explain();
+    assert!(ex.contains("PartialAgg"), "auto group-by must take the combiner:\n{ex}");
+}
+
+#[test]
+fn planned_sort_dedup_and_setops_are_byte_identical_to_eager() {
+    let g = global_table(260, 12, 22);
+    let h = global_table(200, 12, 23);
+    for w in WORLDS {
+        let (gp, hp) = (g.split(w), h.split(w));
+
+        let keys = || [SortKey::asc("s"), SortKey::desc("k")];
+        let (ge, gl) = (gp.clone(), gp.clone());
+        assert_planned_eager_bytes(
+            "dist_sort(s,k)",
+            w,
+            move |comm, rank| dist_sort(comm, &ge[rank], &keys()),
+            move |comm, rank| {
+                Ok(LazyFrame::from_table(gl[rank].clone())
+                    .sort_by(&keys())
+                    .collect_comm(comm)?
+                    .into_table())
+            },
+        );
+
+        let (ge, gl) = (gp.clone(), gp.clone());
+        assert_planned_eager_bytes(
+            "dist_unique",
+            w,
+            move |comm, rank| dist_unique(comm, &ge[rank], &["s", "k"]),
+            move |comm, rank| {
+                Ok(LazyFrame::from_table(gl[rank].clone())
+                    .unique(&["s", "k"])
+                    .collect_comm(comm)?
+                    .into_table())
+            },
+        );
+
+        for subset in [None, Some(vec!["s", "k"])] {
+            let (ge, gl) = (gp.clone(), gp.clone());
+            let (se, sl) = (subset.clone(), subset.clone());
+            assert_planned_eager_bytes(
+                "dist_drop_duplicates",
+                w,
+                move |comm, rank| dist_drop_duplicates(comm, &ge[rank], se.as_deref()),
+                move |comm, rank| {
+                    Ok(LazyFrame::from_table(gl[rank].clone())
+                        .drop_duplicates(sl.as_deref())
+                        .collect_comm(comm)?
+                        .into_table())
+                },
+            );
+        }
+
+        type Eager = fn(&mut hptmt::comm::ThreadComm, &Table, &Table) -> anyhow::Result<Table>;
+        type Planned = fn(LazyFrame, &LazyFrame) -> LazyFrame;
+        let cases: [(&'static str, Eager, Planned); 4] = [
+            ("union", dist_union, |a, b| a.union(b)),
+            ("union_all", dist_union_all, |a, b| a.union_all(b)),
+            ("intersect", dist_intersect, |a, b| a.intersect(b)),
+            ("difference", dist_difference, |a, b| a.difference(b)),
+        ];
+        for (name, eager_op, lazy_op) in cases {
+            let (ae, be) = (gp.clone(), hp.clone());
+            let (al, bl) = (gp.clone(), hp.clone());
+            assert_planned_eager_bytes(
+                name,
+                w,
+                move |comm, rank| eager_op(comm, &ae[rank], &be[rank]),
+                move |comm, rank| {
+                    Ok(lazy_op(
+                        LazyFrame::from_table(al[rank].clone()),
+                        &LazyFrame::from_table(bl[rank].clone()),
+                    )
+                    .collect_comm(comm)?
+                    .into_table())
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn planned_window_is_byte_identical_to_eager_composition() {
+    let g = global_table(220, 10, 24);
+    let spec = WindowSpec::tumbling_rows(30).with_ordinal("__w");
+    let aggs = [AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)];
+    for w in WORLDS {
+        let gp = g.split(w);
+        let (ge, gl) = (gp.clone(), gp.clone());
+        let (spec_e, spec_l) = (spec.clone(), spec.clone());
+        let (ae, al) = (aggs.clone(), aggs.clone());
+        assert_planned_eager_bytes(
+            "window",
+            w,
+            move |comm, rank| {
+                // the eager composition the Window node lowers to:
+                // hash shuffle on the keys, then per-window local
+                // group-bys over the shard's rows in order, concatenated
+                let shuffled =
+                    hptmt::comm::shuffle_by_hash(comm, &ge[rank], &["s", "k"])?;
+                let wins =
+                    local::windowed_groupby(&shuffled, &["s", "k"], &ae, &spec_e)?;
+                if wins.is_empty() {
+                    let empty = local::groupby_aggregate(
+                        &shuffled.slice(0, 0),
+                        &["s", "k"],
+                        &ae,
+                    )?;
+                    return empty.with_column("__w", Array::from_i64(Vec::new()));
+                }
+                Table::concat_tables(&wins.iter().collect::<Vec<_>>())
+            },
+            move |comm, rank| {
+                Ok(LazyFrame::from_table(gl[rank].clone())
+                    .window(&["s", "k"], &al, spec_l.clone())
+                    .collect_comm(comm)?
+                    .into_table())
+            },
+        );
+    }
+}
+
+/// A whole optimized chain — filter + join + group-by with pushdown,
+/// pruning and the combiner all firing — must still match the local
+/// oracle on the concatenated partitions (canonical form: the chain
+/// crosses shuffles, so per-rank bytes are partitioning-dependent, but
+/// the global result is exact).
+#[test]
+fn planned_pushdown_chain_matches_local_oracle() {
+    let l = global_table(300, 14, 25);
+    let r = global_table(180, 14, 26);
+    let aggs = [AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)];
+    let oracle = local::groupby_aggregate(
+        &local::join(
+            &local::filter_cmp(&l, "v", Cmp::Ge, &hptmt::table::Scalar::Float64(100.0)).unwrap(),
+            &r,
+            &["k"],
+            &["k"],
+            JoinType::Inner,
+            JoinAlgorithm::Hash,
+        )
+        .unwrap(),
+        &["s"],
+        &aggs,
+    )
+    .unwrap();
+    let want = canon(std::slice::from_ref(&oracle));
+    for w in WORLDS {
+        let (lp, rp) = (l.split(w), r.split(w));
+        let aggs = aggs.clone();
+        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            // written join-then-filter: the optimizer must push the
+            // filter below the join's shuffle and prune unused columns
+            let frame = LazyFrame::from_table(lp[rank].clone())
+                .join_with(
+                    &LazyFrame::from_table(rp[rank].clone()),
+                    &["k"],
+                    &["k"],
+                    JoinType::Inner,
+                    JoinAlgorithm::Hash,
+                    JoinStrategy::Hash,
+                )
+                .filter("v", Cmp::Ge, 100.0f64)
+                .groupby(&["s"], &aggs);
+            if rank == 0 && comm.world_size() == WORLDS[WORLDS.len() - 1] {
+                let ex = frame.explain();
+                assert!(ex.contains("PartialAgg"), "combiner must fire:\n{ex}");
+                assert!(ex.contains("pruned to"), "pruning must fire:\n{ex}");
+                assert!(
+                    ex.contains("Fused[filter v >= 100"),
+                    "filter must sit below the join shuffle:\n{ex}"
+                );
+            }
+            Ok(frame.collect_comm(comm)?.into_table())
+        })
+        .unwrap_or_else(|e| panic!("pushdown chain w={w}: {e:#}"));
+        assert_eq!(
+            canon(&out),
+            want,
+            "planned pushdown chain != local oracle at w={w} (seed {})",
+            seed()
+        );
     }
 }

@@ -1,27 +1,63 @@
-//! Integration: PJRT runtime + DDP trainer over real AOT artifacts.
+//! Integration: PJRT runtime + DDP trainer over AOT artifacts.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
-//! Tests skip with a notice if artifacts are absent so a bare
-//! `cargo test` still passes.
+//! Runs against `artifacts/` when `make artifacts` has produced the
+//! full UNOMT model; otherwise falls back to the checked-in miniature
+//! artifact set under `rust/tests/data/artifacts/` (a hand-lowered
+//! 5-parameter linear model, few KB of HLO text + zero-initialised
+//! params), so the runtime path is exercised unconditionally in CI —
+//! these tests never skip.
 
 use hptmt::comm::{spawn_world, LinkProfile};
 use hptmt::dl::{synthetic_dataset, train_ddp, TrainConfig};
 use hptmt::runtime::ModelRuntime;
 
-fn artifacts_dir() -> Option<String> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir.to_string_lossy().into_owned())
+/// Per-artifact-set training hyperparameters: the mini linear model
+/// conditions very differently from the UNOMT network, so the
+/// loss-decrease tests tune (lr, steps, required loss ratio) per set.
+struct Artifacts {
+    dir: String,
+    lr: f32,
+    steps: usize,
+    loss_ratio: f32,
+    ddp_lr: f32,
+    ddp_steps: usize,
+}
+
+fn artifacts() -> Artifacts {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let real = root.join("artifacts");
+    if real.join("manifest.json").exists() {
+        Artifacts {
+            dir: real.to_string_lossy().into_owned(),
+            lr: 0.003,
+            steps: 30,
+            loss_ratio: 0.6,
+            ddp_lr: 0.003,
+            ddp_steps: 12,
+        }
     } else {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        None
+        Artifacts {
+            dir: root
+                .join("rust/tests/data/artifacts")
+                .to_string_lossy()
+                .into_owned(),
+            // The mini model's Hessian is tiny (4 gaussian features, 8
+            // rows), so it takes a larger rate and more steps to move —
+            // enough that the loss-decrease assertions dominate the
+            // per-batch variance of the synthetic labels.
+            lr: 0.1,
+            steps: 150,
+            loss_ratio: 0.6,
+            ddp_lr: 0.05,
+            ddp_steps: 40,
+        }
     }
 }
 
 #[test]
 fn runtime_loads_and_predicts() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = ModelRuntime::load(&dir).unwrap();
+    let a = artifacts();
+    let rt = ModelRuntime::load(&a.dir).unwrap();
     let dims = rt.manifest.dims.clone();
     let params = rt.init_params().unwrap();
     assert_eq!(params.len(), rt.manifest.params.len());
@@ -38,8 +74,8 @@ fn runtime_loads_and_predicts() {
 
 #[test]
 fn grad_apply_cycle_reduces_loss() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = ModelRuntime::load(&dir).unwrap();
+    let a = artifacts();
+    let rt = ModelRuntime::load(&a.dir).unwrap();
     let dims = rt.manifest.dims.clone();
     let data = synthetic_dataset(dims.batch, dims.d_in, 7);
     let (x, y) = data.batch(0, dims.batch);
@@ -47,21 +83,22 @@ fn grad_apply_cycle_reduces_loss() {
     let mut params = rt.init_params().unwrap();
     let (first_loss, _) = rt.grad_step(&params, x, y, 0).unwrap();
     let mut last = first_loss;
-    for step in 0..30 {
-        let (loss, grads) = rt.grad_step(&params, x, y, step).unwrap();
-        params = rt.apply_step(&params, &grads, 0.003).unwrap();
+    for step in 0..a.steps {
+        let (loss, grads) = rt.grad_step(&params, x, y, step as i32).unwrap();
+        params = rt.apply_step(&params, &grads, a.lr).unwrap();
         last = loss;
     }
     assert!(
-        last < 0.6 * first_loss,
-        "loss did not decrease: {first_loss} -> {last}"
+        last < a.loss_ratio * first_loss,
+        "loss did not decrease enough: {first_loss} -> {last} (want < {}x)",
+        a.loss_ratio
     );
 }
 
 #[test]
 fn gradient_shapes_match_manifest() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = ModelRuntime::load(&dir).unwrap();
+    let a = artifacts();
+    let rt = ModelRuntime::load(&a.dir).unwrap();
     let dims = rt.manifest.dims.clone();
     let params = rt.init_params().unwrap();
     let x = vec![0.5f32; dims.batch * dims.d_in];
@@ -75,7 +112,9 @@ fn gradient_shapes_match_manifest() {
 
 #[test]
 fn ddp_two_ranks_stay_replicated_and_learn() {
-    let Some(dir) = artifacts_dir() else { return };
+    let a = artifacts();
+    let dir = a.dir.clone();
+    let (ddp_lr, ddp_steps) = (a.ddp_lr, a.ddp_steps);
     let results = spawn_world(2, LinkProfile::single_node(), move |rank, comm| {
         // Each rank owns its own PJRT client (the wrappers are !Send).
         let rt = ModelRuntime::load(&dir).unwrap();
@@ -84,19 +123,11 @@ fn ddp_two_ranks_stay_replicated_and_learn() {
         let shard = synthetic_dataset(dims.batch * 2, dims.d_in, 100 + rank as u64);
         let cfg = TrainConfig {
             artifacts_dir: String::new(),
-            lr: 0.003,
-            steps: 12,
+            lr: ddp_lr,
+            steps: ddp_steps,
             log_every: 0,
         };
         let report = train_ddp(comm, &rt, &shard, &cfg)?;
-
-        // Probe: predict on a shared input; replicated params must give
-        // identical outputs on every rank.
-        let mut params = rt.init_params()?;
-        // re-run the training to recover final params (train_ddp owns them);
-        // cheaper: just verify the loss curves agree (allreduced) and
-        // train once more step to probe sync via loss.
-        let _ = &mut params;
         Ok((report.losses, report.grad_bytes_per_step, report.comm_sim_seconds))
     })
     .unwrap();
