@@ -1,0 +1,156 @@
+//! fig_kernels — microbench wall for the columnar speed pass: hot
+//! kernels over dictionary-encoded vs plain Utf8 columns, shuffle wire
+//! bytes, and the fused-chain selection-vector executor.
+//!
+//! Two kinds of cells:
+//!
+//! * **timing** (`median_s`) — advisory in CI (runners vary);
+//! * **deterministic** (`det`, plus shuffle `bytes`) — exact functions
+//!   of the pinned input: group counts, the boundary-gather count
+//!   (must be exactly 1 for a fused filter chain), and the
+//!   dict-beats-plain wire-byte checks. The `det` column gates CI via
+//!   `bench_diff --strict-cols det`, and this binary itself panics if a
+//!   dictionary cell stops winning — a bench run doubles as the
+//!   acceptance check.
+//!
+//! Input is fully deterministic (no RNG): `s = "k" + i % 97`, so the
+//! dictionary holds 97 entries regardless of scale.
+
+use hptmt::bench::{measure, scaled, Report};
+use hptmt::comm::{shuffle_by_hash, spawn_world, Communicator, LinkProfile};
+use hptmt::ops::local::{self, Agg, AggSpec, Cmp, SortKey};
+use hptmt::plan::{fuse_gathers, reset_fuse_gathers, LazyFrame};
+use hptmt::table::rowhash::hash_columns;
+use hptmt::table::{ipc, Array, Table};
+use hptmt::util::time::CpuStopwatch;
+
+fn table(rows: usize) -> Table {
+    let ss: Vec<String> = (0..rows).map(|i| format!("k{:03}", i % 97)).collect();
+    let ks: Vec<i64> = (0..rows).map(|i| (i % 53) as i64).collect();
+    let vs: Vec<f64> = (0..rows).map(|i| (i % 101) as f64).collect();
+    Table::from_columns(vec![
+        ("s", Array::from_strs(&ss)),
+        ("k", Array::from_i64(ks)),
+        ("v", Array::from_f64(vs)),
+    ])
+    .unwrap()
+}
+
+/// Measure `f` (which returns the row's `bytes` cell, "-" when not
+/// applicable) and append one report row.
+fn timed(
+    report: &mut Report,
+    name: &str,
+    det: String,
+    f: &mut dyn FnMut() -> anyhow::Result<String>,
+) -> anyhow::Result<()> {
+    let mut bytes = "-".to_string();
+    let stat = measure(1, 5, || {
+        let sw = CpuStopwatch::start();
+        bytes = f()?;
+        Ok(sw.elapsed().as_secs_f64())
+    })?;
+    report.row(&[name.to_string(), format!("{:.4}", stat.median), bytes, det]);
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = scaled(200_000);
+    let plain = table(rows);
+    let dict = plain.dict_encode_columns();
+    println!("# kernel microbench: {rows} rows, 97-entry Utf8 dictionary");
+
+    let mut report = Report::new("fig_kernels", &["kernel", "median_s", "bytes", "det"]);
+
+    // --- row hashing (shuffle routing's inner loop) -------------------
+    for (label, t) in [("hash utf8 plain", &plain), ("hash utf8 dict", &dict)] {
+        timed(&mut report, label, "-".into(), &mut || {
+            std::hint::black_box(hash_columns(&[t.column(0)]));
+            Ok("-".into())
+        })?;
+    }
+
+    // --- row comparison (sort on the Utf8 key) ------------------------
+    for (label, t) in [("sort utf8 plain", &plain), ("sort utf8 dict", &dict)] {
+        timed(&mut report, label, "-".into(), &mut || {
+            std::hint::black_box(local::sort(t, &[SortKey::asc("s"), SortKey::desc("k")])?);
+            Ok("-".into())
+        })?;
+    }
+
+    // --- group-by probe on the dictionary key -------------------------
+    let aggs = [AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)];
+    let groups = local::groupby_aggregate(&plain, &["s"], &aggs)?.num_rows();
+    for (label, t) in [("groupby utf8 plain", &plain), ("groupby utf8 dict", &dict)] {
+        let out = local::groupby_aggregate(t, &["s"], &aggs)?.num_rows();
+        assert_eq!(out, groups, "{label}: group count must be encoding-invariant");
+        timed(&mut report, label, groups.to_string(), &mut || {
+            std::hint::black_box(local::groupby_aggregate(t, &["s"], &aggs)?);
+            Ok("-".into())
+        })?;
+    }
+
+    // --- wire format: dict ships each distinct string once ------------
+    let wire_plain = ipc::serialize_wire(&plain).len();
+    let wire_dict = ipc::serialize_wire(&dict).len();
+    assert!(
+        wire_dict < wire_plain,
+        "dict wire bytes must beat plain: {wire_dict} !< {wire_plain}"
+    );
+    for (label, t, bytes, det) in [
+        ("wire utf8 plain", &plain, wire_plain, "-".to_string()),
+        ("wire utf8 dict", &dict, wire_dict, "yes".to_string()),
+    ] {
+        timed(&mut report, label, det, &mut || {
+            std::hint::black_box(ipc::serialize_wire(t));
+            Ok(bytes.to_string())
+        })?;
+    }
+
+    // --- a real shuffle edge at w=4: total bytes on the wire ----------
+    let shuffle_bytes = |t: &Table| -> anyhow::Result<u64> {
+        let parts = t.split(4);
+        let sent = spawn_world(4, LinkProfile::zero(), move |rank, comm| {
+            std::hint::black_box(shuffle_by_hash(comm, &parts[rank], &["s"])?);
+            Ok(comm.stats().bytes_sent)
+        })?;
+        Ok(sent.iter().sum())
+    };
+    let sh_plain = shuffle_bytes(&plain)?;
+    let sh_dict = shuffle_bytes(&dict)?;
+    assert!(
+        sh_dict < sh_plain,
+        "dict shuffle bytes must beat plain at w=4: {sh_dict} !< {sh_plain}"
+    );
+    report.row(&["shuffle w4 plain".into(), "-".into(), sh_plain.to_string(), "-".into()]);
+    report.row(&["shuffle w4 dict".into(), "-".into(), sh_dict.to_string(), "yes".into()]);
+
+    // --- fused filter chain: selection vector, one boundary gather ----
+    let chain = |t: &Table| {
+        LazyFrame::from_table(t.clone())
+            .filter("v", Cmp::Ge, 10.0f64)
+            .map_f64("v", |x| x * 2.0)
+            .filter("v", Cmp::Le, 150.0f64)
+            .select(&["s", "v"])
+    };
+    reset_fuse_gathers();
+    let selvec = chain(&dict).collect()?;
+    let gathers = fuse_gathers();
+    assert_eq!(gathers, 1, "fused filter chain must gather exactly once at the boundary");
+    let eager = chain(&dict).collect_unoptimized()?;
+    assert_eq!(
+        ipc::serialize(selvec.table()),
+        ipc::serialize(eager.table()),
+        "selection-vector output must match eager"
+    );
+    timed(&mut report, "fused chain selvec", gathers.to_string(), &mut || {
+        std::hint::black_box(chain(&dict).collect()?);
+        Ok("-".into())
+    })?;
+    timed(&mut report, "fused chain eager", "-".into(), &mut || {
+        std::hint::black_box(chain(&dict).collect_unoptimized()?);
+        Ok("-".into())
+    })?;
+
+    report.finish()
+}

@@ -30,5 +30,5 @@ pub use collectives::{
 pub use communicator::{CommStats, Communicator, Tag};
 pub use partitioner::{HashPartitioner, RangePartitioner};
 pub use profile::{LinkCost, LinkProfile};
-pub use shuffle::{shuffle_by_hash, shuffle_by_range, shuffle_tables};
+pub use shuffle::{shuffle_by_hash, shuffle_by_range, shuffle_tables, StreamingShuffle};
 pub use thread_comm::{spawn_world, ThreadComm};

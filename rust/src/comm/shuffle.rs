@@ -14,6 +14,12 @@ use anyhow::{Context, Result};
 
 /// Exchange pre-partitioned tables: `parts[r]` goes to rank `r`; the
 /// received partitions are concatenated (own partition avoids the wire).
+///
+/// Partitions travel in the shuffle wire format
+/// ([`ipc::serialize_wire`]), which keeps dictionary-encoded string
+/// columns encoded — each distinct value crosses the wire once per
+/// edge, plus 4 bytes per row of codes. For plain tables the wire
+/// format is byte-identical to the canonical [`ipc::serialize`].
 pub fn shuffle_tables<C: Communicator + ?Sized>(
     comm: &mut C,
     parts: Vec<Table>,
@@ -28,7 +34,7 @@ pub fn shuffle_tables<C: Communicator + ?Sized>(
             own = Some(p);
             blobs.push(Vec::new());
         } else {
-            blobs.push(ipc::serialize(&p));
+            blobs.push(ipc::serialize_wire(&p));
         }
     }
     let received = alltoall_bytes(comm, blobs)?;
@@ -37,13 +43,80 @@ pub fn shuffle_tables<C: Communicator + ?Sized>(
         if r == rank {
             tables.push(own.take().expect("own partition"));
         } else {
-            tables.push(ipc::deserialize(&blob).with_context(|| format!("shuffle: from rank {r}"))?);
+            tables.push(
+                ipc::deserialize_wire(&blob)
+                    .with_context(|| format!("shuffle: from rank {r}"))?,
+            );
         }
     }
     let refs: Vec<&Table> = tables.iter().collect();
     let out = Table::concat_tables(&refs)?;
     debug_assert_eq!(out.schema().as_ref(), schema.as_ref());
     Ok(out)
+}
+
+/// Stateful shuffle for repeated batch exchanges over the same edges
+/// (micro-batched streams, iterative algorithms).
+///
+/// Each `(sender, receiver)` edge keeps a [`ipc::DictWireState`] pair,
+/// so a dictionary-encoded string column ships its dictionary **once**
+/// per edge: later batches whose dictionaries extend (or equal) what
+/// the edge has already seen carry only fresh entries plus u32 codes.
+/// One-shot exchanges should keep using [`shuffle_tables`].
+pub struct StreamingShuffle {
+    /// Encoder state per destination rank.
+    tx: Vec<ipc::DictWireState>,
+    /// Decoder state per source rank.
+    rx: Vec<ipc::DictWireState>,
+}
+
+impl StreamingShuffle {
+    /// Fresh edge state for a world of `world_size` ranks.
+    pub fn new(world_size: usize) -> StreamingShuffle {
+        StreamingShuffle {
+            tx: (0..world_size).map(|_| ipc::DictWireState::new()).collect(),
+            rx: (0..world_size).map(|_| ipc::DictWireState::new()).collect(),
+        }
+    }
+
+    /// Exchange one batch of pre-partitioned tables (`parts[r]` goes to
+    /// rank `r`); the received partitions are concatenated, own
+    /// partition skipping the wire. Must be called in lockstep on every
+    /// rank, once per batch, with `parts.len() == world_size`.
+    pub fn exchange<C: Communicator + ?Sized>(
+        &mut self,
+        comm: &mut C,
+        parts: Vec<Table>,
+    ) -> Result<Table> {
+        assert_eq!(parts.len(), comm.world_size(), "shuffle: one partition per rank");
+        assert_eq!(parts.len(), self.tx.len(), "StreamingShuffle built for another world size");
+        let rank = comm.rank();
+        let mut own: Option<Table> = None;
+        let mut blobs: Vec<Vec<u8>> = Vec::with_capacity(parts.len());
+        for (r, p) in parts.into_iter().enumerate() {
+            if r == rank {
+                own = Some(p);
+                blobs.push(Vec::new());
+            } else {
+                blobs.push(self.tx[r].encode_batch(&p));
+            }
+        }
+        let received = alltoall_bytes(comm, blobs)?;
+        let mut tables: Vec<Table> = Vec::with_capacity(received.len());
+        for (r, blob) in received.into_iter().enumerate() {
+            if r == rank {
+                tables.push(own.take().expect("own partition"));
+            } else {
+                tables.push(
+                    self.rx[r]
+                        .decode_batch(&blob)
+                        .with_context(|| format!("streaming shuffle: from rank {r}"))?,
+                );
+            }
+        }
+        let refs: Vec<&Table> = tables.iter().collect();
+        Table::concat_tables(&refs)
+    }
 }
 
 /// Hash-partition `local` on `keys` (via the shared
@@ -234,6 +307,99 @@ mod tests {
             |t: &Table| (0..t.num_rows()).filter(|&i| t.cell(i, 0).as_f64().unwrap().is_nan()).count();
         assert_eq!(nan_count(&res[0]), 0);
         assert_eq!(nan_count(&res[1]), 2);
+    }
+
+    #[test]
+    fn dict_columns_survive_the_shuffle_and_shrink_the_wire() {
+        fn make(rank: usize, dict: bool) -> Table {
+            let keys: Vec<i64> = (0..64).map(|i| (i % 8) as i64).collect();
+            let tags: Vec<String> = (0..64).map(|i| format!("city-{:02}", (i + rank) % 8)).collect();
+            let t = Table::from_columns(vec![
+                ("k", Array::from_i64(keys)),
+                ("tag", Array::from_strs(&tags.iter().map(|s| s.as_str()).collect::<Vec<_>>())),
+            ])
+            .unwrap();
+            if dict { t.dict_encode_columns() } else { t }
+        }
+        let run = |dict: bool| {
+            spawn_world(4, LinkProfile::single_node(), move |rank, comm| {
+                let out = shuffle_by_hash(comm, &make(rank, dict), &["k"])?;
+                Ok((ipc::serialize(&out), out.column(1).is_dict(), comm.stats().bytes_sent))
+            })
+            .unwrap()
+        };
+        let plain = run(false);
+        let dict = run(true);
+        for (p, d) in plain.iter().zip(dict.iter()) {
+            assert_eq!(p.0, d.0, "shuffle results must be encoding-invariant");
+            assert!(d.1, "dict encoding must survive the wire");
+            assert!(d.2 < p.2, "dict shuffle must ship fewer bytes ({} vs {})", d.2, p.2);
+        }
+    }
+
+    #[test]
+    fn streaming_shuffle_ships_each_dictionary_once_per_edge() {
+        // keys rotate per batch; the tag dictionary is stable (same
+        // values, same first-occurrence order every batch), which is
+        // what lets the delta protocol go quiet after batch 0
+        fn batch(rank: usize, b: usize) -> Table {
+            let keys: Vec<i64> = (0..32).map(|i| ((i + b) % 4) as i64).collect();
+            let tags: Vec<String> =
+                (0..32).map(|i| format!("sensor-{:02}", (i + rank) % 6)).collect();
+            Table::from_columns(vec![
+                ("k", Array::from_i64(keys)),
+                ("tag", Array::from_strs(&tags.iter().map(|s| s.as_str()).collect::<Vec<_>>())),
+            ])
+            .unwrap()
+            .dict_encode_columns()
+        }
+        let res = spawn_world(2, LinkProfile::single_node(), move |rank, comm| {
+            let w = comm.world_size();
+            let mut edge = StreamingShuffle::new(w);
+            let part = HashPartitioner::new(["k"], w);
+            let mut outs = Vec::new();
+            let mut sent_per_batch = Vec::new();
+            let mut last = 0;
+            for b in 0..3 {
+                let parts = part.partition(&batch(rank, b))?;
+                let out = edge.exchange(comm, parts)?;
+                outs.push(ipc::serialize(&out));
+                let sent = comm.stats().bytes_sent;
+                sent_per_batch.push(sent - last);
+                last = sent;
+            }
+            Ok((outs, sent_per_batch))
+        })
+        .unwrap();
+        for (outs, sent) in &res {
+            // after batch 0 the 6-entry dictionaries are known on every
+            // edge; batches 1-2 extend nothing, so they ship only codes
+            assert!(
+                sent[1] < sent[0] && sent[2] < sent[0],
+                "warm batches must be cheaper: {sent:?}"
+            );
+            assert_eq!(sent[1], sent[2], "steady state: {sent:?}");
+            assert!(!outs.is_empty());
+        }
+        // one-shot shuffles of the same batches cost the full dictionary
+        // every time — the streaming edge must beat them from batch 1 on
+        let oneshot = spawn_world(2, LinkProfile::single_node(), move |rank, comm| {
+            let w = comm.world_size();
+            let part = HashPartitioner::new(["k"], w);
+            let mut last = 0;
+            let mut sent_per_batch = Vec::new();
+            for b in 0..3 {
+                shuffle_tables(comm, part.partition(&batch(rank, b))?)?;
+                let sent = comm.stats().bytes_sent;
+                sent_per_batch.push(sent - last);
+                last = sent;
+            }
+            Ok(sent_per_batch)
+        })
+        .unwrap();
+        for ((_, stream), oneshot) in res.iter().zip(oneshot.iter()) {
+            assert!(stream[1] < oneshot[1], "{} !< {}", stream[1], oneshot[1]);
+        }
     }
 
     #[test]

@@ -64,7 +64,10 @@ pub fn broadcast_join<C: Communicator + ?Sized>(
         return local::join(left, right, left_on, right_on, jt, JoinAlgorithm::Hash);
     }
     let rank = comm.rank();
-    let blobs = allgather_bytes(comm, ipc::serialize(right))?;
+    // Broadcast edges use the shuffle wire format too: a replicated
+    // dictionary-encoded build side ships each distinct string once per
+    // edge instead of once per row.
+    let blobs = allgather_bytes(comm, ipc::serialize_wire(right))?;
     let mut parts: Vec<Table> = Vec::with_capacity(blobs.len());
     for (r, blob) in blobs.into_iter().enumerate() {
         if r == rank {
@@ -72,7 +75,8 @@ pub fn broadcast_join<C: Communicator + ?Sized>(
             parts.push(right.clone());
         } else {
             parts.push(
-                ipc::deserialize(&blob).with_context(|| format!("broadcast_join: from rank {r}"))?,
+                ipc::deserialize_wire(&blob)
+                    .with_context(|| format!("broadcast_join: from rank {r}"))?,
             );
         }
     }

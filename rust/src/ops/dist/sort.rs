@@ -60,7 +60,16 @@ pub fn dist_sort<C: Communicator + ?Sized>(
     //    splitter columns later pair positionally with the key specs).
     let take = (OVERSAMPLE * w).min(n);
     let sample_idx: Vec<usize> = (0..take).map(|k| k * n / take).collect();
-    let local_sample = sorted.select_columns(&key_names)?.take(&sample_idx);
+    // Gather the sample positions per key column *before* assembling
+    // the sample table: projecting first (`select_columns` + `take`)
+    // would clone every key column wholesale — all string bytes — only
+    // to keep OVERSAMPLE·w rows of them.
+    let local_sample = Table::from_columns(
+        key_names
+            .iter()
+            .map(|k| Ok((*k, sorted.column_by_name(k)?.take(&sample_idx))))
+            .collect::<Result<Vec<_>>>()?,
+    )?;
 
     // 3. Exchange samples through the table wire format. Every rank
     //    concatenates the same blobs in rank order and sorts them with

@@ -16,6 +16,14 @@ pub fn cast(col: &Array, to: DataType) -> Result<Array> {
     if col.data_type() == to {
         return Ok(col.clone());
     }
+    // Dictionary-encoded strings decode first so every (source, target)
+    // pair below sees a plain layout; cast outputs therefore never
+    // depend on physical encoding. (A same-type cast above is identity
+    // and keeps the dictionary — allowed, since `ipc::serialize`
+    // canonicalises.)
+    if col.is_dict() {
+        return cast(&col.clone().dict_decode(), to);
+    }
     let n = col.len();
     let v = col.validity().cloned();
     Ok(match (col, to) {
@@ -160,6 +168,17 @@ mod tests {
         assert_eq!(f.get(2), Scalar::Null);
         let i = cast(&Array::from_strs(&[" 7 "]), DataType::Int64).unwrap();
         assert_eq!(i.get(0), Scalar::Int64(7));
+    }
+
+    #[test]
+    fn dict_casts_match_plain() {
+        let plain = Array::from_opt_strs(vec![Some("1"), Some("2.5"), None, Some("x")]);
+        let dict = plain.clone().dict_encode();
+        for ty in [DataType::Int64, DataType::Float64, DataType::Bool] {
+            assert_eq!(cast(&dict, ty).unwrap(), cast(&plain, ty).unwrap(), "to {ty}");
+        }
+        // same-type cast is identity and keeps the encoding
+        assert!(cast(&dict, DataType::Utf8).unwrap().is_dict());
     }
 
     #[test]

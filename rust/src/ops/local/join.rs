@@ -117,6 +117,7 @@ fn merge_order(keys: &[&Array], nrows: usize) -> (Vec<usize>, usize) {
             Array::Int64(v, _) => v[a].cmp(&v[b]),
             Array::Float64(v, _) => canonical_f64_total_cmp(v[a], v[b]),
             Array::Utf8(d, _) => d.value(a).cmp(d.value(b)),
+            Array::DictUtf8(d, _) => d.value(a).cmp(d.value(b)),
             Array::Bool(v, _) => v[a].cmp(&v[b]),
         }
     };
@@ -149,6 +150,12 @@ fn keys_cmp(lk: &[&Array], i: usize, rk: &[&Array], j: usize) -> std::cmp::Order
             (Array::Int64(x, _), Array::Int64(y, _)) => x[i].cmp(&y[j]),
             (Array::Float64(x, _), Array::Float64(y, _)) => canonical_f64_total_cmp(x[i], y[j]),
             (Array::Utf8(x, _), Array::Utf8(y, _)) => x.value(i).cmp(y.value(j)),
+            // Mixed encodings are legal (dict and plain are one logical
+            // type, so type validation lets them through): compare by
+            // value.
+            (Array::DictUtf8(x, _), Array::DictUtf8(y, _)) => x.value(i).cmp(y.value(j)),
+            (Array::DictUtf8(x, _), Array::Utf8(y, _)) => x.value(i).cmp(y.value(j)),
+            (Array::Utf8(x, _), Array::DictUtf8(y, _)) => x.value(i).cmp(y.value(j)),
             (Array::Bool(x, _), Array::Bool(y, _)) => x[i].cmp(&y[j]),
             _ => unreachable!("join key types validated earlier"),
         };
@@ -370,6 +377,38 @@ mod tests {
             let h = join(&left(), &right(), &["k"], &["k"], jt, JoinAlgorithm::Hash).unwrap();
             let m = join(&left(), &right(), &["k"], &["k"], jt, JoinAlgorithm::SortMerge).unwrap();
             assert_eq!(sorted_rows(&h), sorted_rows(&m), "join type {jt:?}");
+        }
+    }
+
+    #[test]
+    fn dict_string_keys_join_like_plain() {
+        let l = Table::from_columns(vec![
+            ("k", Array::from_opt_strs(vec![Some("a"), Some("b"), None, Some("b")])),
+            ("lv", Array::from_i64(vec![1, 2, 3, 4])),
+        ])
+        .unwrap();
+        let r = Table::from_columns(vec![
+            ("k", Array::from_opt_strs(vec![Some("b"), Some("c"), None])),
+            ("rv", Array::from_i64(vec![10, 20, 30])),
+        ])
+        .unwrap();
+        for jt in [JoinType::Inner, JoinType::Left, JoinType::Right, JoinType::FullOuter] {
+            for algo in [JoinAlgorithm::Hash, JoinAlgorithm::SortMerge] {
+                let plain = join(&l, &r, &["k"], &["k"], jt, algo).unwrap();
+                // dict on both sides, and mixed dict/plain
+                let dd = join(
+                    &l.dict_encode_columns(),
+                    &r.dict_encode_columns(),
+                    &["k"],
+                    &["k"],
+                    jt,
+                    algo,
+                )
+                .unwrap();
+                let dp = join(&l.dict_encode_columns(), &r, &["k"], &["k"], jt, algo).unwrap();
+                assert_eq!(sorted_rows(&dd), sorted_rows(&plain), "{jt:?}/{algo:?} dict-dict");
+                assert_eq!(sorted_rows(&dp), sorted_rows(&plain), "{jt:?}/{algo:?} dict-plain");
+            }
         }
     }
 

@@ -1,18 +1,24 @@
 //! Map / apply: element-wise column transforms (the UNOMT pipeline's
 //! drug-id cleanup `map` step, plus general numeric transforms).
 
-use crate::table::{Array, Bitmap, Table};
+use crate::table::{Array, Bitmap, DataType, Table};
 use anyhow::{bail, Result};
 
 /// Apply a string→string function to a Utf8 column (nulls pass through).
+///
+/// Dictionary-encoded inputs are accepted, but the output is always
+/// plain `Utf8`: mapped values need not be low-cardinality, and `f` is
+/// deliberately called once per *row* (not per dictionary entry — a
+/// stateful `FnMut` would otherwise observe a different call sequence
+/// than on the plain twin, breaking encoding invariance).
 pub fn map_utf8<F: FnMut(&str) -> String>(col: &Array, mut f: F) -> Result<Array> {
-    let Some(d) = col.utf8_data() else {
+    if col.data_type() != DataType::Utf8 {
         bail!("map_utf8 on {} column", col.data_type())
-    };
+    }
     let mut out = crate::table::array::Utf8Data::empty();
     for i in 0..col.len() {
         if col.is_valid(i) {
-            out.push(&f(d.value(i)));
+            out.push(&f(col.str_at(i).unwrap_or("")));
         } else {
             out.push("");
         }
@@ -154,6 +160,16 @@ mod tests {
         assert_eq!(out.get(0), Scalar::Utf8("NSC123".into()));
         assert_eq!(out.get(1), Scalar::Null);
         assert_eq!(out.get(2), Scalar::Utf8("AB".into()));
+    }
+
+    #[test]
+    fn dict_map_yields_plain_identical_to_plain_map() {
+        let plain = Array::from_opt_strs(vec![Some("a.b"), None, Some("c.d")]);
+        let dict = plain.clone().dict_encode();
+        let from_dict = strip_chars(&dict, &['.']).unwrap();
+        let from_plain = strip_chars(&plain, &['.']).unwrap();
+        assert!(!from_dict.is_dict(), "map output must be plain");
+        assert_eq!(from_dict, from_plain);
     }
 
     #[test]

@@ -94,6 +94,20 @@ pub fn cmp_mask(col: &Array, op: Cmp, lit: &Scalar) -> Result<Vec<Option<bool>>>
                 }
             }
         }
+        (Array::DictUtf8(d, _), Scalar::Utf8(x)) => {
+            // Compare each distinct value against the literal once, then
+            // fan out through the codes: O(dict bytes + rows).
+            let entry_holds: Vec<bool> = d
+                .dict
+                .iter()
+                .map(|s| op.holds_ord(s.as_str().cmp(x.as_str())))
+                .collect();
+            for i in 0..n {
+                if col.is_valid(i) {
+                    mask[i] = Some(entry_holds[d.codes[i] as usize]);
+                }
+            }
+        }
         (Array::Bool(v, _), Scalar::Bool(x)) => {
             for i in 0..n {
                 if col.is_valid(i) {
@@ -177,6 +191,20 @@ mod tests {
         assert_eq!(f.num_rows(), 2);
         let f = filter_cmp(&t(), "name", Cmp::Ne, &Scalar::Utf8("bb".into())).unwrap();
         assert_eq!(f.num_rows(), 2);
+    }
+
+    #[test]
+    fn dict_filters_match_plain() {
+        let plain = Array::from_opt_strs(vec![Some("a"), Some("bb"), None, Some("bb")]);
+        let dict = plain.clone().dict_encode();
+        for op in [Cmp::Eq, Cmp::Ne, Cmp::Lt, Cmp::Le, Cmp::Gt, Cmp::Ge] {
+            let lit = Scalar::Utf8("bb".into());
+            assert_eq!(
+                cmp_mask(&dict, op, &lit).unwrap(),
+                cmp_mask(&plain, op, &lit).unwrap(),
+                "op {op:?}"
+            );
+        }
     }
 
     #[test]

@@ -52,18 +52,43 @@ pub fn sort_indices(table: &Table, keys: &[SortKey]) -> Result<Vec<usize>> {
 
     let mut idx: Vec<usize> = (0..table.num_rows()).collect();
 
-    // Fast path: single fully-valid i64 key — sort primitive pairs.
+    // Fast path: single fully-valid key of a cheap-to-order layout.
     // Descending sorts by the reversed key (NOT sort-then-reverse,
     // which would flip the relative order of equal keys and break the
     // stability contract).
     if keys.len() == 1 && cols[0].null_count() == 0 {
-        if let Array::Int64(v, _) = cols[0] {
-            if keys[0].ascending {
-                idx.sort_by_key(|&i| v[i]);
-            } else {
-                idx.sort_by_key(|&i| std::cmp::Reverse(v[i]));
+        match cols[0] {
+            Array::Int64(v, _) => {
+                if keys[0].ascending {
+                    idx.sort_by_key(|&i| v[i]);
+                } else {
+                    idx.sort_by_key(|&i| std::cmp::Reverse(v[i]));
+                }
+                return Ok(idx);
             }
-            return Ok(idx);
+            // Dictionary-encoded strings sort in code space: one rank
+            // table over the dictionary, then a primitive u32 sort —
+            // string bytes are compared once per *distinct* value.
+            Array::DictUtf8(d, _) => {
+                let rank = d.sorted_ranks();
+                if keys[0].ascending {
+                    idx.sort_by_key(|&i| rank[d.codes[i] as usize]);
+                } else {
+                    idx.sort_by_key(|&i| std::cmp::Reverse(rank[d.codes[i] as usize]));
+                }
+                return Ok(idx);
+            }
+            // Plain strings: borrow slices directly, skipping the
+            // per-cell validity + type dispatch of the general path.
+            Array::Utf8(d, _) => {
+                if keys[0].ascending {
+                    idx.sort_by(|&a, &b| d.value(a).cmp(d.value(b)));
+                } else {
+                    idx.sort_by(|&a, &b| d.value(b).cmp(d.value(a)));
+                }
+                return Ok(idx);
+            }
+            _ => {}
         }
     }
 
@@ -170,6 +195,28 @@ mod tests {
         // desc order is 9,5,3,3,1; the tied 3s keep input order: b then d
         assert_eq!(fast_desc.cell(2, 1), Scalar::Utf8("b".into()));
         assert_eq!(fast_desc.cell(3, 1), Scalar::Utf8("d".into()));
+    }
+
+    #[test]
+    fn string_fast_paths_match_general_and_stay_stable() {
+        let plain = Table::from_columns(vec![
+            ("s", Array::from_strs(&["m", "a", "m", "z", "a"])),
+            ("tag", Array::from_i64(vec![0, 1, 2, 3, 4])),
+        ])
+        .unwrap();
+        let dict = plain.dict_encode_columns();
+        for asc in [true, false] {
+            let key = SortKey { column: "s".into(), ascending: asc, nulls_first: false };
+            // force the general comparator path with a redundant second key
+            let general =
+                sort_indices(&plain, &[key.clone(), SortKey::asc("tag")]).unwrap();
+            assert_eq!(sort_indices(&plain, std::slice::from_ref(&key)).unwrap(), general);
+            assert_eq!(sort_indices(&dict, std::slice::from_ref(&key)).unwrap(), general);
+        }
+        // stability: equal keys keep input order (asc → a@1 before a@4)
+        let s = sort(&dict, &[SortKey::asc("s")]).unwrap();
+        assert_eq!(s.cell(0, 1), Scalar::Int64(1));
+        assert_eq!(s.cell(1, 1), Scalar::Int64(4));
     }
 
     #[test]

@@ -46,4 +46,4 @@ pub use logical::{
     GroupStrategy, JoinStrategy, LogicalPlan, MapF64Udf, MapUtf8Udf, SetOpKind,
 };
 pub use optimize::{optimize, stats, CostEnv, Stats};
-pub use physical::{lower, LocalStep, PhysicalPlan};
+pub use physical::{fuse_gathers, lower, reset_fuse_gathers, LocalStep, PhysicalPlan};

@@ -24,7 +24,7 @@ use crate::comm::profile::{LinkCost, LinkProfile};
 use crate::ops::local::groupby::PartialAggPlan;
 use crate::ops::local::join::JoinType;
 use crate::ops::local::Cmp;
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 
 /// Inputs the cost-based rules see: the execution world size and the
 /// link profile the communicator will charge.
@@ -80,10 +80,82 @@ fn selectivity(op: Cmp) -> f64 {
     }
 }
 
+/// Per-pass memo for the optimizer's repeated subtree probes — schema
+/// (output names) and size estimates — keyed by node identity.
+///
+/// Both probes walk whole subtrees ([`LogicalPlan::schema`] runs the
+/// kernels over zero-row scans), and the rules re-probe the same
+/// subtrees: [`pick_join_strategy`] estimates both children of every
+/// join, so a k-join chain would otherwise visit O(k²) nodes per
+/// optimize pass. Threading one memo through a pass makes it linear.
+///
+/// # Lifetime invariant
+///
+/// Keys are node addresses, so a memo must not outlive the rewrite
+/// pass that created it: passes rebuild nodes, and the allocator may
+/// hand a rebuilt node the address of a freed, already-memoized one,
+/// aliasing a stale entry. Within one pass that cannot happen —
+/// `prune` only probes nodes of its input plan (all allocated before
+/// the pass, so a live probe target can never share an address with a
+/// freed memoized node), and `resolve` only probes nodes of the
+/// resolved output it is growing (never freed before the pass ends).
+/// The filter-pushdown sweep rebuilds nodes *mid-sweep*, so it gets a
+/// fresh memo per probe site instead of a pass-wide one.
+pub(crate) struct Memo {
+    names: HashMap<usize, Option<Vec<String>>>,
+    sizes: HashMap<usize, Stats>,
+}
+
+impl Memo {
+    pub(crate) fn new() -> Memo {
+        Memo { names: HashMap::new(), sizes: HashMap::new() }
+    }
+
+    fn key(plan: &LogicalPlan) -> usize {
+        plan as *const LogicalPlan as usize
+    }
+
+    /// The node's output column names, or `None` when the schema probe
+    /// fails (callers treat failure as "don't rewrite").
+    fn names(&mut self, plan: &LogicalPlan) -> Option<Vec<String>> {
+        let key = Self::key(plan);
+        if let Some(cached) = self.names.get(&key) {
+            return cached.clone();
+        }
+        let computed = plan.output_names().ok();
+        self.names.insert(key, computed.clone());
+        computed
+    }
+
+    /// Memoized size estimate (the caching layer under [`stats`]).
+    fn stats(&mut self, plan: &LogicalPlan) -> Stats {
+        let key = Self::key(plan);
+        if let Some(&s) = self.sizes.get(&key) {
+            return s;
+        }
+        let s = compute_stats(plan, self);
+        self.sizes.insert(key, s);
+        s
+    }
+
+    /// Total memo entries — a probe-miss count for tests (every miss
+    /// inserts exactly one entry).
+    #[cfg(test)]
+    fn entries(&self) -> usize {
+        self.names.len() + self.sizes.len()
+    }
+}
+
 /// Bottom-up size estimation. Exact at scans, heuristic above them —
 /// good enough to order broadcast against shuffle, which is what the
 /// optimizer uses it for.
 pub fn stats(plan: &LogicalPlan) -> Stats {
+    let mut memo = Memo::new();
+    memo.stats(plan)
+}
+
+/// One level of [`stats`]; children recurse through the memo.
+fn compute_stats(plan: &LogicalPlan, memo: &mut Memo) -> Stats {
     match plan {
         LogicalPlan::Scan { table, projection } => {
             let rows = table.num_rows() as f64;
@@ -98,34 +170,38 @@ pub fn stats(plan: &LogicalPlan) -> Stats {
             Stats { rows, bytes }
         }
         LogicalPlan::Select { input, columns } => {
-            let s = stats(input);
-            let ncols = input
-                .schema()
-                .map(|sch| sch.len().max(1))
+            let s = memo.stats(input);
+            let ncols = memo
+                .names(input)
+                .map(|n| n.len().max(1))
                 .unwrap_or(columns.len().max(1));
             let keep = (columns.len() as f64 / ncols as f64).min(1.0);
             Stats { rows: s.rows, bytes: s.bytes * keep }
         }
         LogicalPlan::Filter { input, op, .. } => {
-            let s = stats(input);
+            let s = memo.stats(input);
             let sel = selectivity(*op);
             Stats { rows: s.rows * sel, bytes: s.bytes * sel }
         }
-        LogicalPlan::MapF64 { input, .. } | LogicalPlan::MapUtf8 { input, .. } => stats(input),
+        LogicalPlan::MapF64 { input, .. } | LogicalPlan::MapUtf8 { input, .. } => {
+            memo.stats(input)
+        }
         LogicalPlan::Join { left, right, .. } => {
-            let (l, r) = (stats(left), stats(right));
+            let (l, r) = (memo.stats(left), memo.stats(right));
             Stats { rows: l.rows.max(r.rows), bytes: l.bytes + r.bytes }
         }
         LogicalPlan::GroupBy { input, .. } | LogicalPlan::Unique { input, .. } => {
-            let s = stats(input);
+            let s = memo.stats(input);
             // √n distinct-groups heuristic.
             let rows = s.rows.sqrt().ceil().max(1.0).min(s.rows.max(1.0));
             let shrink = if s.rows > 0.0 { rows / s.rows } else { 1.0 };
             Stats { rows, bytes: s.bytes * shrink }
         }
-        LogicalPlan::Sort { input, .. } | LogicalPlan::Window { input, .. } => stats(input),
+        LogicalPlan::Sort { input, .. } | LogicalPlan::Window { input, .. } => {
+            memo.stats(input)
+        }
         LogicalPlan::SetOp { kind, left, right } => {
-            let (l, r) = (stats(left), stats(right));
+            let (l, r) = (memo.stats(left), memo.stats(right));
             match kind {
                 SetOpKind::UnionAll => Stats { rows: l.rows + r.rows, bytes: l.bytes + r.bytes },
                 SetOpKind::Union => {
@@ -139,7 +215,7 @@ pub fn stats(plan: &LogicalPlan) -> Stats {
             }
         }
         LogicalPlan::DropDuplicates { input, .. } => {
-            let s = stats(input);
+            let s = memo.stats(input);
             Stats { rows: s.rows * 0.5, bytes: s.bytes * 0.5 }
         }
     }
@@ -156,7 +232,9 @@ pub fn optimize(plan: &LogicalPlan, env: &CostEnv) -> LogicalPlan {
             break;
         }
     }
-    let p = prune(p, None);
+    // One memo per pass (see `Memo` for why they cannot be shared
+    // across passes).
+    let p = prune(p, None, &mut Memo::new());
     resolve(p, env)
 }
 
@@ -300,7 +378,10 @@ fn push_once(plan: LogicalPlan) -> (LogicalPlan, bool) {
         // type keeps that side's rows filterable (a pushed filter must
         // not resurrect or drop outer padding rows).
         LP::Join { left, right, left_on, right_on, jt, algo, strategy } => {
-            let side = join_side_of(&column, &left, &right);
+            // Fresh memo per probe site: the push sweep rebuilds nodes
+            // mid-sweep, so a sweep-wide memo could alias reused
+            // addresses (see `Memo`).
+            let side = join_side_of(&column, &left, &right, &mut Memo::new());
             let rebuilt = |l: LP, r: LP| LP::Join {
                 left: Box::new(l),
                 right: Box::new(r),
@@ -356,9 +437,14 @@ enum JoinSide {
     Right(String),
 }
 
-fn join_side_of(column: &str, left: &LogicalPlan, right: &LogicalPlan) -> Option<JoinSide> {
-    let lnames = left.output_names().ok()?;
-    let rnames = right.output_names().ok()?;
+fn join_side_of(
+    column: &str,
+    left: &LogicalPlan,
+    right: &LogicalPlan,
+    memo: &mut Memo,
+) -> Option<JoinSide> {
+    let lnames = memo.names(left)?;
+    let rnames = memo.names(right)?;
     if lnames.iter().any(|n| n == column) {
         return Some(JoinSide::Left(column.to_string()));
     }
@@ -382,7 +468,9 @@ fn set_of<I: IntoIterator<Item = String>>(names: I) -> BTreeSet<String> {
 }
 
 /// Top-down required-column walk; `None` = every column is observed.
-fn prune(plan: LogicalPlan, required: Required) -> LogicalPlan {
+/// The memo lives for the whole pass — every node it keys belongs to
+/// the input plan, which outlives its own pruning (see [`Memo`]).
+fn prune(plan: LogicalPlan, required: Required, memo: &mut Memo) -> LogicalPlan {
     use LogicalPlan as LP;
     match plan {
         LP::Scan { table, projection } => {
@@ -406,28 +494,28 @@ fn prune(plan: LogicalPlan, required: Required) -> LogicalPlan {
             // The select list *is* the narrowing point: everything below
             // only needs what it names.
             let below = set_of(columns.iter().cloned());
-            LP::Select { input: Box::new(prune(*input, Some(below))), columns }
+            LP::Select { input: Box::new(prune(*input, Some(below), memo)), columns }
         }
         LP::Filter { input, column, op, lit } => {
             let below = required.map(|mut r| {
                 r.insert(column.clone());
                 r
             });
-            LP::Filter { input: Box::new(prune(*input, below)), column, op, lit }
+            LP::Filter { input: Box::new(prune(*input, below, memo)), column, op, lit }
         }
         LP::MapF64 { input, column, f } => {
             let below = required.map(|mut r| {
                 r.insert(column.clone());
                 r
             });
-            LP::MapF64 { input: Box::new(prune(*input, below)), column, f }
+            LP::MapF64 { input: Box::new(prune(*input, below, memo)), column, f }
         }
         LP::MapUtf8 { input, column, f } => {
             let below = required.map(|mut r| {
                 r.insert(column.clone());
                 r
             });
-            LP::MapUtf8 { input: Box::new(prune(*input, below)), column, f }
+            LP::MapUtf8 { input: Box::new(prune(*input, below, memo)), column, f }
         }
         LP::Sort { input, keys } => {
             let below = required.map(|mut r| {
@@ -436,16 +524,21 @@ fn prune(plan: LogicalPlan, required: Required) -> LogicalPlan {
                 }
                 r
             });
-            LP::Sort { input: Box::new(prune(*input, below)), keys }
+            LP::Sort { input: Box::new(prune(*input, below, memo)), keys }
         }
         LP::GroupBy { input, keys, aggs, strategy } => {
             let mut below = set_of(keys.iter().cloned());
             below.extend(aggs.iter().map(|a| a.column.clone()));
-            LP::GroupBy { input: Box::new(prune(*input, Some(below))), keys, aggs, strategy }
+            LP::GroupBy {
+                input: Box::new(prune(*input, Some(below), memo)),
+                keys,
+                aggs,
+                strategy,
+            }
         }
         LP::Unique { input, keys } => {
             let below = set_of(keys.iter().cloned());
-            LP::Unique { input: Box::new(prune(*input, Some(below))), keys }
+            LP::Unique { input: Box::new(prune(*input, Some(below), memo)), keys }
         }
         LP::DropDuplicates { input, subset } => {
             // Whole-row dedup observes everything; subset dedup keeps
@@ -457,33 +550,40 @@ fn prune(plan: LogicalPlan, required: Required) -> LogicalPlan {
                     Some(r)
                 }
             };
-            LP::DropDuplicates { input: Box::new(prune(*input, below)), subset }
+            LP::DropDuplicates { input: Box::new(prune(*input, below, memo)), subset }
         }
         LP::Window { input, keys, aggs, spec } => {
             let mut below = set_of(keys.iter().cloned());
             below.extend(aggs.iter().map(|a| a.column.clone()));
-            LP::Window { input: Box::new(prune(*input, Some(below))), keys, aggs, spec }
+            LP::Window {
+                input: Box::new(prune(*input, Some(below), memo)),
+                keys,
+                aggs,
+                spec,
+            }
         }
         LP::SetOp { kind, left, right } => {
             // Set semantics compare whole rows positionally: both sides
             // must keep every column.
             LP::SetOp {
                 kind,
-                left: Box::new(prune(*left, None)),
-                right: Box::new(prune(*right, None)),
+                left: Box::new(prune(*left, None, memo)),
+                right: Box::new(prune(*right, None, memo)),
             }
         }
         LP::Join { left, right, left_on, right_on, jt, algo, strategy } => {
             let (lreq, rreq) = match &required {
                 None => (None, None),
-                Some(req) => match join_requirements(req, &left, &right, &left_on, &right_on) {
-                    Some((l, r)) => (Some(l), Some(r)),
-                    None => (None, None), // unresolvable name: prune nothing
-                },
+                Some(req) => {
+                    match join_requirements(req, &left, &right, &left_on, &right_on, memo) {
+                        Some((l, r)) => (Some(l), Some(r)),
+                        None => (None, None), // unresolvable name: prune nothing
+                    }
+                }
             };
             LP::Join {
-                left: Box::new(prune(*left, lreq)),
-                right: Box::new(prune(*right, rreq)),
+                left: Box::new(prune(*left, lreq, memo)),
+                right: Box::new(prune(*right, rreq, memo)),
                 left_on,
                 right_on,
                 jt,
@@ -506,9 +606,10 @@ fn join_requirements(
     right: &LogicalPlan,
     left_on: &[String],
     right_on: &[String],
+    memo: &mut Memo,
 ) -> Option<(BTreeSet<String>, BTreeSet<String>)> {
-    let lnames = left.output_names().ok()?;
-    let rnames = right.output_names().ok()?;
+    let lnames = memo.names(left)?;
+    let rnames = memo.names(right)?;
     let mut lreq = set_of(left_on.iter().cloned());
     let mut rreq = set_of(right_on.iter().cloned());
     for c in req {
@@ -540,35 +641,43 @@ fn join_requirements(
 // ---- pass 3: strategy resolution ----------------------------------------
 
 fn resolve(plan: LogicalPlan, env: &CostEnv) -> LogicalPlan {
+    // The memo keys resolved subtrees, which stay live until the pass
+    // returns the full plan — see `Memo` for the aliasing argument.
+    resolve_with(plan, env, &mut Memo::new())
+}
+
+fn resolve_with(plan: LogicalPlan, env: &CostEnv, memo: &mut Memo) -> LogicalPlan {
     use LogicalPlan as LP;
     match plan {
         scan @ LP::Scan { .. } => scan,
         LP::Select { input, columns } => {
-            LP::Select { input: Box::new(resolve(*input, env)), columns }
+            LP::Select { input: Box::new(resolve_with(*input, env, memo)), columns }
         }
         LP::Filter { input, column, op, lit } => {
-            LP::Filter { input: Box::new(resolve(*input, env)), column, op, lit }
+            LP::Filter { input: Box::new(resolve_with(*input, env, memo)), column, op, lit }
         }
         LP::MapF64 { input, column, f } => {
-            LP::MapF64 { input: Box::new(resolve(*input, env)), column, f }
+            LP::MapF64 { input: Box::new(resolve_with(*input, env, memo)), column, f }
         }
         LP::MapUtf8 { input, column, f } => {
-            LP::MapUtf8 { input: Box::new(resolve(*input, env)), column, f }
+            LP::MapUtf8 { input: Box::new(resolve_with(*input, env, memo)), column, f }
         }
-        LP::Sort { input, keys } => LP::Sort { input: Box::new(resolve(*input, env)), keys },
+        LP::Sort { input, keys } => {
+            LP::Sort { input: Box::new(resolve_with(*input, env, memo)), keys }
+        }
         LP::Unique { input, keys } => {
-            LP::Unique { input: Box::new(resolve(*input, env)), keys }
+            LP::Unique { input: Box::new(resolve_with(*input, env, memo)), keys }
         }
         LP::DropDuplicates { input, subset } => {
-            LP::DropDuplicates { input: Box::new(resolve(*input, env)), subset }
+            LP::DropDuplicates { input: Box::new(resolve_with(*input, env, memo)), subset }
         }
         LP::Window { input, keys, aggs, spec } => {
-            LP::Window { input: Box::new(resolve(*input, env)), keys, aggs, spec }
+            LP::Window { input: Box::new(resolve_with(*input, env, memo)), keys, aggs, spec }
         }
         LP::SetOp { kind, left, right } => LP::SetOp {
             kind,
-            left: Box::new(resolve(*left, env)),
-            right: Box::new(resolve(*right, env)),
+            left: Box::new(resolve_with(*left, env, memo)),
+            right: Box::new(resolve_with(*right, env, memo)),
         },
         LP::GroupBy { input, keys, aggs, strategy } => {
             let strategy = match strategy {
@@ -581,13 +690,13 @@ fn resolve(plan: LogicalPlan, env: &CostEnv) -> LogicalPlan {
                 }
                 fixed => fixed,
             };
-            LP::GroupBy { input: Box::new(resolve(*input, env)), keys, aggs, strategy }
+            LP::GroupBy { input: Box::new(resolve_with(*input, env, memo)), keys, aggs, strategy }
         }
         LP::Join { left, right, left_on, right_on, jt, algo, strategy } => {
-            let left = Box::new(resolve(*left, env));
-            let right = Box::new(resolve(*right, env));
+            let left = Box::new(resolve_with(*left, env, memo));
+            let right = Box::new(resolve_with(*right, env, memo));
             let strategy = match strategy {
-                JoinStrategy::Auto => pick_join_strategy(&left, &right, jt, env),
+                JoinStrategy::Auto => pick_join_strategy(&left, &right, jt, env, memo),
                 fixed => fixed,
             };
             LP::Join { left, right, left_on, right_on, jt, algo, strategy }
@@ -691,11 +800,12 @@ fn pick_join_strategy(
     right: &LogicalPlan,
     jt: JoinType,
     env: &CostEnv,
+    memo: &mut Memo,
 ) -> JoinStrategy {
     if env.world <= 1 || !matches!(jt, JoinType::Inner | JoinType::Left) {
         return JoinStrategy::Hash;
     }
-    let (l, r) = (stats(left), stats(right));
+    let (l, r) = (memo.stats(left), memo.stats(right));
     let w = env.world as f64;
     let shuffle_bytes = (l.bytes + r.bytes) * (w - 1.0) / w;
     let shuffle_msgs = 2.0 * w * (w - 1.0);
@@ -967,6 +1077,38 @@ mod tests {
         join_strategy_bytes(&flipped, &mut got);
         assert_eq!(got, vec![1, 0]);
         assert_eq!(idx, 2, "every join consumed exactly one byte");
+    }
+
+    #[test]
+    fn memo_probes_each_subtree_once_per_pass() {
+        // Nested joins over a select: unmemoized costing re-walks the
+        // shared subtrees at every join level.
+        let plan = LogicalPlan::Join {
+            left: Box::new(join(JoinType::Inner, JoinStrategy::Auto, 10, 10)),
+            right: Box::new(LogicalPlan::Select {
+                input: Box::new(wide_scan(10)),
+                columns: vec!["k".into(), "v".into()],
+            }),
+            left_on: vec!["k".into()],
+            right_on: vec!["k".into()],
+            jt: JoinType::Inner,
+            algo: JoinAlgorithm::Hash,
+            strategy: JoinStrategy::Auto,
+        };
+        let mut memo = Memo::new();
+        let first = memo.stats(&plan);
+        let entries = memo.entries();
+        let again = memo.stats(&plan);
+        assert_eq!(memo.entries(), entries, "re-probing the same node must hit the memo");
+        assert_eq!((first.rows, first.bytes), (again.rows, again.bytes));
+        // the memoized estimate equals the unmemoized public helper
+        let fresh = stats(&plan);
+        assert_eq!((first.rows, first.bytes), (fresh.rows, fresh.bytes));
+        // memoized costing resolves both Auto strategies
+        let opt = optimize(&plan, &CostEnv::new(8, LinkProfile::cluster(4)));
+        let mut bytes = Vec::new();
+        join_strategy_bytes(&opt, &mut bytes);
+        assert_eq!(bytes.len(), 2, "both joins resolved through the memoized pass");
     }
 
     #[test]

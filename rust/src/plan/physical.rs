@@ -7,8 +7,10 @@
 //! differential wall in `rust/tests/dist_vs_local.rs` byte-exact:
 //!
 //! * adjacent per-partition Select/Filter/Map nodes fuse into one
-//!   [`Fused`](PhysicalPlan::Fused) pass (consecutive filters evaluate
-//!   as one combined mask and a single gather);
+//!   [`Fused`](PhysicalPlan::Fused) pass executed over a selection
+//!   vector: filters refine the surviving row set, maps evaluate on
+//!   survivors only, and the input columns gather through the final
+//!   selection exactly once at the fuse boundary ([`fuse_gathers`]);
 //! * joins lower to [`crate::ops::dist::dist_join`] or
 //!   [`crate::ops::dist::broadcast_join`] per the optimizer's strategy;
 //! * group-bys lower to [`crate::ops::dist::dist_groupby`] or the
@@ -32,13 +34,15 @@ use crate::comm::communicator::{CommStats, Communicator, Tag};
 use crate::ops::dist;
 use crate::ops::local::groupby::{AggSpec, PartialAggPlan};
 use crate::ops::local::join::{JoinAlgorithm, JoinType};
-use crate::ops::local::select::{and_masks, cmp_mask};
+use crate::ops::local::map::{map_f64, map_utf8};
+use crate::ops::local::select::cmp_mask;
 use crate::ops::local::sort::SortKey;
 use crate::ops::local::window::WindowSpec;
-use crate::ops::local::{self, Cmp};
-use crate::table::{Scalar, Table};
+use crate::ops::local::Cmp;
+use crate::table::{Array, Field, Scalar, Schema, Table};
 use anyhow::{bail, Result};
 use std::borrow::Cow;
+use std::cell::Cell;
 use std::sync::Arc;
 
 /// One step of a fused per-partition pass.
@@ -190,51 +194,174 @@ fn fuse(input: PhysicalPlan, step: LocalStep) -> PhysicalPlan {
     }
 }
 
-/// Apply a fused step chain in one per-partition pass; consecutive
-/// filters evaluate as one AND-combined mask and a single gather.
-/// Shared with the streaming target, which runs the same steps per
-/// batch inside a pipeline `map` stage. The input is borrowed so a
-/// scan feeding a fused pass is never deep-copied first.
+thread_local! {
+    /// Fuse-boundary materializations performed by [`apply_steps`] on
+    /// this thread since the last [`reset_fuse_gathers`].
+    static FUSE_GATHERS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of fuse-boundary gathers on the current thread since the
+/// last [`reset_fuse_gathers`].
+///
+/// [`apply_steps`] executes a fused step chain over a *selection
+/// vector*: filters refine the set of surviving row indices, and the
+/// input columns are gathered through it exactly once, at the end of
+/// the pass. This counter increments once per such boundary gather
+/// (single-column gathers used to evaluate a predicate or a map over
+/// the current survivors are not counted — they touch one column, not
+/// the table). A fused `filter → map → filter` chain therefore reports
+/// exactly 1; the pre-selection-vector executor materialized the whole
+/// table after every filter group. `benches/fig_kernels.rs` pins this
+/// as a deterministic cell.
+///
+/// The counter is thread-local so concurrent plan executions (parallel
+/// tests, spawned worlds) never bleed into each other's measurements;
+/// drive the plan on the measuring thread (e.g. via
+/// [`PhysicalPlan::execute_local`]) to observe its gathers.
+pub fn fuse_gathers() -> u64 {
+    FUSE_GATHERS.with(Cell::get)
+}
+
+/// Reset the current thread's [`fuse_gathers`] counter to zero. Call
+/// before the region you want to measure.
+pub fn reset_fuse_gathers() {
+    FUSE_GATHERS.with(|c| c.set(0));
+}
+
+/// A column visible inside a fused pass: either the untouched input
+/// column (left in place until the boundary gather) or a map result,
+/// which is always dense over the current selection.
+enum ColSrc<'a> {
+    Base(&'a Array),
+    Mapped(Array),
+}
+
+/// First-match column resolution against the pass's visible schema —
+/// the same rule and error shape as [`Schema::index_of`].
+fn resolve(cols: &[(Field, ColSrc<'_>)], name: &str) -> Result<usize> {
+    match cols.iter().position(|(f, _)| f.name == name) {
+        Some(i) => Ok(i),
+        None => bail!(
+            "column {name:?} not found (have: {:?})",
+            cols.iter().map(|(f, _)| &f.name).collect::<Vec<_>>()
+        ),
+    }
+}
+
+/// The column's values over the current selection, densely packed: a
+/// map overlay already is; a base column gathers just its survivors.
+fn dense<'a>(src: &'a ColSrc<'a>, sel: Option<&[usize]>) -> Cow<'a, Array> {
+    match (src, sel) {
+        (ColSrc::Mapped(a), _) => Cow::Borrowed(a),
+        (ColSrc::Base(a), None) => Cow::Borrowed(*a),
+        (ColSrc::Base(a), Some(s)) => Cow::Owned(a.take(s)),
+    }
+}
+
+/// Apply a fused step chain in one per-partition pass over a selection
+/// vector: filters evaluate their predicate on the current survivors
+/// only and refine the selection, maps evaluate on the survivors and
+/// become dense overlays, and the untouched input columns are gathered
+/// through the final selection exactly once at the fuse boundary
+/// (counted by [`fuse_gathers`]). Equivalent to running the steps
+/// eagerly — masks are element-wise, so evaluating a later predicate
+/// on the gathered survivors equals restricting its full-column mask,
+/// and `take(a).take(b) == take(a∘b)` byte-for-byte — which is what
+/// the planner's differential walls pin. Shared with the streaming
+/// target, which runs the same steps per batch inside a pipeline `map`
+/// stage. The input is borrowed so a scan feeding a fused pass is
+/// never deep-copied first.
 pub(crate) fn apply_steps(input: &Table, steps: &[LocalStep]) -> Result<Table> {
-    let mut owned: Option<Table> = None;
-    let mut i = 0;
-    while i < steps.len() {
-        let t: &Table = owned.as_ref().unwrap_or(input);
-        let next = match &steps[i] {
+    if steps.is_empty() {
+        return Ok(input.clone()); // not produced by `fuse`
+    }
+    // Visible columns of the pass, in schema order. Fields travel with
+    // the arrays so the boundary table reconstructs the exact schema
+    // the eager path would have built (maps re-derive their field via
+    // `with_column`; everything else is preserved).
+    let mut cols: Vec<(Field, ColSrc)> = input
+        .schema()
+        .fields()
+        .iter()
+        .cloned()
+        .zip(input.columns().iter().map(ColSrc::Base))
+        .collect();
+    // Surviving row indices into `input`, ascending; `None` = all rows.
+    let mut sel: Option<Vec<usize>> = None;
+
+    for step in steps {
+        match step {
             LocalStep::Filter { column, op, lit } => {
-                let mut mask = cmp_mask(t.column_by_name(column)?, *op, lit)?;
-                i += 1;
-                while let Some(LocalStep::Filter { column, op, lit }) = steps.get(i) {
-                    let m = cmp_mask(t.column_by_name(column)?, *op, lit)?;
-                    mask = and_masks(&mask, &m);
-                    i += 1;
-                }
-                let idx: Vec<usize> = mask
+                let ci = resolve(&cols, column)?;
+                let mask = cmp_mask(&dense(&cols[ci].1, sel.as_deref()), *op, lit)?;
+                // Positions *within the current selection* that survive.
+                let keep: Vec<usize> = mask
                     .iter()
                     .enumerate()
                     .filter_map(|(r, m)| if *m == Some(true) { Some(r) } else { None })
                     .collect();
-                t.take(&idx)
-            }
-            LocalStep::Project(cols) => {
-                i += 1;
-                t.select_columns(&as_strs(cols))?
+                for (_, src) in cols.iter_mut() {
+                    if let ColSrc::Mapped(a) = src {
+                        *a = a.take(&keep); // re-densify overlays
+                    }
+                }
+                sel = Some(match sel {
+                    None => keep,
+                    Some(s) => keep.iter().map(|&p| s[p]).collect(),
+                });
             }
             LocalStep::MapF64 { column, f } => {
-                i += 1;
-                local::map_column_f64(t, column, f.as_ref())?
+                let ci = resolve(&cols, column)?;
+                let mapped = map_f64(&dense(&cols[ci].1, sel.as_deref()), f.as_ref())?;
+                cols[ci].0 = Field::new(column, mapped.data_type());
+                cols[ci].1 = ColSrc::Mapped(mapped);
             }
             LocalStep::MapUtf8 { column, f } => {
-                i += 1;
-                local::map_column_utf8(t, column, f.as_ref())?
+                let ci = resolve(&cols, column)?;
+                let mapped = map_utf8(&dense(&cols[ci].1, sel.as_deref()), f.as_ref())?;
+                cols[ci].0 = Field::new(column, mapped.data_type());
+                cols[ci].1 = ColSrc::Mapped(mapped);
             }
-        };
-        owned = Some(next);
+            LocalStep::Project(names) => {
+                let mut next = Vec::with_capacity(names.len());
+                for n in names {
+                    let ci = resolve(&cols, n)?;
+                    let src = match &cols[ci].1 {
+                        ColSrc::Base(a) => ColSrc::Base(*a),
+                        ColSrc::Mapped(a) => ColSrc::Mapped(a.clone()),
+                    };
+                    next.push((cols[ci].0.clone(), src));
+                }
+                cols = next;
+            }
+        }
     }
-    Ok(match owned {
-        Some(t) => t,
-        None => input.clone(), // empty step list (not produced by `fuse`)
-    })
+
+    // Fuse boundary: one gather of every surviving base column.
+    if sel.is_some() {
+        FUSE_GATHERS.with(|c| c.set(c.get() + 1));
+    }
+    if cols.is_empty() {
+        // Zero-column projection: `Table::new` cannot carry a row count
+        // without columns, so mirror the eager path's `project(&[])`
+        // (row count survives column-less).
+        let t = input.project(&[]);
+        return Ok(match &sel {
+            None => t,
+            Some(s) => t.take(s),
+        });
+    }
+    let mut fields = Vec::with_capacity(cols.len());
+    let mut arrays = Vec::with_capacity(cols.len());
+    for (f, src) in cols {
+        arrays.push(match (src, &sel) {
+            (ColSrc::Mapped(a), _) => a,
+            (ColSrc::Base(a), None) => a.clone(),
+            (ColSrc::Base(a), Some(s)) => a.take(s),
+        });
+        fields.push(f);
+    }
+    Table::new(Schema::new(fields), arrays)
 }
 
 impl PhysicalPlan {
@@ -602,6 +729,99 @@ mod tests {
         // fused execution (merged filter masks) == naive eager execution
         let got = phys.execute_local().unwrap();
         let want = plan.execute_naive().unwrap();
+        assert_eq!(ipc::serialize(&got), ipc::serialize(&want));
+    }
+
+    #[test]
+    fn fused_chain_gathers_exactly_once_at_the_boundary() {
+        let plan = LogicalPlan::Select {
+            input: Box::new(LogicalPlan::MapF64 {
+                input: Box::new(LogicalPlan::Filter {
+                    input: Box::new(LogicalPlan::Filter {
+                        input: Box::new(scan()),
+                        column: "v".into(),
+                        op: Cmp::Gt,
+                        lit: Scalar::Float64(1.5),
+                    }),
+                    column: "k".into(),
+                    op: Cmp::Le,
+                    lit: Scalar::Int64(2),
+                }),
+                column: "v".into(),
+                f: Arc::new(|x| x * 10.0),
+            }),
+            columns: vec!["k".into(), "v".into()],
+        };
+        let phys = lower(&plan);
+        reset_fuse_gathers();
+        let got = phys.execute_local().unwrap();
+        assert_eq!(
+            fuse_gathers(),
+            1,
+            "filter → filter → map → project must gather once, at the fuse boundary"
+        );
+        assert_eq!(
+            ipc::serialize(&got),
+            ipc::serialize(&plan.execute_naive().unwrap()),
+            "selection-vector execution diverged from eager"
+        );
+    }
+
+    #[test]
+    fn selection_vector_execution_is_encoding_invariant() {
+        // Dict-encode the Utf8 column and interleave filters with maps
+        // so a later filter re-densifies a map overlay; the result must
+        // match naive eager execution on the same (dict) input bytes.
+        let LogicalPlan::Scan { table, .. } = scan() else { unreachable!() };
+        let dict_scan = LogicalPlan::Scan {
+            table: Arc::new(table.dict_encode_columns()),
+            projection: None,
+        };
+        let plan = LogicalPlan::Select {
+            input: Box::new(LogicalPlan::MapF64 {
+                input: Box::new(LogicalPlan::Filter {
+                    input: Box::new(LogicalPlan::MapUtf8 {
+                        input: Box::new(LogicalPlan::Filter {
+                            input: Box::new(dict_scan),
+                            column: "s".into(),
+                            op: Cmp::Ge,
+                            lit: Scalar::Utf8("b".into()),
+                        }),
+                        column: "s".into(),
+                        f: Arc::new(|s: &str| format!("{s}!")),
+                    }),
+                    column: "k".into(),
+                    op: Cmp::Le,
+                    lit: Scalar::Int64(2),
+                }),
+                column: "v".into(),
+                f: Arc::new(|x| x * 0.5),
+            }),
+            columns: vec!["s".into(), "v".into()],
+        };
+        let phys = lower(&plan);
+        reset_fuse_gathers();
+        let got = phys.execute_local().unwrap();
+        assert_eq!(fuse_gathers(), 1, "a map between filters must not force an extra gather");
+        assert_eq!(
+            ipc::serialize(&got),
+            ipc::serialize(&plan.execute_naive().unwrap()),
+            "dict-encoded fused execution diverged from eager"
+        );
+        // Degenerate zero-column projection keeps the surviving row
+        // count, like the eager `project(&[])`.
+        let empty = LogicalPlan::Select {
+            input: Box::new(LogicalPlan::Filter {
+                input: Box::new(scan()),
+                column: "k".into(),
+                op: Cmp::Eq,
+                lit: Scalar::Int64(1),
+            }),
+            columns: vec![],
+        };
+        let got = lower(&empty).execute_local().unwrap();
+        let want = empty.execute_naive().unwrap();
+        assert_eq!(got.num_rows(), want.num_rows());
         assert_eq!(ipc::serialize(&got), ipc::serialize(&want));
     }
 

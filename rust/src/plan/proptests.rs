@@ -157,6 +157,73 @@ fn optimized_execution_equals_naive_execution() {
     );
 }
 
+/// Selection-vector wall: a random fused-only chain (filters, maps,
+/// projections over one scan — no shuffle edges) lowers to a single
+/// `Fused` node, so the selection-vector executor must (a) produce the
+/// exact bytes of naive mask-then-gather evaluation and (b) gather at
+/// the fuse boundary **exactly once** when any filter ran, never when
+/// none did. Half the cases run over dict-encoded inputs, pinning the
+/// executor's encoding-invariance at the same time.
+#[test]
+fn selection_vector_equals_mask_then_gather_on_random_fused_chains() {
+    use super::physical::{fuse_gathers, reset_fuse_gathers};
+    check(
+        Config::default().cases(48).max_size(96),
+        "plan: selection-vector execution == mask-then-gather",
+        |rng, size| {
+            let t = random_table(rng, size);
+            let t = if rng.bool(0.5) { t.dict_encode_columns() } else { t };
+            let mut frame = LazyFrame::from_table(t);
+            let mut nfilters = 0usize;
+            for _ in 0..(1 + rng.usize_in(0, 5)) {
+                match rng.gen_range(5) {
+                    0 => {
+                        frame = frame.filter(
+                            "v",
+                            random_cmp(rng),
+                            Scalar::Float64(rng.gen_range(100) as f64),
+                        );
+                        nfilters += 1;
+                    }
+                    1 => {
+                        frame = frame.filter(
+                            "s",
+                            random_cmp(rng),
+                            Scalar::Utf8(format!("s{}", rng.gen_range(4))),
+                        );
+                        nfilters += 1;
+                    }
+                    2 => frame = frame.map_f64("v", |x| x * 0.5 + 3.0),
+                    3 => frame = frame.map_utf8("s", |s| format!("{s}.")),
+                    _ => frame = frame.select(&["k", "s", "v"]),
+                }
+            }
+            let naive = frame
+                .collect_unoptimized()
+                .map_err(|e| format!("naive execution failed: {e:#}"))?;
+            reset_fuse_gathers();
+            let optimized =
+                frame.collect().map_err(|e| format!("optimized execution failed: {e:#}"))?;
+            let gathers = fuse_gathers();
+            let want_gathers = if nfilters > 0 { 1 } else { 0 };
+            if gathers != want_gathers {
+                return Err(format!(
+                    "{nfilters} filter(s) in chain but {gathers} boundary gathers \
+                     (want {want_gathers})\nplan:\n{}",
+                    frame.explain()
+                ));
+            }
+            if ipc::serialize(optimized.table()) != ipc::serialize(naive.table()) {
+                return Err(format!(
+                    "selection-vector output != naive output\nplan:\n{}",
+                    frame.explain()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn optimization_is_idempotent_on_random_chains() {
     use super::optimize::{optimize, CostEnv};

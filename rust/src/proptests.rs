@@ -119,6 +119,118 @@ fn prop_take_matches_cells() {
     });
 }
 
+/// Random nullable Utf8 column from a small domain (so the dictionary
+/// actually dedups) with occasional out-of-domain strings.
+fn arb_utf8(rng: &mut Rng, n: usize) -> Array {
+    let ss: Vec<Option<String>> = (0..n)
+        .map(|_| {
+            if rng.bool(0.15) {
+                None
+            } else if rng.bool(0.8) {
+                Some(format!("d{}", rng.gen_range(6)))
+            } else {
+                let len = rng.usize_in(0, 5);
+                Some(rng.ascii_lower(len))
+            }
+        })
+        .collect();
+    Array::from_opt_strs(ss.iter().map(|o| o.as_deref()).collect())
+}
+
+#[test]
+fn prop_dict_encode_is_physical_only() {
+    check(Config::default().cases(60).max_size(200), "dict encode/decode", |rng, size| {
+        let n = rng.usize_in(0, size + 1);
+        let plain = arb_utf8(rng, n);
+        // decode(encode(a)) is PHYSICALLY identical: builder-convention
+        // arrays keep empty payloads in null slots on both paths
+        if plain.clone().dict_encode().dict_decode() != plain {
+            return Err("decode(encode(a)) != a".into());
+        }
+        let t = Table::from_columns(vec![("s", plain)]).unwrap();
+        let d = t.dict_encode_columns();
+        // canonical bytes are encoding-invariant by construction
+        if ipc::serialize(&t) != ipc::serialize(&d) {
+            return Err("canonical bytes differ between encodings".into());
+        }
+        // random gather (with repeats) is value-identical and preserves
+        // the encoding
+        if n > 0 {
+            let idx: Vec<usize> =
+                (0..rng.usize_in(0, 2 * n)).map(|_| rng.usize_in(0, n)).collect();
+            let (tp, td) = (t.take(&idx), d.take(&idx));
+            if ipc::serialize(&tp) != ipc::serialize(&td) {
+                return Err("take over dict != take over plain".into());
+            }
+            if !td.column(0).is_dict() {
+                return Err("take dropped the dict encoding".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dict_concat_unifies_and_remaps() {
+    // Two columns built independently have different dictionaries;
+    // concat must unify them and remap codes without changing values.
+    check(Config::default().cases(60).max_size(160), "dict unify/remap", |rng, size| {
+        let (n1, n2) = (rng.usize_in(0, size + 1), rng.usize_in(0, size + 1));
+        let t1 = Table::from_columns(vec![("s", arb_utf8(rng, n1))]).unwrap();
+        let t2 = Table::from_columns(vec![("s", arb_utf8(rng, n2))]).unwrap();
+        let plain = Table::concat_tables(&[&t1, &t2]).map_err(|e| e.to_string())?;
+        let (d1, d2) = (t1.dict_encode_columns(), t2.dict_encode_columns());
+        let dict = Table::concat_tables(&[&d1, &d2]).map_err(|e| e.to_string())?;
+        if ipc::serialize(&plain) != ipc::serialize(&dict) {
+            return Err("concat over dict parts != concat over plain parts".into());
+        }
+        if !dict.column(0).is_dict() {
+            return Err("all-dict concat must stay dict".into());
+        }
+        // mixed-encoding concat is allowed and decodes to plain values
+        let mixed = Table::concat_tables(&[&d1, &t2]).map_err(|e| e.to_string())?;
+        if ipc::serialize(&plain) != ipc::serialize(&mixed) {
+            return Err("mixed-encoding concat changed values".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dict_row_hashes_equal_plain_row_hashes() {
+    // Routing invariance: hash shuffles must send a row to the same
+    // rank whether its key column is dict-encoded or plain.
+    use crate::table::rowhash::hash_columns;
+    check(Config::default().cases(60).max_size(200), "dict hash == plain hash", |rng, size| {
+        let n = rng.usize_in(0, size + 1);
+        let plain = arb_utf8(rng, n);
+        let dict = plain.clone().dict_encode();
+        if hash_columns(&[&plain]) != hash_columns(&[&dict]) {
+            return Err("dict row hashes diverge from plain row hashes".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_format_roundtrips_and_is_canonical_for_plain() {
+    check(Config::default().cases(40).max_size(160), "wire ipc", |rng, size| {
+        let t = arb_table(rng, size);
+        // plain tables: the shuffle wire format IS the canonical format
+        if ipc::serialize_wire(&t) != ipc::serialize(&t) {
+            return Err("plain wire bytes != canonical bytes".into());
+        }
+        // dict tables: wire round-trips, and canonical bytes of the
+        // round-trip equal the plain table's
+        let d = t.dict_encode_columns();
+        let rt = ipc::deserialize_wire(&ipc::serialize_wire(&d)).map_err(|e| e.to_string())?;
+        if ipc::serialize(&rt) != ipc::serialize(&t) {
+            return Err("dict wire roundtrip changed values".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_hash_consistent_with_eq() {
     use crate::table::rowhash::{hash_columns, rows_eq};

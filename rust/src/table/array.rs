@@ -1,16 +1,157 @@
 //! Columnar arrays: the unit of vectorised execution.
 //!
-//! Four physical layouts (matching [`DataType`]):
-//! * `Int64`  — `Vec<i64>` values + optional validity bitmap
-//! * `Float64`— `Vec<f64>` values + optional validity bitmap
-//! * `Utf8`   — Arrow-style `offsets: Vec<u32>` + `bytes: Vec<u8>` + bitmap
-//! * `Bool`   — `Vec<bool>` values + optional validity bitmap
+//! Five physical layouts over four logical [`DataType`]s:
+//! * `Int64`   — `Vec<i64>` values + optional validity bitmap
+//! * `Float64` — `Vec<f64>` values + optional validity bitmap
+//! * `Utf8`    — Arrow-style `offsets: Vec<u32>` + `bytes: Vec<u8>` + bitmap
+//! * `DictUtf8`— dictionary-encoded strings: `codes: Vec<u32>` into a
+//!   `dict: Vec<String>` of unique entries + bitmap. A *physical*
+//!   encoding of logical `Utf8`: [`Array::data_type`] reports
+//!   [`DataType::Utf8`], so schemas, joins and the IPC header never see
+//!   it. Hot kernels (row hash, group-by/unique probes, shuffle wire)
+//!   stay in u32 code space instead of re-touching string bytes.
+//! * `Bool`    — `Vec<bool>` values + optional validity bitmap
 //!
-//! Null slots hold a zero/empty payload; consumers must consult the
-//! bitmap. An absent bitmap means "all valid".
+//! Null slots hold a zero/empty payload (code 0 for `DictUtf8`);
+//! consumers must consult the bitmap. An absent bitmap means "all
+//! valid". Note `PartialEq` on `Array` is *physical*: a `DictUtf8`
+//! array never equals a plain `Utf8` array even when their logical
+//! contents match — compare via [`crate::table::ipc::serialize`]
+//! (which canonicalises encodings) when logical equality is meant.
 
 use super::bitmap::Bitmap;
 use super::scalar::{DataType, Scalar};
+use std::collections::HashMap;
+
+/// Dictionary-encoded UTF-8 column payload: `value(i) = dict[codes[i]]`.
+///
+/// Invariants maintained by the constructors and kernels here:
+/// * `dict` entries are unique, in first-occurrence order;
+/// * every code of a *valid* row indexes into `dict`;
+/// * null rows carry code 0 (and a cleared validity bit — when `dict`
+///   is empty because all rows are null, [`DictUtf8Data::value`]
+///   returns `""` rather than indexing out of bounds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DictUtf8Data {
+    /// Per-row index into `dict`.
+    pub codes: Vec<u32>,
+    /// Unique entries, first-occurrence order.
+    pub dict: Vec<String>,
+}
+
+impl DictUtf8Data {
+    /// Number of rows (not dictionary entries).
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// True when the column has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Row accessor. Null rows (code 0) yield whatever entry 0 holds —
+    /// callers consult the validity bitmap first, exactly as with
+    /// [`Utf8Data`]'s empty null payloads.
+    #[inline]
+    pub fn value(&self, i: usize) -> &str {
+        self.dict.get(self.codes[i] as usize).map_or("", |s| s.as_str())
+    }
+
+    /// Build from plain offsets+bytes, interning each distinct valid
+    /// value once. Null rows (per `validity`) get code 0 and are never
+    /// interned, so an all-null column has an empty dictionary.
+    pub fn encode(plain: &Utf8Data, validity: Option<&Bitmap>) -> DictUtf8Data {
+        let n = plain.len();
+        let mut codes = Vec::with_capacity(n);
+        let mut dict: Vec<String> = Vec::new();
+        let mut seen: HashMap<&str, u32> = HashMap::new();
+        // Two-phase: intern borrowed &str first, copy to owned after,
+        // so each distinct value is allocated exactly once.
+        let mut order: Vec<&str> = Vec::new();
+        for i in 0..n {
+            if validity.is_some_and(|b| !b.get(i)) {
+                codes.push(0);
+                continue;
+            }
+            let v = plain.value(i);
+            let code = *seen.entry(v).or_insert_with(|| {
+                order.push(v);
+                (order.len() - 1) as u32
+            });
+            codes.push(code);
+        }
+        dict.extend(order.iter().map(|s| s.to_string()));
+        DictUtf8Data { codes, dict }
+    }
+
+    /// Expand back to plain offsets+bytes. Null rows decode to the
+    /// empty payload (the builder convention), regardless of what entry
+    /// 0 holds.
+    pub fn decode(&self, validity: Option<&Bitmap>) -> Utf8Data {
+        let mut total = 0usize;
+        for (i, &c) in self.codes.iter().enumerate() {
+            if validity.is_none_or(|b| b.get(i)) {
+                total += self.dict[c as usize].len();
+            }
+        }
+        let mut out = Utf8Data {
+            offsets: Vec::with_capacity(self.codes.len() + 1),
+            bytes: Vec::with_capacity(total),
+        };
+        out.offsets.push(0);
+        for (i, &c) in self.codes.iter().enumerate() {
+            if validity.is_none_or(|b| b.get(i)) {
+                out.push(&self.dict[c as usize]);
+            } else {
+                out.push("");
+            }
+        }
+        out
+    }
+
+    /// Merge `other`'s dictionary into `self`'s, returning the code
+    /// remap table for `other`: `remap[old_code] = code in self.dict`.
+    /// Entries of `other` unseen in `self` are appended (first-occurrence
+    /// order is preserved across the merge), so remapped codes from
+    /// either side address one shared dictionary.
+    pub fn unify(&mut self, other: &DictUtf8Data) -> Vec<u32> {
+        let mut seen: HashMap<&str, u32> = HashMap::with_capacity(self.dict.len());
+        for (c, s) in self.dict.iter().enumerate() {
+            seen.insert(s.as_str(), c as u32);
+        }
+        let mut remap = Vec::with_capacity(other.dict.len());
+        let mut fresh: Vec<&str> = Vec::new();
+        for s in &other.dict {
+            match seen.get(s.as_str()) {
+                Some(&c) => remap.push(c),
+                None => {
+                    let c = (self.dict.len() + fresh.len()) as u32;
+                    seen.insert(s.as_str(), c);
+                    fresh.push(s.as_str());
+                    remap.push(c);
+                }
+            }
+        }
+        let fresh: Vec<String> = fresh.iter().map(|s| s.to_string()).collect();
+        self.dict.extend(fresh);
+        remap
+    }
+
+    /// Rank of each dictionary entry in lexicographic order:
+    /// `rank[code_a] < rank[code_b]  ⇔  dict[code_a] < dict[code_b]`
+    /// (entries are unique, so ranks are a permutation). Sort kernels
+    /// compare u32 ranks instead of string bytes.
+    pub fn sorted_ranks(&self) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..self.dict.len() as u32).collect();
+        order.sort_by(|&a, &b| self.dict[a as usize].cmp(&self.dict[b as usize]));
+        let mut rank = vec![0u32; self.dict.len()];
+        for (r, &c) in order.iter().enumerate() {
+            rank[c as usize] = r as u32;
+        }
+        rank
+    }
+}
 
 /// UTF-8 column payload: `value(i) = bytes[offsets[i]..offsets[i+1]]`.
 #[derive(Debug, Clone, PartialEq)]
@@ -64,6 +205,9 @@ pub enum Array {
     Int64(Vec<i64>, Option<Bitmap>),
     Float64(Vec<f64>, Option<Bitmap>),
     Utf8(Utf8Data, Option<Bitmap>),
+    /// Dictionary-encoded strings — a physical encoding of logical
+    /// [`DataType::Utf8`]; see the module docs and [`DictUtf8Data`].
+    DictUtf8(DictUtf8Data, Option<Bitmap>),
     Bool(Vec<bool>, Option<Bitmap>),
 }
 
@@ -144,6 +288,58 @@ impl Array {
         Array::Utf8(data, if any_null { Some(bm) } else { None })
     }
 
+    /// Dictionary-encoded constructor (interned first-occurrence order).
+    pub fn dict_from_strs<S: AsRef<str>>(v: &[S]) -> Array {
+        Array::from_strs(v).dict_encode()
+    }
+
+    /// Re-encode this array's physical layout to [`Array::DictUtf8`].
+    /// Identity for non-`Utf8` and already-dictionary arrays. Logical
+    /// content is unchanged: encoding round-trips byte-exactly through
+    /// [`crate::table::ipc::serialize`] for arrays following the
+    /// builder convention of empty null payloads (all arrays produced
+    /// by constructors, builders, gathers and concats do).
+    pub fn dict_encode(self) -> Array {
+        match self {
+            Array::Utf8(d, b) => {
+                let dict = DictUtf8Data::encode(&d, b.as_ref());
+                Array::DictUtf8(dict, b)
+            }
+            other => other,
+        }
+    }
+
+    /// Re-encode this array's physical layout to plain [`Array::Utf8`].
+    /// Identity for everything but [`Array::DictUtf8`]. Null rows decode
+    /// to the empty payload (the builder convention).
+    pub fn dict_decode(self) -> Array {
+        match self {
+            Array::DictUtf8(d, b) => {
+                let plain = d.decode(b.as_ref());
+                Array::Utf8(plain, b)
+            }
+            other => other,
+        }
+    }
+
+    /// True when this array is dictionary-encoded.
+    pub fn is_dict(&self) -> bool {
+        matches!(self, Array::DictUtf8(..))
+    }
+
+    /// Borrowed string payload of cell `i` for either string encoding
+    /// (`None` for non-string arrays). Like [`Utf8Data::value`], this
+    /// reads the raw slot without consulting validity — null rows yield
+    /// the (empty) null payload.
+    #[inline]
+    pub fn str_at(&self, i: usize) -> Option<&str> {
+        match self {
+            Array::Utf8(d, _) => Some(d.value(i)),
+            Array::DictUtf8(d, _) => Some(d.value(i)),
+            _ => None,
+        }
+    }
+
     /// An empty array of the given type.
     pub fn empty(dt: DataType) -> Array {
         match dt {
@@ -156,11 +352,13 @@ impl Array {
 
     // ---- inspectors ----------------------------------------------------
 
+    /// Logical type. Note [`Array::DictUtf8`] reports [`DataType::Utf8`]:
+    /// dictionary encoding is physical and invisible to schemas.
     pub fn data_type(&self) -> DataType {
         match self {
             Array::Int64(..) => DataType::Int64,
             Array::Float64(..) => DataType::Float64,
-            Array::Utf8(..) => DataType::Utf8,
+            Array::Utf8(..) | Array::DictUtf8(..) => DataType::Utf8,
             Array::Bool(..) => DataType::Bool,
         }
     }
@@ -170,6 +368,7 @@ impl Array {
             Array::Int64(v, _) => v.len(),
             Array::Float64(v, _) => v.len(),
             Array::Utf8(d, _) => d.len(),
+            Array::DictUtf8(d, _) => d.len(),
             Array::Bool(v, _) => v.len(),
         }
     }
@@ -180,9 +379,11 @@ impl Array {
 
     pub fn validity(&self) -> Option<&Bitmap> {
         match self {
-            Array::Int64(_, b) | Array::Float64(_, b) | Array::Utf8(_, b) | Array::Bool(_, b) => {
-                b.as_ref()
-            }
+            Array::Int64(_, b)
+            | Array::Float64(_, b)
+            | Array::Utf8(_, b)
+            | Array::DictUtf8(_, b)
+            | Array::Bool(_, b) => b.as_ref(),
         }
     }
 
@@ -212,6 +413,7 @@ impl Array {
             Array::Int64(v, _) => Scalar::Int64(v[i]),
             Array::Float64(v, _) => Scalar::Float64(v[i]),
             Array::Utf8(d, _) => Scalar::Utf8(d.value(i).to_string()),
+            Array::DictUtf8(d, _) => Scalar::Utf8(d.value(i).to_string()),
             Array::Bool(v, _) => Scalar::Bool(v[i]),
         }
     }
@@ -235,6 +437,14 @@ impl Array {
     pub fn utf8_data(&self) -> Option<&Utf8Data> {
         match self {
             Array::Utf8(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// Dictionary payload view (`None` unless [`Array::DictUtf8`]).
+    pub fn dict_data(&self) -> Option<&DictUtf8Data> {
+        match self {
+            Array::DictUtf8(d, _) => Some(d),
             _ => None,
         }
     }
@@ -297,6 +507,11 @@ impl Array {
                     out.offsets.push(out.bytes.len() as u32);
                 }
                 Array::Utf8(out, validity)
+            }
+            Array::DictUtf8(d, _) => {
+                // Code-space gather: the dictionary rides along untouched.
+                let codes: Vec<u32> = indices.iter().map(|&i| d.codes[i]).collect();
+                Array::DictUtf8(DictUtf8Data { codes, dict: d.dict.clone() }, validity)
             }
         }
     }
@@ -368,6 +583,28 @@ impl Array {
                 }
                 Array::Bool(out, validity)
             }
+            DataType::Utf8 if arrays.iter().all(|a| a.is_dict()) => {
+                // All dictionary-encoded (the shuffle-ingest path):
+                // unify dictionaries and remap codes — string bytes are
+                // touched once per *distinct* value, not once per row.
+                let mut merged = DictUtf8Data { codes: Vec::with_capacity(total), dict: Vec::new() };
+                for a in arrays {
+                    let d = a.dict_data().unwrap();
+                    let remap = merged.unify(d);
+                    // `unwrap_or(0)` covers all-null inputs whose empty
+                    // dictionary yields an empty remap (codes stay 0).
+                    merged
+                        .codes
+                        .extend(d.codes.iter().map(|&c| remap.get(c as usize).copied().unwrap_or(0)));
+                }
+                Array::DictUtf8(merged, validity)
+            }
+            DataType::Utf8 if arrays.iter().any(|a| a.is_dict()) => {
+                // Mixed physical encodings: decode to plain and recurse.
+                let plains: Vec<Array> = arrays.iter().map(|a| (*a).clone().dict_decode()).collect();
+                let refs: Vec<&Array> = plains.iter().collect();
+                Array::concat(&refs)
+            }
             DataType::Utf8 => {
                 let bytes_total: usize = arrays.iter().map(|a| a.utf8_data().unwrap().bytes.len()).sum();
                 let mut out = Utf8Data {
@@ -395,6 +632,7 @@ impl Array {
             Array::Int64(v, b) => Array::Int64(v, norm(b)),
             Array::Float64(v, b) => Array::Float64(v, norm(b)),
             Array::Utf8(d, b) => Array::Utf8(d, norm(b)),
+            Array::DictUtf8(d, b) => Array::DictUtf8(d, norm(b)),
             Array::Bool(v, b) => Array::Bool(v, norm(b)),
         }
     }
@@ -408,6 +646,9 @@ impl Array {
             Array::Float64(v, _) => v.len() * 8,
             Array::Bool(v, _) => v.len(),
             Array::Utf8(d, _) => d.bytes.len() + d.offsets.len() * 4,
+            Array::DictUtf8(d, _) => {
+                d.codes.len() * 4 + d.dict.iter().map(|s| s.len() + 4).sum::<usize>()
+            }
         }
     }
 }
@@ -478,5 +719,85 @@ mod tests {
         bm.set(0, true);
         let a = Array::Int64(vec![1, 2], Some(bm)).normalize_validity();
         assert!(a.validity().is_none());
+    }
+
+    #[test]
+    fn dict_encode_decode_round_trip_with_nulls() {
+        let plain = Array::from_opt_strs(vec![Some("b"), None, Some("a"), Some("b"), None]);
+        let dict = plain.clone().dict_encode();
+        assert_eq!(dict.data_type(), DataType::Utf8, "encoding is invisible to schemas");
+        assert_eq!(dict.len(), 5);
+        assert_eq!(dict.null_count(), 2);
+        let d = dict.dict_data().unwrap();
+        assert_eq!(d.dict, vec!["b".to_string(), "a".to_string()], "first-occurrence order");
+        assert_eq!(d.codes, vec![0, 0, 1, 0, 0], "nulls carry code 0");
+        assert_eq!(dict.get(0), Scalar::Utf8("b".into()));
+        assert_eq!(dict.get(1), Scalar::Null);
+        assert_eq!(dict.clone().dict_decode(), plain, "decode restores the plain layout");
+        // idempotence both ways
+        assert_eq!(plain.clone().dict_decode(), plain);
+        assert_eq!(dict.clone().dict_encode(), dict);
+    }
+
+    #[test]
+    fn dict_all_null_column_is_safe() {
+        let a = Array::from_opt_strs(vec![None, None]).dict_encode();
+        assert!(a.dict_data().unwrap().dict.is_empty());
+        assert_eq!(a.get(0), Scalar::Null);
+        assert_eq!(a.str_at(1), Some(""), "empty dictionary reads as empty payload");
+        let back = a.clone().dict_decode();
+        assert_eq!(back, Array::from_opt_strs(vec![None, None]));
+        let c = Array::concat(&[&a, &a]);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.null_count(), 4);
+    }
+
+    #[test]
+    fn dict_take_stays_in_code_space() {
+        let a = Array::dict_from_strs(&["x", "y", "x", "z"]);
+        let t = a.take(&[3, 0, 0]);
+        assert!(t.is_dict(), "gather must not decode");
+        assert_eq!(t.get(0), Scalar::Utf8("z".into()));
+        assert_eq!(t.get(1), Scalar::Utf8("x".into()));
+        assert_eq!(t.get(2), Scalar::Utf8("x".into()));
+    }
+
+    #[test]
+    fn dict_concat_unifies_dictionaries() {
+        let a = Array::dict_from_strs(&["p", "q"]);
+        let b = Array::dict_from_strs(&["q", "r"]);
+        let c = Array::concat(&[&a, &b]);
+        assert!(c.is_dict());
+        let d = c.dict_data().unwrap();
+        assert_eq!(d.dict, vec!["p".to_string(), "q".to_string(), "r".to_string()]);
+        assert_eq!(d.codes, vec![0, 1, 1, 2]);
+        // mixed encodings decode to plain
+        let plain = Array::from_strs(&["s"]);
+        let m = Array::concat(&[&a, &plain]);
+        assert!(!m.is_dict());
+        assert_eq!(m.get(2), Scalar::Utf8("s".into()));
+    }
+
+    #[test]
+    fn dict_unify_remap_addresses_merged_dict() {
+        let mut a = Array::dict_from_strs(&["m", "n"]).dict_data().unwrap().clone();
+        let b = Array::dict_from_strs(&["n", "o", "m"]).dict_data().unwrap().clone();
+        let remap = a.unify(&b);
+        assert_eq!(a.dict, vec!["m".to_string(), "n".to_string(), "o".to_string()]);
+        for (old, s) in b.dict.iter().enumerate() {
+            assert_eq!(&a.dict[remap[old] as usize], s);
+        }
+    }
+
+    #[test]
+    fn dict_sorted_ranks_are_order_isomorphic() {
+        let a = Array::dict_from_strs(&["pear", "apple", "zed", "apple", "fig"]);
+        let d = a.dict_data().unwrap();
+        let rank = d.sorted_ranks();
+        for i in 0..d.dict.len() {
+            for j in 0..d.dict.len() {
+                assert_eq!(d.dict[i].cmp(&d.dict[j]), rank[i].cmp(&rank[j]));
+            }
+        }
     }
 }

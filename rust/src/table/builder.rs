@@ -148,6 +148,10 @@ impl ArrayBuilder {
             (b @ ArrayBuilder::Int64(..), Array::Int64(v, _)) => b.push_i64(v[i]),
             (b @ ArrayBuilder::Float64(..), Array::Float64(v, _)) => b.push_f64(v[i]),
             (b @ ArrayBuilder::Utf8(..), Array::Utf8(d, _)) => b.push_str(d.value(i)),
+            // Dictionary-encoded sources feed plain string builders:
+            // builders are row-at-a-time slow paths, so no code space to
+            // preserve here.
+            (b @ ArrayBuilder::Utf8(..), Array::DictUtf8(d, _)) => b.push_str(d.value(i)),
             (b @ ArrayBuilder::Bool(..), Array::Bool(v, _)) => b.push_bool(v[i]),
             (b, s) => panic!("push_from type mismatch: {} vs {}", b.data_type(), s.data_type()),
         }

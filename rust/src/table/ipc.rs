@@ -20,15 +20,37 @@
 //! channel) is deliberate: it charges the benchmark the serialisation
 //! cost an MPI shuffle pays, and gives the comm cost model exact message
 //! sizes.
+//!
+//! Two entry points with different canonicalisation contracts:
+//!
+//! * [`serialize`] / [`deserialize`] — the *canonical* format above.
+//!   Dictionary-encoded columns are expanded to plain `Utf8` payloads
+//!   (null slots as empty strings), so two tables with equal logical
+//!   content serialise to equal bytes regardless of physical encoding.
+//!   Every differential wall compares at this level.
+//! * [`serialize_wire`] / [`deserialize_wire`] — the *shuffle* format.
+//!   Dictionary columns keep their encoding on the wire (tag 4: unique
+//!   entries once + u32 codes per row), which is strictly smaller than
+//!   the plain payload whenever values repeat. [`DictWireState`] extends
+//!   this to streaming edges: after the first batch only dictionary
+//!   *deltas* ship, so a stable dictionary costs zero string bytes per
+//!   subsequent batch.
 
-use super::array::{Array, Utf8Data};
+use super::array::{Array, DictUtf8Data, Utf8Data};
 use super::bitmap::Bitmap;
 use super::scalar::DataType;
 use super::schema::{Field, Schema};
 use super::table::Table;
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 
 const MAGIC: &[u8; 4] = b"HPT1";
+/// Magic for the streaming dict-delta format ([`DictWireState`]).
+const DELTA_MAGIC: &[u8; 4] = b"HPTD";
+/// Wire-only encoding tag for dictionary-encoded `Utf8` columns. Not a
+/// [`DataType`] tag: `DataType::from_tag(4)` is `None`, so the canonical
+/// format can never contain it.
+const DICT_TAG: u8 = 4;
 
 struct Writer {
     buf: Vec<u8>,
@@ -115,6 +137,17 @@ pub fn serialize(table: &Table) -> Vec<u8> {
                 w.u64(d.bytes.len() as u64);
                 w.bytes(&d.bytes);
             }
+            Array::DictUtf8(d, _) => {
+                // Canonicalise: expand to the plain payload (null rows
+                // as empty strings) so serialize-level equality is
+                // independent of physical encoding.
+                let plain = d.decode(col.validity());
+                for o in &plain.offsets {
+                    w.bytes(&o.to_le_bytes());
+                }
+                w.u64(plain.bytes.len() as u64);
+                w.bytes(&plain.bytes);
+            }
         }
     }
     w.buf
@@ -183,6 +216,359 @@ pub fn deserialize(buf: &[u8]) -> Result<Table> {
     Table::new(Schema::new(fields), columns)
 }
 
+// ---------------------------------------------------------------------------
+// Shuffle wire format: dictionary columns stay encoded on the wire.
+// ---------------------------------------------------------------------------
+
+fn write_dict_entries(w: &mut Writer, entries: &[String]) {
+    w.u32(entries.len() as u32);
+    for s in entries {
+        w.u32(s.len() as u32);
+        w.bytes(s.as_bytes());
+    }
+}
+
+fn read_dict_entries(r: &mut Reader<'_>) -> Result<Vec<String>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let len = r.u32()? as usize;
+        let s = std::str::from_utf8(r.take(len)?)
+            .with_context(|| format!("ipc: dict entry {i} not utf8"))?;
+        out.push(s.to_string());
+    }
+    Ok(out)
+}
+
+fn write_codes(w: &mut Writer, codes: &[u32]) {
+    for c in codes {
+        w.bytes(&c.to_le_bytes());
+    }
+}
+
+fn read_codes(r: &mut Reader<'_>, nrows: usize) -> Result<Vec<u32>> {
+    let raw = r.take(nrows * 4)?;
+    Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Serialise for the shuffle wire: identical to [`serialize`] except
+/// that [`Array::DictUtf8`] columns keep their encoding (tag
+/// [`DICT_TAG`]): the unique entries ship once, rows ship as u32 codes.
+/// Strictly fewer bytes than the canonical payload whenever the column
+/// has repeated values. Plain columns produce byte-identical output to
+/// [`serialize`], so the formats only diverge when a dictionary is
+/// actually present.
+pub fn serialize_wire(table: &Table) -> Vec<u8> {
+    let nrows = table.num_rows();
+    let mut w = Writer { buf: Vec::with_capacity(table.nbytes() + 64) };
+    w.bytes(MAGIC);
+    w.u32(table.num_columns() as u32);
+    w.u64(nrows as u64);
+    for (field, col) in table.schema().fields().iter().zip(table.columns()) {
+        w.u32(field.name.len() as u32);
+        w.bytes(field.name.as_bytes());
+        match col {
+            Array::DictUtf8(..) => w.u8(DICT_TAG),
+            _ => w.u8(field.data_type.tag()),
+        }
+        match col.validity() {
+            Some(bm) => {
+                w.u8(1);
+                w.bytes(&bm.raw()[..nrows.div_ceil(8)]);
+            }
+            None => w.u8(0),
+        }
+        match col {
+            Array::Int64(v, _) => {
+                for x in v {
+                    w.bytes(&x.to_le_bytes());
+                }
+            }
+            Array::Float64(v, _) => {
+                for x in v {
+                    w.bytes(&x.to_le_bytes());
+                }
+            }
+            Array::Bool(v, _) => {
+                for &x in v {
+                    w.u8(x as u8);
+                }
+            }
+            Array::Utf8(d, _) => {
+                for o in &d.offsets {
+                    w.bytes(&o.to_le_bytes());
+                }
+                w.u64(d.bytes.len() as u64);
+                w.bytes(&d.bytes);
+            }
+            Array::DictUtf8(d, _) => {
+                write_dict_entries(&mut w, &d.dict);
+                write_codes(&mut w, &d.codes);
+            }
+        }
+    }
+    w.buf
+}
+
+/// Deserialise bytes produced by [`serialize_wire`]. Dictionary columns
+/// come back as [`Array::DictUtf8`] (the receive path unifies them on
+/// concat); plain columns exactly as from [`deserialize`].
+pub fn deserialize_wire(buf: &[u8]) -> Result<Table> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("ipc: bad magic");
+    }
+    let ncols = r.u32()? as usize;
+    let nrows = r.u64()? as usize;
+    let mut fields = Vec::with_capacity(ncols);
+    let mut columns = Vec::with_capacity(ncols);
+    for c in 0..ncols {
+        let name_len = r.u32()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .with_context(|| format!("ipc: column {c} name not utf8"))?
+            .to_string();
+        let tag = r.u8()?;
+        let validity = if r.u8()? == 1 {
+            let raw = r.take(nrows.div_ceil(8))?.to_vec();
+            Some(Bitmap::from_raw(raw, nrows))
+        } else {
+            None
+        };
+        if tag == DICT_TAG {
+            let dict = read_dict_entries(&mut r)?;
+            let codes = read_codes(&mut r, nrows)?;
+            for (i, &code) in codes.iter().enumerate() {
+                let valid = validity.as_ref().is_none_or(|b| b.get(i));
+                if valid && code as usize >= dict.len() {
+                    bail!("ipc: dict code {code} out of range ({} entries)", dict.len());
+                }
+            }
+            fields.push(Field::new(name, DataType::Utf8));
+            columns.push(Array::DictUtf8(DictUtf8Data { codes, dict }, validity));
+            continue;
+        }
+        let dt = DataType::from_tag(tag).context("ipc: bad dtype tag")?;
+        let arr = match dt {
+            DataType::Int64 => {
+                let raw = r.take(nrows * 8)?;
+                let v = raw
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Array::Int64(v, validity)
+            }
+            DataType::Float64 => {
+                let raw = r.take(nrows * 8)?;
+                let v = raw
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Array::Float64(v, validity)
+            }
+            DataType::Bool => {
+                let raw = r.take(nrows)?;
+                Array::Bool(raw.iter().map(|&b| b != 0).collect(), validity)
+            }
+            DataType::Utf8 => {
+                let raw = r.take((nrows + 1) * 4)?;
+                let offsets: Vec<u32> = raw
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let blen = r.u64()? as usize;
+                let bytes = r.take(blen)?.to_vec();
+                Array::Utf8(Utf8Data { offsets, bytes }, validity)
+            }
+        };
+        fields.push(Field::new(name, dt));
+        columns.push(arr);
+    }
+    if r.pos != buf.len() {
+        bail!("ipc: {} trailing bytes", buf.len() - r.pos);
+    }
+    Table::new(Schema::new(fields), columns)
+}
+
+/// Per-edge dictionary state for streaming sends: the sender and the
+/// receiver each hold one `DictWireState` per (edge) and the sender's
+/// [`DictWireState::encode_batch`] ships only the dictionary entries
+/// the paired receiver has not seen yet. When a column's dictionary is
+/// stable across batches (the common case: batches sliced from one
+/// encoded table share one dictionary), every batch after the first
+/// carries **zero** string bytes for that column — codes only.
+///
+/// Delta rule per dictionary column: if the batch dictionary extends
+/// the shipped entries as a prefix, only the tail ships (`base` = how
+/// many entries the receiver already holds); otherwise the state
+/// resyncs (`base` = 0, full dictionary ships). Plain columns are
+/// unaffected and use the [`serialize_wire`] payloads.
+#[derive(Debug, Default)]
+pub struct DictWireState {
+    /// Per-column entries the peer holds, in shipped order.
+    shipped: HashMap<String, Vec<String>>,
+}
+
+impl DictWireState {
+    pub fn new() -> DictWireState {
+        DictWireState::default()
+    }
+
+    /// Sender side: encode one batch, shipping dictionary deltas only.
+    pub fn encode_batch(&mut self, table: &Table) -> Vec<u8> {
+        let nrows = table.num_rows();
+        let mut w = Writer { buf: Vec::with_capacity(table.nbytes() / 2 + 64) };
+        w.bytes(DELTA_MAGIC);
+        w.u32(table.num_columns() as u32);
+        w.u64(nrows as u64);
+        for (field, col) in table.schema().fields().iter().zip(table.columns()) {
+            w.u32(field.name.len() as u32);
+            w.bytes(field.name.as_bytes());
+            match col {
+                Array::DictUtf8(..) => w.u8(DICT_TAG),
+                _ => w.u8(field.data_type.tag()),
+            }
+            match col.validity() {
+                Some(bm) => {
+                    w.u8(1);
+                    w.bytes(&bm.raw()[..nrows.div_ceil(8)]);
+                }
+                None => w.u8(0),
+            }
+            match col {
+                Array::Int64(v, _) => {
+                    for x in v {
+                        w.bytes(&x.to_le_bytes());
+                    }
+                }
+                Array::Float64(v, _) => {
+                    for x in v {
+                        w.bytes(&x.to_le_bytes());
+                    }
+                }
+                Array::Bool(v, _) => {
+                    for &x in v {
+                        w.u8(x as u8);
+                    }
+                }
+                Array::Utf8(d, _) => {
+                    for o in &d.offsets {
+                        w.bytes(&o.to_le_bytes());
+                    }
+                    w.u64(d.bytes.len() as u64);
+                    w.bytes(&d.bytes);
+                }
+                Array::DictUtf8(d, _) => {
+                    let cache = self.shipped.entry(field.name.clone()).or_default();
+                    let is_prefix =
+                        d.dict.len() >= cache.len() && d.dict[..cache.len()] == cache[..];
+                    let base = if is_prefix {
+                        cache.len()
+                    } else {
+                        cache.clear();
+                        0
+                    };
+                    w.u32(base as u32);
+                    write_dict_entries(&mut w, &d.dict[base..]);
+                    cache.extend(d.dict[base..].iter().cloned());
+                    write_codes(&mut w, &d.codes);
+                }
+            }
+        }
+        w.buf
+    }
+
+    /// Receiver side: decode a batch produced by the sender's paired
+    /// state. Batches must arrive in send order (per edge), or the
+    /// dictionary bases will not line up and decoding fails.
+    pub fn decode_batch(&mut self, buf: &[u8]) -> Result<Table> {
+        let mut r = Reader { buf, pos: 0 };
+        if r.take(4)? != DELTA_MAGIC {
+            bail!("ipc: bad dict-delta magic");
+        }
+        let ncols = r.u32()? as usize;
+        let nrows = r.u64()? as usize;
+        let mut fields = Vec::with_capacity(ncols);
+        let mut columns = Vec::with_capacity(ncols);
+        for c in 0..ncols {
+            let name_len = r.u32()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .with_context(|| format!("ipc: column {c} name not utf8"))?
+                .to_string();
+            let tag = r.u8()?;
+            let validity = if r.u8()? == 1 {
+                let raw = r.take(nrows.div_ceil(8))?.to_vec();
+                Some(Bitmap::from_raw(raw, nrows))
+            } else {
+                None
+            };
+            if tag == DICT_TAG {
+                let base = r.u32()? as usize;
+                let fresh = read_dict_entries(&mut r)?;
+                let codes = read_codes(&mut r, nrows)?;
+                let cache = self.shipped.entry(name.clone()).or_default();
+                if base > cache.len() {
+                    bail!(
+                        "ipc: dict delta base {base} ahead of receiver state ({} entries) — \
+                         batches decoded out of order?",
+                        cache.len()
+                    );
+                }
+                cache.truncate(base);
+                cache.extend(fresh);
+                let dict = cache.clone();
+                for (i, &code) in codes.iter().enumerate() {
+                    let valid = validity.as_ref().is_none_or(|b| b.get(i));
+                    if valid && code as usize >= dict.len() {
+                        bail!("ipc: dict code {code} out of range ({} entries)", dict.len());
+                    }
+                }
+                fields.push(Field::new(name, DataType::Utf8));
+                columns.push(Array::DictUtf8(DictUtf8Data { codes, dict }, validity));
+                continue;
+            }
+            let dt = DataType::from_tag(tag).context("ipc: bad dtype tag")?;
+            let arr = match dt {
+                DataType::Int64 => {
+                    let raw = r.take(nrows * 8)?;
+                    let v = raw
+                        .chunks_exact(8)
+                        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Array::Int64(v, validity)
+                }
+                DataType::Float64 => {
+                    let raw = r.take(nrows * 8)?;
+                    let v = raw
+                        .chunks_exact(8)
+                        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Array::Float64(v, validity)
+                }
+                DataType::Bool => {
+                    let raw = r.take(nrows)?;
+                    Array::Bool(raw.iter().map(|&b| b != 0).collect(), validity)
+                }
+                DataType::Utf8 => {
+                    let raw = r.take((nrows + 1) * 4)?;
+                    let offsets: Vec<u32> = raw
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    let blen = r.u64()? as usize;
+                    let bytes = r.take(blen)?.to_vec();
+                    Array::Utf8(Utf8Data { offsets, bytes }, validity)
+                }
+            };
+            fields.push(Field::new(name, dt));
+            columns.push(arr);
+        }
+        if r.pos != buf.len() {
+            bail!("ipc: {} trailing bytes", buf.len() - r.pos);
+        }
+        Table::new(Schema::new(fields), columns)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,5 +611,81 @@ mod tests {
         let mut extra = serialize(&sample());
         extra.push(0);
         assert!(deserialize(&extra).is_err());
+    }
+
+    /// A keyed table in both encodings: `name` repeats heavily.
+    fn encoded_pair() -> (Table, Table) {
+        let names: Vec<Option<&str>> = (0..40)
+            .map(|i| if i % 10 == 3 { None } else { Some(["alpha", "beta", "gamma"][i % 3]) })
+            .collect();
+        let plain = Table::from_columns(vec![
+            ("name", Array::from_opt_strs(names)),
+            ("v", Array::from_i64((0..40).collect())),
+        ])
+        .unwrap();
+        let dict = plain.dict_encode_columns();
+        (plain, dict)
+    }
+
+    #[test]
+    fn canonical_serialize_is_encoding_invariant() {
+        let (plain, dict) = encoded_pair();
+        assert_eq!(serialize(&plain), serialize(&dict));
+        // and the canonical bytes decode to the plain layout
+        let rt = deserialize(&serialize(&dict)).unwrap();
+        assert_eq!(rt, plain);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_dict_and_saves_bytes() {
+        let (plain, dict) = encoded_pair();
+        let wire = serialize_wire(&dict);
+        let rt = deserialize_wire(&wire).unwrap();
+        assert_eq!(rt, dict, "wire round-trip keeps the dictionary encoding");
+        assert!(rt.columns()[0].is_dict());
+        // dictionary wire payload beats the canonical expansion
+        assert!(
+            wire.len() < serialize(&plain).len(),
+            "dict wire {} !< plain {}",
+            wire.len(),
+            serialize(&plain).len()
+        );
+        // plain tables serialise identically under both formats
+        assert_eq!(serialize_wire(&plain), serialize(&plain));
+        // canonical deserialize must reject the dict tag
+        assert!(deserialize(&wire).is_err());
+    }
+
+    #[test]
+    fn dict_delta_state_ships_dictionary_once() {
+        let (_, dict) = encoded_pair();
+        let (b1, b2) = (dict.slice(0, 20), dict.slice(20, 20));
+        let mut tx = DictWireState::new();
+        let mut rx = DictWireState::new();
+        let w1 = tx.encode_batch(&b1);
+        let w2 = tx.encode_batch(&b2);
+        assert!(
+            w2.len() < w1.len(),
+            "second batch must ship no dictionary entries ({} !< {})",
+            w2.len(),
+            w1.len()
+        );
+        assert_eq!(rx.decode_batch(&w1).unwrap(), b1);
+        assert_eq!(rx.decode_batch(&w2).unwrap(), b2);
+        // out-of-order decode on a fresh receiver fails loudly
+        let mut cold = DictWireState::new();
+        assert!(cold.decode_batch(&w2).is_err());
+    }
+
+    #[test]
+    fn dict_delta_state_resyncs_on_dictionary_change() {
+        let a = Table::from_columns(vec![("k", Array::dict_from_strs(&["x", "y", "x"]))]).unwrap();
+        let b = Table::from_columns(vec![("k", Array::dict_from_strs(&["z", "z", "y"]))]).unwrap();
+        let mut tx = DictWireState::new();
+        let mut rx = DictWireState::new();
+        for t in [&a, &b, &a] {
+            let wire = tx.encode_batch(t);
+            assert_eq!(&rx.decode_batch(&wire).unwrap(), t);
+        }
     }
 }

@@ -20,7 +20,7 @@ pub mod schema;
 #[allow(clippy::module_inception)]
 pub mod table;
 
-pub use array::Array;
+pub use array::{Array, DictUtf8Data};
 pub use bitmap::Bitmap;
 pub use builder::{ArrayBuilder, TableBuilder};
 pub use scalar::{DataType, Scalar};

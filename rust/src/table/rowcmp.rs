@@ -38,6 +38,14 @@ pub fn cmp_cells_valid(a: &Array, i: usize, b: &Array, j: usize) -> Ordering {
         (Array::Int64(x, _), Array::Int64(y, _)) => x[i].cmp(&y[j]),
         (Array::Float64(x, _), Array::Float64(y, _)) => canonical_f64_total_cmp(x[i], y[j]),
         (Array::Utf8(x, _), Array::Utf8(y, _)) => x.value(i).cmp(y.value(j)),
+        // Dictionary-encoded strings order by value here (the general
+        // cross-array path: sample-sort splitters may be plain while
+        // the routed rows are dict, or hold two unrelated dictionaries).
+        // Same-column sorts take the precomputed-rank fast path in
+        // `ops::local::sort` instead of going through this per-cell.
+        (Array::DictUtf8(x, _), Array::DictUtf8(y, _)) => x.value(i).cmp(y.value(j)),
+        (Array::DictUtf8(x, _), Array::Utf8(y, _)) => x.value(i).cmp(y.value(j)),
+        (Array::Utf8(x, _), Array::DictUtf8(y, _)) => x.value(i).cmp(y.value(j)),
         (Array::Bool(x, _), Array::Bool(y, _)) => x[i].cmp(&y[j]),
         _ => panic!("rowcmp: dtype mismatch {} vs {}", a.data_type(), b.data_type()),
     }
@@ -144,6 +152,31 @@ mod tests {
         assert_eq!(cmp_rows(&cols, 1, &cols, 2, &asc), Ordering::Less, "first key decides");
         let mixed = [KeyOrder::ASC, KeyOrder::DESC];
         assert_eq!(cmp_rows(&cols, 0, &cols, 1, &mixed), Ordering::Less, "desc second key");
+    }
+
+    #[test]
+    fn dict_orders_like_plain() {
+        let plain = Array::from_strs(&["m", "a", "z", "m"]);
+        let dict = plain.clone().dict_encode();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(
+                    cmp_cells_valid(&dict, i, &dict, j),
+                    cmp_cells_valid(&plain, i, &plain, j),
+                    "dict vs dict at ({i},{j})"
+                );
+                assert_eq!(
+                    cmp_cells_valid(&dict, i, &plain, j),
+                    cmp_cells_valid(&plain, i, &plain, j),
+                    "dict vs plain at ({i},{j})"
+                );
+                assert_eq!(
+                    cmp_cells_valid(&plain, i, &dict, j),
+                    cmp_cells_valid(&plain, i, &plain, j),
+                    "plain vs dict at ({i},{j})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -78,6 +78,16 @@ fn hash_column_into(col: &Array, out: &mut [u64], first: bool) {
         Array::Utf8(d, _) => body!(|i: usize| hash_bytes(
             &d.bytes[d.offsets[i] as usize..d.offsets[i + 1] as usize]
         )),
+        Array::DictUtf8(d, _) => {
+            // Hash each distinct value once, then fan out through the
+            // codes: O(dict bytes + rows) instead of O(total bytes).
+            // Entry hashes use `hash_bytes`, so a dictionary-encoded
+            // column hashes identically to its plain twin — shuffle
+            // routing cannot depend on physical encoding.
+            let entry_hash: Vec<u64> =
+                d.dict.iter().map(|s| hash_bytes(s.as_bytes())).collect();
+            body!(|i: usize| entry_hash[d.codes[i] as usize])
+        }
     }
 }
 
@@ -117,6 +127,18 @@ pub fn cell_eq(a: &Array, i: usize, b: &Array, j: usize) -> bool {
             (Array::Float64(x, _), Array::Float64(y, _)) => canon_f64(x[i]) == canon_f64(y[j]),
             (Array::Bool(x, _), Array::Bool(y, _)) => x[i] == y[j],
             (Array::Utf8(x, _), Array::Utf8(y, _)) => x.value(i) == y.value(j),
+            (Array::DictUtf8(x, _), Array::DictUtf8(y, _)) => {
+                // Same dictionary instance (the group-by/unique probe
+                // case: both sides of the comparison are one column) →
+                // compare u32 codes; otherwise fall back to the strings.
+                if std::ptr::eq(x, y) {
+                    x.codes[i] == y.codes[j]
+                } else {
+                    x.value(i) == y.value(j)
+                }
+            }
+            (Array::DictUtf8(x, _), Array::Utf8(y, _)) => x.value(i) == y.value(j),
+            (Array::Utf8(x, _), Array::DictUtf8(y, _)) => x.value(i) == y.value(j),
             _ => false,
         },
         _ => false,
@@ -183,4 +205,31 @@ mod tests {
         assert!(!rows_eq(&[&a1, &b1], 0, &[&a2, &b2], 0));
     }
 
+    #[test]
+    fn dict_hashes_identically_to_plain() {
+        // Routing invariance: the hash of a value must not depend on
+        // its physical encoding, or shuffles would place the same key
+        // on different ranks for dict vs plain inputs.
+        let plain = Array::from_opt_strs(vec![Some("aa"), None, Some("bb"), Some("aa")]);
+        let dict = plain.clone().dict_encode();
+        assert_eq!(hash_columns(&[&plain]), hash_columns(&[&dict]));
+    }
+
+    #[test]
+    fn dict_cell_eq_same_array_and_mixed() {
+        let plain = Array::from_opt_strs(vec![Some("x"), Some("y"), None, Some("x")]);
+        let dict = plain.clone().dict_encode();
+        // same-array probe (code fast path)
+        assert!(cell_eq(&dict, 0, &dict, 3));
+        assert!(!cell_eq(&dict, 0, &dict, 1));
+        assert!(cell_eq(&dict, 2, &dict, 2), "null == null");
+        // mixed encodings compare by value
+        assert!(cell_eq(&dict, 0, &plain, 0));
+        assert!(cell_eq(&plain, 1, &dict, 1));
+        assert!(!cell_eq(&plain, 0, &dict, 1));
+        // two distinct dictionaries compare by value
+        let other = Array::dict_from_strs(&["y", "x"]);
+        assert!(cell_eq(&dict, 0, &other, 1));
+        assert!(!cell_eq(&dict, 0, &other, 0));
+    }
 }

@@ -215,6 +215,20 @@ impl Table {
         Ok(Table { schema: first.schema.clone(), columns, nrows })
     }
 
+    /// Re-encode every `Utf8` column to [`Array::DictUtf8`] (physical
+    /// only — the schema is unchanged, and logical content round-trips
+    /// byte-exactly through [`crate::table::ipc::serialize`]).
+    pub fn dict_encode_columns(&self) -> Table {
+        let columns = self.columns.iter().map(|c| c.clone().dict_encode()).collect();
+        Table { schema: self.schema.clone(), columns, nrows: self.nrows }
+    }
+
+    /// Re-encode every [`Array::DictUtf8`] column back to plain `Utf8`.
+    pub fn dict_decode_columns(&self) -> Table {
+        let columns = self.columns.iter().map(|c| c.clone().dict_decode()).collect();
+        Table { schema: self.schema.clone(), columns, nrows: self.nrows }
+    }
+
     /// Split into `n` contiguous chunks of near-equal size (row-partition
     /// for pleasingly-parallel dispatch; last chunks may be one row
     /// shorter).

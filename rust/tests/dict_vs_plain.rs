@@ -1,0 +1,343 @@
+//! Differential wall for the dictionary encoding: `Array::DictUtf8` is
+//! a *physical* encoding under the logical `Utf8` type, so running any
+//! operator over dict-encoded inputs may change time and wire bytes but
+//! must NEVER change results.
+//!
+//! Every test here runs the same operator twice at `world_size ∈
+//! {1, 2, 4, 7}` — once on plain partitions, once on the very same
+//! partitions passed through [`Table::dict_encode_columns`] — and
+//! requires **canonical `ipc::serialize` byte equality on every rank**
+//! (canonical serialization expands dictionaries, so it is
+//! encoding-invariant by construction; see `table::ipc`). Per-rank
+//! comparison is sound because routing is encoding-independent: row
+//! hashes of dict columns equal the hashes of their decoded values, and
+//! range routing compares by value.
+//!
+//! Inputs are seeded through `util::rng`; set `HPTMT_TEST_SEED` to
+//! reproduce a CI failure locally (CI pins it).
+
+use hptmt::comm::{spawn_world, LinkProfile};
+use hptmt::ops::dist::{
+    broadcast_join, dist_difference, dist_drop_duplicates, dist_groupby, dist_groupby_partial,
+    dist_intersect, dist_join, dist_sort, dist_union, dist_union_all, dist_unique,
+};
+use hptmt::ops::local::{Agg, AggSpec, Cmp, JoinAlgorithm, JoinType, SortKey};
+use hptmt::plan::{GroupStrategy, JoinStrategy, LazyFrame};
+use hptmt::table::{ipc, Array, Table};
+use hptmt::util::rng::Rng;
+
+const WORLDS: [usize; 4] = [1, 2, 4, 7];
+
+fn seed() -> u64 {
+    std::env::var("HPTMT_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20260727)
+}
+
+/// Same global generator shape as `dist_vs_local.rs`: Utf8 key `s` and
+/// i64 key `k` (both ~10% null, small domains so keys collide across
+/// ranks and the dictionary actually dedups), payload `v` = integer
+/// function of the keys in f64 (exact sums, payload determined by keys).
+fn global_table(rows: usize, domain: u64, stream: u64) -> Table {
+    let mut rng = Rng::new(seed()).fork(stream);
+    let mut ss: Vec<Option<String>> = Vec::with_capacity(rows);
+    let mut ks: Vec<Option<i64>> = Vec::with_capacity(rows);
+    let mut vs: Vec<f64> = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let s = if rng.bool(0.1) { None } else { Some(format!("g{}", rng.gen_range(domain))) };
+        let k = if rng.bool(0.1) { None } else { Some(rng.gen_range(domain) as i64) };
+        let v = (s.as_deref().map_or(7i64, |x| x.bytes().map(i64::from).sum::<i64>()) * 31
+            + k.unwrap_or(-1))
+            % 997;
+        ss.push(s);
+        ks.push(k);
+        vs.push(v as f64);
+    }
+    Table::from_columns(vec![
+        ("s", Array::from_opt_strs(ss.iter().map(|o| o.as_deref()).collect())),
+        ("k", Array::from_opt_i64(ks)),
+        ("v", Array::from_f64(vs)),
+    ])
+    .unwrap()
+}
+
+/// Dict-encode every partition and sanity-check the encoding engaged on
+/// the Utf8 column (an all-null or empty part may stay plain — that is
+/// fine, the wall still compares it).
+fn dict_parts(plain: &[Table]) -> Vec<Table> {
+    let parts: Vec<Table> = plain.iter().map(|t| t.dict_encode_columns()).collect();
+    assert!(
+        parts.iter().any(|t| t.column(0).is_dict()),
+        "generator produced no dict-encodable partition — wall would be vacuous"
+    );
+    parts
+}
+
+/// Require canonical byte equality per rank between the plain-input run
+/// and the dict-input run.
+fn assert_rank_bytes_equal(name: &str, w: usize, plain_out: &[Table], dict_out: &[Table]) {
+    for rank in 0..w {
+        assert_eq!(
+            ipc::serialize(&plain_out[rank]),
+            ipc::serialize(&dict_out[rank]),
+            "{name}: dict input changed rank {rank} result at w={w} (seed {})",
+            seed()
+        );
+    }
+}
+
+/// Twin-run a unary distributed operator on plain vs dict partitions.
+fn assert_unary_dict_invisible<F>(name: &str, global: &Table, op: F)
+where
+    F: Fn(&mut hptmt::comm::ThreadComm, &Table) -> anyhow::Result<Table>
+        + Send
+        + Sync
+        + Clone
+        + 'static,
+{
+    for w in WORLDS {
+        let plain = global.split(w);
+        let dict = dict_parts(&plain);
+        let (p_op, d_op) = (op.clone(), op.clone());
+        let plain_out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            p_op(comm, &plain[rank])
+        })
+        .unwrap_or_else(|e| panic!("{name} plain w={w}: {e:#}"));
+        let dict_out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            d_op(comm, &dict[rank])
+        })
+        .unwrap_or_else(|e| panic!("{name} dict w={w}: {e:#}"));
+        assert_rank_bytes_equal(name, w, &plain_out, &dict_out);
+    }
+}
+
+/// Twin-run a binary distributed operator on plain vs dict partitions
+/// of both sides.
+fn assert_binary_dict_invisible<F>(name: &str, a: &Table, b: &Table, op: F)
+where
+    F: Fn(&mut hptmt::comm::ThreadComm, &Table, &Table) -> anyhow::Result<Table>
+        + Send
+        + Sync
+        + Clone
+        + 'static,
+{
+    for w in WORLDS {
+        let (ap, bp) = (a.split(w), b.split(w));
+        let (ad, bd) = (dict_parts(&ap), dict_parts(&bp));
+        let (p_op, d_op) = (op.clone(), op.clone());
+        let plain_out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            p_op(comm, &ap[rank], &bp[rank])
+        })
+        .unwrap_or_else(|e| panic!("{name} plain w={w}: {e:#}"));
+        let dict_out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            d_op(comm, &ad[rank], &bd[rank])
+        })
+        .unwrap_or_else(|e| panic!("{name} dict w={w}: {e:#}"));
+        assert_rank_bytes_equal(name, w, &plain_out, &dict_out);
+    }
+}
+
+#[test]
+fn dict_encoding_is_invisible_at_canonical_serialize_level() {
+    let g = global_table(260, 12, 30);
+    let d = g.dict_encode_columns();
+    assert!(d.column(0).is_dict(), "s must dict-encode");
+    assert!(!d.column(1).is_dict() && !d.column(2).is_dict(), "only Utf8 encodes");
+    assert_eq!(ipc::serialize(&g), ipc::serialize(&d), "canonical bytes must be encoding-free");
+    assert_eq!(
+        ipc::serialize(&d.dict_decode_columns()),
+        ipc::serialize(&g),
+        "decode round-trip"
+    );
+    // schema is untouched: DictUtf8 is logically Utf8
+    assert_eq!(g.schema().as_ref(), d.schema().as_ref());
+}
+
+#[test]
+fn dist_join_on_utf8_key_is_dict_invariant() {
+    // join ON the dictionary column — the probe runs over codes
+    let l = global_table(240, 16, 31);
+    let r = global_table(160, 16, 32);
+    for jt in [JoinType::Inner, JoinType::Left] {
+        for algo in [JoinAlgorithm::Hash, JoinAlgorithm::SortMerge] {
+            assert_binary_dict_invisible(
+                &format!("dist_join({jt:?},{algo:?})"),
+                &l,
+                &r,
+                move |comm, a, b| dist_join(comm, a, b, &["s"], &["s"], jt, algo),
+            );
+        }
+    }
+    // multi-key: dict + numeric key columns together
+    assert_binary_dict_invisible("dist_join(s,k)", &l, &r, |comm, a, b| {
+        dist_join(comm, a, b, &["s", "k"], &["s", "k"], JoinType::Inner, JoinAlgorithm::Hash)
+    });
+}
+
+#[test]
+fn broadcast_join_is_dict_invariant() {
+    let l = global_table(240, 16, 33);
+    let r = global_table(60, 16, 34);
+    assert_binary_dict_invisible("broadcast_join", &l, &r, |comm, a, b| {
+        broadcast_join(comm, a, b, &["s"], &["s"], JoinType::Inner)
+    });
+}
+
+#[test]
+fn dist_groupby_is_dict_invariant() {
+    let g = global_table(300, 12, 35);
+    let aggs = [
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Mean),
+        AggSpec::new("v", Agg::Min),
+        AggSpec::new("v", Agg::Max),
+    ];
+    let a_full = aggs.clone();
+    assert_unary_dict_invisible("dist_groupby", &g, move |comm, t| {
+        dist_groupby(comm, t, &["s", "k"], &a_full)
+    });
+    assert_unary_dict_invisible("dist_groupby_partial", &g, move |comm, t| {
+        dist_groupby_partial(comm, t, &["s", "k"], &aggs)
+    });
+}
+
+#[test]
+fn dist_unique_and_drop_duplicates_are_dict_invariant() {
+    let g = global_table(300, 10, 36);
+    assert_unary_dict_invisible("dist_unique", &g, |comm, t| dist_unique(comm, t, &["s", "k"]));
+    assert_unary_dict_invisible("dist_drop_duplicates(subset)", &g, |comm, t| {
+        dist_drop_duplicates(comm, t, Some(&["s", "k"]))
+    });
+    assert_unary_dict_invisible("dist_drop_duplicates(all)", &g, |comm, t| {
+        dist_drop_duplicates(comm, t, None)
+    });
+}
+
+#[test]
+fn dist_sort_is_dict_invariant() {
+    // Utf8-led sort: splitter sampling, range routing and the merge all
+    // see the dict column; the rank fast path must order exactly like
+    // by-value comparison.
+    let g = global_table(300, 12, 37);
+    assert_unary_dict_invisible("dist_sort(s,k)", &g, |comm, t| {
+        dist_sort(comm, t, &[SortKey::asc("s"), SortKey::desc("k")])
+    });
+    assert_unary_dict_invisible("dist_sort(s desc)", &g, |comm, t| {
+        dist_sort(comm, t, &[SortKey::desc("s")])
+    });
+}
+
+#[test]
+fn dist_set_ops_are_dict_invariant() {
+    let a = global_table(220, 8, 38);
+    let b = global_table(180, 8, 39);
+    type DistOp = fn(&mut hptmt::comm::ThreadComm, &Table, &Table) -> anyhow::Result<Table>;
+    let cases: [(&'static str, DistOp); 4] = [
+        ("union", dist_union),
+        ("union_all", dist_union_all),
+        ("intersect", dist_intersect),
+        ("difference", dist_difference),
+    ];
+    for (name, op) in cases {
+        assert_binary_dict_invisible(name, &a, &b, op);
+    }
+}
+
+/// A whole planned chain — fused filter/map steps (selection-vector
+/// executor), a shuffle edge carrying the dict column, and a group-by —
+/// must be byte-identical per rank between plain and dict inputs.
+#[test]
+fn planned_fused_chain_is_dict_invariant() {
+    let g = global_table(280, 12, 40);
+    let aggs = [AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)];
+
+    // (a) fused filters over the dict column feeding a range shuffle:
+    // `s` stays dict-encoded all the way onto the wire.
+    assert_unary_dict_invisible("plan: filter→filter→sort", &g, |comm, t| {
+        Ok(LazyFrame::from_table(t.clone())
+            .filter("s", Cmp::Ge, "g2")
+            .filter("v", Cmp::Le, 800.0f64)
+            .sort_by(&[SortKey::asc("s"), SortKey::desc("v")])
+            .collect_comm(comm)?
+            .into_table())
+    });
+
+    // (b) maps interleaved with filters: map_utf8 decodes to plain (one
+    // call per surviving row), map_f64 rescales, group-by crosses a
+    // hash shuffle.
+    assert_unary_dict_invisible("plan: filter→map→filter→groupby", &g, move |comm, t| {
+        Ok(LazyFrame::from_table(t.clone())
+            .filter("s", Cmp::Ge, "g1")
+            .map_utf8("s", |s| format!("{s}!"))
+            .filter("v", Cmp::Ge, 50.0f64)
+            .map_f64("v", |v| v * 2.0)
+            .groupby_with(&["s"], &aggs, GroupStrategy::PartialShuffle)
+            .collect_comm(comm)?
+            .into_table())
+    });
+}
+
+/// With dict-encoded inputs, the planned path must still be
+/// byte-identical to the hand-wired eager operator on every rank (the
+/// planner wall of `dist_vs_local.rs`, replayed over dict inputs).
+#[test]
+fn planned_path_on_dict_inputs_is_byte_identical_to_eager() {
+    let l = global_table(240, 16, 41);
+    let r = global_table(160, 16, 42);
+    for w in WORLDS {
+        let (lp, rp) = (dict_parts(&l.split(w)), dict_parts(&r.split(w)));
+
+        let (le, re) = (lp.clone(), rp.clone());
+        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            let eager = dist_join(
+                comm,
+                &le[rank],
+                &re[rank],
+                &["s"],
+                &["s"],
+                JoinType::Inner,
+                JoinAlgorithm::Hash,
+            )?;
+            let planned = LazyFrame::from_table(le[rank].clone())
+                .join_with(
+                    &LazyFrame::from_table(re[rank].clone()),
+                    &["s"],
+                    &["s"],
+                    JoinType::Inner,
+                    JoinAlgorithm::Hash,
+                    JoinStrategy::Hash,
+                )
+                .collect_comm(comm)?
+                .into_table();
+            Ok((ipc::serialize(&eager), ipc::serialize(&planned)))
+        })
+        .unwrap_or_else(|e| panic!("planned-vs-eager dict join w={w}: {e:#}"));
+        for (rank, (e, p)) in out.iter().enumerate() {
+            assert_eq!(
+                e, p,
+                "planned != eager on dict inputs, rank {rank} w={w} (seed {})",
+                seed()
+            );
+        }
+
+        let (ge, gl) = (lp.clone(), lp.clone());
+        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            let eager = dist_sort(comm, &ge[rank], &[SortKey::asc("s"), SortKey::desc("k")])?;
+            let planned = LazyFrame::from_table(gl[rank].clone())
+                .sort_by(&[SortKey::asc("s"), SortKey::desc("k")])
+                .collect_comm(comm)?
+                .into_table();
+            Ok((ipc::serialize(&eager), ipc::serialize(&planned)))
+        })
+        .unwrap_or_else(|e| panic!("planned-vs-eager dict sort w={w}: {e:#}"));
+        for (rank, (e, p)) in out.iter().enumerate() {
+            assert_eq!(
+                e, p,
+                "planned sort != eager on dict inputs, rank {rank} w={w} (seed {})",
+                seed()
+            );
+        }
+    }
+}
