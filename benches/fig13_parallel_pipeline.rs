@@ -142,7 +142,7 @@ fn main() -> anyhow::Result<()> {
     }
     let mut windowed = Report::new(
         "fig13_keyed_windowed",
-        &["shards", "cpu_s", "windows", "state_rows", "state_kb"],
+        &["shards", "cpu_s", "windows", "state_rows", "state_kb", "budget_ok"],
     );
     for &w in &[1usize, 2, 4] {
         let timed_raw = raw.clone();
@@ -154,12 +154,29 @@ fn main() -> anyhow::Result<()> {
         })?;
         let run = windowed_stream(&raw, &aggs, w).run(8)?;
         let agg = &run.stages[1];
+        // Enforced-budget cell: re-run the (non-windowed) keyed fold
+        // under a 16 KiB state budget. "ok" iff the fold demonstrably
+        // spilled AND the peak retained state stayed within the budget
+        // — an exact engine property at a given scale, so the
+        // BENCH_fig13.json trajectory gates on it strictly.
+        let budget_ok = {
+            use hptmt::exec::morsel::{self, MemBudget, MorselConfig};
+            const BUDGET: usize = 16 * 1024;
+            morsel::reset_spill_stats();
+            morsel::set_runtime(MorselConfig::default(), MemBudget::bytes(BUDGET));
+            let res = keyed_stream(&raw, &aggs, w).run(8);
+            morsel::clear_runtime();
+            let st = morsel::spill_stats();
+            let spilled_within = st.files > 0 && st.peak_state_bytes <= BUDGET as u64;
+            if res?.total_rows_out() > 0 && spilled_within { "ok" } else { "fail" }
+        };
         windowed.row(&[
             w.to_string(),
             format!("{:.4}", stat.median),
             run.output.len().to_string(),
             agg.state_rows.to_string(),
             format!("{:.1}", agg.state_bytes as f64 / 1024.0),
+            budget_ok.to_string(),
         ]);
     }
     windowed.finish()

@@ -20,10 +20,40 @@
 //! different `HPTMT_BENCH_SCALE`s are refused: their row counts are
 //! not comparable.
 
+//! Exit codes: `0` clean, `1` regressions/missing rows, `2` baseline
+//! file missing or unreadable (actionable: seed it from the fresh run),
+//! `3` report-name mismatch (comparing unrelated trajectories).
+
 use anyhow::{bail, Context, Result};
 use hptmt::util::cli::Args;
 use hptmt::util::json::Json;
 use std::collections::BTreeMap;
+
+const EXIT_REGRESSION: i32 = 1;
+const EXIT_MISSING_BASELINE: i32 = 2;
+const EXIT_NAME_MISMATCH: i32 = 3;
+
+/// Actionable message for a baseline that cannot be loaded: say what
+/// was tried, why it matters, and the exact command that seeds it.
+fn missing_baseline_message(path: &str, err: &anyhow::Error) -> String {
+    format!(
+        "bench_diff: baseline {path} is missing or unreadable ({err:#}).\n\
+         A trajectory gate needs the previous PR's report checked in. Seed it from the\n\
+         fresh run and commit it:\n\
+         \n    cp bench_out/<name>.json {path}\n\
+         \nthen re-run bench_diff. (exit {EXIT_MISSING_BASELINE})"
+    )
+}
+
+/// Actionable message for comparing two different benchmarks.
+fn name_mismatch_message(new_name: &str, base_name: &str) -> String {
+    format!(
+        "bench_diff: report name mismatch: new run is {new_name:?} but baseline is\n\
+         {base_name:?} — these are different trajectories and their rows are not\n\
+         comparable. Pass the baseline recorded for {new_name:?} (or rebaseline with\n\
+         the fresh report). (exit {EXIT_NAME_MISMATCH})"
+    )
+}
 
 /// One parsed report: name, scale, header, rows keyed by first cell.
 struct ReportFile {
@@ -95,9 +125,16 @@ fn main() -> Result<()> {
         .unwrap_or_default();
 
     let new = load(new_path)?;
-    let base = load(base_path)?;
+    let base = match load(base_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{}", missing_baseline_message(base_path, &e));
+            std::process::exit(EXIT_MISSING_BASELINE);
+        }
+    };
     if new.name != base.name {
-        bail!("bench name mismatch: {:?} vs {:?} — not the same trajectory", new.name, base.name);
+        eprintln!("{}", name_mismatch_message(&new.name, &base.name));
+        std::process::exit(EXIT_NAME_MISMATCH);
     }
     if new.scale != base.scale {
         bail!(
@@ -188,8 +225,57 @@ fn main() -> Result<()> {
     }
     if regressions > 0 || missing > 0 {
         println!("{regressions} regression(s) beyond {threshold:.2}x, {missing} missing row(s)");
-        std::process::exit(1);
+        std::process::exit(EXIT_REGRESSION);
     }
     println!("no regressions beyond {threshold:.2}x");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_baseline_is_actionable_not_a_panic() {
+        let path = std::env::temp_dir().join("bench-diff-test-does-not-exist.json");
+        let path = path.to_string_lossy().into_owned();
+        let err = load(&path).expect_err("loading a missing baseline must be an Err");
+        let msg = missing_baseline_message(&path, &err);
+        assert!(msg.contains(&path), "message must name the missing file");
+        assert!(msg.contains("cp bench_out/"), "message must say how to seed the baseline");
+        assert!(msg.contains("exit 2"), "message must carry the distinct exit code");
+    }
+
+    #[test]
+    fn unparseable_baseline_is_an_error_not_a_panic() {
+        let path = std::env::temp_dir().join(format!("bench-diff-garbage-{}.json", std::process::id()));
+        std::fs::write(&path, b"{not json!").unwrap();
+        let res = load(&path.to_string_lossy());
+        std::fs::remove_file(&path).unwrap();
+        assert!(res.is_err(), "garbage JSON must surface as Err, not panic");
+    }
+
+    #[test]
+    fn name_mismatch_names_both_trajectories() {
+        let msg = name_mismatch_message("fig13_keyed_windowed", "fig4_dist_join");
+        assert!(msg.contains("fig13_keyed_windowed"));
+        assert!(msg.contains("fig4_dist_join"));
+        assert!(msg.contains("not"), "message must say the rows are not comparable");
+        assert!(msg.contains("exit 3"), "message must carry the distinct exit code");
+    }
+
+    #[test]
+    fn load_reads_a_well_formed_report() {
+        let path = std::env::temp_dir().join(format!("bench-diff-ok-{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            br#"{"name":"t","scale":1.0,"header":["x","cpu_s"],"rows":[["1","0.5"]]}"#,
+        )
+        .unwrap();
+        let rep = load(&path.to_string_lossy()).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(rep.name, "t");
+        assert_eq!(rep.header, vec!["x", "cpu_s"]);
+        assert_eq!(rep.rows, vec![vec!["1".to_string(), "0.5".to_string()]]);
+    }
 }

@@ -568,6 +568,89 @@ mod tests {
     }
 
     #[test]
+    fn zero_byte_messages_round_trip() {
+        // Empty blobs must traverse every collective unchanged: a
+        // zero-row shuffle partition serializes to real (non-empty) IPC
+        // bytes, but raw point-to-point framing must still cope with
+        // genuinely empty payloads.
+        for w in worlds() {
+            let res = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                let b = broadcast_bytes(comm, 0, if rank == 0 { Some(Vec::new()) } else { None })?;
+                let ag = allgather_bytes(comm, Vec::new())?;
+                let a2a = alltoall_bytes(comm, vec![Vec::new(); comm.world_size()])?;
+                let sc = scatter_bytes(
+                    comm,
+                    0,
+                    if rank == 0 { Some(vec![Vec::new(); comm.world_size()]) } else { None },
+                )?;
+                Ok((b, ag, a2a, sc))
+            })
+            .unwrap();
+            for (b, ag, a2a, sc) in res {
+                assert!(b.is_empty(), "world {w}");
+                assert_eq!(ag, vec![Vec::<u8>::new(); w]);
+                assert_eq!(a2a, vec![Vec::<u8>::new(); w]);
+                assert!(sc.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_partition_allgather() {
+        // The dist_sort sample exchange allgathers serialized tables;
+        // an empty partition must arrive as a deserializable zero-row
+        // table with its schema intact on every rank.
+        use crate::table::{ipc, Array, Table};
+        for w in worlds() {
+            let res = spawn_world(w, LinkProfile::zero(), move |_rank, comm| {
+                let empty = Table::from_columns(vec![
+                    ("k", Array::from_i64(vec![])),
+                    ("s", Array::from_strs(&[])),
+                ])?
+                .slice(0, 0);
+                let blobs = allgather_bytes(comm, ipc::serialize(&empty))?;
+                let mut rows = Vec::new();
+                for blob in &blobs {
+                    let t = ipc::deserialize(blob)?;
+                    assert_eq!(t.schema().names(), vec!["k", "s"]);
+                    rows.push(t.num_rows());
+                }
+                Ok(rows)
+            })
+            .unwrap();
+            for rows in res {
+                assert_eq!(rows, vec![0; w], "world {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_payload_round_trip() {
+        // > 1 MiB per blob: framing, length prefixes, and chunk
+        // arithmetic must be size-oblivious. Payload is rank-stamped so
+        // cross-rank mixups cannot cancel out.
+        const N: usize = (3 << 20) / 2; // 1.5 MiB
+        let res = spawn_world(3, LinkProfile::zero(), |rank, comm| {
+            let blob: Vec<u8> = (0..N).map(|i| (i.wrapping_mul(31) ^ rank) as u8).collect();
+            let ag = allgather_bytes(comm, blob.clone())?;
+            let bc = broadcast_bytes(comm, 1, if rank == 1 { Some(blob.clone()) } else { None })?;
+            Ok((blob, ag, bc))
+        })
+        .unwrap();
+        let expect: Vec<Vec<u8>> = (0..3usize)
+            .map(|rank| (0..N).map(|i| (i.wrapping_mul(31) ^ rank) as u8).collect())
+            .collect();
+        for (rank, (blob, ag, bc)) in res.into_iter().enumerate() {
+            assert_eq!(blob.len(), N);
+            assert_eq!(blob, expect[rank]);
+            for (r, got) in ag.iter().enumerate() {
+                assert_eq!(got, &expect[r], "allgather blob {r} on rank {rank}");
+            }
+            assert_eq!(bc, expect[1], "broadcast payload on rank {rank}");
+        }
+    }
+
+    #[test]
     fn collective_sequences_do_not_crosstalk() {
         // Two different collectives back-to-back with same participants.
         let res = spawn_world(4, LinkProfile::zero(), |rank, comm| {

@@ -6,9 +6,13 @@
 //!   under a serial central scheduler.
 //! * [`seq`] — single-threaded reference execution (the Pandas role in
 //!   Fig 12).
+//! * [`morsel`] — sub-partition decomposition: work-stealing morsel
+//!   scheduling, the `HPTMT_MEM_BUDGET` byte budget, and canonical-IPC
+//!   spill-to-disk shared by the per-partition operator phases.
 
 pub mod asynch;
 pub mod bsp;
+pub mod morsel;
 pub mod seq;
 
 pub use bsp::{run_bsp, BspConfig, BspRun, RankReport};

@@ -1,0 +1,708 @@
+//! Morsel-driven rank execution with a byte budget and spill-to-disk.
+//!
+//! The HPTMT operator model assumes work decomposes *below* the
+//! partition level (SNIPPETS.md #3: schedule more "molecules" than
+//! cores, heaviest first, so a skewed key cannot make a straggler).
+//! This module provides the three pieces the per-partition phases of
+//! `ops::dist`, `ops::local` and `plan::physical` wire through:
+//!
+//! * **Morsel decomposition** — [`MorselConfig`] sizes a partition into
+//!   contiguous row ranges ([`morsel_ranges`]) targeting a fixed byte
+//!   budget per morsel (`HPTMT_MORSEL_BYTES`, default 32 MiB) or an
+//!   explicit count (`HPTMT_MORSELS`); [`run_morsels`] executes one
+//!   closure per morsel on a work-stealing pool, heaviest first, and
+//!   returns results in morsel-index order so outputs are deterministic
+//!   regardless of scheduling.
+//! * **Byte budget** — [`MemBudget`] (`HPTMT_MEM_BUDGET`; absent or 0 =
+//!   unlimited) bounds *retained operator state between steps*: hash
+//!   partials, sort runs, join build chunks. Transient kernel workspace
+//!   and final operator outputs are not budgeted — they are consumed
+//!   immediately — so "peak state ≤ budget" is a statement about what an
+//!   operator holds onto, enforced by spilling, not a heap cap.
+//! * **Spill-to-disk** — [`SpillFile`] stages a table through a temp
+//!   file in the existing canonical [`ipc::serialize`] format, so
+//!   re-read state is value-identical to what was written (dictionary
+//!   encodings canonicalise to plain, which every consumer compares by
+//!   value). [`SpilledState`] implements the enforce/drain cycle for
+//!   mergeable partial state; [`for_each_budgeted_chunk`] implements
+//!   partitioned staging for build/probe state. Process-global counters
+//!   ([`spill_stats`]) let the differential wall assert that a tight
+//!   budget really spilled and that post-enforcement retained state
+//!   stayed within it.
+//!
+//! At the defaults (no env overrides) every operator sees exactly one
+//! morsel and an unlimited budget and takes its original sequential
+//! code path, byte for byte — which is what lets
+//! `rust/tests/spill_vs_memory.rs` use that configuration as the oracle
+//! for every other one.
+
+use crate::table::{ipc, Array, Bitmap, Table};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+/// Default per-morsel byte target: large enough that test-sized and
+/// interactive partitions stay single-morsel (the exact sequential
+/// path), small enough that multi-GiB partitions over-decompose well
+/// past typical core counts.
+pub const DEFAULT_MORSEL_BYTES: usize = 32 << 20;
+
+/// How a rank's partition decomposes into morsels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MorselConfig {
+    /// Fixed morsel count (`HPTMT_MORSELS`); overrides the byte target.
+    pub count_override: Option<usize>,
+    /// Target bytes per morsel (`HPTMT_MORSEL_BYTES`).
+    pub target_bytes: usize,
+}
+
+impl Default for MorselConfig {
+    fn default() -> Self {
+        MorselConfig { count_override: None, target_bytes: DEFAULT_MORSEL_BYTES }
+    }
+}
+
+impl MorselConfig {
+    /// Fixed-count configuration (used by tests and benches).
+    pub fn fixed(count: usize) -> MorselConfig {
+        MorselConfig { count_override: Some(count.max(1)), ..Default::default() }
+    }
+
+    fn from_env() -> MorselConfig {
+        let count_override = std::env::var("HPTMT_MORSELS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&c| c > 0);
+        let target_bytes = std::env::var("HPTMT_MORSEL_BYTES")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&b| b > 0)
+            .unwrap_or(DEFAULT_MORSEL_BYTES);
+        MorselConfig { count_override, target_bytes }
+    }
+
+    /// Number of morsels for a partition of `nrows` rows / `nbytes`
+    /// bytes. Always ≥ 1 and never more than the row count (a morsel
+    /// holds at least one row).
+    pub fn morsel_count(&self, nrows: usize, nbytes: usize) -> usize {
+        let cap = nrows.max(1);
+        match self.count_override {
+            Some(c) => c.clamp(1, cap),
+            None => nbytes.div_ceil(self.target_bytes.max(1)).clamp(1, cap),
+        }
+    }
+}
+
+/// Byte budget for retained operator state. `None` = unlimited.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemBudget(Option<usize>);
+
+impl MemBudget {
+    pub fn unlimited() -> MemBudget {
+        MemBudget(None)
+    }
+
+    /// A budget of `n` bytes; 0 means unlimited (the env convention).
+    pub fn bytes(n: usize) -> MemBudget {
+        MemBudget(if n == 0 { None } else { Some(n) })
+    }
+
+    fn from_env() -> MemBudget {
+        MemBudget(
+            std::env::var("HPTMT_MEM_BUDGET")
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&b| b > 0),
+        )
+    }
+
+    pub fn limit(&self) -> Option<usize> {
+        self.0
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.0.is_none()
+    }
+
+    /// True when retaining `nbytes` would exceed the budget.
+    pub fn exceeded_by(&self, nbytes: usize) -> bool {
+        self.0.is_some_and(|limit| nbytes > limit)
+    }
+}
+
+/// Process-wide runtime override, set by the spill wall and the budget
+/// bench; `None` falls through to the environment.
+static RUNTIME: RwLock<Option<(MorselConfig, MemBudget)>> = RwLock::new(None);
+
+/// Install an explicit configuration for the whole process (tests and
+/// benches drive the spill scenarios through this). Call
+/// [`clear_runtime`] to fall back to the environment.
+pub fn set_runtime(cfg: MorselConfig, budget: MemBudget) {
+    *RUNTIME.write().unwrap_or_else(|e| e.into_inner()) = Some((cfg, budget));
+}
+
+/// Drop any [`set_runtime`] override; [`current`] reads the env again.
+pub fn clear_runtime() {
+    *RUNTIME.write().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+/// The active (config, budget) pair: the runtime override if installed,
+/// otherwise `HPTMT_MORSELS` / `HPTMT_MORSEL_BYTES` / `HPTMT_MEM_BUDGET`.
+pub fn current() -> (MorselConfig, MemBudget) {
+    if let Some(pair) = *RUNTIME.read().unwrap_or_else(|e| e.into_inner()) {
+        return pair;
+    }
+    (MorselConfig::from_env(), MemBudget::from_env())
+}
+
+// ---- spill accounting --------------------------------------------------
+
+static SPILL_FILES: AtomicU64 = AtomicU64::new(0);
+static SPILL_BYTES: AtomicU64 = AtomicU64::new(0);
+static PEAK_STATE: AtomicU64 = AtomicU64::new(0);
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-global spill counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Spill files written since the last [`reset_spill_stats`].
+    pub files: u64,
+    /// Serialized bytes written to spill files.
+    pub bytes: u64,
+    /// Peak retained state observed after budget enforcement.
+    pub peak_state_bytes: u64,
+}
+
+pub fn spill_stats() -> SpillStats {
+    SpillStats {
+        files: SPILL_FILES.load(Ordering::Relaxed),
+        bytes: SPILL_BYTES.load(Ordering::Relaxed),
+        peak_state_bytes: PEAK_STATE.load(Ordering::Relaxed),
+    }
+}
+
+pub fn reset_spill_stats() {
+    SPILL_FILES.store(0, Ordering::Relaxed);
+    SPILL_BYTES.store(0, Ordering::Relaxed);
+    PEAK_STATE.store(0, Ordering::Relaxed);
+}
+
+/// Record `nbytes` of retained (post-enforcement) operator state.
+pub fn note_state_bytes(nbytes: usize) {
+    PEAK_STATE.fetch_max(nbytes as u64, Ordering::Relaxed);
+}
+
+// ---- spill files -------------------------------------------------------
+
+/// One spilled table on disk, written in the canonical
+/// [`ipc::serialize`] format. The file is removed on drop.
+#[derive(Debug)]
+pub struct SpillFile {
+    path: PathBuf,
+}
+
+impl SpillFile {
+    /// Serialize `t` to a fresh temp file and count it.
+    pub fn write(t: &Table) -> Result<SpillFile> {
+        let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("hptmt-spill-{}-{}.ipc", std::process::id(), seq));
+        let bytes = ipc::serialize(t);
+        std::fs::write(&path, &bytes)
+            .with_context(|| format!("writing spill file {}", path.display()))?;
+        SPILL_FILES.fetch_add(1, Ordering::Relaxed);
+        SPILL_BYTES.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(SpillFile { path })
+    }
+
+    /// Read the spilled table back (canonical layout: dictionary
+    /// encodings come back as plain arrays, values unchanged).
+    pub fn read(&self) -> Result<Table> {
+        let bytes = std::fs::read(&self.path)
+            .with_context(|| format!("reading spill file {}", self.path.display()))?;
+        ipc::deserialize(&bytes)
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+// ---- morsel decomposition & scheduling --------------------------------
+
+/// Contiguous `(start, len)` ranges covering `nrows`, near-equal sized
+/// (first `nrows % count` ranges get one extra row — the same split
+/// arithmetic as [`Table::split`]). Empty input yields one empty range.
+pub fn morsel_ranges(nrows: usize, count: usize) -> Vec<(usize, usize)> {
+    let count = count.clamp(1, nrows.max(1));
+    let base = nrows / count;
+    let extra = nrows % count;
+    let mut out = Vec::with_capacity(count);
+    let mut start = 0;
+    for m in 0..count {
+        let len = base + usize::from(m < extra);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+fn worker_count(n_tasks: usize) -> usize {
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    cores.min(n_tasks)
+}
+
+/// Run `f(0..weights.len())` on a work-stealing pool and return the
+/// results in task-index order. Tasks are assigned heaviest-first
+/// (descending `weights`, ties by index) round-robin across per-worker
+/// deques; an idle worker pops its own queue front and steals from
+/// siblings' backs. Output order is index-determined, so results are
+/// identical to the sequential loop regardless of scheduling.
+pub fn run_morsels<T, F>(weights: &[usize], f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let n = weights.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = worker_count(n);
+    if n == 1 || workers <= 1 {
+        return (0..n).map(&f).collect();
+    }
+
+    // Heaviest first: big morsels start before small ones so the tail
+    // of the schedule is short tasks, not one straggler.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
+    let deques: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (k, &task) in order.iter().enumerate() {
+        deques[k % workers].lock().unwrap_or_else(|e| e.into_inner()).push_back(task);
+    }
+
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let failed = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let deques = &deques;
+            let slots = &slots;
+            let failed = &failed;
+            let f = &f;
+            scope.spawn(move || loop {
+                if failed.load(Ordering::Relaxed) {
+                    return;
+                }
+                // Own queue front first, then steal from siblings' backs.
+                let mut task = deques[w].lock().unwrap_or_else(|e| e.into_inner()).pop_front();
+                if task.is_none() {
+                    for off in 1..workers {
+                        let victim = (w + off) % workers;
+                        task = deques[victim]
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .pop_back();
+                        if task.is_some() {
+                            break;
+                        }
+                    }
+                }
+                let Some(i) = task else { return };
+                let r = f(i);
+                if r.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+            });
+        }
+    });
+
+    let mut out = Vec::with_capacity(n);
+    let mut first_err = None;
+    for slot in slots {
+        match slot.into_inner().unwrap_or_else(|e| e.into_inner()) {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => {
+                first_err.get_or_insert(e);
+            }
+            // Unrun task after another task failed.
+            None => {}
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+/// Morsel-parallel row hashing: splits the columns into morsels, hashes
+/// each slice on the pool, and stitches in morsel order. Row hashes are
+/// per-row value functions, so the output is identical to
+/// [`crate::table::rowhash::hash_columns`] for every configuration.
+pub fn par_hash_columns(cols: &[&Array], cfg: &MorselConfig) -> Vec<u64> {
+    use crate::table::rowhash::hash_columns;
+    let nrows = cols.first().map_or(0, |c| c.len());
+    let nbytes: usize = cols.iter().map(|c| c.nbytes()).sum();
+    let count = cfg.morsel_count(nrows, nbytes);
+    if count <= 1 {
+        return hash_columns(cols);
+    }
+    let ranges = morsel_ranges(nrows, count);
+    let weights: Vec<usize> = ranges.iter().map(|&(_, len)| len).collect();
+    let chunks = run_morsels(&weights, |m| {
+        let (start, len) = ranges[m];
+        let parts: Vec<Array> = cols.iter().map(|c| c.slice(start, len)).collect();
+        let refs: Vec<&Array> = parts.iter().collect();
+        Ok(hash_columns(&refs))
+    })
+    // Hashing is infallible; the Result is the pool's error channel.
+    .expect("hash morsels cannot fail");
+    let mut out = Vec::with_capacity(nrows);
+    for c in chunks {
+        out.extend(c);
+    }
+    out
+}
+
+// ---- budgeted state ----------------------------------------------------
+
+/// Budget enforcement for mergeable partial state (group-by partials,
+/// streaming fold state): [`enforce`](Self::enforce) spills the state
+/// whenever it exceeds the budget, [`drain`](Self::drain) merges the
+/// spilled rounds back (in spill order) with the residual in-memory
+/// state. Because merge order equals fold order, the drained result is
+/// what the unbudgeted fold would have produced.
+pub struct SpilledState {
+    budget: MemBudget,
+    files: Vec<SpillFile>,
+}
+
+impl SpilledState {
+    pub fn new(budget: MemBudget) -> SpilledState {
+        SpilledState { budget, files: Vec::new() }
+    }
+
+    /// Enforce the budget on a freshly-folded state: over-budget state
+    /// is spilled (returning `None` so the caller folds into a fresh
+    /// state); within-budget state is recorded as retained and handed
+    /// back.
+    pub fn enforce(&mut self, state: Table) -> Result<Option<Table>> {
+        if self.budget.exceeded_by(state.nbytes()) {
+            self.files.push(SpillFile::write(&state)?);
+            Ok(None)
+        } else {
+            note_state_bytes(state.nbytes());
+            Ok(Some(state))
+        }
+    }
+
+    /// Whether any round spilled.
+    pub fn has_spilled(&self) -> bool {
+        !self.files.is_empty()
+    }
+
+    /// Merge every spilled round (spill order) and then the residual
+    /// state through `merge`. Returns `None` only when nothing was ever
+    /// enforced (no files, no residual).
+    pub fn drain<M>(self, residual: Option<Table>, mut merge: M) -> Result<Option<Table>>
+    where
+        M: FnMut(Option<Table>, &Table) -> Result<Table>,
+    {
+        let mut acc: Option<Table> = None;
+        for file in &self.files {
+            let round = file.read()?;
+            acc = Some(merge(acc.take(), &round)?);
+        }
+        if let Some(rest) = residual {
+            acc = Some(merge(acc.take(), &rest)?);
+        }
+        Ok(acc)
+    }
+}
+
+/// Stage `t` through the budget in row chunks: within budget, `f` sees
+/// the original table at offset 0 (the exact unbudgeted path); over
+/// budget, each chunk is spilled to disk, re-read, and passed to `f`
+/// with its starting row offset, so at most one chunk of build state is
+/// retained at a time. Chunks are contiguous and ascending, so
+/// offset-adjusted per-chunk results concatenate into whole-partition
+/// order.
+pub fn for_each_budgeted_chunk<F>(t: &Table, budget: &MemBudget, mut f: F) -> Result<()>
+where
+    F: FnMut(&Table, usize) -> Result<()>,
+{
+    let nbytes = t.nbytes();
+    if !budget.exceeded_by(nbytes) || t.num_rows() <= 1 {
+        note_state_bytes(nbytes);
+        return f(t, 0);
+    }
+    let limit = budget.limit().expect("exceeded budget implies a limit");
+    let nrows = t.num_rows();
+    // Halved target: sizing is average-based, and a chunk of
+    // above-average rows must still land under the budget.
+    let rows_per =
+        ((nrows as u128 * (limit / 2).max(1) as u128) / nbytes.max(1) as u128).max(1) as usize;
+    let mut start = 0;
+    while start < nrows {
+        let len = rows_per.min(nrows - start);
+        let staged = SpillFile::write(&t.slice(start, len))?;
+        let chunk = staged.read()?;
+        note_state_bytes(chunk.nbytes());
+        f(&chunk, start)?;
+        start += len;
+    }
+    Ok(())
+}
+
+// ---- byte-preserving stitching ----------------------------------------
+
+/// Concatenate per-morsel arrays into the array the whole-partition
+/// kernel would have produced. [`Array::concat`] decides validity
+/// *presence* from values (`Some` iff any part has a null), but the
+/// kernels a morsel pass decomposes (`take`, `slice`, builders)
+/// preserve presence structurally — a gather of an all-valid bitmap
+/// keeps the bitmap. Canonical serialization writes presence, so the
+/// stitch must follow the structural rule: validity is `Some` iff any
+/// part carries a bitmap, with bitmap-less parts contributing all-valid
+/// bits; the bitmap is rebuilt bit-by-bit exactly like `Bitmap::take`
+/// does (trailing bits zero).
+fn concat_preserving(parts: &[&Array]) -> Array {
+    assert!(!parts.is_empty(), "stitch of zero parts");
+    let total: usize = parts.iter().map(|a| a.len()).sum();
+    let validity = parts.iter().any(|a| a.validity().is_some()).then(|| {
+        let mut bm = Bitmap::new_null(total);
+        let mut off = 0;
+        for a in parts {
+            for i in 0..a.len() {
+                if a.is_valid(i) {
+                    bm.set(off + i, true);
+                }
+            }
+            off += a.len();
+        }
+        bm
+    });
+
+    // All-dict parts sharing one dictionary (slices of one base column)
+    // stitch in code space, matching the whole-partition gather.
+    if parts.iter().all(|a| a.is_dict()) {
+        let first = parts[0].dict_data().expect("checked dict");
+        if parts.iter().all(|a| a.dict_data().is_some_and(|d| d.dict == first.dict)) {
+            let mut codes = Vec::with_capacity(total);
+            for a in parts {
+                codes.extend_from_slice(&a.dict_data().expect("checked dict").codes);
+            }
+            return Array::DictUtf8(
+                crate::table::DictUtf8Data { codes, dict: first.dict.clone() },
+                validity,
+            );
+        }
+    }
+
+    // Value concat with the structural validity computed above. For
+    // divergent dictionaries (a per-morsel map re-interned them) decode
+    // to plain first — canonical bytes are encoding-invariant.
+    let plains: Vec<Array>;
+    let value_parts: Vec<&Array> = if parts.iter().any(|a| a.is_dict()) {
+        plains = parts.iter().map(|a| (*a).clone().dict_decode()).collect();
+        plains.iter().collect()
+    } else {
+        parts.to_vec()
+    };
+    match Array::concat(&value_parts) {
+        Array::Int64(v, _) => Array::Int64(v, validity),
+        Array::Float64(v, _) => Array::Float64(v, validity),
+        Array::Utf8(d, _) => Array::Utf8(d, validity),
+        Array::DictUtf8(d, _) => Array::DictUtf8(d, validity),
+        Array::Bool(v, _) => Array::Bool(v, validity),
+    }
+}
+
+/// Stitch per-morsel output tables back into the table the
+/// whole-partition pass would have produced (see [`concat_preserving`]).
+/// All parts must share a schema; zero-column parts are the caller's
+/// special case (a row count cannot ride on zero columns here).
+pub fn stitch_tables(parts: &[Table]) -> Result<Table> {
+    anyhow::ensure!(!parts.is_empty(), "stitch of zero tables");
+    if parts.len() == 1 {
+        return Ok(parts[0].clone());
+    }
+    let ncols = parts[0].num_columns();
+    anyhow::ensure!(ncols > 0, "stitch of zero-column tables");
+    let mut columns = Vec::with_capacity(ncols);
+    for c in 0..ncols {
+        let col_parts: Vec<&Array> = parts.iter().map(|p| p.column(c)).collect();
+        columns.push(concat_preserving(&col_parts));
+    }
+    Table::new_shared(parts[0].schema().clone(), columns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::ipc;
+
+    #[test]
+    fn morsel_count_respects_override_and_target() {
+        let cfg = MorselConfig::fixed(8);
+        assert_eq!(cfg.morsel_count(100, 1 << 30), 8);
+        assert_eq!(cfg.morsel_count(3, 1 << 30), 3, "never more morsels than rows");
+        assert_eq!(cfg.morsel_count(0, 0), 1);
+        let bytes = MorselConfig { count_override: None, target_bytes: 100 };
+        assert_eq!(bytes.morsel_count(1000, 950), 10);
+        assert_eq!(bytes.morsel_count(1000, 10), 1);
+    }
+
+    #[test]
+    fn ranges_cover_contiguously() {
+        for (nrows, count) in [(10, 3), (0, 4), (7, 7), (5, 9), (100, 1)] {
+            let ranges = morsel_ranges(nrows, count);
+            let mut next = 0;
+            for &(start, len) in &ranges {
+                assert_eq!(start, next);
+                next += len;
+            }
+            assert_eq!(next, nrows, "{nrows}/{count}");
+        }
+    }
+
+    #[test]
+    fn run_morsels_orders_results_and_propagates_errors() {
+        let weights = vec![1usize; 9];
+        let got = run_morsels(&weights, |i| Ok(i * 10)).unwrap();
+        assert_eq!(got, (0..9).map(|i| i * 10).collect::<Vec<_>>());
+        let err = run_morsels(&weights, |i| {
+            if i == 4 {
+                anyhow::bail!("boom at 4")
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(err.unwrap_err().to_string().contains("boom"));
+    }
+
+    #[test]
+    fn par_hash_matches_sequential_for_all_counts() {
+        use crate::table::rowhash::hash_columns;
+        let t = Table::from_columns(vec![
+            ("k", Array::from_opt_i64((0..257i64).map(|i| (i % 7 != 0).then_some(i % 13)).collect())),
+            ("s", Array::from_strs(&(0..257).map(|i| format!("v{}", i % 5)).collect::<Vec<_>>())),
+        ])
+        .unwrap();
+        let cols: Vec<&Array> = t.columns().iter().collect();
+        let want = hash_columns(&cols);
+        for count in [1usize, 2, 3, 16, 257, 1000] {
+            let got = par_hash_columns(&cols, &MorselConfig::fixed(count));
+            assert_eq!(got, want, "count={count}");
+        }
+    }
+
+    #[test]
+    fn spill_file_roundtrips_and_counts() {
+        reset_spill_stats();
+        let t = Table::from_columns(vec![
+            ("a", Array::from_opt_i64(vec![Some(1), None, Some(3)])),
+            ("s", Array::from_strs(&["x", "", "z"])),
+        ])
+        .unwrap();
+        let f = SpillFile::write(&t).unwrap();
+        let back = f.read().unwrap();
+        assert_eq!(ipc::serialize(&back), ipc::serialize(&t));
+        let stats = spill_stats();
+        assert_eq!(stats.files, 1);
+        assert!(stats.bytes > 0);
+        let path = f.path.clone();
+        drop(f);
+        assert!(!path.exists(), "spill file must be removed on drop");
+    }
+
+    #[test]
+    fn budgeted_chunks_visit_every_row_once() {
+        let t = Table::from_columns(vec![(
+            "v",
+            Array::from_i64((0..100).collect()),
+        )])
+        .unwrap();
+        // Unlimited: one pass over the original table.
+        let mut seen = Vec::new();
+        for_each_budgeted_chunk(&t, &MemBudget::unlimited(), |c, off| {
+            seen.push((off, c.num_rows()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![(0, 100)]);
+        // Tight: many chunks, contiguous and complete.
+        reset_spill_stats();
+        let mut rows = Vec::new();
+        for_each_budgeted_chunk(&t, &MemBudget::bytes(64), |c, off| {
+            for i in 0..c.num_rows() {
+                rows.push(off + i);
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(rows, (0..100).collect::<Vec<_>>());
+        assert!(spill_stats().files > 1, "a 64-byte budget must spill chunks");
+    }
+
+    #[test]
+    fn stitch_preserves_validity_presence() {
+        // A bitmap-carrying column whose nulls all land in one part:
+        // value-based concat would drop the other part's bitmap
+        // presence; the stitch must keep it, matching a whole take.
+        let base = Array::from_opt_i64(vec![Some(1), Some(2), Some(3), None]);
+        let whole = base.take(&[0, 1, 2, 3]);
+        let parts = vec![
+            Table::from_columns(vec![("v", base.slice(0, 2))]).unwrap(),
+            Table::from_columns(vec![("v", base.slice(2, 2))]).unwrap(),
+        ];
+        let stitched = stitch_tables(&parts).unwrap();
+        let want = Table::from_columns(vec![("v", whole)]).unwrap();
+        assert_eq!(ipc::serialize(&stitched), ipc::serialize(&want));
+        assert!(stitched.column(0).validity().is_some());
+        // no-null slices of a bitmap-carrying base still stitch to Some
+        let parts = vec![
+            Table::from_columns(vec![("v", base.slice(0, 2))]).unwrap(),
+            Table::from_columns(vec![("v", base.slice(1, 2))]).unwrap(),
+        ];
+        assert!(stitch_tables(&parts).unwrap().column(0).validity().is_some());
+    }
+
+    #[test]
+    fn stitch_dict_parts_stay_in_code_space() {
+        let base = Array::dict_from_strs(&["a", "b", "a", "c", "b"]);
+        let t = Table::from_columns(vec![("s", base)]).unwrap();
+        let parts = vec![t.slice(0, 3), t.slice(3, 2)];
+        let stitched = stitch_tables(&parts).unwrap();
+        assert!(stitched.column(0).is_dict(), "shared-dict parts stitch without decoding");
+        assert_eq!(ipc::serialize(&stitched), ipc::serialize(&t));
+    }
+
+    #[test]
+    fn spilled_state_enforces_and_drains_in_order() {
+        reset_spill_stats();
+        let mk = |v: i64| {
+            Table::from_columns(vec![("v", Array::from_i64(vec![v]))]).unwrap()
+        };
+        let mut st = SpilledState::new(MemBudget::bytes(1));
+        // every round exceeds one byte: everything spills
+        assert!(st.enforce(mk(1)).unwrap().is_none());
+        assert!(st.enforce(mk(2)).unwrap().is_none());
+        assert!(st.has_spilled());
+        let drained = st
+            .drain(Some(mk(3)), |acc, t| match acc {
+                None => Ok(t.clone()),
+                Some(prev) => Table::concat_tables(&[&prev, t]),
+            })
+            .unwrap()
+            .unwrap();
+        let vals = drained.column(0).i64_values().unwrap().to_vec();
+        assert_eq!(vals, vec![1, 2, 3], "spill order then residual");
+        assert_eq!(spill_stats().files, 2);
+    }
+}

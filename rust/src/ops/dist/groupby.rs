@@ -3,8 +3,9 @@
 //! the map/combine/shuffle/reduce decomposition in arXiv 2010.06312).
 
 use crate::comm::{shuffle_by_hash, Communicator};
+use crate::exec::morsel::{self, morsel_ranges, run_morsels, SpilledState};
 use crate::ops::local::groupby::{groupby_aggregate, AggSpec, PartialAggPlan};
-use crate::table::Table;
+use crate::table::{Array, Bitmap, Table};
 use anyhow::{Context, Result};
 
 /// Distributed group-by: shuffle all rows so equal keys co-locate, then
@@ -52,8 +53,83 @@ pub fn dist_groupby_partial<C: Communicator + ?Sized>(
     // Combine locally, shuffle the (small) partial table, reduce, then
     // reassemble the caller's layout (keys, then one column per
     // requested aggregation, named as the local kernel would name it).
-    let local_partial = groupby_aggregate(table, keys, plan.partial_specs())?;
+    let local_partial = local_partial_morsel(table, keys, &plan)?;
     let shuffled = shuffle_by_hash(comm, &local_partial, keys)?;
     let combined = groupby_aggregate(&shuffled, keys, plan.reduce_specs())?;
     plan.finish(keys, &combined)
+}
+
+/// The map-side combine, morsel-decomposed and budget-bounded: each
+/// morsel produces a partial on the work-stealing pool, partials merge
+/// sequentially in morsel order (so first-seen key order equals the
+/// whole-partition pass), and over-budget merge state spills between
+/// rounds and is drained back in spill order. At the defaults this is
+/// the exact whole-partition `groupby_aggregate` call.
+fn local_partial_morsel(table: &Table, keys: &[&str], plan: &PartialAggPlan) -> Result<Table> {
+    let (cfg, budget) = morsel::current();
+    let count = cfg.morsel_count(table.num_rows(), table.nbytes());
+    if count <= 1 && budget.is_unlimited() {
+        return groupby_aggregate(table, keys, plan.partial_specs());
+    }
+
+    let ranges = morsel_ranges(table.num_rows(), count);
+    let weights: Vec<usize> = ranges.iter().map(|&(_, len)| len).collect();
+    let parts = run_morsels(&weights, |m| {
+        let (start, len) = ranges[m];
+        plan.partial(&table.slice(start, len), keys)
+    })?;
+
+    let mut spill = SpilledState::new(budget);
+    let mut state: Option<Table> = None;
+    for p in &parts {
+        let next = plan.merge(state.take(), p, keys)?;
+        state = spill.enforce(next)?;
+    }
+    let merged = spill
+        .drain(state, |acc, t| plan.merge(acc, t, keys))?
+        .expect("at least one morsel partial");
+    restore_key_presence(&merged, table, keys)
+}
+
+/// `PartialAggPlan::merge` concatenates, and [`Array::concat`] decides
+/// validity presence from values — so a key column whose source carries
+/// an (all-valid here) bitmap would lose it across a multi-morsel
+/// merge, while the whole-partition pass gathers the key with `take`,
+/// which keeps presence structurally. Canonical serialization writes
+/// presence, so the differential wall would see the difference: restore
+/// an explicit all-valid bitmap on merged key columns whose source
+/// column carries one (built `set`-wise, trailing bits zero, exactly
+/// like `Bitmap::take` builds them).
+fn restore_key_presence(merged: &Table, source: &Table, keys: &[&str]) -> Result<Table> {
+    let mut changed = false;
+    let mut cols: Vec<(&str, Array)> = Vec::with_capacity(merged.num_columns());
+    for (f, a) in merged.schema().fields().iter().zip(merged.columns()) {
+        let needs = keys.contains(&f.name.as_str())
+            && a.validity().is_none()
+            && source.column_by_name(&f.name)?.validity().is_some();
+        if needs {
+            let mut bm = Bitmap::new_null(a.len());
+            for i in 0..a.len() {
+                bm.set(i, true);
+            }
+            cols.push((f.name.as_str(), with_validity(a, Some(bm))));
+            changed = true;
+        } else {
+            cols.push((f.name.as_str(), a.clone()));
+        }
+    }
+    if !changed {
+        return Ok(merged.clone());
+    }
+    Table::from_columns(cols)
+}
+
+fn with_validity(a: &Array, v: Option<Bitmap>) -> Array {
+    match a.clone() {
+        Array::Int64(x, _) => Array::Int64(x, v),
+        Array::Float64(x, _) => Array::Float64(x, v),
+        Array::Utf8(x, _) => Array::Utf8(x, v),
+        Array::DictUtf8(x, _) => Array::DictUtf8(x, v),
+        Array::Bool(x, _) => Array::Bool(x, v),
+    }
 }

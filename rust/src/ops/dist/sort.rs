@@ -16,7 +16,7 @@
 //! comparator totally orders them.
 
 use crate::comm::{allgather_bytes, shuffle_tables, Communicator, RangePartitioner};
-use crate::ops::local::sort::{sort, SortKey};
+use crate::ops::local::sort::{sort, sort_morsel, SortKey};
 use crate::table::rowcmp::KeyOrder;
 use crate::table::{ipc, Array, Table};
 use anyhow::{bail, Context, Result};
@@ -45,14 +45,15 @@ pub fn dist_sort<C: Communicator + ?Sized>(
         table.column_by_name(k)?;
     }
     if comm.world_size() == 1 {
-        return sort(table, keys);
+        return sort_morsel(table, keys);
     }
     let w = comm.world_size();
     let orders: Vec<KeyOrder> = keys.iter().map(|k| k.order()).collect();
 
-    // 1. Local sort: regular positions of the sorted run are quantile
-    //    estimates of this rank's key distribution.
-    let sorted = sort(table, keys)?;
+    // 1. Local sort — morsel-driven run formation with external-merge
+    //    spill under a byte budget; identical permutation to the
+    //    whole-partition kernel, so splitter sampling is unaffected.
+    let sorted = sort_morsel(table, keys)?;
     let n = sorted.num_rows();
 
     // 2. Sample key rows — `OVERSAMPLE * w` regularly spaced rows of
@@ -109,7 +110,8 @@ pub fn dist_sort<C: Communicator + ?Sized>(
     let parts_idx = router.partition_indices_sorted(&local_cols);
     let parts: Vec<Table> = parts_idx.iter().map(|idx| sorted.take(idx)).collect();
 
-    // 6. Exchange, then order the received (per-source sorted) runs.
+    // 6. Exchange, then order the received (per-source sorted) runs
+    //    (morsel runs + merge again; spills under a tight budget).
     let exchanged = shuffle_tables(comm, parts)?;
-    sort(&exchanged, keys)
+    sort_morsel(&exchanged, keys)
 }

@@ -8,6 +8,7 @@
 //! The distributed join (Table 5: "partition + shuffle + local join")
 //! reuses exactly this kernel after the shuffle step.
 
+use crate::exec::morsel::{self, for_each_budgeted_chunk, par_hash_columns, MemBudget, MorselConfig};
 use crate::table::rowhash::{any_null, hash_columns, rows_eq};
 use crate::table::{Array, Field, Schema, Table};
 use anyhow::{bail, Result};
@@ -103,6 +104,99 @@ fn hash_pairs(
         }
     }
     pairs
+}
+
+/// Morsel/budget-aware hash pair production: probe hashes are computed
+/// morsel-parallel, and an over-budget build side is staged through
+/// spilled chunks so only one chunk of hash state is resident at a
+/// time. Per-probe-row matches accumulate across chunks in ascending
+/// global right order (chunks are contiguous and ascending, chains are
+/// built in reverse within each chunk), so the assembled pair list is
+/// exactly what [`hash_pairs`] produces — which is also the passthrough
+/// at the default single-morsel, unlimited configuration.
+fn hash_pairs_chunked(
+    lk: &[&Array],
+    rk: &[&Array],
+    jt: JoinType,
+    lrows: usize,
+    rrows: usize,
+    cfg: &MorselConfig,
+    budget: &MemBudget,
+) -> Result<Pairs> {
+    let lbytes: usize = lk.iter().map(|c| c.nbytes()).sum();
+    let rbytes: usize = rk.iter().map(|c| c.nbytes()).sum();
+    if cfg.morsel_count(lrows, lbytes) <= 1 && !budget.exceeded_by(rbytes) {
+        return Ok(hash_pairs(lk, rk, jt, lrows, rrows));
+    }
+
+    let lh = par_hash_columns(lk, cfg);
+    let mut matches: Vec<Vec<u32>> = vec![Vec::new(); lrows];
+    let mut right_matched = vec![false; rrows];
+
+    // Positional names so a key column used twice cannot collide.
+    let names: Vec<String> = (0..rk.len()).map(|i| format!("__k{i}")).collect();
+    let cols: Vec<(&str, Array)> = names
+        .iter()
+        .map(|s| s.as_str())
+        .zip(rk.iter().map(|c| (*c).clone()))
+        .collect();
+    let rtable = Table::from_columns(cols)?;
+
+    for_each_budgeted_chunk(&rtable, budget, |chunk, off| {
+        let ck: Vec<&Array> = chunk.columns().iter().collect();
+        let crows = chunk.num_rows();
+        let ch = hash_columns(&ck);
+        let mut head: HashMap<u64, u32> = HashMap::with_capacity(crows);
+        let mut next: Vec<u32> = vec![0; crows];
+        for j in (0..crows).rev() {
+            if any_null(&ck, j) {
+                continue;
+            }
+            let slot = head.entry(ch[j]).or_insert(0);
+            next[j] = *slot;
+            *slot = (j + 1) as u32;
+        }
+        for (i, h) in lh.iter().enumerate() {
+            if any_null(lk, i) {
+                continue;
+            }
+            if let Some(&first) = head.get(h) {
+                let mut cur = first;
+                while cur != 0 {
+                    let j = (cur - 1) as usize;
+                    if rows_eq(lk, i, &ck, j) {
+                        matches[i].push((off + j) as u32);
+                        right_matched[off + j] = true;
+                    }
+                    cur = next[j];
+                }
+            }
+        }
+        Ok(())
+    })?;
+
+    // Assemble in probe order, unmatched-left rows inline — the same
+    // emission order as the single-pass build.
+    let mut pairs: Pairs = Vec::with_capacity(lrows);
+    for (i, m) in matches.iter().enumerate() {
+        if m.is_empty() {
+            if matches!(jt, JoinType::Left | JoinType::FullOuter) {
+                pairs.push((i as u32, NONE_IDX));
+            }
+        } else {
+            for &j in m {
+                pairs.push((i as u32, j));
+            }
+        }
+    }
+    if matches!(jt, JoinType::Right | JoinType::FullOuter) {
+        for (j, m) in right_matched.iter().enumerate() {
+            if !m {
+                pairs.push((NONE_IDX, j as u32));
+            }
+        }
+    }
+    Ok(pairs)
 }
 
 /// Order rows by key for the merge pass. Nulls sort last and are
@@ -267,7 +361,12 @@ pub fn join(
     }
 
     let pairs = match algo {
-        JoinAlgorithm::Hash => hash_pairs(&lk, &rk, jt, left.num_rows(), right.num_rows()),
+        JoinAlgorithm::Hash => {
+            let (cfg, budget) = morsel::current();
+            hash_pairs_chunked(&lk, &rk, jt, left.num_rows(), right.num_rows(), &cfg, &budget)?
+        }
+        // Sort-merge stays whole-partition: its pair production is a
+        // single streaming pass with no retained hash state to budget.
         JoinAlgorithm::SortMerge => merge_pairs(&lk, &rk, jt, left.num_rows(), right.num_rows()),
     };
 

@@ -6,6 +6,7 @@
 //! duplicates (SQL UNION ALL).
 
 use super::unique::drop_duplicates;
+use crate::exec::morsel::{self, for_each_budgeted_chunk, par_hash_columns};
 use crate::table::rowhash::{hash_columns, rows_eq};
 use crate::table::{Array, Table};
 use anyhow::{bail, Result};
@@ -50,21 +51,41 @@ fn row_set(t: &Table) -> (Vec<&Array>, Vec<u64>, HashMap<u64, Vec<u32>>) {
     (cols, hashes, set)
 }
 
+/// Per-row membership of `da`'s rows in `b`, with `b`'s hash state
+/// staged through budget-sized chunks: each chunk builds its own
+/// row-set and OR-marks the mask. Membership is a per-row predicate
+/// over values, so chunked probing returns exactly the whole-table
+/// mask; morsel-parallel hashing of `da` changes nothing (hashes are
+/// per-row value functions).
+fn membership_mask(da: &Table, b: &Table) -> Result<Vec<bool>> {
+    let (cfg, budget) = morsel::current();
+    let acols: Vec<&Array> = da.columns().iter().collect();
+    let ah = par_hash_columns(&acols, &cfg);
+    let mut mask = vec![false; da.num_rows()];
+    for_each_budgeted_chunk(b, &budget, |chunk, _| {
+        let (ccols, _, cset) = row_set(chunk);
+        for (i, m) in mask.iter_mut().enumerate() {
+            if *m {
+                continue;
+            }
+            if cset.get(&ah[i]).is_some_and(|cands| {
+                cands.iter().any(|&j| rows_eq(&acols, i, &ccols, j as usize))
+            }) {
+                *m = true;
+            }
+        }
+        Ok(())
+    })?;
+    Ok(mask)
+}
+
 /// Rows of `a` (distinct) that also appear in `b` (INTERSECT).
 /// Null cells match null cells, consistent with `drop_duplicates`.
 pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
     check_union_compatible(a, b)?;
     let da = drop_duplicates(a, None)?;
-    let (bcols, _, bset) = row_set(b);
-    let acols: Vec<&Array> = da.columns().iter().collect();
-    let ah = hash_columns(&acols);
-    let idx: Vec<usize> = (0..da.num_rows())
-        .filter(|&i| {
-            bset.get(&ah[i]).is_some_and(|cands| {
-                cands.iter().any(|&j| rows_eq(&acols, i, &bcols, j as usize))
-            })
-        })
-        .collect();
+    let mask = membership_mask(&da, b)?;
+    let idx: Vec<usize> = (0..da.num_rows()).filter(|&i| mask[i]).collect();
     Ok(da.take(&idx))
 }
 
@@ -73,16 +94,8 @@ pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
 pub fn difference(a: &Table, b: &Table) -> Result<Table> {
     check_union_compatible(a, b)?;
     let da = drop_duplicates(a, None)?;
-    let (bcols, _, bset) = row_set(b);
-    let acols: Vec<&Array> = da.columns().iter().collect();
-    let ah = hash_columns(&acols);
-    let idx: Vec<usize> = (0..da.num_rows())
-        .filter(|&i| {
-            !bset.get(&ah[i]).is_some_and(|cands| {
-                cands.iter().any(|&j| rows_eq(&acols, i, &bcols, j as usize))
-            })
-        })
-        .collect();
+    let mask = membership_mask(&da, b)?;
+    let idx: Vec<usize> = (0..da.num_rows()).filter(|&i| !mask[i]).collect();
     Ok(da.take(&idx))
 }
 

@@ -5,6 +5,7 @@
 //! dispatch); the general path uses a typed comparator chain. The sort
 //! is stable so secondary orderings and repeated sorts compose.
 
+use crate::exec::morsel::{self, morsel_ranges, run_morsels, MemBudget, MorselConfig, SpillFile};
 use crate::table::rowcmp::{cmp_cells, KeyOrder};
 use crate::table::{Array, Table};
 use anyhow::Result;
@@ -107,6 +108,206 @@ pub fn sort_indices(table: &Table, keys: &[SortKey]) -> Result<Vec<usize>> {
 /// Sort a table by `keys`.
 pub fn sort(table: &Table, keys: &[SortKey]) -> Result<Table> {
     Ok(table.take(&sort_indices(table, keys)?))
+}
+
+/// Morsel-driven run formation + merge: the permutation that sorts
+/// `table` by `keys`, computed as per-range stable runs on the
+/// work-stealing pool and k-way merged with ties going to the earlier
+/// run. Because ranges are contiguous and ascending, "earlier run"
+/// means "smaller input index", so the merged permutation is exactly
+/// the global stable sort for any data and any morsel count. Under a
+/// byte budget each run's key rows spill to disk as segmented canonical
+/// IPC files (external merge: one resident segment per run). At the
+/// defaults (one morsel, unlimited) this is a passthrough to
+/// [`sort_indices`].
+pub fn sort_indices_morsel(
+    table: &Table,
+    keys: &[SortKey],
+    cfg: &MorselConfig,
+    budget: &MemBudget,
+) -> Result<Vec<usize>> {
+    let nrows = table.num_rows();
+    let count = cfg.morsel_count(nrows, table.nbytes());
+    if count <= 1 && budget.is_unlimited() {
+        return sort_indices(table, keys);
+    }
+
+    // Run formation: each range is slice-sorted by the same kernel the
+    // whole-partition path uses (fast paths included — they agree with
+    // the cmp_cells chain on the rows they accept), then offset back to
+    // global indices.
+    let ranges = morsel_ranges(nrows, count);
+    let weights: Vec<usize> = ranges.iter().map(|&(_, len)| len).collect();
+    let runs: Vec<Vec<usize>> = run_morsels(&weights, |m| {
+        let (start, len) = ranges[m];
+        let local = sort_indices(&table.slice(start, len), keys)?;
+        Ok(local.into_iter().map(|i| i + start).collect())
+    })?;
+
+    let key_cols: Vec<&Array> = keys
+        .iter()
+        .map(|k| table.column_by_name(&k.column))
+        .collect::<Result<_>>()?;
+
+    if budget.is_unlimited() {
+        // In-memory merge straight off the original key columns.
+        let mut heads = vec![0usize; runs.len()];
+        let mut out = Vec::with_capacity(nrows);
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (run, global idx)
+            for (r, run) in runs.iter().enumerate() {
+                let Some(&cand) = run.get(heads[r]) else { continue };
+                let better = match best {
+                    None => true,
+                    // tie → earlier run, i.e. keep `best`
+                    Some((_, cur)) => cmp_runs(&key_cols, keys, cand, cur) == Ordering::Less,
+                };
+                if better {
+                    best = Some((r, cand));
+                }
+            }
+            let Some((r, idx)) = best else { break };
+            out.push(idx);
+            heads[r] += 1;
+        }
+        return Ok(out);
+    }
+
+    // External merge: spill each run's key rows (plus the global index)
+    // as a chain of canonical-IPC segments sized so that one resident
+    // segment per run fits the per-run budget share, then merge with
+    // cursors over the resident segments.
+    let limit = budget.limit().expect("limited branch");
+    let mut cursors = Vec::with_capacity(runs.len());
+    for run in &runs {
+        cursors.push(RunCursor::spill(table, &key_cols, run, limit / runs.len().max(1))?);
+    }
+    let mut out = Vec::with_capacity(nrows);
+    loop {
+        let mut best: Option<usize> = None;
+        for r in 0..cursors.len() {
+            if cursors[r].resident.is_none() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(cur) => cmp_cursors(&cursors[r], &cursors[cur], keys) == Ordering::Less,
+            };
+            if better {
+                best = Some(r);
+            }
+        }
+        let Some(r) = best else { break };
+        out.push(cursors[r].head_index());
+        cursors[r].advance()?;
+    }
+    Ok(out)
+}
+
+/// Sort under the process-wide morsel/budget configuration; identical
+/// output to [`sort`] for every configuration.
+pub fn sort_morsel(table: &Table, keys: &[SortKey]) -> Result<Table> {
+    let (cfg, budget) = morsel::current();
+    Ok(table.take(&sort_indices_morsel(table, keys, &cfg, &budget)?))
+}
+
+/// Compare two rows of the original table under the key chain.
+fn cmp_runs(key_cols: &[&Array], keys: &[SortKey], a: usize, b: usize) -> Ordering {
+    for (col, key) in key_cols.iter().zip(keys.iter()) {
+        let o = cmp_cells(col, a, col, b, key.order());
+        if o != Ordering::Equal {
+            return o;
+        }
+    }
+    Ordering::Equal
+}
+
+/// Cursor over one spilled sort run: the run's key rows + global index
+/// live in a chain of canonical-IPC segments; exactly one segment is
+/// resident at a time.
+struct RunCursor {
+    segments: Vec<SpillFile>,
+    next_segment: usize,
+    resident: Option<Table>,
+    row: usize,
+}
+
+impl RunCursor {
+    /// Spill `run`'s key rows in segments of at most `share` bytes
+    /// (estimated from the run's in-memory key bytes; always ≥ 1 row).
+    fn spill(table: &Table, key_cols: &[&Array], run: &[usize], share: usize) -> Result<RunCursor> {
+        // Key columns get positional names so a key column listed twice
+        // (legal in a sort spec) cannot collide; the trailing column
+        // carries the global row index through the merge.
+        let mut arrays: Vec<Array> = key_cols.iter().map(|c| c.take(run)).collect();
+        arrays.push(Array::from_i64(run.iter().map(|&i| i as i64).collect()));
+        let names: Vec<String> = (0..key_cols.len())
+            .map(|i| format!("__k{i}"))
+            .chain(std::iter::once("__hptmt_idx".to_string()))
+            .collect();
+        let cols: Vec<(&str, Array)> =
+            names.iter().map(|s| s.as_str()).zip(arrays).collect();
+        let run_table = Table::from_columns(cols)?;
+
+        let run_bytes = run_table.nbytes().max(1);
+        let seg_rows = if run.is_empty() {
+            1
+        } else {
+            ((run.len() as u128 * share.max(1) as u128) / run_bytes as u128).max(1) as usize
+        };
+        let mut segments = Vec::new();
+        let mut start = 0;
+        while start < run.len() {
+            let len = seg_rows.min(run.len() - start);
+            segments.push(SpillFile::write(&run_table.slice(start, len))?);
+            start += len;
+        }
+        let mut cursor = RunCursor { segments, next_segment: 0, resident: None, row: 0 };
+        cursor.load_next()?;
+        Ok(cursor)
+    }
+
+    fn load_next(&mut self) -> Result<()> {
+        self.resident = None;
+        self.row = 0;
+        if self.next_segment < self.segments.len() {
+            let seg = self.segments[self.next_segment].read()?;
+            morsel::note_state_bytes(seg.nbytes());
+            self.resident = Some(seg);
+            self.next_segment += 1;
+        }
+        Ok(())
+    }
+
+    fn head_index(&self) -> usize {
+        let seg = self.resident.as_ref().expect("cursor exhausted");
+        let idx_col = seg.column(seg.num_columns() - 1);
+        idx_col.i64_values().expect("index column is Int64")[self.row] as usize
+    }
+
+    fn advance(&mut self) -> Result<()> {
+        let rows = self.resident.as_ref().map_or(0, Table::num_rows);
+        self.row += 1;
+        if self.row >= rows {
+            self.load_next()?;
+        }
+        Ok(())
+    }
+}
+
+/// Compare the head rows of two spilled-run cursors under the key
+/// chain. Segment tables carry the keys positionally (`__k{i}`), so the
+/// comparison reads column `i` of each resident segment.
+fn cmp_cursors(a: &RunCursor, b: &RunCursor, keys: &[SortKey]) -> Ordering {
+    let ta = a.resident.as_ref().expect("cursor exhausted");
+    let tb = b.resident.as_ref().expect("cursor exhausted");
+    for (i, key) in keys.iter().enumerate() {
+        let o = cmp_cells(ta.column(i), a.row, tb.column(i), b.row, key.order());
+        if o != Ordering::Equal {
+            return o;
+        }
+    }
+    Ordering::Equal
 }
 
 /// Convenience: ascending sort by column names.

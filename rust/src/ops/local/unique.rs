@@ -2,7 +2,8 @@
 //! used heavily by the UNOMT pipeline).
 
 use super::groupby::group_ids;
-use crate::table::Table;
+use crate::exec::morsel::{self, par_hash_columns, MemBudget, MorselConfig, SpillFile};
+use crate::table::{Array, Table};
 use anyhow::Result;
 
 /// Keep the first row of every distinct key combination.
@@ -18,8 +19,73 @@ pub fn drop_duplicates(table: &Table, keys: Option<&[&str]>) -> Result<Table> {
             &all_names
         }
     };
-    let (_, reps) = group_ids(table, keys)?;
+    let (cfg, budget) = morsel::current();
+    let reps = dedup_reps(table, keys, &cfg, &budget)?;
     Ok(table.take(&reps))
+}
+
+/// Representative (first-occurrence) row indices of the distinct key
+/// combinations, ascending — exactly the `reps` that
+/// [`group_ids`] produces, but with an over-budget hash state computed
+/// partition-at-a-time through spill. Equal rows hash equal, so every
+/// key class lands in one hash partition; within a partition rows keep
+/// ascending original order, so the per-partition first occurrence is
+/// the class's global minimum index, and the sorted union of partition
+/// reps equals the whole-table reps (which are strictly increasing by
+/// construction) for any data.
+pub fn dedup_reps(
+    table: &Table,
+    keys: &[&str],
+    cfg: &MorselConfig,
+    budget: &MemBudget,
+) -> Result<Vec<usize>> {
+    let kcols: Vec<&Array> = keys
+        .iter()
+        .map(|c| table.column_by_name(c))
+        .collect::<Result<_>>()?;
+    let kbytes: usize = kcols.iter().map(|c| c.nbytes()).sum();
+    if !budget.exceeded_by(kbytes) {
+        let (_, reps) = group_ids(table, keys)?;
+        return Ok(reps);
+    }
+
+    let limit = budget.limit().expect("limited branch");
+    // 2x headroom: partition sizing is average-based, and the staged
+    // table carries the extra index column — hash skew or fat rows must
+    // not push a single resident partition past the budget.
+    let parts = kbytes.div_ceil(limit.max(1)).saturating_mul(2).clamp(2, 64);
+    let h = par_hash_columns(&kcols, cfg);
+    let knames: Vec<String> = (0..kcols.len()).map(|i| format!("__k{i}")).collect();
+    let mut reps = Vec::new();
+    for part in 0..parts {
+        let rows: Vec<usize> =
+            (0..table.num_rows()).filter(|&i| h[i] as usize % parts == part).collect();
+        if rows.is_empty() {
+            continue;
+        }
+        // Stage the partition's key rows (plus original index) through
+        // a spill file so only one partition of hash state is resident.
+        let mut arrays: Vec<Array> = kcols.iter().map(|c| c.take(&rows)).collect();
+        arrays.push(Array::from_i64(rows.iter().map(|&i| i as i64).collect()));
+        let cols: Vec<(&str, Array)> = knames
+            .iter()
+            .map(|s| s.as_str())
+            .chain(std::iter::once("__hptmt_idx"))
+            .zip(arrays)
+            .collect();
+        let staged = SpillFile::write(&Table::from_columns(cols)?)?;
+        let rd = staged.read()?;
+        morsel::note_state_bytes(rd.nbytes());
+        let krefs: Vec<&str> = knames.iter().map(|s| s.as_str()).collect();
+        let (_, preps) = group_ids(&rd, &krefs)?;
+        let idx = rd
+            .column(rd.num_columns() - 1)
+            .i64_values()
+            .expect("index column is Int64");
+        reps.extend(preps.iter().map(|&r| idx[r] as usize));
+    }
+    reps.sort_unstable();
+    Ok(reps)
 }
 
 /// Distinct values of the key columns only (SQL `SELECT DISTINCT k...`).

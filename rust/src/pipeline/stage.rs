@@ -1,6 +1,7 @@
 //! Pipeline stages, routing and the run loop.
 
 use crate::comm::partitioner::HashPartitioner;
+use crate::exec::morsel::{self, SpilledState};
 use crate::ops::local::groupby::{AggSpec, PartialAggPlan};
 use crate::ops::local::window::{Eviction, SegmentRing, WindowSpec, WindowUnit};
 use crate::table::{Array, Table};
@@ -694,7 +695,19 @@ impl Pipeline {
                                     match window {
                                         None => {
                                             // Fold-once: aggregate the whole
-                                            // stream, emit at close.
+                                            // stream, emit at close. Fold
+                                            // state is budget-enforced: under
+                                            // HPTMT_MEM_BUDGET an over-budget
+                                            // state spills between batches
+                                            // (canonical IPC) and the rounds
+                                            // merge back at close in fold
+                                            // order, so output equals the
+                                            // unbudgeted fold. `state_bytes`
+                                            // records post-enforcement
+                                            // retained state — ≤ budget by
+                                            // construction when limited.
+                                            let (_, budget) = morsel::current();
+                                            let mut spill = SpilledState::new(budget);
                                             let mut state: Option<Table> = None;
                                             while let Some(batch) = recv_next(&my_shared, &my_rx)
                                             {
@@ -707,18 +720,30 @@ impl Pipeline {
                                                 let next = plan
                                                     .fold(state.take(), &batch, &key_refs)
                                                     .context("keyed_aggregate fold")?;
-                                                cpu += sw.elapsed().as_secs_f64();
                                                 peak_rows = peak_rows.max(next.num_rows() as u64);
-                                                peak_bytes = peak_bytes.max(next.nbytes() as u64);
-                                                state = Some(next);
+                                                state = spill
+                                                    .enforce(next)
+                                                    .context("keyed_aggregate spill")?;
+                                                cpu += sw.elapsed().as_secs_f64();
+                                                if let Some(s) = &state {
+                                                    peak_bytes =
+                                                        peak_bytes.max(s.nbytes() as u64);
+                                                }
                                             }
-                                            if let Some(s) = state {
-                                                let sw = CpuStopwatch::start();
+                                            let sw = CpuStopwatch::start();
+                                            let merged = spill
+                                                .drain(state.take(), |acc, t| {
+                                                    plan.merge(acc, t, &key_refs)
+                                                })
+                                                .context("keyed_aggregate drain")?;
+                                            if let Some(s) = merged {
                                                 let out = plan
                                                     .finish(&key_refs, &s)
                                                     .context("keyed_aggregate flush")?;
                                                 cpu += sw.elapsed().as_secs_f64();
                                                 send_out(out)?;
+                                            } else {
+                                                cpu += sw.elapsed().as_secs_f64();
                                             }
                                         }
                                         Some(wspec) => {

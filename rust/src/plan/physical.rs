@@ -31,6 +31,7 @@ use super::logical::{
     LogicalPlan, MapF64Udf, MapUtf8Udf, SetOpKind,
 };
 use crate::comm::communicator::{CommStats, Communicator, Tag};
+use crate::exec::morsel::{self, morsel_ranges, run_morsels, stitch_tables};
 use crate::ops::dist;
 use crate::ops::local::groupby::{AggSpec, PartialAggPlan};
 use crate::ops::local::join::{JoinAlgorithm, JoinType};
@@ -275,6 +276,33 @@ pub(crate) fn apply_steps(input: &Table, steps: &[LocalStep]) -> Result<Table> {
     if steps.is_empty() {
         return Ok(input.clone()); // not produced by `fuse`
     }
+    let (cfg, _) = morsel::current();
+    let count = cfg.morsel_count(input.num_rows(), input.nbytes());
+    if count <= 1 {
+        return apply_steps_whole(input, steps);
+    }
+    // Morsel-parallel fused execution: each contiguous row range runs
+    // the whole fused pass (masks, overlays, and the boundary gather
+    // are element-wise / order-preserving, so a range's output is the
+    // corresponding rows of the whole-partition output), then ranges
+    // stitch back in order with structural-validity concatenation.
+    let ranges = morsel_ranges(input.num_rows(), count);
+    let weights: Vec<usize> = ranges.iter().map(|&(_, len)| len).collect();
+    let parts = run_morsels(&weights, |m| {
+        let (start, len) = ranges[m];
+        apply_steps_whole(&input.slice(start, len), steps)
+    })?;
+    if parts[0].num_columns() == 0 {
+        // Zero-column projection: the row count can't ride on stitched
+        // arrays; reconstruct it through a column-less take, exactly
+        // like the whole pass does.
+        let total: usize = parts.iter().map(Table::num_rows).sum();
+        return Ok(input.project(&[]).take(&vec![0; total]));
+    }
+    stitch_tables(&parts)
+}
+
+fn apply_steps_whole(input: &Table, steps: &[LocalStep]) -> Result<Table> {
     // Visible columns of the pass, in schema order. Fields travel with
     // the arrays so the boundary table reconstructs the exact schema
     // the eager path would have built (maps re-derive their field via

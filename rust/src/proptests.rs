@@ -231,6 +231,116 @@ fn prop_wire_format_roundtrips_and_is_canonical_for_plain() {
     });
 }
 
+// ---- morsel execution: split-then-stitch == whole-partition -----------
+
+/// The morsel/budget pairs each property sweeps: whole-partition,
+/// moderate over-decomposition, and a budget so tight (1 byte) that
+/// every morsel's state spills to disk.
+fn morsel_scenarios(rng: &mut crate::util::rng::Rng) -> Vec<(crate::exec::morsel::MorselConfig, crate::exec::morsel::MemBudget)> {
+    use crate::exec::morsel::{MemBudget, MorselConfig};
+    let k = 2 + rng.usize_in(0, 7);
+    vec![
+        (MorselConfig::fixed(1), MemBudget::unlimited()),
+        (MorselConfig::fixed(k), MemBudget::unlimited()),
+        (MorselConfig::fixed(1), MemBudget::bytes(1)),
+        (MorselConfig::fixed(k), MemBudget::bytes(1)),
+    ]
+}
+
+#[test]
+fn prop_morsel_sort_matches_whole_partition() {
+    use crate::ops::local::sort::{sort_indices, sort_indices_morsel, SortKey};
+    check(Config::default().cases(30).max_size(120), "morsel sort == whole sort", |rng, size| {
+        let t = arb_table(rng, size);
+        let keys =
+            [SortKey::asc("name"), SortKey::desc("id"), SortKey::asc("score")];
+        let whole = sort_indices(&t, &keys).map_err(|e| e.to_string())?;
+        for (cfg, budget) in morsel_scenarios(rng) {
+            let got =
+                sort_indices_morsel(&t, &keys, &cfg, &budget).map_err(|e| e.to_string())?;
+            if got != whole {
+                return Err(format!(
+                    "sort permutation diverged at {} rows (cfg {cfg:?}, budget {budget:?})",
+                    t.num_rows()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_morsel_dedup_reps_match_whole_partition() {
+    use crate::ops::local::groupby::group_ids;
+    use crate::ops::local::unique::dedup_reps;
+    check(Config::default().cases(30).max_size(120), "morsel dedup == whole dedup", |rng, size| {
+        let t = arb_table(rng, size);
+        let keys = ["id", "name"];
+        let (_, whole) = group_ids(&t, &keys).map_err(|e| e.to_string())?;
+        for (cfg, budget) in morsel_scenarios(rng) {
+            let got = dedup_reps(&t, &keys, &cfg, &budget).map_err(|e| e.to_string())?;
+            if got != whole {
+                return Err(format!(
+                    "dedup reps diverged at {} rows (cfg {cfg:?}, budget {budget:?})",
+                    t.num_rows()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_morsel_hash_matches_sequential() {
+    use crate::exec::morsel::{par_hash_columns, MorselConfig};
+    use crate::table::rowhash::hash_columns;
+    check(Config::default().cases(40).max_size(200), "morsel hash == whole hash", |rng, size| {
+        let t = arb_table(rng, size);
+        let cols: Vec<&Array> = t.columns().iter().collect();
+        let whole = hash_columns(&cols);
+        for count in [1, 2, 3 + rng.usize_in(0, 9), t.num_rows().max(1)] {
+            if par_hash_columns(&cols, &MorselConfig::fixed(count)) != whole {
+                return Err(format!("hashes diverged at count {count}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_morsel_stitch_restores_whole_table() {
+    use crate::exec::morsel::{morsel_ranges, stitch_tables};
+    check(Config::default().cases(40).max_size(160), "stitch(slices) == whole", |rng, size| {
+        let t = arb_table(rng, size);
+        for k in [1, 2, 1 + rng.usize_in(0, 11)] {
+            let parts: Vec<Table> = morsel_ranges(t.num_rows(), k)
+                .into_iter()
+                .map(|(s, l)| t.slice(s, l))
+                .collect();
+            let back = stitch_tables(&parts).map_err(|e| e.to_string())?;
+            if ipc::serialize(&back) != ipc::serialize(&t) {
+                return Err(format!("plain stitch diverged at {} rows, {k} morsels", t.num_rows()));
+            }
+            // dict-encoded parts share one dictionary: the stitch must
+            // stay in code space and still be canonically identical
+            let d = t.dict_encode_columns();
+            let dparts: Vec<Table> = morsel_ranges(d.num_rows(), k)
+                .into_iter()
+                .map(|(s, l)| d.slice(s, l))
+                .collect();
+            let dback = stitch_tables(&dparts).map_err(|e| e.to_string())?;
+            if ipc::serialize(&dback) != ipc::serialize(&t) {
+                return Err(format!("dict stitch diverged at {} rows, {k} morsels", t.num_rows()));
+            }
+            if t.num_rows() > 0 && !dback.column_by_name("name").map_err(|e| e.to_string())?.is_dict()
+            {
+                return Err("dict stitch left code space".into());
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_hash_consistent_with_eq() {
     use crate::table::rowhash::{hash_columns, rows_eq};

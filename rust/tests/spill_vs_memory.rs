@@ -1,0 +1,467 @@
+//! The spill == memory differential wall.
+//!
+//! Every distributed operator and every planned query must produce
+//! byte-identical per-rank results (canonical `ipc::serialize`
+//! equality) no matter how its rank-local work is decomposed:
+//!
+//! * morsel count ∈ {1, cores, 4·cores} — over-decomposition through
+//!   the work-stealing pool must not change a single output byte;
+//! * byte budget ∈ {unlimited, tight} — a budget so small that hash
+//!   state and sort runs spill to disk in multiple rounds must replay
+//!   to exactly the in-memory answer.
+//!
+//! The baseline for each world size is the whole-partition, unlimited
+//! configuration — the code path every operator took before morsel
+//! execution existed. Scenarios are imposed through
+//! `exec::morsel::set_runtime`, which overrides the `HPTMT_MORSELS` /
+//! `HPTMT_MORSEL_BYTES` / `HPTMT_MEM_BUDGET` environment knobs, so the
+//! wall is deterministic regardless of the ambient environment.
+//!
+//! Global-config discipline: `set_runtime` mutates process state and
+//! `#[test]`s run on parallel threads, so every test serializes on one
+//! mutex and restores the defaults through an RAII guard (panic-safe).
+
+use hptmt::comm::{spawn_world, LinkProfile, ThreadComm};
+use hptmt::exec::morsel::{self, reset_spill_stats, spill_stats, MemBudget, MorselConfig};
+use hptmt::ops::dist::{
+    broadcast_join, dist_difference, dist_drop_duplicates, dist_groupby, dist_groupby_partial,
+    dist_intersect, dist_join, dist_sort, dist_union, dist_union_all, dist_unique, rebalance,
+};
+use hptmt::ops::local::{Agg, AggSpec, Cmp, JoinAlgorithm, JoinType, SortKey};
+use hptmt::pipeline::Pipeline;
+use hptmt::plan::{GroupStrategy, JoinStrategy, LazyFrame};
+use hptmt::table::{ipc, Array, Table};
+use hptmt::util::rng::Rng;
+use std::sync::Mutex;
+
+/// World sizes: 1 (degenerate), even, power-of-two, odd/prime.
+const WORLDS: [usize; 4] = [1, 2, 4, 7];
+
+/// A budget small enough that every wall table (a few KiB) forces
+/// multi-round spill in every budgeted code path: hash-state rounds in
+/// the group-by fold, partitioned dedup, chunked join builds, and
+/// multi-segment external sort runs.
+const TIGHT: usize = 1024;
+
+/// `set_runtime`/`clear_runtime` mutate process-global state; tests run
+/// on parallel threads. One guard per wall sweep keeps them honest.
+static GUARD: Mutex<()> = Mutex::new(());
+
+/// Restores the runtime defaults when dropped — panic-safe, so one
+/// failing scenario cannot leak a tight budget into the next test.
+struct ConfigReset;
+impl Drop for ConfigReset {
+    fn drop(&mut self) {
+        morsel::clear_runtime();
+    }
+}
+
+fn seed() -> u64 {
+    std::env::var("HPTMT_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(20260727)
+}
+
+fn cores() -> usize {
+    std::thread::available_parallelism().map_or(2, |n| n.get()).max(2)
+}
+
+/// The scenario matrix (excluding the baseline `1 × unlimited`).
+fn scenarios() -> Vec<(String, MorselConfig, MemBudget)> {
+    let c = cores();
+    let mut out = Vec::new();
+    for &m in &[1usize, c, 4 * c] {
+        for unlimited in [true, false] {
+            if m == 1 && unlimited {
+                continue; // that IS the baseline
+            }
+            let budget =
+                if unlimited { MemBudget::unlimited() } else { MemBudget::bytes(TIGHT) };
+            let tag = if unlimited { "mem" } else { "spill" };
+            out.push((format!("morsels={m}/{tag}"), MorselConfig::fixed(m), budget));
+        }
+    }
+    out
+}
+
+/// The wall generator: nullable group strings, nullable int keys, and a
+/// float payload that is always integral-valued — so re-associated
+/// partial sums (per-morsel, per-spill-round) stay exact and byte
+/// equality is a fair demand.
+fn global_table(rows: usize, domain: usize, stream: u64) -> Table {
+    let mut rng = Rng::new(seed()).fork(stream);
+    let mut ss: Vec<Option<String>> = Vec::with_capacity(rows);
+    let mut ks: Vec<Option<i64>> = Vec::with_capacity(rows);
+    let mut vs: Vec<f64> = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let s = if rng.bool(0.1) { None } else { Some(format!("g{}", rng.gen_range(domain))) };
+        let k = if rng.bool(0.1) { None } else { Some(rng.gen_range(domain) as i64) };
+        let sb: i64 = s.as_deref().map_or(7, |s| s.bytes().map(i64::from).sum());
+        let v = ((sb * 31 + k.unwrap_or(-1)).rem_euclid(997)) as f64;
+        ss.push(s);
+        ks.push(k);
+        vs.push(v);
+    }
+    Table::from_columns(vec![
+        ("s", Array::from_opt_strs(ss.iter().map(|o| o.as_deref()).collect())),
+        ("k", Array::from_opt_i64(ks)),
+        ("v", Array::from_f64(vs)),
+    ])
+    .unwrap()
+}
+
+/// A second, schema-distinct table for joins: key + integral payload.
+fn right_table(rows: usize, domain: usize, stream: u64) -> Table {
+    let mut rng = Rng::new(seed()).fork(stream);
+    let mut ks: Vec<Option<i64>> = Vec::with_capacity(rows);
+    let mut ws: Vec<f64> = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let k = if rng.bool(0.1) { None } else { Some(rng.gen_range(domain) as i64) };
+        ks.push(k);
+        ws.push(((k.unwrap_or(-3) * 17 + 5).rem_euclid(499)) as f64);
+    }
+    Table::from_columns(vec![
+        ("k", Array::from_opt_i64(ks)),
+        ("w", Array::from_f64(ws)),
+    ])
+    .unwrap()
+}
+
+fn aggs() -> Vec<AggSpec> {
+    [Agg::Sum, Agg::Count, Agg::Mean, Agg::Min, Agg::Max]
+        .iter()
+        .map(|&agg| AggSpec { column: "v".into(), agg })
+        .collect()
+}
+
+/// Run `op` on every rank of a `w`-rank world and return each rank's
+/// canonical serialization.
+fn per_rank_bytes<F>(w: usize, op: F) -> Vec<Vec<u8>>
+where
+    F: Fn(&mut ThreadComm, usize) -> anyhow::Result<Table> + Send + Sync + 'static,
+{
+    spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+        Ok(ipc::serialize(&op(comm, rank)?))
+    })
+    .expect("wall op failed")
+}
+
+/// The wall proper: for every world size, capture the whole-partition /
+/// unlimited baseline, then demand byte-identical per-rank output under
+/// every (morsel count, budget) scenario.
+fn assert_spill_wall<F>(name: &str, op: F)
+where
+    F: Fn(&mut ThreadComm, usize) -> anyhow::Result<Table> + Send + Sync + Clone + 'static,
+{
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = ConfigReset;
+    for w in WORLDS {
+        morsel::set_runtime(MorselConfig::fixed(1), MemBudget::unlimited());
+        let base = per_rank_bytes(w, op.clone());
+        for (tag, cfg, budget) in scenarios() {
+            morsel::set_runtime(cfg, budget);
+            let got = per_rank_bytes(w, op.clone());
+            assert_eq!(got.len(), base.len());
+            for (rank, (g, b)) in got.iter().zip(&base).enumerate() {
+                assert!(
+                    g == b,
+                    "{name}: scenario [{tag}] diverged from whole-partition/unlimited \
+                     baseline on rank {rank} at w={w} (seed {}): {} vs {} bytes",
+                    seed(),
+                    g.len(),
+                    b.len()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- joins
+
+#[test]
+fn wall_dist_join_inner() {
+    let a = global_table(240, 12, 1);
+    let b = right_table(180, 12, 2);
+    assert_spill_wall("dist_join(inner)", move |comm, rank| {
+        let (pa, pb) = (a.split(comm.world_size()), b.split(comm.world_size()));
+        dist_join(comm, &pa[rank], &pb[rank], &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)
+    });
+}
+
+#[test]
+fn wall_dist_join_left() {
+    let a = global_table(240, 12, 3);
+    let b = right_table(150, 18, 4);
+    assert_spill_wall("dist_join(left)", move |comm, rank| {
+        let (pa, pb) = (a.split(comm.world_size()), b.split(comm.world_size()));
+        dist_join(comm, &pa[rank], &pb[rank], &["k"], &["k"], JoinType::Left, JoinAlgorithm::Hash)
+    });
+}
+
+#[test]
+fn wall_broadcast_join() {
+    let a = global_table(240, 12, 5);
+    let b = right_table(60, 12, 6);
+    assert_spill_wall("broadcast_join", move |comm, rank| {
+        let (pa, pb) = (a.split(comm.world_size()), b.split(comm.world_size()));
+        broadcast_join(comm, &pa[rank], &pb[rank], &["k"], &["k"], JoinType::Inner)
+    });
+}
+
+// -------------------------------------------------------------- groupby
+
+#[test]
+fn wall_dist_groupby() {
+    let g = global_table(260, 10, 7);
+    assert_spill_wall("dist_groupby", move |comm, rank| {
+        let p = g.split(comm.world_size());
+        dist_groupby(comm, &p[rank], &["s", "k"], &aggs())
+    });
+}
+
+#[test]
+fn wall_dist_groupby_partial() {
+    let g = global_table(260, 10, 8);
+    assert_spill_wall("dist_groupby_partial", move |comm, rank| {
+        let p = g.split(comm.world_size());
+        dist_groupby_partial(comm, &p[rank], &["s", "k"], &aggs())
+    });
+}
+
+// ----------------------------------------------------------------- sort
+
+#[test]
+fn wall_dist_sort_single_key() {
+    let g = global_table(300, 200, 9);
+    assert_spill_wall("dist_sort(v)", move |comm, rank| {
+        let p = g.split(comm.world_size());
+        dist_sort(comm, &p[rank], &[SortKey::asc("v")])
+    });
+}
+
+#[test]
+fn wall_dist_sort_multi_key() {
+    let g = global_table(300, 12, 10);
+    assert_spill_wall("dist_sort(s asc, k desc)", move |comm, rank| {
+        let p = g.split(comm.world_size());
+        dist_sort(comm, &p[rank], &[SortKey::asc("s"), SortKey::desc("k")])
+    });
+}
+
+// -------------------------------------------------------------- set ops
+
+#[test]
+fn wall_dist_unique_and_dedup() {
+    let g = global_table(260, 8, 11);
+    let (g1, g2, g3) = (g.clone(), g.clone(), g);
+    assert_spill_wall("dist_unique", move |comm, rank| {
+        let p = g1.split(comm.world_size());
+        dist_unique(comm, &p[rank], &["s", "k"])
+    });
+    assert_spill_wall("dist_drop_duplicates(subset)", move |comm, rank| {
+        let p = g2.split(comm.world_size());
+        dist_drop_duplicates(comm, &p[rank], Some(&["s", "k"]))
+    });
+    assert_spill_wall("dist_drop_duplicates(all)", move |comm, rank| {
+        let p = g3.split(comm.world_size());
+        dist_drop_duplicates(comm, &p[rank], None)
+    });
+}
+
+#[test]
+fn wall_dist_set_operators() {
+    let a = global_table(220, 9, 12);
+    let b = global_table(200, 9, 13);
+    let mk = |f: fn(&mut ThreadComm, &Table, &Table) -> anyhow::Result<Table>| {
+        let (a, b) = (a.clone(), b.clone());
+        move |comm: &mut ThreadComm, rank: usize| {
+            let (pa, pb) = (a.split(comm.world_size()), b.split(comm.world_size()));
+            f(comm, &pa[rank], &pb[rank])
+        }
+    };
+    assert_spill_wall("dist_union", mk(|c, a, b| dist_union(c, a, b)));
+    assert_spill_wall("dist_union_all", mk(|c, a, b| dist_union_all(c, a, b)));
+    assert_spill_wall("dist_intersect", mk(|c, a, b| dist_intersect(c, a, b)));
+    assert_spill_wall("dist_difference", mk(|c, a, b| dist_difference(c, a, b)));
+}
+
+#[test]
+fn wall_rebalance() {
+    // Skewed partitions: all rows start on rank 0 (split of an
+    // unbalanced prefix via uneven slicing below).
+    let g = global_table(230, 15, 14);
+    assert_spill_wall("rebalance", move |comm, rank| {
+        let w = comm.world_size();
+        // deliberately uneven: rank r holds an (r+1)-weighted slice;
+        // triangular-prefix bounds cover every row exactly once
+        let total = w * (w + 1) / 2;
+        let bound = |r: usize| g.num_rows() * (r * (r + 1) / 2) / total;
+        let (start, end) = (bound(rank), bound(rank + 1));
+        rebalance(comm, &g.slice(start, end - start))
+    });
+}
+
+// ------------------------------------------------------ planned queries
+
+#[test]
+fn wall_planned_fused_groupby() {
+    let g = global_table(260, 10, 15);
+    assert_spill_wall("plan: filter+map+groupby_partial", move |comm, rank| {
+        let p = g.split(comm.world_size());
+        LazyFrame::from_table(p[rank].clone())
+            .filter("v", Cmp::Ge, 100.0f64)
+            .map_f64("v", |x| x * 2.0)
+            .groupby_with(&["s", "k"], &aggs(), GroupStrategy::PartialShuffle)
+            .collect_comm(comm)
+            .map(|df| df.into_table())
+    });
+}
+
+#[test]
+fn wall_planned_join_chain() {
+    let a = global_table(240, 12, 16);
+    let b = right_table(160, 12, 17);
+    assert_spill_wall("plan: join+filter+groupby", move |comm, rank| {
+        let (pa, pb) = (a.split(comm.world_size()), b.split(comm.world_size()));
+        LazyFrame::from_table(pa[rank].clone())
+            .join_with(
+                &LazyFrame::from_table(pb[rank].clone()),
+                &["k"],
+                &["k"],
+                JoinType::Inner,
+                JoinAlgorithm::Hash,
+                JoinStrategy::Hash,
+            )
+            .filter("w", Cmp::Ge, 50.0f64)
+            .groupby_with(&["s"], &aggs(), GroupStrategy::FullShuffle)
+            .collect_comm(comm)
+            .map(|df| df.into_table())
+    });
+}
+
+#[test]
+fn wall_planned_sort_and_dedup() {
+    let g = global_table(260, 12, 18);
+    let (g1, g2) = (g.clone(), g);
+    assert_spill_wall("plan: sort_by(s,k)", move |comm, rank| {
+        let p = g1.split(comm.world_size());
+        LazyFrame::from_table(p[rank].clone())
+            .sort_by(&[SortKey::asc("s"), SortKey::desc("k")])
+            .collect_comm(comm)
+            .map(|df| df.into_table())
+    });
+    assert_spill_wall("plan: drop_duplicates(s,k)", move |comm, rank| {
+        let p = g2.split(comm.world_size());
+        LazyFrame::from_table(p[rank].clone())
+            .drop_duplicates(Some(&["s", "k"]))
+            .collect_comm(comm)
+            .map(|df| df.into_table())
+    });
+}
+
+// ------------------------------------------------- streaming aggregation
+
+/// The pipeline's keyed fold enforces the same budget through
+/// `SpilledState`; its output must not depend on whether rounds
+/// spilled. Canonicalized via a final sort (batch arrival order into
+/// the fold is deterministic here, but sorting keeps the comparison
+/// honest about content, not incidental row order).
+#[test]
+fn wall_pipeline_keyed_aggregate() {
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = ConfigReset;
+    let run = |cfg: MorselConfig, budget: MemBudget| -> Vec<u8> {
+        morsel::set_runtime(cfg, budget);
+        let s = seed();
+        let run = Pipeline::new("spill-wall")
+            .source("gen", 4, move |shard, emit| {
+                let mut rng = Rng::new(s).fork(90 + shard as u64);
+                for _ in 0..6 {
+                    let mut ks = Vec::new();
+                    let mut vs = Vec::new();
+                    for _ in 0..40 {
+                        let k = rng.gen_range(9) as i64;
+                        ks.push(Some(k));
+                        vs.push(((k * 31 + 7).rem_euclid(997)) as f64);
+                    }
+                    emit(Table::from_columns(vec![
+                        ("k", Array::from_opt_i64(ks)),
+                        ("v", Array::from_f64(vs)),
+                    ])?)?;
+                }
+                Ok(())
+            })
+            .keyed_aggregate("agg", 4, &["k"], &aggs_v())
+            .run(4)
+            .expect("pipeline run");
+        let tables: Vec<&Table> = run.output.iter().collect();
+        let cat = Table::concat_tables(&tables).expect("concat");
+        let sorted =
+            hptmt::ops::local::sort(&cat, &[SortKey::asc("k")]).expect("canonical sort");
+        ipc::serialize(&sorted)
+    };
+    let base = run(MorselConfig::fixed(1), MemBudget::unlimited());
+    for (tag, cfg, budget) in scenarios() {
+        let got = run(cfg, budget);
+        assert!(got == base, "pipeline keyed_aggregate diverged under [{tag}]");
+    }
+}
+
+fn aggs_v() -> Vec<AggSpec> {
+    [Agg::Sum, Agg::Count, Agg::Min, Agg::Max]
+        .iter()
+        .map(|&agg| AggSpec { column: "v".into(), agg })
+        .collect()
+}
+
+// ------------------------------------------- the acceptance criterion
+
+/// A 1 MiB budget on a table far larger than 1 MiB must demonstrably
+/// spill (file counter > 0) while the recorded peak retained state
+/// stays within the budget — and still match the unlimited answer
+/// byte-for-byte.
+#[test]
+fn tight_budget_spills_and_stays_within_peak() {
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = ConfigReset;
+    const BUDGET: usize = 1 << 20;
+    let rows = 150_000;
+    let g = global_table(rows, 5_000, 19);
+    assert!(g.nbytes() > 4 * BUDGET, "wall table must dwarf the budget");
+
+    let ops: Vec<(&str, Box<dyn Fn(&mut ThreadComm, &Table) -> anyhow::Result<Table> + Send + Sync>)> = vec![
+        ("dist_groupby_partial", Box::new(|c, t| dist_groupby_partial(c, t, &["s", "k"], &aggs()))),
+        ("dist_sort", Box::new(|c, t| dist_sort(c, t, &[SortKey::asc("s"), SortKey::desc("k")]))),
+        ("dist_drop_duplicates", Box::new(|c, t| dist_drop_duplicates(c, t, Some(&["s", "k"])))),
+    ];
+    for (name, op) in ops {
+        let op = std::sync::Arc::new(op);
+        let w = 2;
+
+        morsel::set_runtime(MorselConfig::fixed(1), MemBudget::unlimited());
+        let o = op.clone();
+        let g1 = g.clone();
+        let base = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            Ok(ipc::serialize(&o(comm, &g1.split(comm.world_size())[rank])?))
+        })
+        .expect("unlimited run");
+
+        reset_spill_stats();
+        morsel::set_runtime(MorselConfig::fixed(cores()), MemBudget::bytes(BUDGET));
+        let o = op.clone();
+        let g2 = g.clone();
+        let got = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            Ok(ipc::serialize(&o(comm, &g2.split(comm.world_size())[rank])?))
+        })
+        .expect("budgeted run");
+
+        let stats = spill_stats();
+        assert!(stats.files > 0, "{name}: 1 MiB budget over a {} byte table must spill", g.nbytes());
+        assert!(
+            stats.peak_state_bytes <= BUDGET as u64,
+            "{name}: peak retained state {} exceeds the {BUDGET} byte budget",
+            stats.peak_state_bytes
+        );
+        for (rank, (gb, bb)) in got.iter().zip(&base).enumerate() {
+            assert!(gb == bb, "{name}: budgeted output diverged on rank {rank}");
+        }
+    }
+}
