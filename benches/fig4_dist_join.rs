@@ -10,17 +10,17 @@
 //! (default 1 → 400k rows/side total).
 
 use hptmt::bench::{measure, scaled, Report};
-use hptmt::comm::{Communicator, LinkProfile, ReduceOp};
+use hptmt::comm::{run_job_env, Communicator, LinkProfile, ProfileSpec, ReduceOp};
 use hptmt::exec::asynch::{run_async, AsyncCost, TaskGraph};
 use hptmt::exec::bsp::{run_bsp, BspConfig};
-use hptmt::ops::dist::{dist_groupby, dist_join};
+use hptmt::ops::dist::dist_join;
 use hptmt::ops::local::groupby::{Agg, AggSpec};
 use hptmt::ops::local::inner_join;
 use hptmt::ops::local::join::{JoinAlgorithm, JoinType};
-use hptmt::ops::local::{filter_cmp, Cmp};
+use hptmt::ops::local::Cmp;
 use hptmt::comm::HashPartitioner;
 use hptmt::plan::LazyFrame;
-use hptmt::table::{Array, Scalar, Table};
+use hptmt::table::{Array, Table};
 use hptmt::util::rng::Rng;
 
 fn shard(rows: usize, key_domain: usize, seed: u64) -> Table {
@@ -125,32 +125,34 @@ fn wide_shard(rows: usize, key_domain: usize, seed: u64) -> Table {
 /// cpu+comm seconds). `planned` executes through `plan::` (filter
 /// pushdown below the shuffles, scans pruned to live columns, map-side
 /// combining); eager executes the operators in written order.
+///
+/// The chain itself is the registered `fig4_chain` comm job, dispatched
+/// through `run_job_env`: under `HPTMT_COMM=process` the same cells are
+/// measured on real rank processes exchanging socket frames, making the
+/// shuffled-bytes columns a cross-backend invariant (asserted by
+/// `rust/tests/comm_conformance.rs`), not a thread-backend artifact.
 fn chain_run(total_rows: usize, key_domain: usize, w: usize, planned: bool) -> anyhow::Result<(u64, f64)> {
     let rows_per_rank = total_rows / w;
-    let aggs = [AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)];
-    let run = run_bsp(&BspConfig::new(w).with_profile(LinkProfile::cluster(16)), move |rank, comm| {
-        let left = wide_shard(rows_per_rank, key_domain, 300 + rank as u64);
-        let right = wide_shard(rows_per_rank, key_domain, 700 + rank as u64);
-        comm.reset_stats();
-        let sw = hptmt::util::time::CpuStopwatch::start();
-        let out = if planned {
-            LazyFrame::from_table(left)
-                .join(&LazyFrame::from_table(right), &["k"], &["k"])
-                .filter("v", Cmp::Ge, 0.5f64)
-                .groupby(&["k"], &aggs)
-                .collect_comm_with(comm, LinkProfile::cluster(16))?
-                .into_table()
-        } else {
-            let joined = dist_join(comm, &left, &right, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?;
-            let filtered = filter_cmp(&joined, "v", Cmp::Ge, &Scalar::Float64(0.5))?;
-            dist_groupby(comm, &filtered, &["k"], &aggs)?
-        };
-        let secs = sw.elapsed().as_secs_f64() + comm.stats().sim_comm_seconds;
-        std::hint::black_box(out.num_rows());
-        Ok((comm.stats().bytes_sent, secs))
-    })?;
-    let bytes: u64 = run.results.iter().map(|(b, _)| b).sum();
-    let secs = run.results.iter().map(|(_, s)| *s).fold(0.0, f64::max);
+    let arg = if planned {
+        format!("{rows_per_rank},{key_domain},planned")
+    } else {
+        format!("{rows_per_rank},{key_domain}")
+    };
+    let results = run_job_env(
+        w,
+        ProfileSpec::Cluster(16),
+        "fig4_chain",
+        &arg,
+        Some(std::path::Path::new(env!("CARGO_BIN_EXE_hptmt_rank"))),
+    )?;
+    // Per-rank result: bytes_sent u64 LE, then cpu+sim_comm f64 LE.
+    let mut bytes = 0u64;
+    let mut secs = 0.0f64;
+    for r in &results {
+        anyhow::ensure!(r.len() == 16, "fig4_chain rank result must be 16 bytes, got {}", r.len());
+        bytes += u64::from_le_bytes(r[..8].try_into().unwrap());
+        secs = secs.max(f64::from_le_bytes(r[8..16].try_into().unwrap()));
+    }
     Ok((bytes, secs))
 }
 
@@ -169,7 +171,7 @@ fn planner_pushdown_report(total_rows: usize, key_domain: usize) -> anyhow::Resu
 
     let mut report = Report::new(
         "fig4_planner_pushdown",
-        &["workers", "eager_MB", "planned_MB", "bytes_ratio", "eager_s", "planned_s"],
+        &["workers", "eager_MB", "planned_MB", "bytes_ratio", "bytes_win", "eager_s", "planned_s"],
     );
     for &w in &[2usize, 4, 8, 16] {
         let mut eager_bytes = 0u64;
@@ -193,6 +195,9 @@ fn planner_pushdown_report(total_rows: usize, key_domain: usize) -> anyhow::Resu
                 "{:.2}x",
                 if planned_bytes > 0 { eager_bytes as f64 / planned_bytes as f64 } else { f64::NAN }
             ),
+            // Deterministic cell (strict in CI): the planner must ship
+            // fewer bytes than eager execution at every world size.
+            (if planned_bytes < eager_bytes { "yes" } else { "no" }).to_string(),
             format!("{:.4}", eager.median),
             format!("{:.4}", planned.median),
         ]);

@@ -1,0 +1,47 @@
+//! One rank of a multiprocess world (`HPTMT_COMM=process`).
+//!
+//! Spawned by `comm::launch::Launcher`, never run by hand. Reads its
+//! identity and task from the environment, joins the socket mesh, runs
+//! the named job, writes its result to `out-{rank}.bin` in the
+//! rendezvous directory, and barriers so no rank exits before every
+//! result is durable.
+
+use anyhow::{Context, Result};
+use hptmt::comm::{run_job, Communicator, ProcComm, ProfileSpec};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn env(name: &str) -> Result<String> {
+    std::env::var(name).with_context(|| format!("{name} must be set (spawned by the launcher)"))
+}
+
+fn main() -> Result<()> {
+    let rank: usize = env("HPTMT_RANK")?.parse().context("HPTMT_RANK")?;
+    let world: usize = env("HPTMT_WORLD")?.parse().context("HPTMT_WORLD")?;
+    let dir = PathBuf::from(env("HPTMT_COMM_DIR")?);
+    let job = env("HPTMT_JOB")?;
+    let arg = std::env::var("HPTMT_JOB_ARG").unwrap_or_default();
+    let profile = ProfileSpec::parse(
+        &std::env::var("HPTMT_LINK_PROFILE").unwrap_or_default(),
+    )?
+    .profile();
+    let timeout = std::env::var("HPTMT_COMM_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .map(Duration::from_secs)
+        .unwrap_or(Duration::from_secs(30));
+
+    // This process IS a rank: job code must not re-enter the launcher,
+    // whatever HPTMT_COMM says in the inherited environment.
+    std::env::remove_var("HPTMT_COMM");
+
+    let mut comm = ProcComm::connect_with(rank, world, &dir, profile, timeout)
+        .with_context(|| format!("rank {rank}/{world} joining the mesh at {}", dir.display()))?;
+    let out = run_job(&job, &arg, &mut comm)
+        .with_context(|| format!("rank {rank}/{world} running job {job:?}"))?;
+    std::fs::write(dir.join(format!("out-{rank}.bin")), &out)
+        .with_context(|| format!("rank {rank} writing result"))?;
+    // Everyone's result is on disk before anyone tears down its socket.
+    comm.barrier()?;
+    Ok(())
+}

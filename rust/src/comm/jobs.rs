@@ -1,0 +1,410 @@
+//! Named rank jobs — work that can run on *any* [`Communicator`]
+//! backend and cross a process boundary.
+//!
+//! Closures cannot be shipped to a spawned rank process, so everything
+//! the launcher runs is a **named job**: a registered function
+//! `f(arg, &mut dyn Communicator) -> Vec<u8>` that generates its own
+//! rank-local input deterministically from `(arg seed, rank, world)`
+//! and returns its result as canonical bytes. The same function drives
+//! the thread backend, the in-process socket harness, and real rank
+//! processes — which is what makes the cross-backend conformance wall
+//! (`rust/tests/comm_conformance.rs`) a byte-level comparison rather
+//! than a smoke test.
+//!
+//! Job results are raw bytes on purpose: per-rank outputs of the two
+//! backends are compared with `==`, with table-producing jobs returning
+//! [`ipc::serialize`] (the canonical, encoding-invariant format).
+
+use super::communicator::Communicator;
+use super::shuffle::{shuffle_by_hash, StreamingShuffle};
+use super::{allgather_bytes, allreduce_i64, broadcast_bytes, gather_bytes, ReduceOp, Tag};
+use crate::exec::morsel::{self, MemBudget, MorselConfig};
+use crate::ops::dist::{
+    broadcast_join, dist_difference, dist_drop_duplicates, dist_groupby, dist_groupby_partial,
+    dist_intersect, dist_join, dist_sort, dist_union, dist_union_all, dist_unique, global_counts,
+    rebalance,
+};
+use crate::ops::local::{filter_cmp, Agg, AggSpec, Cmp, JoinAlgorithm, JoinType, SortKey};
+use crate::plan::LazyFrame;
+use crate::table::{ipc, Array, Scalar, Table};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Every registered job name, in dispatch order (the conformance wall
+/// sweeps this list).
+pub const JOB_NAMES: &[&str] = &[
+    "p2p_ring",
+    "collectives",
+    "dist_join",
+    "broadcast_join",
+    "dist_groupby",
+    "dist_groupby_partial",
+    "dist_sort",
+    "dist_unique",
+    "dist_drop_duplicates",
+    "dist_union",
+    "dist_union_all",
+    "dist_intersect",
+    "dist_difference",
+    "rebalance",
+    "global_counts",
+    "planned_chain",
+    "streaming_shuffle",
+    "dict_wire_shuffle",
+    "empty_partitions",
+    "budget_shuffle",
+    "fig4_chain",
+    "unomt_pipeline",
+];
+
+/// Run the named job on this rank. `arg` is job-specific (usually
+/// `"seed"` or `"seed,rows"`; see each job), identical on every rank.
+pub fn run_job(name: &str, arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
+    match name {
+        "p2p_ring" => p2p_ring(arg, comm),
+        "collectives" => collectives_digest(arg, comm),
+        "dist_join" => {
+            let (a, b) = pair(arg, comm);
+            table_bytes(dist_join(comm, &a, &b, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash))
+        }
+        "broadcast_join" => {
+            let a = input(arg, comm, 0, rows_of(arg));
+            let small = input(arg, comm, 1, rows_of(arg) / 4 + 1);
+            table_bytes(broadcast_join(comm, &a, &small, &["k"], &["k"], JoinType::Inner))
+        }
+        "dist_groupby" => {
+            let a = input(arg, comm, 0, rows_of(arg));
+            table_bytes(dist_groupby(comm, &a, &["g"], &aggs()))
+        }
+        "dist_groupby_partial" => {
+            let a = input(arg, comm, 0, rows_of(arg));
+            table_bytes(dist_groupby_partial(comm, &a, &["g"], &aggs()))
+        }
+        "dist_sort" => {
+            let a = input(arg, comm, 0, rows_of(arg));
+            table_bytes(dist_sort(comm, &a, &[SortKey::asc("g"), SortKey::desc("k")]))
+        }
+        "dist_unique" => {
+            let a = input(arg, comm, 0, rows_of(arg));
+            table_bytes(dist_unique(comm, &a, &["g", "k"]))
+        }
+        "dist_drop_duplicates" => {
+            let a = input(arg, comm, 0, rows_of(arg));
+            table_bytes(dist_drop_duplicates(comm, &a, Some(&["g"])))
+        }
+        "dist_union" => {
+            let (a, b) = pair(arg, comm);
+            table_bytes(dist_union(comm, &a, &b))
+        }
+        "dist_union_all" => {
+            let (a, b) = pair(arg, comm);
+            table_bytes(dist_union_all(comm, &a, &b))
+        }
+        "dist_intersect" => {
+            let (a, b) = pair(arg, comm);
+            table_bytes(dist_intersect(comm, &a, &b))
+        }
+        "dist_difference" => {
+            let (a, b) = pair(arg, comm);
+            table_bytes(dist_difference(comm, &a, &b))
+        }
+        "rebalance" => {
+            // Skew the per-rank row counts so bytes actually move.
+            let a = input(arg, comm, 0, rows_of(arg) * (comm.rank() + 1));
+            table_bytes(rebalance(comm, &a))
+        }
+        "global_counts" => {
+            let a = input(arg, comm, 0, rows_of(arg) * (comm.rank() % 3 + 1));
+            let counts = global_counts(comm, &a)?;
+            let mut out = Vec::with_capacity(counts.len() * 8);
+            for c in counts {
+                out.extend_from_slice(&(c as u64).to_le_bytes());
+            }
+            Ok(out)
+        }
+        "planned_chain" => planned_chain(arg, comm),
+        "streaming_shuffle" => streaming_shuffle_job(arg, comm),
+        "dict_wire_shuffle" => {
+            let a = input(arg, comm, 0, rows_of(arg)).dict_encode_columns();
+            table_bytes(shuffle_by_hash(comm, &a, &["g"]))
+        }
+        "empty_partitions" => {
+            // Odd ranks contribute zero rows (schema intact): the wire
+            // must carry empty tables without desyncing the exchange.
+            let rows = if comm.rank() % 2 == 1 { 0 } else { rows_of(arg) };
+            let a = input(arg, comm, 0, rows);
+            table_bytes(shuffle_by_hash(comm, &a, &["k"]))
+        }
+        "budget_shuffle" => {
+            // Tight byte budget: shuffle staging spills to disk, result
+            // bytes must not change (the spill wall's contract, here
+            // asserted *across backends* too).
+            struct Reset;
+            impl Drop for Reset {
+                fn drop(&mut self) {
+                    morsel::clear_runtime();
+                }
+            }
+            let _reset = Reset;
+            morsel::set_runtime(MorselConfig::fixed(2), MemBudget::bytes(1024));
+            let a = input(arg, comm, 0, rows_of(arg)).dict_encode_columns();
+            table_bytes(shuffle_by_hash(comm, &a, &["k"]))
+        }
+        "fig4_chain" => fig4_chain(arg, comm),
+        "unomt_pipeline" => unomt_pipeline(arg, comm),
+        other => bail!(
+            "unknown job {other:?}; registered jobs: {}",
+            JOB_NAMES.join(", ")
+        ),
+    }
+}
+
+fn table_bytes(t: Result<Table>) -> Result<Vec<u8>> {
+    Ok(ipc::serialize(&t?))
+}
+
+fn aggs() -> [AggSpec; 4] {
+    [
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Min),
+        AggSpec::new("v", Agg::Max),
+    ]
+}
+
+/// `arg` grammar for the table jobs: `"seed[,rows]"`.
+fn seed_of(arg: &str) -> u64 {
+    arg.split(',').next().and_then(|s| s.trim().parse().ok()).unwrap_or(20260727)
+}
+
+fn rows_of(arg: &str) -> usize {
+    arg.split(',').nth(1).and_then(|s| s.trim().parse().ok()).unwrap_or(96)
+}
+
+/// Deterministic rank-local input: nullable string group, nullable
+/// int key from a small domain, and an integral-valued float payload
+/// (so re-associated partial sums stay exact and byte equality is a
+/// fair demand — the spill wall's convention).
+fn gen_table(seed: u64, rank: usize, world: usize, rows: usize, stream: u64) -> Table {
+    const POOL: [&str; 7] = ["ash", "birch", "cedar", "fir", "oak", "pine", "yew"];
+    let mut rng = Rng::new(seed ^ 0xA5A5_0000).fork(stream * 1024 + (world * 64 + rank) as u64);
+    let g: Vec<Option<&str>> = (0..rows)
+        .map(|_| if rng.bool(0.1) { None } else { Some(POOL[rng.gen_range(POOL.len() as u64) as usize]) })
+        .collect();
+    let k: Vec<Option<i64>> = (0..rows)
+        .map(|_| if rng.bool(0.1) { None } else { Some(rng.gen_range(16) as i64) })
+        .collect();
+    let v: Vec<f64> = (0..rows).map(|_| rng.gen_range(1000) as f64).collect();
+    Table::from_columns(vec![
+        ("g", Array::from_opt_strs(g)),
+        ("k", Array::from_opt_i64(k)),
+        ("v", Array::from_f64(v)),
+    ])
+    .unwrap()
+}
+
+fn input(arg: &str, comm: &dyn Communicator, stream: u64, rows: usize) -> Table {
+    gen_table(seed_of(arg), comm.rank(), comm.world_size(), rows, stream)
+}
+
+fn pair(arg: &str, comm: &dyn Communicator) -> (Table, Table) {
+    (input(arg, comm, 0, rows_of(arg)), input(arg, comm, 1, rows_of(arg)))
+}
+
+/// Ring point-to-point, including a zero-byte message: every rank
+/// passes a payload to `rank + 1 (mod w)` and an empty frame the other
+/// way. Returns what it received (lengths prefixed).
+fn p2p_ring(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
+    let (rank, w) = (comm.rank(), comm.world_size());
+    let next = (rank + 1) % w;
+    let prev = (rank + w - 1) % w;
+    let payload: Vec<u8> = format!("{arg}:{rank}").into_bytes();
+    comm.send(next, Tag(11), payload)?;
+    comm.send(prev, Tag(12), Vec::new())?; // zero-byte message
+    let got = comm.recv(prev, Tag(11))?;
+    let empty = comm.recv(next, Tag(12))?;
+    comm.barrier()?;
+    let mut out = Vec::new();
+    out.extend_from_slice(&(got.len() as u64).to_le_bytes());
+    out.extend_from_slice(&got);
+    out.extend_from_slice(&(empty.len() as u64).to_le_bytes());
+    Ok(out)
+}
+
+/// One digest over the array collectives: allgather (rank 0's blob
+/// empty — zero-byte coverage), gather to the last rank, broadcast,
+/// allreduce, with barriers between phases.
+fn collectives_digest(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
+    let (rank, w) = (comm.rank(), comm.world_size());
+    let blob = if rank == 0 {
+        Vec::new()
+    } else {
+        format!("{arg}-{rank}").into_bytes()
+    };
+    let mut out = Vec::new();
+    for part in allgather_bytes(comm, blob.clone())? {
+        out.extend_from_slice(&(part.len() as u64).to_le_bytes());
+        out.extend_from_slice(&part);
+    }
+    comm.barrier()?;
+    if let Some(parts) = gather_bytes(comm, w - 1, blob)? {
+        for part in parts {
+            out.extend_from_slice(&(part.len() as u64).to_le_bytes());
+            out.extend_from_slice(&part);
+        }
+    } else {
+        out.extend_from_slice(b"nonroot");
+    }
+    let root_data = if rank == 0 { Some(vec![42u8, 7, 9]) } else { None };
+    out.extend_from_slice(&broadcast_bytes(comm, 0, root_data)?);
+    let summed = allreduce_i64(comm, &[rank as i64 + 1, w as i64], ReduceOp::Sum)?;
+    for v in summed {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    comm.barrier()?;
+    Ok(out)
+}
+
+/// The planner chain (join → filter → group-by) through
+/// `LazyFrame::collect_comm` — the planned execution path on whichever
+/// backend `comm` is.
+fn planned_chain(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
+    let (a, b) = pair(arg, comm);
+    let out = LazyFrame::from_table(a)
+        .join(&LazyFrame::from_table(b), &["k"], &["k"])
+        .filter("v", Cmp::Ge, 500.0f64)
+        .groupby(&["g"], &[AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)])
+        .collect_comm(comm)?
+        .into_table();
+    Ok(ipc::serialize(&out))
+}
+
+/// Three dict-encoded batches through one [`StreamingShuffle`] edge
+/// state: dictionary deltas must decode identically on both backends.
+fn streaming_shuffle_job(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
+    let w = comm.world_size();
+    let mut edge = StreamingShuffle::new(w);
+    let part = super::partitioner::HashPartitioner::new(["g"], w);
+    let mut out = Vec::new();
+    for batch in 0..3 {
+        let t = input(arg, comm, 10 + batch, rows_of(arg) / 2 + 1).dict_encode_columns();
+        let got = edge.exchange(comm, part.partition(&t)?)?;
+        out.extend_from_slice(&ipc::serialize(&got));
+    }
+    Ok(out)
+}
+
+/// One run of the Fig-4 pushdown chain on this rank. `arg` is
+/// `"rows_per_rank,key_domain,planned"`; returns 16 bytes: this rank's
+/// `bytes_sent: u64` then `cpu+sim_comm seconds: f64`, little-endian
+/// (the bench harness aggregates across ranks).
+fn fig4_chain(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
+    let mut it = arg.split(',');
+    let rows: usize = it.next().and_then(|s| s.trim().parse().ok()).unwrap_or(4096);
+    let domain: usize = it.next().and_then(|s| s.trim().parse().ok()).unwrap_or(512);
+    let planned = it.next().map(str::trim) == Some("planned");
+    let rank = comm.rank();
+
+    fn wide_shard(rows: usize, key_domain: usize, seed: u64) -> Table {
+        let mut rng = Rng::new(seed);
+        let keys: Vec<i64> =
+            (0..rows).map(|_| rng.gen_range(key_domain.max(1) as u64) as i64).collect();
+        let vals: Vec<f64> = (0..rows).map(|_| rng.f64()).collect();
+        let p1: Vec<f64> = (0..rows).map(|_| rng.f64()).collect();
+        let p2: Vec<f64> = (0..rows).map(|_| rng.f64()).collect();
+        let tags: Vec<String> = keys.iter().map(|k| format!("tag-{:06}", k % 997)).collect();
+        Table::from_columns(vec![
+            ("k", Array::from_i64(keys)),
+            ("v", Array::from_f64(vals)),
+            ("p1", Array::from_f64(p1)),
+            ("p2", Array::from_f64(p2)),
+            ("tag", Array::from_strs(&tags)),
+        ])
+        .unwrap()
+    }
+
+    let aggs = [AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)];
+    let left = wide_shard(rows, domain, 300 + rank as u64);
+    let right = wide_shard(rows, domain, 700 + rank as u64);
+    comm.reset_stats();
+    let sw = crate::util::time::CpuStopwatch::start();
+    let out = if planned {
+        LazyFrame::from_table(left)
+            .join(&LazyFrame::from_table(right), &["k"], &["k"])
+            .filter("v", Cmp::Ge, 0.5f64)
+            .groupby(&["k"], &aggs)
+            .collect_comm(comm)?
+            .into_table()
+    } else {
+        let joined =
+            dist_join(comm, &left, &right, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash)?;
+        let filtered = filter_cmp(&joined, "v", Cmp::Ge, &Scalar::Float64(0.5))?;
+        dist_groupby(comm, &filtered, &["k"], &aggs)?
+    };
+    let secs = sw.elapsed().as_secs_f64() + comm.stats().sim_comm_seconds;
+    std::hint::black_box(out.num_rows());
+    let mut res = Vec::with_capacity(16);
+    res.extend_from_slice(&comm.stats().bytes_sent.to_le_bytes());
+    res.extend_from_slice(&secs.to_le_bytes());
+    Ok(res)
+}
+
+/// The UNOMT feature-engineering pipeline (`hptmt pipeline`). `arg` is
+/// `"rows"`; returns 24 bytes: engineered rows (u64), cpu seconds
+/// (f64), stage count (u64).
+fn unomt_pipeline(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
+    let rows: usize = arg.trim().parse().unwrap_or(20_000);
+    let cfg = crate::unomt::UnomtConfig::default().with_rows(rows);
+    let (t, stats) = crate::unomt::pipeline::run_dist(comm, &cfg)?;
+    let mut out = Vec::with_capacity(24);
+    out.extend_from_slice(&(t.num_rows() as u64).to_le_bytes());
+    out.extend_from_slice(&stats.total_cpu_seconds().to_le_bytes());
+    out.extend_from_slice(&(stats.stages.len() as u64).to_le_bytes());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::profile::LinkProfile;
+    use crate::comm::thread_comm::spawn_world;
+
+    #[test]
+    fn unknown_job_is_a_listed_error() {
+        let res = spawn_world(1, LinkProfile::zero(), |_, comm| run_job("nope", "", comm));
+        let err = format!("{:#}", res.err().expect("unknown job must fail"));
+        assert!(err.contains("unknown job"), "{err}");
+        assert!(err.contains("dist_join"), "error must list the registry: {err}");
+    }
+
+    #[test]
+    fn jobs_are_deterministic_on_the_thread_backend() {
+        // Same job, same arg, two runs: byte-identical per rank. (The
+        // cross-backend wall in rust/tests/comm_conformance.rs does the
+        // same comparison against real rank processes.)
+        for job in ["p2p_ring", "collectives", "dist_groupby", "planned_chain"] {
+            let run = || {
+                spawn_world(3, LinkProfile::zero(), move |_, comm| run_job(job, "7,48", comm))
+                    .unwrap()
+            };
+            assert_eq!(run(), run(), "job {job} must be deterministic");
+        }
+    }
+
+    #[test]
+    fn every_registered_name_dispatches() {
+        for &job in JOB_NAMES {
+            // unomt_pipeline is heavier, and budget_shuffle bumps the
+            // process-global spill counters that exec::morsel's own
+            // unit tests assert exact values of — both are exercised by
+            // the conformance wall (its own test process) instead.
+            if job == "unomt_pipeline" || job == "budget_shuffle" {
+                continue;
+            }
+            let res =
+                spawn_world(2, LinkProfile::zero(), move |_, comm| run_job(job, "5,32", comm));
+            assert!(res.is_ok(), "job {job} failed: {:?}", res.err());
+            assert!(res.unwrap().iter().all(|b| !b.is_empty()), "job {job} returned no bytes");
+        }
+    }
+}

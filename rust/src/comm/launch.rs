@@ -1,0 +1,311 @@
+//! Backend selection (`HPTMT_COMM`) and the multiprocess rank launcher.
+//!
+//! Two interchangeable transports sit behind [`Communicator`]
+//! (DESIGN.md §11):
+//!
+//! | `HPTMT_COMM` | backend | ranks are | messages are |
+//! |---|---|---|---|
+//! | `thread` (default) | [`ThreadComm`] | threads in this process | `Vec<u8>` over mpsc channels |
+//! | `process` | [`ProcComm`] | spawned `hptmt_rank` processes | frames over Unix-domain sockets |
+//!
+//! Closure-based entry points ([`spawn_backend_world`]) cannot cross an
+//! exec boundary, so under `HPTMT_COMM=process` they drive the socket
+//! transport with one thread per rank — same wire format, same frame
+//! codec, same barrier protocol, in-process. Full multi-*process*
+//! execution runs named [`jobs`](super::jobs) through the [`Launcher`],
+//! which spawns one `hptmt_rank` OS process per rank and collects their
+//! result files.
+//!
+//! ## Launcher handshake
+//!
+//! 1. The leader creates a fresh rendezvous directory and spawns `w`
+//!    copies of `hptmt_rank`, each with `HPTMT_RANK` / `HPTMT_WORLD` /
+//!    `HPTMT_COMM_DIR` / `HPTMT_JOB` / `HPTMT_JOB_ARG` /
+//!    `HPTMT_LINK_PROFILE` in its environment.
+//! 2. Each rank binds `r{rank}.sock` in the directory, connects to all
+//!    lower ranks, accepts all higher ranks (hello frames), runs the
+//!    job, and writes `out-{rank}.bin`.
+//! 3. Ranks barrier, exit 0; the leader waits for every child, then
+//!    reads the result files in rank order.
+
+use super::communicator::Communicator;
+use super::jobs::run_job;
+use super::proc_comm::{fresh_comm_dir, spawn_uds_world, ProcComm};
+use super::profile::LinkProfile;
+use super::thread_comm::{spawn_world, ThreadComm};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which transport backs a world.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommBackend {
+    /// Ranks are threads of one process ([`ThreadComm`]).
+    Thread,
+    /// Ranks exchange socket frames ([`ProcComm`]); via the
+    /// [`Launcher`] they are separate OS processes.
+    Process,
+}
+
+/// Parse a backend name (`thread` / `process`).
+pub fn parse_backend(s: &str) -> Result<CommBackend> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "" | "thread" | "threads" => Ok(CommBackend::Thread),
+        "process" | "proc" => Ok(CommBackend::Process),
+        other => bail!("HPTMT_COMM={other:?}: expected \"thread\" or \"process\""),
+    }
+}
+
+/// The backend selected by `HPTMT_COMM` (default: thread). An
+/// unrecognised value falls back to thread rather than failing: the
+/// env knob must never brick unrelated tools that inherit it.
+pub fn backend_from_env() -> CommBackend {
+    std::env::var("HPTMT_COMM")
+        .ok()
+        .and_then(|s| parse_backend(&s).ok())
+        .unwrap_or(CommBackend::Thread)
+}
+
+/// A [`LinkProfile`] that can cross a process boundary by name — the
+/// launcher puts it in the child environment as `HPTMT_LINK_PROFILE`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileSpec {
+    Zero,
+    SingleNode,
+    Cluster(usize),
+}
+
+impl ProfileSpec {
+    pub fn profile(self) -> LinkProfile {
+        match self {
+            ProfileSpec::Zero => LinkProfile::zero(),
+            ProfileSpec::SingleNode => LinkProfile::single_node(),
+            ProfileSpec::Cluster(n) => LinkProfile::cluster(n),
+        }
+    }
+
+    pub fn as_env(self) -> String {
+        match self {
+            ProfileSpec::Zero => "zero".to_string(),
+            ProfileSpec::SingleNode => "single_node".to_string(),
+            ProfileSpec::Cluster(n) => format!("cluster:{n}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ProfileSpec> {
+        let t = s.trim();
+        if let Some(n) = t.strip_prefix("cluster:") {
+            return Ok(ProfileSpec::Cluster(n.trim().parse().context("cluster:<nodes>")?));
+        }
+        match t {
+            "" | "zero" => Ok(ProfileSpec::Zero),
+            "single_node" => Ok(ProfileSpec::SingleNode),
+            other => bail!("HPTMT_LINK_PROFILE={other:?}: expected zero | single_node | cluster:<n>"),
+        }
+    }
+}
+
+/// Run `f(rank, comm)` on every rank of a fresh world on the backend
+/// selected by `HPTMT_COMM` — the drop-in replacement for
+/// [`spawn_world`] in harnesses that should exercise whichever
+/// transport the environment picks (the differential walls).
+pub fn spawn_backend_world<T, F>(world: usize, profile: LinkProfile, f: F) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(usize, &mut dyn Communicator) -> Result<T> + Send + Sync + 'static,
+{
+    match backend_from_env() {
+        CommBackend::Thread => spawn_world(world, profile, move |rank, comm: &mut ThreadComm| {
+            f(rank, comm)
+        }),
+        CommBackend::Process => {
+            spawn_uds_world(world, profile, move |rank, comm: &mut ProcComm| f(rank, comm))
+        }
+    }
+}
+
+/// Run a named job on a thread-backed world; per-rank result bytes in
+/// rank order.
+pub fn run_job_threads(
+    world: usize,
+    profile: LinkProfile,
+    job: &str,
+    arg: &str,
+) -> Result<Vec<Vec<u8>>> {
+    let (job, arg) = (job.to_string(), arg.to_string());
+    spawn_world(world, profile, move |_, comm| run_job(&job, &arg, comm))
+}
+
+/// Run a named job on an in-process socket-mesh world (the process
+/// backend's transport without the exec boundary).
+pub fn run_job_uds(
+    world: usize,
+    profile: LinkProfile,
+    job: &str,
+    arg: &str,
+) -> Result<Vec<Vec<u8>>> {
+    let (job, arg) = (job.to_string(), arg.to_string());
+    spawn_uds_world(world, profile, move |_, comm| run_job(&job, &arg, comm))
+}
+
+/// Spawns one `hptmt_rank` process per rank and collects their results.
+#[derive(Debug, Clone)]
+pub struct Launcher {
+    world: usize,
+    profile: ProfileSpec,
+    rank_bin: Option<PathBuf>,
+}
+
+impl Launcher {
+    pub fn new(world: usize) -> Launcher {
+        Launcher { world, profile: ProfileSpec::Zero, rank_bin: None }
+    }
+
+    pub fn with_profile(mut self, profile: ProfileSpec) -> Launcher {
+        self.profile = profile;
+        self
+    }
+
+    /// Explicit path to the rank binary. Tests pass
+    /// `env!("CARGO_BIN_EXE_hptmt_rank")`; without it the launcher
+    /// tries `HPTMT_RANK_BIN`, then siblings of the current executable.
+    pub fn with_rank_bin(mut self, bin: impl Into<PathBuf>) -> Launcher {
+        self.rank_bin = Some(bin.into());
+        self
+    }
+
+    /// Run `job` across `world` rank processes; per-rank result bytes
+    /// in rank order.
+    pub fn run(&self, job: &str, arg: &str) -> Result<Vec<Vec<u8>>> {
+        let bin = resolve_rank_bin(self.rank_bin.as_deref())?;
+        let dir = fresh_comm_dir("job")?;
+        let mut children = Vec::with_capacity(self.world);
+        for rank in 0..self.world {
+            let child = std::process::Command::new(&bin)
+                .env("HPTMT_RANK", rank.to_string())
+                .env("HPTMT_WORLD", self.world.to_string())
+                .env("HPTMT_COMM_DIR", &dir)
+                .env("HPTMT_JOB", job)
+                .env("HPTMT_JOB_ARG", arg)
+                .env("HPTMT_LINK_PROFILE", self.profile.as_env())
+                .spawn()
+                .with_context(|| format!("spawning rank {rank} ({})", bin.display()))?;
+            children.push(child);
+        }
+        let mut failures = Vec::new();
+        for (rank, mut child) in children.into_iter().enumerate() {
+            let status = child.wait().with_context(|| format!("waiting for rank {rank}"))?;
+            if !status.success() {
+                failures.push(format!("rank {rank}: {status}"));
+            }
+        }
+        if !failures.is_empty() {
+            let _ = std::fs::remove_dir_all(&dir);
+            bail!("job {job:?} failed on {} rank(s): {}", failures.len(), failures.join("; "));
+        }
+        let mut out = Vec::with_capacity(self.world);
+        for rank in 0..self.world {
+            let path = dir.join(format!("out-{rank}.bin"));
+            out.push(
+                std::fs::read(&path)
+                    .with_context(|| format!("rank {rank} exited 0 but left no result at {}", path.display()))?,
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(out)
+    }
+}
+
+/// Run a named job on the backend selected by `HPTMT_COMM`.
+pub fn run_job_env(
+    world: usize,
+    profile: ProfileSpec,
+    job: &str,
+    arg: &str,
+    rank_bin: Option<&Path>,
+) -> Result<Vec<Vec<u8>>> {
+    match backend_from_env() {
+        CommBackend::Thread => run_job_threads(world, profile.profile(), job, arg),
+        CommBackend::Process => {
+            let mut launcher = Launcher::new(world).with_profile(profile);
+            if let Some(bin) = rank_bin {
+                launcher = launcher.with_rank_bin(bin);
+            }
+            launcher.run(job, arg)
+        }
+    }
+}
+
+/// Find the `hptmt_rank` binary: explicit path, `HPTMT_RANK_BIN`, then
+/// next to the current executable (covers `target/<p>/` for bins,
+/// `target/<p>/deps/` for test binaries, `target/<p>/examples/`).
+fn resolve_rank_bin(explicit: Option<&Path>) -> Result<PathBuf> {
+    if let Some(p) = explicit {
+        return Ok(p.to_path_buf());
+    }
+    if let Ok(p) = std::env::var("HPTMT_RANK_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    let mut candidates = Vec::new();
+    if let Some(dir) = exe.parent() {
+        candidates.push(dir.join("hptmt_rank"));
+        if let Some(up) = dir.parent() {
+            candidates.push(up.join("hptmt_rank"));
+        }
+    }
+    for c in &candidates {
+        if c.is_file() {
+            return Ok(c.clone());
+        }
+    }
+    bail!(
+        "cannot find the hptmt_rank launcher binary (tried {:?}); build it with \
+         `cargo build --bin hptmt_rank` and/or set HPTMT_RANK_BIN=<path>",
+        candidates
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parses_and_defaults() {
+        assert_eq!(parse_backend("thread").unwrap(), CommBackend::Thread);
+        assert_eq!(parse_backend("process").unwrap(), CommBackend::Process);
+        assert_eq!(parse_backend("").unwrap(), CommBackend::Thread);
+        assert!(parse_backend("carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn profile_spec_roundtrips_through_env_strings() {
+        for spec in [ProfileSpec::Zero, ProfileSpec::SingleNode, ProfileSpec::Cluster(16)] {
+            assert_eq!(ProfileSpec::parse(&spec.as_env()).unwrap(), spec);
+        }
+        assert_eq!(ProfileSpec::parse("").unwrap(), ProfileSpec::Zero);
+        assert!(ProfileSpec::parse("cluster:").is_err());
+        assert!(ProfileSpec::parse("warp-drive").is_err());
+    }
+
+    #[test]
+    fn thread_and_uds_job_runners_agree() {
+        // The in-process halves of the conformance wall (the full
+        // process wall lives in rust/tests/comm_conformance.rs where
+        // CARGO_BIN_EXE_hptmt_rank is available).
+        for w in [1usize, 2, 3] {
+            let a = run_job_threads(w, LinkProfile::zero(), "dist_groupby", "11,40").unwrap();
+            let b = run_job_uds(w, LinkProfile::zero(), "dist_groupby", "11,40").unwrap();
+            assert_eq!(a, b, "w={w}");
+        }
+    }
+
+    #[test]
+    fn missing_rank_bin_is_actionable() {
+        let err = Launcher::new(2)
+            .with_rank_bin("/nonexistent/hptmt_rank")
+            .run("p2p_ring", "")
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("spawning rank 0"), "{msg}");
+    }
+}

@@ -6,9 +6,15 @@
 //! | Tables | Shuffle, Broadcast | [`shuffle`], [`collectives::broadcast_bytes`] over IPC bytes |
 //!
 //! The trait-object design keeps distributed operators independent of
-//! the transport: the in-process [`thread_comm::ThreadComm`] stands in
-//! for MPI (DESIGN.md §3), with a [`profile::LinkProfile`] cost model
-//! supplying simulated cluster timing.
+//! the transport (DESIGN.md §3, §11). Two backends implement
+//! [`Communicator`], selected by `HPTMT_COMM={thread,process}`:
+//! the in-process [`thread_comm::ThreadComm`] (ranks are threads,
+//! messages are channel sends) stands in for MPI with a
+//! [`profile::LinkProfile`] cost model supplying simulated cluster
+//! timing, and [`proc_comm::ProcComm`] runs ranks as separate OS
+//! processes exchanging [`frame`]-encoded messages over Unix-domain
+//! sockets, spawned by [`launch::Launcher`] / the `hptmt_rank` binary
+//! and driven through the named-[`jobs`] registry.
 //!
 //! Row routing — deciding which rank/shard a row belongs to — is not a
 //! transport concern and lives in exactly one place: [`partitioner`]
@@ -17,7 +23,11 @@
 
 pub mod collectives;
 pub mod communicator;
+pub mod frame;
+pub mod jobs;
+pub mod launch;
 pub mod partitioner;
+pub mod proc_comm;
 pub mod profile;
 pub mod shuffle;
 pub mod thread_comm;
@@ -28,7 +38,14 @@ pub use collectives::{
     scatter_bytes, ReduceOp,
 };
 pub use communicator::{CommStats, Communicator, Tag};
+pub use frame::{decode_frame, encode_frame, Frame, MAX_FRAME_LEN};
+pub use jobs::{run_job, JOB_NAMES};
+pub use launch::{
+    backend_from_env, parse_backend, run_job_env, run_job_threads, run_job_uds,
+    spawn_backend_world, CommBackend, Launcher, ProfileSpec,
+};
 pub use partitioner::{HashPartitioner, RangePartitioner};
+pub use proc_comm::{fresh_comm_dir, spawn_uds_world, ProcComm};
 pub use profile::{LinkCost, LinkProfile};
 pub use shuffle::{shuffle_by_hash, shuffle_by_range, shuffle_tables, StreamingShuffle};
 pub use thread_comm::{spawn_world, ThreadComm};

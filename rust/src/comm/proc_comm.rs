@@ -1,0 +1,594 @@
+//! Process-backed communicator: ranks are OS processes (or threads, in
+//! the in-lib harness) exchanging [`frame`]-format messages over
+//! Unix-domain sockets — the real-transport counterpart of
+//! [`super::thread_comm::ThreadComm`] (DESIGN.md §11).
+//!
+//! ## Topology and handshake
+//!
+//! A world of `w` ranks is a full mesh of `w·(w-1)/2` stream sockets
+//! under one rendezvous directory. Rank `r` binds `r{r}.sock`, then
+//! *connects* to every lower rank (retrying while the peer's socket is
+//! not bound yet) and *accepts* one connection from every higher rank.
+//! The first frame on a fresh stream is a zero-byte [`HELLO_TAG`] frame
+//! carrying the connector's rank, which tells the acceptor which peer
+//! the stream belongs to.
+//!
+//! ## Delivery
+//!
+//! One reader thread per peer stream decodes frames and pushes them
+//! into the rank's single inbox channel; `recv` then runs exactly the
+//! selective-receive logic of `ThreadComm` (parked map keyed by
+//! `(from, tag)`), so out-of-order tag arrival behaves identically on
+//! both backends. Sends write frames inline on the caller's thread;
+//! because every peer's reader thread drains its socket continuously, a
+//! pair of ranks can exchange arbitrarily large messages simultaneously
+//! without deadlocking on kernel socket buffers.
+//!
+//! ## Barrier
+//!
+//! There is no shared-memory `std::sync::Barrier` between processes, so
+//! the barrier is a dissemination barrier built on the same frames:
+//! `⌈log₂ w⌉` rounds, in round `k` rank `r` sends a zero-byte frame to
+//! `(r + 2^k) mod w` and waits for one from `(r − 2^k) mod w`, tagged
+//! from the reserved [`BARRIER_BASE`] block so barrier traffic can
+//! never collide with user or collective tags. Barrier control frames
+//! are *not* charged to `msgs_sent`/`bytes_sent`: the data-byte
+//! counters stay comparable with `ThreadComm` (whose barrier sends
+//! nothing), which the planner's byte costing and the bench
+//! shuffled-bytes cells rely on.
+
+use super::communicator::{CommStats, Communicator, Tag};
+use super::frame::{encode_frame, read_frame, Frame, BARRIER_BASE, HELLO_TAG};
+use super::profile::LinkProfile;
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Envelope {
+    from: usize,
+    tag: Tag,
+    bytes: Vec<u8>,
+}
+
+/// One rank's endpoint of a socket-mesh world.
+pub struct ProcComm {
+    rank: usize,
+    world: usize,
+    /// Write halves of the peer streams (`None` at `self.rank`).
+    peers: Vec<Option<UnixStream>>,
+    inbox: Receiver<Envelope>,
+    /// Keeps the channel open even when every peer has hung up, so a
+    /// mismatched `recv` times out with the diagnostic message instead
+    /// of reporting a disconnect (and so `w == 1` behaves like
+    /// `ThreadComm`, which always holds its own sender).
+    _inbox_keepalive: Sender<Envelope>,
+    /// Out-of-order messages parked until a matching recv.
+    parked: HashMap<(usize, Tag), VecDeque<Vec<u8>>>,
+    collective_seq: u64,
+    barrier_seq: u64,
+    profile: LinkProfile,
+    stats: CommStats,
+    timeout: Duration,
+    /// Own socket path, removed on drop.
+    sock_path: Option<PathBuf>,
+}
+
+impl ProcComm {
+    /// Join the world rendezvousing under `dir` with default profile
+    /// and timeout (matching `ThreadComm::world`).
+    pub fn connect(rank: usize, world: usize, dir: &Path) -> Result<ProcComm> {
+        Self::connect_with(rank, world, dir, LinkProfile::zero(), Duration::from_secs(30))
+    }
+
+    /// Join the world under `dir`: bind own socket, connect to lower
+    /// ranks (retrying until their sockets appear), accept higher
+    /// ranks, and start one reader thread per peer. Blocks until the
+    /// full mesh is up or `timeout` expires.
+    pub fn connect_with(
+        rank: usize,
+        world: usize,
+        dir: &Path,
+        profile: LinkProfile,
+        timeout: Duration,
+    ) -> Result<ProcComm> {
+        assert!(world > 0, "empty world");
+        assert!(rank < world, "rank {rank} outside world of {world}");
+        let (tx, rx) = channel();
+        let mut peers: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
+        let mut sock_path = None;
+
+        if world > 1 {
+            let deadline = Instant::now() + timeout;
+            let path = dir.join(format!("r{rank}.sock"));
+            let listener = UnixListener::bind(&path)
+                .with_context(|| format!("rank {rank}: binding {}", path.display()))?;
+            sock_path = Some(path);
+
+            // Connect to every lower rank; their listeners may not be
+            // bound yet, so retry until the deadline.
+            for p in 0..rank {
+                let peer_path = dir.join(format!("r{p}.sock"));
+                let stream = loop {
+                    match UnixStream::connect(&peer_path) {
+                        Ok(s) => break s,
+                        Err(e) => {
+                            if Instant::now() >= deadline {
+                                bail!(
+                                    "rank {rank}: connecting to rank {p} at {} timed out \
+                                     after {timeout:?} ({e})",
+                                    peer_path.display()
+                                );
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                    }
+                };
+                (&stream)
+                    .write_all(&encode_frame(rank, HELLO_TAG, &[]))
+                    .with_context(|| format!("rank {rank}: hello to rank {p}"))?;
+                peers[p] = Some(stream);
+            }
+
+            // Accept one connection from every higher rank; the hello
+            // frame says which. Non-blocking accept with a deadline so
+            // a dead peer fails the handshake instead of hanging.
+            listener.set_nonblocking(true)?;
+            for _ in 0..world - 1 - rank {
+                let stream = loop {
+                    match listener.accept() {
+                        Ok((s, _)) => break s,
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            if Instant::now() >= deadline {
+                                bail!(
+                                    "rank {rank}: waiting for higher ranks to connect timed \
+                                     out after {timeout:?}"
+                                );
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => return Err(e).context(format!("rank {rank}: accept")),
+                    }
+                };
+                stream.set_nonblocking(false)?;
+                stream.set_read_timeout(Some(deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1))))?;
+                let hello = read_frame(&mut &stream)
+                    .with_context(|| format!("rank {rank}: reading hello"))?
+                    .with_context(|| format!("rank {rank}: peer closed before hello"))?;
+                if hello.tag != HELLO_TAG || hello.from <= rank || hello.from >= world {
+                    bail!(
+                        "rank {rank}: bad hello (tag {:?} from {})",
+                        hello.tag,
+                        hello.from
+                    );
+                }
+                if peers[hello.from].is_some() {
+                    bail!("rank {rank}: duplicate connection from rank {}", hello.from);
+                }
+                stream.set_read_timeout(None)?;
+                peers[hello.from] = Some(stream);
+            }
+
+            // One reader per peer stream; exits on EOF or corruption.
+            for (peer, stream) in peers.iter().enumerate() {
+                let Some(stream) = stream else { continue };
+                let mut reader = stream.try_clone().context("cloning peer stream")?;
+                let tx = tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("r{rank}<-r{peer}"))
+                    .spawn(move || {
+                        while let Ok(Some(Frame { from, tag, payload })) = read_frame(&mut reader)
+                        {
+                            if from != peer {
+                                return; // desynced or corrupt peer: stop delivering
+                            }
+                            if tx.send(Envelope { from, tag, bytes: payload }).is_err() {
+                                return; // our rank dropped its comm
+                            }
+                        }
+                    })
+                    .expect("spawn reader thread");
+            }
+        }
+
+        Ok(ProcComm {
+            rank,
+            world,
+            peers,
+            inbox: rx,
+            _inbox_keepalive: tx,
+            parked: HashMap::new(),
+            collective_seq: Tag::USER_MAX,
+            barrier_seq: 0,
+            profile,
+            stats: CommStats::default(),
+            timeout,
+        })
+    }
+
+    pub fn set_timeout(&mut self, t: Duration) {
+        self.timeout = t;
+    }
+
+    pub fn profile(&self) -> &LinkProfile {
+        &self.profile
+    }
+
+    /// Write one frame to a peer, bypassing the data-byte counters
+    /// (used by both `send` — which counts separately — and the
+    /// barrier, which must not count).
+    fn write_frame(&mut self, to: usize, tag: Tag, bytes: &[u8]) -> Result<()> {
+        let stream = self.peers[to]
+            .as_ref()
+            .with_context(|| format!("rank {}: no stream to rank {to}", self.rank))?;
+        (&*stream)
+            .write_all(&encode_frame(self.rank, tag, bytes))
+            .map_err(|_| anyhow::anyhow!("send: rank {to} hung up"))
+    }
+
+    /// The shared selective-receive loop; `count` charges the stats
+    /// (data messages) or not (barrier control frames).
+    fn recv_inner(&mut self, from: usize, tag: Tag, count: bool) -> Result<Vec<u8>> {
+        if from >= self.world {
+            bail!("recv from rank {from} outside world of {}", self.world);
+        }
+        if let Some(q) = self.parked.get_mut(&(from, tag)) {
+            if let Some(bytes) = q.pop_front() {
+                if count {
+                    self.stats.msgs_recv += 1;
+                    self.stats.bytes_recv += bytes.len() as u64;
+                    self.stats.sim_comm_seconds +=
+                        self.profile.time(from, self.rank, bytes.len());
+                }
+                return Ok(bytes);
+            }
+        }
+        loop {
+            match self.inbox.recv_timeout(self.timeout) {
+                Ok(env) => {
+                    if env.from == from && env.tag == tag {
+                        if count {
+                            self.stats.msgs_recv += 1;
+                            self.stats.bytes_recv += env.bytes.len() as u64;
+                            self.stats.sim_comm_seconds +=
+                                self.profile.time(from, self.rank, env.bytes.len());
+                        }
+                        return Ok(env.bytes);
+                    }
+                    self.parked
+                        .entry((env.from, env.tag))
+                        .or_default()
+                        .push_back(env.bytes);
+                }
+                Err(RecvTimeoutError::Timeout) => bail!(
+                    "rank {}: recv(from={from}, tag={:?}) timed out after {:?} — \
+                     collective call order mismatch?",
+                    self.rank,
+                    tag,
+                    self.timeout
+                ),
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("rank {}: world disconnected", self.rank)
+                }
+            }
+        }
+    }
+}
+
+impl Communicator for ProcComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, to: usize, tag: Tag, bytes: Vec<u8>) -> Result<()> {
+        if to >= self.world {
+            bail!("send to rank {to} outside world of {}", self.world);
+        }
+        let n = bytes.len();
+        self.stats.msgs_sent += 1;
+        self.stats.bytes_sent += n as u64;
+        self.stats.sim_comm_seconds += self.profile.time(self.rank, to, n);
+        if to == self.rank {
+            // Self-send: park directly (no socket round-trip), exactly
+            // like ThreadComm.
+            self.parked
+                .entry((self.rank, tag))
+                .or_default()
+                .push_back(bytes);
+            return Ok(());
+        }
+        self.write_frame(to, tag, &bytes)
+    }
+
+    fn recv(&mut self, from: usize, tag: Tag) -> Result<Vec<u8>> {
+        self.recv_inner(from, tag, true)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        // Same simulated cost model as ThreadComm: one latency term.
+        self.stats.sim_barrier_seconds +=
+            self.profile.inter.latency.max(self.profile.intra.latency);
+        if self.world == 1 {
+            return Ok(());
+        }
+        let seq = self.barrier_seq;
+        self.barrier_seq += 1;
+        let mut dist = 1usize;
+        let mut round = 0u64;
+        while dist < self.world {
+            let tag = Tag(BARRIER_BASE | (seq << 8) | round);
+            let to = (self.rank + dist) % self.world;
+            let from = (self.rank + self.world - dist) % self.world;
+            self.write_frame(to, tag, &[])?;
+            self.recv_inner(from, tag, false)?;
+            dist *= 2;
+            round += 1;
+        }
+        Ok(())
+    }
+
+    fn next_collective_tag(&mut self) -> Tag {
+        self.collective_seq += 1;
+        Tag(self.collective_seq)
+    }
+
+    fn stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = CommStats::default();
+    }
+
+    fn timeout(&self) -> Duration {
+        self.timeout
+    }
+}
+
+impl Drop for ProcComm {
+    fn drop(&mut self) {
+        // Shut the sockets down explicitly: the reader threads hold
+        // cloned fds, so merely dropping the write halves would leave
+        // both ends' readers blocked in read() forever. shutdown()
+        // flushes already-written data before the peer sees EOF, so a
+        // rank finishing early never truncates in-flight messages.
+        for s in self.peers.iter().flatten() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(p) = self.sock_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+static WORLD_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh private rendezvous directory for one world.
+pub fn fresh_comm_dir(label: &str) -> Result<PathBuf> {
+    let seq = WORLD_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("hptmt-{label}-{}-{seq}", std::process::id()));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating comm dir {}", dir.display()))?;
+    Ok(dir)
+}
+
+/// Run `f(rank, comm)` on every rank of a fresh socket-mesh world, one
+/// thread per rank, and return the per-rank results in rank order.
+///
+/// The `ProcComm` counterpart of [`super::thread_comm::spawn_world`]:
+/// the same BSP contract, but every message crosses a real Unix-domain
+/// socket in the process backend's frame format. Closures cannot cross
+/// an exec boundary, so this is how closure-based harnesses (the
+/// differential walls) drive the socket transport; true multi-*process*
+/// worlds run named [`super::jobs`] through [`super::launch`].
+pub fn spawn_uds_world<T, F>(world: usize, profile: LinkProfile, f: F) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(usize, &mut ProcComm) -> Result<T> + Send + Sync + 'static,
+{
+    let dir = fresh_comm_dir("uds")?;
+    let f = Arc::new(f);
+    let mut handles = Vec::with_capacity(world);
+    for rank in 0..world {
+        let f = f.clone();
+        let dir = dir.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("uds-rank-{rank}"))
+                .spawn(move || {
+                    let mut comm =
+                        ProcComm::connect_with(rank, world, &dir, profile, Duration::from_secs(30))?;
+                    f(rank, &mut comm)
+                })
+                .expect("spawn rank thread"),
+        );
+    }
+    let out = handles
+        .into_iter()
+        .enumerate()
+        .map(|(rank, h)| match h.join() {
+            Ok(r) => r,
+            Err(_) => bail!("rank {rank} panicked"),
+        })
+        .collect();
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::shuffle::shuffle_by_hash;
+    use crate::comm::thread_comm::spawn_world;
+    use crate::table::{ipc, Array, Table};
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        let results = spawn_uds_world(2, LinkProfile::zero(), |rank, comm| {
+            if rank == 0 {
+                comm.send(1, Tag(7), vec![1, 2, 3])?;
+                comm.recv(1, Tag(8))
+            } else {
+                let got = comm.recv(0, Tag(7))?;
+                comm.send(0, Tag(8), got.iter().map(|b| b * 2).collect())?;
+                Ok(vec![])
+            }
+        })
+        .unwrap();
+        assert_eq!(results[0], vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn selective_receive_out_of_order() {
+        let results = spawn_uds_world(2, LinkProfile::zero(), |rank, comm| {
+            if rank == 0 {
+                comm.send(1, Tag(1), vec![1])?;
+                comm.send(1, Tag(2), vec![2])?;
+                Ok(0u8)
+            } else {
+                let b = comm.recv(0, Tag(2))?;
+                let a = comm.recv(0, Tag(1))?;
+                Ok(a[0] * 10 + b[0])
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], 12);
+    }
+
+    #[test]
+    fn self_send_and_world_of_one() {
+        let results = spawn_uds_world(1, LinkProfile::zero(), |_, comm| {
+            comm.send(0, Tag(5), vec![9])?;
+            comm.recv(0, Tag(5))
+        })
+        .unwrap();
+        assert_eq!(results[0], vec![9]);
+    }
+
+    #[test]
+    fn zero_byte_messages_deliver() {
+        let results = spawn_uds_world(2, LinkProfile::zero(), |rank, comm| {
+            if rank == 0 {
+                comm.send(1, Tag(3), Vec::new())?;
+                Ok(0)
+            } else {
+                Ok(comm.recv(0, Tag(3))?.len())
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], 0);
+    }
+
+    #[test]
+    fn barrier_synchronises() {
+        use std::sync::atomic::AtomicUsize;
+        let before = Arc::new(AtomicUsize::new(0));
+        let b = before.clone();
+        let _ = spawn_uds_world(4, LinkProfile::zero(), move |_, comm| {
+            b.fetch_add(1, Ordering::SeqCst);
+            comm.barrier()?;
+            assert_eq!(b.load(Ordering::SeqCst), 4);
+            // Back-to-back barriers must not cross-talk (per-seq tags).
+            comm.barrier()?;
+            comm.barrier()?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(before.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn stats_match_thread_backend_for_the_same_traffic() {
+        let traffic = |rank: usize, comm: &mut dyn Communicator| -> Result<CommStats> {
+            if rank == 0 {
+                comm.send(1, Tag(1), vec![0u8; 1000])?;
+            } else {
+                comm.recv(0, Tag(1))?;
+            }
+            comm.barrier()?;
+            Ok(comm.stats())
+        };
+        let threads =
+            spawn_world(2, LinkProfile::cluster(1), move |r, c| traffic(r, c)).unwrap();
+        let procs =
+            spawn_uds_world(2, LinkProfile::cluster(1), move |r, c| traffic(r, c)).unwrap();
+        for (t, p) in threads.iter().zip(procs.iter()) {
+            assert_eq!(t.msgs_sent, p.msgs_sent);
+            assert_eq!(t.bytes_sent, p.bytes_sent);
+            assert_eq!(t.msgs_recv, p.msgs_recv);
+            assert_eq!(t.bytes_recv, p.bytes_recv);
+            assert_eq!(t.sim_comm_seconds, p.sim_comm_seconds);
+            assert_eq!(t.sim_barrier_seconds, p.sim_barrier_seconds);
+        }
+    }
+
+    #[test]
+    fn large_payload_crosses_the_socket() {
+        let big: Vec<u8> = (0..300_000u32).map(|i| (i % 251) as u8).collect();
+        let expect = big.clone();
+        let results = spawn_uds_world(2, LinkProfile::zero(), move |rank, comm| {
+            if rank == 0 {
+                comm.send(1, Tag(9), big.clone())?;
+                Ok(Vec::new())
+            } else {
+                comm.recv(0, Tag(9))
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], expect);
+    }
+
+    #[test]
+    fn recv_timeout_reports_mismatch() {
+        let res = spawn_uds_world(1, LinkProfile::zero(), |_, comm| {
+            comm.set_timeout(Duration::from_millis(50));
+            comm.recv(0, Tag(99))
+        });
+        let err = format!("{:?}", res.err().expect("should time out"));
+        assert!(err.contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn bad_ranks_rejected() {
+        let _ = spawn_uds_world(1, LinkProfile::zero(), |_, comm| {
+            assert!(comm.send(5, Tag(0), vec![]).is_err());
+            assert!(comm.recv(5, Tag(0)).is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn shuffle_bytes_identical_to_thread_backend() {
+        fn table(rank: usize) -> Table {
+            let keys: Vec<i64> = (0..32).map(|i| ((i + rank) % 8) as i64).collect();
+            let tags: Vec<String> = (0..32).map(|i| format!("t{:02}", (i + rank) % 5)).collect();
+            Table::from_columns(vec![
+                ("k", Array::from_i64(keys)),
+                ("tag", Array::from_strs(&tags.iter().map(|s| s.as_str()).collect::<Vec<_>>())),
+            ])
+            .unwrap()
+            .dict_encode_columns()
+        }
+        for w in [1usize, 2, 4] {
+            let threads = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                Ok(ipc::serialize(&shuffle_by_hash(comm, &table(rank), &["k"])?))
+            })
+            .unwrap();
+            let procs = spawn_uds_world(w, LinkProfile::zero(), move |rank, comm| {
+                Ok(ipc::serialize(&shuffle_by_hash(comm, &table(rank), &["k"])?))
+            })
+            .unwrap();
+            assert_eq!(threads, procs, "shuffle bytes must not depend on the transport (w={w})");
+        }
+    }
+}

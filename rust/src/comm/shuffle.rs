@@ -9,8 +9,39 @@
 use super::collectives::alltoall_bytes;
 use super::communicator::Communicator;
 use super::partitioner::{pivot_partition_indices, HashPartitioner};
+use crate::exec::morsel::{self, MemBudget, SpillBytes};
 use crate::table::{ipc, Table};
 use anyhow::{Context, Result};
+
+/// One staged shuffle blob: in memory while the staging set fits the
+/// ambient [`MemBudget`], on disk (byte-exact, dictionary encoding
+/// intact) once it would not.
+enum Staged {
+    Mem(Vec<u8>),
+    Disk(SpillBytes),
+}
+
+impl Staged {
+    fn stage(blob: Vec<u8>, in_mem: &mut usize, budget: &MemBudget) -> Result<Staged> {
+        if !budget.is_unlimited() && budget.exceeded_by(*in_mem + blob.len()) {
+            Ok(Staged::Disk(SpillBytes::write(&blob)?))
+        } else {
+            *in_mem += blob.len();
+            morsel::note_state_bytes(*in_mem);
+            Ok(Staged::Mem(blob))
+        }
+    }
+
+    fn unstage(self, in_mem: &mut usize) -> Result<Vec<u8>> {
+        match self {
+            Staged::Mem(b) => {
+                *in_mem -= b.len();
+                Ok(b)
+            }
+            Staged::Disk(f) => f.read(),
+        }
+    }
+}
 
 /// Exchange pre-partitioned tables: `parts[r]` goes to rank `r`; the
 /// received partitions are concatenated (own partition avoids the wire).
@@ -20,33 +51,61 @@ use anyhow::{Context, Result};
 /// columns encoded — each distinct value crosses the wire once per
 /// edge, plus 4 bytes per row of codes. For plain tables the wire
 /// format is byte-identical to the canonical [`ipc::serialize`].
+///
+/// Send and receive staging buffers are routed through the ambient
+/// [`MemBudget`] (`morsel::current()`): blobs that would push the
+/// staged set past the budget spill to disk ([`SpillBytes`]) and are
+/// read back one at a time, so the shuffle's staging footprint stays
+/// within budget on every rank. Spilling changes *where* a blob waits,
+/// never what crosses the wire: the exchange is byte-for-byte the
+/// [`alltoall_bytes`] pattern (one collective tag, sends then receives,
+/// both in rank order), so results, message counts, and the byte
+/// counters the planner costs against are budget-invariant.
 pub fn shuffle_tables<C: Communicator + ?Sized>(
     comm: &mut C,
     parts: Vec<Table>,
 ) -> Result<Table> {
     assert_eq!(parts.len(), comm.world_size(), "shuffle: one partition per rank");
     let rank = comm.rank();
+    let w = comm.world_size();
     let schema = parts[rank].schema().clone();
+    let (_, budget) = morsel::current();
+    let mut in_mem = 0usize;
+
     let mut own: Option<Table> = None;
-    let mut blobs: Vec<Vec<u8>> = Vec::with_capacity(parts.len());
+    let mut outgoing: Vec<Option<Staged>> = Vec::with_capacity(w);
     for (r, p) in parts.into_iter().enumerate() {
         if r == rank {
             own = Some(p);
-            blobs.push(Vec::new());
+            outgoing.push(None);
         } else {
-            blobs.push(ipc::serialize_wire(&p));
+            outgoing.push(Some(Staged::stage(ipc::serialize_wire(&p), &mut in_mem, &budget)?));
         }
     }
-    let received = alltoall_bytes(comm, blobs)?;
-    let mut tables: Vec<Table> = Vec::with_capacity(received.len());
-    for (r, blob) in received.into_iter().enumerate() {
-        if r == rank {
-            tables.push(own.take().expect("own partition"));
+
+    let tag = comm.next_collective_tag();
+    for dst in 0..w {
+        if let Some(staged) = outgoing[dst].take() {
+            comm.send(dst, tag, staged.unstage(&mut in_mem)?)?;
+        }
+    }
+    let mut incoming: Vec<Option<Staged>> = Vec::with_capacity(w);
+    for src in 0..w {
+        if src == rank {
+            incoming.push(None);
         } else {
-            tables.push(
-                ipc::deserialize_wire(&blob)
+            incoming.push(Some(Staged::stage(comm.recv(src, tag)?, &mut in_mem, &budget)?));
+        }
+    }
+
+    let mut tables: Vec<Table> = Vec::with_capacity(w);
+    for (r, staged) in incoming.into_iter().enumerate() {
+        match staged {
+            None => tables.push(own.take().expect("own partition")),
+            Some(s) => tables.push(
+                ipc::deserialize_wire(&s.unstage(&mut in_mem)?)
                     .with_context(|| format!("shuffle: from rank {r}"))?,
-            );
+            ),
         }
     }
     let refs: Vec<&Table> = tables.iter().collect();

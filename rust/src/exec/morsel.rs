@@ -232,6 +232,52 @@ impl Drop for SpillFile {
     }
 }
 
+/// One spilled raw byte blob on disk — the staging medium for the
+/// shuffle's send/receive buffers, which must round-trip *exactly*
+/// (re-encoding through the canonical table format would strip the
+/// dictionary wire encoding and change what crosses the wire). Counted
+/// in the same global spill stats as [`SpillFile`]; removed on drop.
+#[derive(Debug)]
+pub struct SpillBytes {
+    path: PathBuf,
+    len: usize,
+}
+
+impl SpillBytes {
+    /// Write `bytes` to a fresh temp file and count it.
+    pub fn write(bytes: &[u8]) -> Result<SpillBytes> {
+        let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("hptmt-spill-{}-{}.bin", std::process::id(), seq));
+        std::fs::write(&path, bytes)
+            .with_context(|| format!("writing spill blob {}", path.display()))?;
+        SPILL_FILES.fetch_add(1, Ordering::Relaxed);
+        SPILL_BYTES.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(SpillBytes { path, len: bytes.len() })
+    }
+
+    /// Length of the spilled blob in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read the blob back, byte-identical to what was written.
+    pub fn read(&self) -> Result<Vec<u8>> {
+        std::fs::read(&self.path)
+            .with_context(|| format!("reading spill blob {}", self.path.display()))
+    }
+}
+
+impl Drop for SpillBytes {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
 // ---- morsel decomposition & scheduling --------------------------------
 
 /// Contiguous `(start, len)` ranges covering `nrows`, near-equal sized

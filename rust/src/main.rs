@@ -13,10 +13,11 @@
 //! ```
 
 use anyhow::Result;
-use hptmt::comm::{spawn_world, LinkProfile};
+use hptmt::comm::{
+    backend_from_env, run_job_env, spawn_world, CommBackend, LinkProfile, ProfileSpec,
+};
 use hptmt::dl::{synthetic_dataset, train_ddp, TrainConfig};
 use hptmt::runtime::ModelRuntime;
-use hptmt::unomt::{pipeline, UnomtConfig};
 use hptmt::util::cli::Args;
 
 const USAGE: &str = "hptmt — HPTMT parallel operators (paper reproduction)
@@ -76,20 +77,23 @@ fn smoke() -> Result<()> {
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 2)?;
     let rows = args.usize_or("rows", 20_000)?;
-    let cfg = UnomtConfig::default().with_rows(rows);
-    println!("UNOMT pipeline: {rows} rows across {workers} BSP ranks");
-    let results = spawn_world(workers, LinkProfile::cluster(16), move |_, comm| {
-        pipeline::run_dist(comm, &cfg)
-    })?;
-    let mut total = 0;
-    for (rank, (t, stats)) in results.iter().enumerate() {
-        println!(
-            "rank {rank}: {} engineered rows, {:.3}s cpu across {} stages",
-            t.num_rows(),
-            stats.total_cpu_seconds(),
-            stats.stages.len()
-        );
-        total += t.num_rows();
+    let backend = match backend_from_env() {
+        CommBackend::Thread => "thread (BSP, in-process)",
+        CommBackend::Process => "process (hptmt_rank over Unix sockets)",
+    };
+    println!("UNOMT pipeline: {rows} rows across {workers} ranks, backend {backend}");
+    // Dispatched through the named-job registry so HPTMT_COMM=process
+    // runs the identical pipeline on real rank processes.
+    let results =
+        run_job_env(workers, ProfileSpec::Cluster(16), "unomt_pipeline", &rows.to_string(), None)?;
+    let mut total = 0u64;
+    for (rank, r) in results.iter().enumerate() {
+        anyhow::ensure!(r.len() == 24, "unomt_pipeline rank result must be 24 bytes");
+        let nrows = u64::from_le_bytes(r[..8].try_into().unwrap());
+        let cpu = f64::from_le_bytes(r[8..16].try_into().unwrap());
+        let stages = u64::from_le_bytes(r[16..24].try_into().unwrap());
+        println!("rank {rank}: {nrows} engineered rows, {cpu:.3}s cpu across {stages} stages");
+        total += nrows;
     }
     println!("global engineered rows: {total}");
     Ok(())

@@ -78,12 +78,26 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        // `len - pos` (not `pos + n > len`) so a hostile length word
+        // near usize::MAX can't wrap the comparison around.
+        if self.buf.len() - self.pos < n {
             bail!("ipc: truncated buffer (want {n} at {}, have {})", self.pos, self.buf.len());
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
+    }
+    /// Take `count * width` bytes, rejecting multiplication overflow —
+    /// a wire-declared row count near u64::MAX must fail cleanly, not
+    /// wrap into a small (and wrong) payload size.
+    fn take_n(&mut self, count: usize, width: usize) -> Result<&'a [u8]> {
+        let n = count
+            .checked_mul(width)
+            .with_context(|| format!("ipc: {count} x {width}-byte payload overflows"))?;
+        self.take(n)
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
@@ -161,8 +175,10 @@ pub fn deserialize(buf: &[u8]) -> Result<Table> {
     }
     let ncols = r.u32()? as usize;
     let nrows = r.u64()? as usize;
-    let mut fields = Vec::with_capacity(ncols);
-    let mut columns = Vec::with_capacity(ncols);
+    // Column headers cost >= 6 bytes each; cap the preallocation by
+    // what the buffer can actually contain (hostile-count defense).
+    let mut fields = Vec::with_capacity(ncols.min(r.remaining() / 6));
+    let mut columns = Vec::with_capacity(ncols.min(r.remaining() / 6));
     for c in 0..ncols {
         let name_len = r.u32()? as usize;
         let name = std::str::from_utf8(r.take(name_len)?)
@@ -177,7 +193,7 @@ pub fn deserialize(buf: &[u8]) -> Result<Table> {
         };
         let arr = match dt {
             DataType::Int64 => {
-                let raw = r.take(nrows * 8)?;
+                let raw = r.take_n(nrows, 8)?;
                 let v = raw
                     .chunks_exact(8)
                     .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
@@ -185,7 +201,7 @@ pub fn deserialize(buf: &[u8]) -> Result<Table> {
                 Array::Int64(v, validity)
             }
             DataType::Float64 => {
-                let raw = r.take(nrows * 8)?;
+                let raw = r.take_n(nrows, 8)?;
                 let v = raw
                     .chunks_exact(8)
                     .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
@@ -197,7 +213,8 @@ pub fn deserialize(buf: &[u8]) -> Result<Table> {
                 Array::Bool(raw.iter().map(|&b| b != 0).collect(), validity)
             }
             DataType::Utf8 => {
-                let raw = r.take((nrows + 1) * 4)?;
+                let raw =
+                    r.take_n(nrows.checked_add(1).context("ipc: row count overflows")?, 4)?;
                 let offsets: Vec<u32> = raw
                     .chunks_exact(4)
                     .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
@@ -230,7 +247,11 @@ fn write_dict_entries(w: &mut Writer, entries: &[String]) {
 
 fn read_dict_entries(r: &mut Reader<'_>) -> Result<Vec<String>> {
     let n = r.u32()? as usize;
-    let mut out = Vec::with_capacity(n);
+    // Capacity capped by what the buffer could possibly hold (each
+    // entry costs at least its 4-byte length word): a hostile count
+    // can make the loop fail on a truncated read, never pre-allocate
+    // gigabytes.
+    let mut out = Vec::with_capacity(n.min(r.remaining() / 4));
     for i in 0..n {
         let len = r.u32()? as usize;
         let s = std::str::from_utf8(r.take(len)?)
@@ -247,7 +268,7 @@ fn write_codes(w: &mut Writer, codes: &[u32]) {
 }
 
 fn read_codes(r: &mut Reader<'_>, nrows: usize) -> Result<Vec<u32>> {
-    let raw = r.take(nrows * 4)?;
+    let raw = r.take_n(nrows, 4)?;
     Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
@@ -320,8 +341,10 @@ pub fn deserialize_wire(buf: &[u8]) -> Result<Table> {
     }
     let ncols = r.u32()? as usize;
     let nrows = r.u64()? as usize;
-    let mut fields = Vec::with_capacity(ncols);
-    let mut columns = Vec::with_capacity(ncols);
+    // Column headers cost >= 6 bytes each; cap the preallocation by
+    // what the buffer can actually contain (hostile-count defense).
+    let mut fields = Vec::with_capacity(ncols.min(r.remaining() / 6));
+    let mut columns = Vec::with_capacity(ncols.min(r.remaining() / 6));
     for c in 0..ncols {
         let name_len = r.u32()? as usize;
         let name = std::str::from_utf8(r.take(name_len)?)
@@ -350,7 +373,7 @@ pub fn deserialize_wire(buf: &[u8]) -> Result<Table> {
         let dt = DataType::from_tag(tag).context("ipc: bad dtype tag")?;
         let arr = match dt {
             DataType::Int64 => {
-                let raw = r.take(nrows * 8)?;
+                let raw = r.take_n(nrows, 8)?;
                 let v = raw
                     .chunks_exact(8)
                     .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
@@ -358,7 +381,7 @@ pub fn deserialize_wire(buf: &[u8]) -> Result<Table> {
                 Array::Int64(v, validity)
             }
             DataType::Float64 => {
-                let raw = r.take(nrows * 8)?;
+                let raw = r.take_n(nrows, 8)?;
                 let v = raw
                     .chunks_exact(8)
                     .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
@@ -370,7 +393,8 @@ pub fn deserialize_wire(buf: &[u8]) -> Result<Table> {
                 Array::Bool(raw.iter().map(|&b| b != 0).collect(), validity)
             }
             DataType::Utf8 => {
-                let raw = r.take((nrows + 1) * 4)?;
+                let raw =
+                    r.take_n(nrows.checked_add(1).context("ipc: row count overflows")?, 4)?;
                 let offsets: Vec<u32> = raw
                     .chunks_exact(4)
                     .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
@@ -487,8 +511,8 @@ impl DictWireState {
         }
         let ncols = r.u32()? as usize;
         let nrows = r.u64()? as usize;
-        let mut fields = Vec::with_capacity(ncols);
-        let mut columns = Vec::with_capacity(ncols);
+        let mut fields = Vec::with_capacity(ncols.min(r.remaining() / 6));
+        let mut columns = Vec::with_capacity(ncols.min(r.remaining() / 6));
         for c in 0..ncols {
             let name_len = r.u32()? as usize;
             let name = std::str::from_utf8(r.take(name_len)?)
@@ -529,7 +553,7 @@ impl DictWireState {
             let dt = DataType::from_tag(tag).context("ipc: bad dtype tag")?;
             let arr = match dt {
                 DataType::Int64 => {
-                    let raw = r.take(nrows * 8)?;
+                    let raw = r.take_n(nrows, 8)?;
                     let v = raw
                         .chunks_exact(8)
                         .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
@@ -537,7 +561,7 @@ impl DictWireState {
                     Array::Int64(v, validity)
                 }
                 DataType::Float64 => {
-                    let raw = r.take(nrows * 8)?;
+                    let raw = r.take_n(nrows, 8)?;
                     let v = raw
                         .chunks_exact(8)
                         .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
@@ -549,7 +573,8 @@ impl DictWireState {
                     Array::Bool(raw.iter().map(|&b| b != 0).collect(), validity)
                 }
                 DataType::Utf8 => {
-                    let raw = r.take((nrows + 1) * 4)?;
+                    let raw =
+                    r.take_n(nrows.checked_add(1).context("ipc: row count overflows")?, 4)?;
                     let offsets: Vec<u32> = raw
                         .chunks_exact(4)
                         .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
@@ -592,6 +617,33 @@ mod tests {
         assert_eq!(t, rt);
         assert_eq!(rt.cell(1, 0), Scalar::Null);
         assert_eq!(rt.cell(0, 1), Scalar::Utf8("aa".into()));
+    }
+
+    #[test]
+    fn hostile_length_words_error_without_overallocating() {
+        // A crashed or malicious peer can put anything in the length
+        // words; every decoder must fail cleanly in O(1) memory.
+        let t = sample().dict_encode_columns();
+        let wire = serialize_wire(&t);
+        // Row count -> u64::MAX (offset 8, after the 4-byte magic and
+        // u32 ncols): `nrows * 8` must not wrap.
+        let mut huge_rows = wire.clone();
+        huge_rows[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(deserialize_wire(&huge_rows).is_err());
+        assert!(deserialize(&serialize(&sample())[..0]).is_err(), "empty buffer");
+        let mut huge_rows_canon = serialize(&sample());
+        huge_rows_canon[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(deserialize(&huge_rows_canon).is_err());
+        // Column count -> u32::MAX: the Vec preallocation is capped by
+        // the buffer length, so this errors on a truncated header read
+        // instead of reserving gigabytes.
+        let mut huge_cols = wire.clone();
+        huge_cols[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(deserialize_wire(&huge_cols).is_err());
+        // Truncation at every prefix: total, never a panic.
+        for cut in 0..wire.len() {
+            assert!(deserialize_wire(&wire[..cut]).is_err(), "cut at {cut}");
+        }
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Cross-backend conformance wall: the thread backend and the
+//! multiprocess socket backend must be observationally identical.
+//!
+//! Every named job in `comm::jobs` — covering send/recv (including
+//! zero-byte messages), allgather/gather/broadcast/allreduce, barrier,
+//! every `ops::dist` operator, the planned path, streaming + dict-
+//! encoded + empty-partition shuffles, and budget-constrained spilling
+//! shuffles — runs at w ∈ {1, 2, 4} on:
+//!
+//!   1. `ThreadComm` ranks (threads + channels),
+//!   2. real `hptmt_rank` OS processes over Unix-domain sockets
+//!      (`comm::launch::Launcher`), and
+//!   3. the socket transport driven in-process (`run_job_uds`),
+//!
+//! and each rank's result bytes (canonical `ipc::serialize` for the
+//! table jobs) must match exactly. The two timing-bearing jobs
+//! (`fig4_chain`, `unomt_pipeline`) are compared only on their
+//! deterministic words — shuffled bytes, row count, stage count — since
+//! their elapsed-seconds words legitimately differ per run.
+
+use hptmt::comm::{run_job_threads, run_job_uds, Launcher, LinkProfile, ProfileSpec, JOB_NAMES};
+
+/// Path to the rank binary, baked in by Cargo for integration tests.
+const RANK_BIN: &str = env!("CARGO_BIN_EXE_hptmt_rank");
+
+fn seed() -> u64 {
+    std::env::var("HPTMT_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(20260727)
+}
+
+fn run_process(world: usize, job: &str, arg: &str) -> Vec<Vec<u8>> {
+    Launcher::new(world)
+        .with_profile(ProfileSpec::Zero)
+        .with_rank_bin(RANK_BIN)
+        .run(job, arg)
+        .unwrap_or_else(|e| panic!("process backend, job {job:?}, w={world}: {e:#}"))
+}
+
+fn run_threads(world: usize, job: &str, arg: &str) -> Vec<Vec<u8>> {
+    run_job_threads(world, LinkProfile::zero(), job, arg)
+        .unwrap_or_else(|e| panic!("thread backend, job {job:?}, w={world}: {e:#}"))
+}
+
+/// The jobs whose full result bytes are deterministic (everything but
+/// the two that embed wall-clock / CPU seconds).
+fn deterministic_jobs() -> impl Iterator<Item = &'static str> {
+    JOB_NAMES.iter().copied().filter(|j| *j != "fig4_chain" && *j != "unomt_pipeline")
+}
+
+fn wall_at(world: usize) {
+    let arg = format!("{},64", seed());
+    for job in deterministic_jobs() {
+        let threads = run_threads(world, job, &arg);
+        let procs = run_process(world, job, &arg);
+        assert_eq!(threads.len(), world);
+        assert_eq!(procs.len(), world);
+        for rank in 0..world {
+            assert_eq!(
+                threads[rank], procs[rank],
+                "job {job:?}, w={world}, rank {rank}: thread and process backends disagree \
+                 ({} vs {} bytes)",
+                threads[rank].len(),
+                procs[rank].len()
+            );
+        }
+    }
+}
+
+// One test per world size so libtest runs the walls concurrently.
+
+#[test]
+fn every_job_byte_identical_across_backends_w1() {
+    wall_at(1);
+}
+
+#[test]
+fn every_job_byte_identical_across_backends_w2() {
+    wall_at(2);
+}
+
+#[test]
+fn every_job_byte_identical_across_backends_w4() {
+    wall_at(4);
+}
+
+#[test]
+fn uds_transport_matches_thread_backend_for_every_job() {
+    // The socket transport without the exec boundary: same frames, same
+    // barrier protocol, cheap enough to sweep every world in one test.
+    let arg = format!("{},64", seed());
+    for world in [1usize, 2, 4] {
+        for job in deterministic_jobs() {
+            let threads = run_threads(world, job, &arg);
+            let uds = run_job_uds(world, LinkProfile::zero(), job, &arg)
+                .unwrap_or_else(|e| panic!("uds backend, job {job:?}, w={world}: {e:#}"));
+            assert_eq!(threads, uds, "job {job:?}, w={world}");
+        }
+    }
+}
+
+#[test]
+fn fig4_chain_shuffled_bytes_identical_across_backends() {
+    // Result layout: bytes_sent u64 LE, then elapsed-seconds f64 LE.
+    // Only the byte counter is deterministic — it is exactly the strict
+    // cell of BENCH_fig4_planner_pushdown.json.
+    for world in [1usize, 2, 4] {
+        for variant in ["1500,160", "1500,160,planned"] {
+            let threads = run_threads(world, "fig4_chain", variant);
+            let procs = run_process(world, "fig4_chain", variant);
+            for rank in 0..world {
+                assert_eq!(
+                    threads[rank][..8],
+                    procs[rank][..8],
+                    "fig4_chain {variant:?}, w={world}, rank {rank}: shuffled-bytes word differs"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn unomt_pipeline_rows_and_stages_identical_across_backends() {
+    // Result layout: nrows u64, total_cpu_seconds f64, n_stages u64.
+    // The middle word is timing; rows and stage count must agree.
+    for world in [1usize, 2] {
+        let threads = run_threads(world, "unomt_pipeline", "4000");
+        let procs = run_process(world, "unomt_pipeline", "4000");
+        for rank in 0..world {
+            assert_eq!(
+                threads[rank][..8],
+                procs[rank][..8],
+                "unomt rows, w={world}, rank {rank}"
+            );
+            assert_eq!(
+                threads[rank][16..24],
+                procs[rank][16..24],
+                "unomt stage count, w={world}, rank {rank}"
+            );
+        }
+    }
+}
+
+#[test]
+fn process_backend_failure_is_reported_not_hung() {
+    // An unknown job makes every rank exit non-zero; the launcher must
+    // surface that as an error naming the failing ranks.
+    let err = Launcher::new(2)
+        .with_rank_bin(RANK_BIN)
+        .run("no_such_job", "")
+        .expect_err("unknown job must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank"), "error should name failing ranks: {msg}");
+}

@@ -1,5 +1,7 @@
 //! Differential harness: every `ops::dist` operator, run at
-//! `world_size ∈ {1, 2, 4, 7}` over the thread communicator on a
+//! `world_size ∈ {1, 2, 4, 7}` over the `HPTMT_COMM`-selected
+//! communicator backend (thread ranks by default; the Unix-socket
+//! transport under `HPTMT_COMM=process` — CI runs both) on a
 //! partitioned table, must equal its local counterpart applied to the
 //! concatenation of the partitions — compared in canonical sorted-row
 //! form (distributed results are partitioned and unordered by
@@ -15,7 +17,7 @@
 //!   "keep first" duplicate survivors are identical bytes no matter
 //!   which copy a rank keeps.
 
-use hptmt::comm::{spawn_world, HashPartitioner, LinkProfile};
+use hptmt::comm::{spawn_backend_world, HashPartitioner, LinkProfile};
 use hptmt::ops::dist::{
     broadcast_join, dist_difference, dist_drop_duplicates, dist_groupby, dist_groupby_partial,
     dist_intersect, dist_join, dist_sort, dist_union, dist_union_all, dist_unique, global_counts,
@@ -81,7 +83,7 @@ fn canon(parts: &[Table]) -> Vec<String> {
 /// size and compare against `local_out` in canonical form.
 fn assert_matches<F>(name: &str, global: &Table, local_out: &Table, dist_op: F) -> Vec<Vec<Table>>
 where
-    F: Fn(&mut hptmt::comm::ThreadComm, &Table) -> anyhow::Result<Table>
+    F: Fn(&mut dyn hptmt::comm::Communicator, &Table) -> anyhow::Result<Table>
         + Send
         + Sync
         + Clone
@@ -92,7 +94,7 @@ where
     for w in WORLDS {
         let parts_in = global.split(w);
         let op = dist_op.clone();
-        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| op(comm, &parts_in[rank]))
+        let out = spawn_backend_world(w, LinkProfile::zero(), move |rank, comm| op(comm, &parts_in[rank]))
             .unwrap_or_else(|e| panic!("{name} w={w}: {e:#}"));
         assert_eq!(canon(&out), want, "{name}: dist != local at w={w} (seed {})", seed());
         all.push(out);
@@ -109,7 +111,7 @@ fn dist_join_matches_local() {
         // both sides are partitioned: split r on the same rank layout
         for w in WORLDS {
             let (lp, rp) = (l.split(w), r.split(w));
-            let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            let out = spawn_backend_world(w, LinkProfile::zero(), move |rank, comm| {
                 dist_join(comm, &lp[rank], &rp[rank], &["k"], &["k"], jt, JoinAlgorithm::Hash)
             })
             .unwrap();
@@ -130,7 +132,7 @@ fn broadcast_join_matches_local() {
     let oracle = local::join(&l, &r, &["k"], &["k"], JoinType::Inner, JoinAlgorithm::Hash).unwrap();
     for w in WORLDS {
         let (lp, rp) = (l.split(w), r.split(w));
-        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+        let out = spawn_backend_world(w, LinkProfile::zero(), move |rank, comm| {
             broadcast_join(comm, &lp[rank], &rp[rank], &["k"], &["k"], JoinType::Inner)
         })
         .unwrap();
@@ -232,7 +234,7 @@ fn rebalance_preserves_global_order_and_equalises() {
             parts_in.push(g.slice(start, len));
             start += len;
         }
-        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+        let out = spawn_backend_world(w, LinkProfile::zero(), move |rank, comm| {
             rebalance(comm, &parts_in[rank])
         })
         .unwrap_or_else(|e| panic!("rebalance w={w}: {e:#}"));
@@ -263,7 +265,7 @@ fn global_counts_match_partition_sizes_on_every_rank() {
     for w in WORLDS {
         let parts_in = g.split(w);
         let sizes: Vec<usize> = parts_in.iter().map(|t| t.num_rows()).collect();
-        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+        let out = spawn_backend_world(w, LinkProfile::zero(), move |rank, comm| {
             global_counts(comm, &parts_in[rank])
         })
         .unwrap_or_else(|e| panic!("global_counts w={w}: {e:#}"));
@@ -476,7 +478,7 @@ fn dist_set_ops_match_local() {
     type SetOp = (
         &'static str,
         fn(&Table, &Table) -> anyhow::Result<Table>,
-        fn(&mut hptmt::comm::ThreadComm, &Table, &Table) -> anyhow::Result<Table>,
+        fn(&mut dyn hptmt::comm::Communicator, &Table, &Table) -> anyhow::Result<Table>,
     );
     let cases: [SetOp; 4] = [
         ("union", local::union, dist_union),
@@ -488,7 +490,7 @@ fn dist_set_ops_match_local() {
         let oracle = local_op(&a, &b).unwrap();
         for w in WORLDS {
             let (ap, bp) = (a.split(w), b.split(w));
-            let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+            let out = spawn_backend_world(w, LinkProfile::zero(), move |rank, comm| {
                 dist_op(comm, &ap[rank], &bp[rank])
             })
             .unwrap();
@@ -517,18 +519,18 @@ fn dist_set_ops_match_local() {
 /// byte equality on every rank.
 fn assert_planned_eager_bytes<E, P>(name: &'static str, w: usize, eager: E, planned: P)
 where
-    E: Fn(&mut hptmt::comm::ThreadComm, usize) -> anyhow::Result<Table>
+    E: Fn(&mut dyn hptmt::comm::Communicator, usize) -> anyhow::Result<Table>
         + Send
         + Sync
         + Clone
         + 'static,
-    P: Fn(&mut hptmt::comm::ThreadComm, usize) -> anyhow::Result<Table>
+    P: Fn(&mut dyn hptmt::comm::Communicator, usize) -> anyhow::Result<Table>
         + Send
         + Sync
         + Clone
         + 'static,
 {
-    let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+    let out = spawn_backend_world(w, LinkProfile::zero(), move |rank, comm| {
         let e = eager(comm, rank)?;
         let p = planned(comm, rank)?;
         Ok((ipc::serialize(&e), ipc::serialize(&p)))
@@ -682,7 +684,7 @@ fn planned_sort_dedup_and_setops_are_byte_identical_to_eager() {
             );
         }
 
-        type Eager = fn(&mut hptmt::comm::ThreadComm, &Table, &Table) -> anyhow::Result<Table>;
+        type Eager = fn(&mut dyn hptmt::comm::Communicator, &Table, &Table) -> anyhow::Result<Table>;
         type Planned = fn(LazyFrame, &LazyFrame) -> LazyFrame;
         let cases: [(&'static str, Eager, Planned); 4] = [
             ("union", dist_union, |a, b| a.union(b)),
@@ -779,7 +781,7 @@ fn planned_pushdown_chain_matches_local_oracle() {
     for w in WORLDS {
         let (lp, rp) = (l.split(w), r.split(w));
         let aggs = aggs.clone();
-        let out = spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+        let out = spawn_backend_world(w, LinkProfile::zero(), move |rank, comm| {
             // written join-then-filter: the optimizer must push the
             // filter below the join's shuffle and prune unused columns
             let frame = LazyFrame::from_table(lp[rank].clone())

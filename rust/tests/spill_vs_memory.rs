@@ -21,7 +21,7 @@
 //! `#[test]`s run on parallel threads, so every test serializes on one
 //! mutex and restores the defaults through an RAII guard (panic-safe).
 
-use hptmt::comm::{spawn_world, LinkProfile, ThreadComm};
+use hptmt::comm::{shuffle_by_hash, spawn_world, LinkProfile, ThreadComm};
 use hptmt::exec::morsel::{self, reset_spill_stats, spill_stats, MemBudget, MorselConfig};
 use hptmt::ops::dist::{
     broadcast_join, dist_difference, dist_drop_duplicates, dist_groupby, dist_groupby_partial,
@@ -462,6 +462,56 @@ fn tight_budget_spills_and_stays_within_peak() {
         );
         for (rank, (gb, bb)) in got.iter().zip(&base).enumerate() {
             assert!(gb == bb, "{name}: budgeted output diverged on rank {rank}");
+        }
+    }
+}
+
+/// The shuffle's send/receive *staging buffers* are budget-governed
+/// too: a tight budget over an exchange whose serialized partitions
+/// dwarf it must spill staging blobs to disk (files > 0), keep the
+/// recorded peak within budget — and change nothing observable: results
+/// byte-identical and bytes-on-the-wire identical to the unlimited run,
+/// for plain and dict-encoded inputs alike (the blob disk round trip
+/// must preserve the dictionary wire encoding exactly).
+#[test]
+fn tight_budget_shuffle_spills_staging_and_matches() {
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = ConfigReset;
+    const BUDGET: usize = 8 * 1024;
+    let g = global_table(4_000, 50, 20);
+
+    for dict in [false, true] {
+        let t = if dict { g.dict_encode_columns() } else { g.clone() };
+        for w in [2usize, 4] {
+            let run = |budget: MemBudget, t: Table| {
+                morsel::set_runtime(MorselConfig::fixed(1), budget);
+                spawn_world(w, LinkProfile::zero(), move |rank, comm| {
+                    let p = t.split(comm.world_size());
+                    let out = shuffle_by_hash(comm, &p[rank], &["k"])?;
+                    Ok((ipc::serialize(&out), comm.stats().bytes_sent))
+                })
+                .expect("shuffle run")
+            };
+
+            let base = run(MemBudget::unlimited(), t.clone());
+            reset_spill_stats();
+            let got = run(MemBudget::bytes(BUDGET), t.clone());
+
+            let stats = spill_stats();
+            let label = format!("shuffle staging (dict={dict}, w={w})");
+            assert!(stats.files > 0, "{label}: staging must spill under an 8 KiB budget");
+            assert!(
+                stats.peak_state_bytes <= BUDGET as u64,
+                "{label}: staged peak {} exceeds the {BUDGET} byte budget",
+                stats.peak_state_bytes
+            );
+            for (rank, ((gb, gs), (bb, bs))) in got.iter().zip(&base).enumerate() {
+                assert!(gb == bb, "{label}: budgeted shuffle diverged on rank {rank}");
+                assert_eq!(
+                    gs, bs,
+                    "{label}: spilling changed the bytes on the wire (rank {rank})"
+                );
+            }
         }
     }
 }
