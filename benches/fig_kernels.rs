@@ -7,18 +7,22 @@
 //! * **timing** (`median_s`) — advisory in CI (runners vary);
 //! * **deterministic** (`det`, plus shuffle `bytes`) — exact functions
 //!   of the pinned input: group counts, the boundary-gather count
-//!   (must be exactly 1 for a fused filter chain), and the
-//!   dict-beats-plain wire-byte checks. The `det` column gates CI via
-//!   `bench_diff --strict-cols det`, and this binary itself panics if a
-//!   dictionary cell stops winning — a bench run doubles as the
-//!   acceptance check.
+//!   (must be exactly 1 for a fused filter chain), emitted window
+//!   counts, and the dict-beats-plain wire-byte checks. The `det`
+//!   column gates CI via `bench_diff --strict-cols det`, and this
+//!   binary itself panics if a dictionary cell stops winning or the
+//!   event-time/count window equivalence breaks — a bench run doubles
+//!   as the acceptance check.
 //!
 //! Input is fully deterministic (no RNG): `s = "k" + i % 97`, so the
-//! dictionary holds 97 entries regardless of scale.
+//! dictionary holds 97 entries regardless of scale. The temporal cells
+//! ride a uniform 3 ms cadence (`ts = 3·i`), so a 600 ms tumbling
+//! event-time window cuts exactly the row ranges of a 200-row count
+//! window and the two outputs must agree byte-for-byte.
 
 use hptmt::bench::{measure, scaled, Report};
 use hptmt::comm::{shuffle_by_hash, spawn_world, Communicator, LinkProfile};
-use hptmt::ops::local::{self, Agg, AggSpec, Cmp, SortKey};
+use hptmt::ops::local::{self, Agg, AggSpec, Cmp, SortKey, WindowSpec};
 use hptmt::plan::{fuse_gathers, reset_fuse_gathers, LazyFrame};
 use hptmt::table::rowhash::hash_columns;
 use hptmt::table::{ipc, Array, Table};
@@ -34,6 +38,26 @@ fn table(rows: usize) -> Table {
         ("v", Array::from_f64(vs)),
     ])
     .unwrap()
+}
+
+/// Temporal companions to [`table`]: `ordered` carries `ts = 3·i` ms
+/// (uniform cadence, already time-sorted — what the window cells want),
+/// `scrambled` the same timestamps permuted by a stride coprime to the
+/// row count (what the sort cell wants).
+fn temporal_tables(rows: usize) -> (Table, Table) {
+    let ss: Vec<String> = (0..rows).map(|i| format!("k{:03}", i % 97)).collect();
+    let vs: Vec<f64> = (0..rows).map(|i| (i % 101) as f64).collect();
+    let build = |ts: Vec<i64>| {
+        Table::from_columns(vec![
+            ("s", Array::from_strs(&ss)),
+            ("ts", Array::from_ts(ts)),
+            ("v", Array::from_f64(vs.clone())),
+        ])
+        .unwrap()
+    };
+    let ordered = build((0..rows).map(|i| i as i64 * 3).collect());
+    let scrambled = build((0..rows).map(|i| ((i * 131) % rows) as i64 * 3).collect());
+    (ordered, scrambled)
 }
 
 /// Measure `f` (which returns the row's `bytes` cell, "-" when not
@@ -151,6 +175,48 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(chain(&dict).collect_unoptimized()?);
         Ok("-".into())
     })?;
+
+    // --- temporal: timestamp sort + event-time vs count windows -------
+    let (ordered, scrambled) = temporal_tables(rows);
+    timed(&mut report, "sort timestamp", "-".into(), &mut || {
+        std::hint::black_box(local::sort(&scrambled, &[SortKey::asc("ts"), SortKey::desc("s")])?);
+        Ok("-".into())
+    })?;
+
+    // At the 3 ms cadence a 600 ms tumbling event-time window and a
+    // 200-row count window cut identical row ranges with identical
+    // ordinals, so the emitted window count is an exact function of the
+    // pinned input (rows / 200, rounded up) and the two concatenated
+    // outputs must agree byte-for-byte — the count path slices, the
+    // event-time path gathers by timestamp value, and any drift between
+    // them is a windowing bug, not noise.
+    let tspec = WindowSpec::tumbling_time("ts", 600).with_ordinal("__w");
+    let cspec = WindowSpec::tumbling_rows(200).with_ordinal("__w");
+    let wins_t = local::windowed_groupby(&ordered, &["s"], &aggs, &tspec)?;
+    let wins_c = local::windowed_groupby(&ordered, &["s"], &aggs, &cspec)?;
+    assert_eq!(
+        wins_t.len(),
+        wins_c.len(),
+        "event-time and count windows must emit the same window count at a uniform cadence"
+    );
+    let cat = |wins: &[Table]| -> anyhow::Result<Vec<u8>> {
+        let refs: Vec<&Table> = wins.iter().collect();
+        Ok(ipc::serialize(&Table::concat_tables(&refs)?))
+    };
+    assert_eq!(
+        cat(&wins_t)?,
+        cat(&wins_c)?,
+        "event-time windows must be byte-identical to the equivalent count windows"
+    );
+    timed(&mut report, "window time 600ms", wins_t.len().to_string(), &mut || {
+        std::hint::black_box(local::windowed_groupby(&ordered, &["s"], &aggs, &tspec)?);
+        Ok("-".into())
+    })?;
+    timed(&mut report, "window count 200rows", wins_c.len().to_string(), &mut || {
+        std::hint::black_box(local::windowed_groupby(&ordered, &["s"], &aggs, &cspec)?);
+        Ok("-".into())
+    })?;
+    report.row(&["window time=count".into(), "-".into(), "-".into(), "yes".into()]);
 
     report.finish()
 }

@@ -134,6 +134,9 @@ enum Acc {
     F64 { sum: Vec<f64>, count: Vec<u64> },
     MinMaxF64(Vec<Option<f64>>),
     MinMaxI64(Vec<Option<i64>>),
+    /// Same arithmetic as MinMaxI64 but finishes to a Timestamp column
+    /// (min/max of a temporal column is still a temporal instant).
+    MinMaxTs(Vec<Option<i64>>),
     MinMaxStr(Vec<Option<String>>),
     Count(Vec<i64>),
     /// mean/std/var via Welford-free two-accumulator (sum, sumsq, count)
@@ -149,6 +152,7 @@ fn finish_acc(acc: Acc, agg: Agg, src: &Array) -> Array {
         Acc::Count(v) => Array::from_i64(v),
         Acc::MinMaxF64(v) => Array::from_opt_f64(v),
         Acc::MinMaxI64(v) => Array::from_opt_i64(v),
+        Acc::MinMaxTs(v) => Array::from_opt_ts(v),
         Acc::MinMaxStr(v) => {
             Array::from_opt_strs(v.iter().map(|o| o.as_deref()).collect())
         }
@@ -215,6 +219,7 @@ pub fn groupby_aggregate(table: &Table, keys: &[&str], aggs: &[AggSpec]) -> Resu
                 count: vec![0; ngroups],
             },
             (Agg::Min | Agg::Max, DataType::Int64) => Acc::MinMaxI64(vec![None; ngroups]),
+            (Agg::Min | Agg::Max, DataType::Timestamp) => Acc::MinMaxTs(vec![None; ngroups]),
             (Agg::Min | Agg::Max, DataType::Float64) => Acc::MinMaxF64(vec![None; ngroups]),
             (Agg::Min | Agg::Max, DataType::Utf8) => Acc::MinMaxStr(vec![None; ngroups]),
             (Agg::Min | Agg::Max, DataType::Bool) => {
@@ -254,6 +259,16 @@ pub fn groupby_aggregate(table: &Table, keys: &[&str], aggs: &[AggSpec]) -> Resu
                 }
                 Acc::MinMaxI64(v) => {
                     if let (Array::Int64(vals, _), true) = (src, src.is_valid(i)) {
+                        let x = vals[i];
+                        v[g] = Some(match v[g] {
+                            None => x,
+                            Some(c) if want_max => c.max(x),
+                            Some(c) => c.min(x),
+                        });
+                    }
+                }
+                Acc::MinMaxTs(v) => {
+                    if let (Array::Timestamp(vals, _), true) = (src, src.is_valid(i)) {
                         let x = vals[i];
                         v[g] = Some(match v[g] {
                             None => x,
@@ -873,6 +888,42 @@ mod tests {
         use crate::table::ipc;
         assert_eq!(ipc::serialize(&a), ipc::serialize(&b));
         assert!(b.column_by_name("g").unwrap().is_dict(), "dict keys survive take");
+    }
+
+    #[test]
+    fn timestamp_keys_and_minmax() {
+        let tbl = Table::from_columns(vec![
+            ("ts", Array::from_ts(vec![1000, 2000, 1000, 2000])),
+            ("ev", Array::from_opt_ts(vec![Some(5), Some(7), None, Some(3)])),
+            ("v", Array::from_i64(vec![10, 20, 30, 40])),
+        ])
+        .unwrap();
+        // timestamp as the group key
+        let g = groupby_aggregate(&tbl, &["ts"], &[AggSpec::new("v", Agg::Sum)]).unwrap();
+        assert_eq!(g.num_rows(), 2);
+        assert_eq!(g.cell(0, 0), Scalar::Timestamp(1000));
+        assert_eq!(g.cell(0, 1), Scalar::Int64(40));
+        // min/max/first/last/count on a timestamp column keep the type
+        let a = groupby_aggregate(
+            &tbl,
+            &["ts"],
+            &[
+                AggSpec::new("ev", Agg::Min),
+                AggSpec::new("ev", Agg::Max),
+                AggSpec::new("ev", Agg::First),
+                AggSpec::new("ev", Agg::Count),
+            ],
+        )
+        .unwrap();
+        assert_eq!(a.column(1).data_type(), DataType::Timestamp);
+        assert_eq!(a.cell(0, 1), Scalar::Timestamp(5), "min skips the null");
+        assert_eq!(a.cell(1, 2), Scalar::Timestamp(7));
+        assert_eq!(a.column(3).data_type(), DataType::Timestamp);
+        assert_eq!(a.cell(0, 4), Scalar::Int64(1));
+        // numeric aggregations reject the temporal type
+        for agg in [Agg::Sum, Agg::Mean, Agg::Std, Agg::Var] {
+            assert!(groupby_aggregate(&tbl, &["ts"], &[AggSpec::new("ev", agg)]).is_err());
+        }
     }
 
     #[test]

@@ -115,6 +115,13 @@ pub fn cmp_mask(col: &Array, op: Cmp, lit: &Scalar) -> Result<Vec<Option<bool>>>
                 }
             }
         }
+        (Array::Timestamp(v, _), Scalar::Timestamp(x)) => {
+            for i in 0..n {
+                if col.is_valid(i) {
+                    mask[i] = Some(op.holds_ord(v[i].cmp(x)));
+                }
+            }
+        }
         (c, l) => bail!("cmp: incompatible types {} vs {:?}", c.data_type(), l),
     }
     Ok(mask)
@@ -210,6 +217,21 @@ mod tests {
     #[test]
     fn type_mismatch_rejected() {
         assert!(filter_cmp(&t(), "name", Cmp::Lt, &Scalar::Int64(1)).is_err());
+    }
+
+    #[test]
+    fn timestamp_filters() {
+        let tbl = Table::from_columns(vec![(
+            "ts",
+            Array::from_opt_ts(vec![Some(1000), Some(2000), None, Some(3000)]),
+        )])
+        .unwrap();
+        let f = filter_cmp(&tbl, "ts", Cmp::Ge, &Scalar::Timestamp(2000)).unwrap();
+        assert_eq!(f.num_rows(), 2, "null row dropped");
+        let f = filter_cmp(&tbl, "ts", Cmp::Lt, &Scalar::Timestamp(2000)).unwrap();
+        assert_eq!(f.num_rows(), 1);
+        // no implicit int bridge: the literal must be a Timestamp
+        assert!(filter_cmp(&tbl, "ts", Cmp::Eq, &Scalar::Int64(1000)).is_err());
     }
 
     #[test]

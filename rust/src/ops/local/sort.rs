@@ -59,7 +59,7 @@ pub fn sort_indices(table: &Table, keys: &[SortKey]) -> Result<Vec<usize>> {
     // stability contract).
     if keys.len() == 1 && cols[0].null_count() == 0 {
         match cols[0] {
-            Array::Int64(v, _) => {
+            Array::Int64(v, _) | Array::Timestamp(v, _) => {
                 if keys[0].ascending {
                     idx.sort_by_key(|&i| v[i]);
                 } else {

@@ -126,6 +126,11 @@ pub enum WindowUnit {
     Rows,
     /// Count whole batches as delivered (one received batch = one unit).
     Batches,
+    /// Event time: `size`/`step` are milliseconds, windows are the
+    /// epoch-aligned absolute spans `[j·step, j·step + size)` ms cut on
+    /// the value of the spec's `time_column` (a Timestamp column) —
+    /// independent of arrival batching and of shard row counts.
+    Time,
 }
 
 impl WindowUnit {
@@ -134,6 +139,7 @@ impl WindowUnit {
         match self {
             WindowUnit::Rows => "rows",
             WindowUnit::Batches => "batches",
+            WindowUnit::Time => "ms",
         }
     }
 }
@@ -153,35 +159,47 @@ pub enum Eviction {
     Rebuild,
 }
 
-/// Count-triggered window specification for keyed streaming
-/// aggregation: tumbling (`step == size`) or sliding (`step < size`)
-/// over rows or batches, watermark-free.
+/// Window specification for keyed streaming aggregation: tumbling
+/// (`step == size`) or sliding (`step < size`) over rows, batches, or
+/// event time, watermark-free.
 ///
-/// Windows cover the half-open unit spans `[j·step, j·step + size)` of
-/// each shard's routed input, in arrival order; a window emits when its
-/// end boundary is reached, and stream close flushes the oldest
-/// still-open window truncated at the final unit (see
-/// [`spans`](Self::spans), which is the whole semantics).
+/// Count units ([`WindowUnit::Rows`]/[`WindowUnit::Batches`]) cover the
+/// half-open unit spans `[j·step, j·step + size)` of each shard's
+/// routed input, in arrival order; a window emits when its end boundary
+/// is reached, and stream close flushes the oldest still-open window
+/// truncated at the final unit (see [`spans`](Self::spans), which is
+/// the whole count semantics).
+///
+/// Event time ([`WindowUnit::Time`]) cuts the epoch-aligned absolute
+/// spans `[j·step, j·step + size)` **milliseconds** on the value of
+/// `time_column`; the window ordinal is the absolute index `j`, so it
+/// agrees across shards regardless of how rows were routed (see
+/// [`time_spans`](Self::time_spans)). Empty windows emit nothing.
 #[derive(Debug, Clone)]
 pub struct WindowSpec {
-    /// Whether `size`/`step` count rows or whole batches.
+    /// Whether `size`/`step` count rows, whole batches, or event-time ms.
     pub unit: WindowUnit,
     /// Window length in units (must be > 0).
     pub size: usize,
     /// Distance between consecutive window starts (0 < step <= size;
     /// `step == size` is tumbling).
     pub step: usize,
-    /// Eviction policy for sliding windows (ignored for tumbling,
-    /// which just resets its state).
+    /// Eviction policy for sliding windows (ignored for tumbling, which
+    /// just resets its state, and for event time, whose windows hold
+    /// independent per-window partials and never retract).
     pub eviction: Eviction,
     /// When set, every emitted window table gains an Int64 column of
-    /// this name holding the per-shard window ordinal.
+    /// this name holding the window ordinal (per-shard counter for
+    /// count units; the absolute span index `j` for event time).
     pub ordinal: Option<String>,
+    /// Timestamp column event-time windows are cut on (required for
+    /// [`WindowUnit::Time`], rejected otherwise).
+    pub time_column: Option<String>,
 }
 
 impl WindowSpec {
     fn new(unit: WindowUnit, size: usize, step: usize) -> WindowSpec {
-        WindowSpec { unit, size, step, eviction: Eviction::Auto, ordinal: None }
+        WindowSpec { unit, size, step, eviction: Eviction::Auto, ordinal: None, time_column: None }
     }
 
     /// Tumbling window of `size` rows.
@@ -202,6 +220,22 @@ impl WindowSpec {
     /// Sliding window of `size` batches advancing `step` batches.
     pub fn sliding_batches(size: usize, step: usize) -> WindowSpec {
         WindowSpec::new(WindowUnit::Batches, size, step)
+    }
+
+    /// Tumbling event-time window of `size_ms` milliseconds cut on the
+    /// Timestamp column `column`.
+    pub fn tumbling_time(column: impl Into<String>, size_ms: usize) -> WindowSpec {
+        let mut s = WindowSpec::new(WindowUnit::Time, size_ms, size_ms);
+        s.time_column = Some(column.into());
+        s
+    }
+
+    /// Sliding event-time window of `size_ms` milliseconds advancing
+    /// `step_ms` per span, cut on the Timestamp column `column`.
+    pub fn sliding_time(column: impl Into<String>, size_ms: usize, step_ms: usize) -> WindowSpec {
+        let mut s = WindowSpec::new(WindowUnit::Time, size_ms, step_ms);
+        s.time_column = Some(column.into());
+        s
     }
 
     /// Override the eviction policy (sliding windows only).
@@ -239,6 +273,23 @@ impl WindowSpec {
                 self.unit.name()
             );
         }
+        match (self.unit, &self.time_column) {
+            (WindowUnit::Time, None) => bail!(
+                "event-time windows need a time column; build the spec with \
+                 tumbling_time/sliding_time"
+            ),
+            (WindowUnit::Rows | WindowUnit::Batches, Some(c)) => bail!(
+                "time_column {c:?} is set but the window unit counts {}; \
+                 use WindowUnit::Time for event-time triggers",
+                self.unit.name()
+            ),
+            _ => {}
+        }
+        if self.unit == WindowUnit::Time {
+            // Event-time windows keep independent per-window partials;
+            // nothing retracts, so the eviction policy has no bearing.
+            return Ok(());
+        }
         if self.eviction == Eviction::Retract && !PartialAggPlan::aggs_retract_exactly(aggs) {
             let offender = aggs
                 .iter()
@@ -271,6 +322,24 @@ impl WindowSpec {
             out.push((j * p, total));
         }
         out
+    }
+
+    /// The event-time spans `(j, [j·step, j·step + size))` in ms that
+    /// intersect the closed data range `[tmin, tmax]` — the
+    /// [`WindowUnit::Time`] counterpart of [`spans`](Self::spans), and
+    /// likewise the whole semantics: the streaming machine and the
+    /// batch oracle both follow it. `j` is the absolute span index
+    /// (negative before the epoch), which is what the ordinal column
+    /// carries so shards agree on window identity.
+    pub fn time_spans(&self, tmin: i64, tmax: i64) -> Vec<(i64, i64, i64)> {
+        let (s, p) = (self.size as i64, self.step as i64);
+        if tmax < tmin {
+            return Vec::new();
+        }
+        // first j with j·p + s > tmin; last j with j·p <= tmax
+        let j0 = (tmin - s).div_euclid(p) + 1;
+        let j1 = tmax.div_euclid(p);
+        (j0..=j1).map(|j| (j, j * p, j * p + s)).collect()
     }
 }
 
@@ -353,6 +422,9 @@ pub fn windowed_groupby_stream(
     }
     let refs: Vec<&Table> = batches.iter().collect();
     let all = Table::concat_tables(&refs)?;
+    if spec.unit == WindowUnit::Time {
+        return time_windowed_oracle(&all, keys, aggs, spec);
+    }
     // Unit spans map to row ranges: directly for Rows, via batch row
     // offsets for Batches.
     let mut offsets = Vec::with_capacity(batches.len() + 1);
@@ -378,6 +450,54 @@ pub fn windowed_groupby_stream(
         let mut g = groupby_aggregate(&all.slice(ra, rb - ra), keys, aggs)?;
         if let Some(name) = &spec.ordinal {
             g = g.with_column(name, Array::from_i64(vec![j as i64; g.num_rows()]))?;
+        }
+        out.push(g);
+    }
+    Ok(out)
+}
+
+/// Event-time arm of the oracle: cut the concatenated stream on the
+/// spec's Timestamp column into the absolute spans of
+/// [`WindowSpec::time_spans`], aggregating each span's rows. Arrival
+/// order is irrelevant here — only timestamp values decide membership —
+/// which is exactly why the streaming stage (which additionally demands
+/// per-shard time order) can be differentially tested against it.
+fn time_windowed_oracle(
+    all: &Table,
+    keys: &[&str],
+    aggs: &[AggSpec],
+    spec: &WindowSpec,
+) -> Result<Vec<Table>> {
+    let col_name = spec.time_column.as_deref().expect("validated");
+    let col = all.column_by_name(col_name)?;
+    let Some(ts) = col.ts_values() else {
+        bail!(
+            "event-time window: column {col_name:?} is {}, expected timestamp",
+            col.data_type()
+        );
+    };
+    if all.num_rows() == 0 {
+        return Ok(Vec::new());
+    }
+    let (mut tmin, mut tmax) = (i64::MAX, i64::MIN);
+    for i in 0..all.num_rows() {
+        if !col.is_valid(i) {
+            bail!("event-time window: null timestamp in column {col_name:?} at row {i}");
+        }
+        tmin = tmin.min(ts[i]);
+        tmax = tmax.max(ts[i]);
+    }
+    let mut out = Vec::new();
+    for (j, start, end) in spec.time_spans(tmin, tmax) {
+        let idx: Vec<usize> = (0..all.num_rows())
+            .filter(|&i| start <= ts[i] && ts[i] < end)
+            .collect();
+        if idx.is_empty() {
+            continue; // empty window emits nothing
+        }
+        let mut g = groupby_aggregate(&all.take(&idx), keys, aggs)?;
+        if let Some(name) = &spec.ordinal {
+            g = g.with_column(name, Array::from_i64(vec![j; g.num_rows()]))?;
         }
         out.push(g);
     }
@@ -638,5 +758,107 @@ mod tests {
         assert_eq!(wins_b.len(), 2, "[0,2) then the [2,3) flush");
         let want0 = groupby_aggregate(&t.slice(0, 13), &["k"], &aggs).unwrap();
         assert_eq!(wins_b[0].num_rows(), want0.num_rows());
+    }
+
+    #[test]
+    fn time_spans_are_epoch_aligned_absolute_windows() {
+        // tumbling by 10ms: windows [0,10), [10,20), ... indexed by j
+        let t10 = WindowSpec::tumbling_time("ts", 10);
+        assert_eq!(t10.time_spans(0, 25), vec![(0, 0, 10), (1, 10, 20), (2, 20, 30)]);
+        // range not starting at a boundary still aligns to the epoch
+        assert_eq!(t10.time_spans(13, 13), vec![(1, 10, 20)]);
+        // negative timestamps: div_euclid keeps windows aligned below 0
+        assert_eq!(t10.time_spans(-5, 5), vec![(-1, -10, 0), (0, 0, 10)]);
+        // sliding 10 by 4: every window whose span intersects the range
+        let s = WindowSpec::sliding_time("ts", 10, 4);
+        assert_eq!(
+            s.time_spans(0, 7),
+            vec![(-2, -8, 2), (-1, -4, 6), (0, 0, 10), (1, 4, 14)]
+        );
+        // inverted range is empty
+        assert_eq!(t10.time_spans(5, 4), vec![]);
+    }
+
+    #[test]
+    fn time_window_spec_guards() {
+        let aggs = [AggSpec::new("x", RAgg::Sum)];
+        // a hand-rolled Time spec with no column is rejected
+        let mut s = WindowSpec::tumbling_rows(4);
+        s.unit = WindowUnit::Time;
+        let m = format!("{:#}", s.validate(&aggs).err().unwrap());
+        assert!(m.contains("time column"), "unactionable: {m}");
+        // a time column on a count-unit spec is rejected
+        let mut s = WindowSpec::tumbling_rows(4);
+        s.time_column = Some("ts".into());
+        let m = format!("{:#}", s.validate(&aggs).err().unwrap());
+        assert!(m.contains("counts rows"), "unactionable: {m}");
+        // well-formed time specs pass, size/step guards still apply
+        WindowSpec::tumbling_time("ts", 1000).validate(&aggs).unwrap();
+        WindowSpec::sliding_time("ts", 1000, 250).validate(&aggs).unwrap();
+        assert!(WindowSpec::tumbling_time("ts", 0).validate(&aggs).is_err());
+        assert!(WindowSpec::sliding_time("ts", 2, 5).validate(&aggs).is_err());
+        // eviction is irrelevant for event time: min under Retract is fine
+        WindowSpec::sliding_time("ts", 10, 4)
+            .with_eviction(Eviction::Retract)
+            .validate(&[AggSpec::new("x", RAgg::Min)])
+            .unwrap();
+    }
+
+    #[test]
+    fn event_time_oracle_matches_manual_filters() {
+        // 20 rows, timestamps 3ms apart starting at 5 — deliberately not
+        // aligned to any window boundary, keys cycling mod 3.
+        let n = 20usize;
+        let t = Table::from_columns(vec![
+            ("k", Array::from_i64((0..n as i64).map(|i| i % 3).collect())),
+            ("ts", Array::from_ts((0..n as i64).map(|i| 5 + 3 * i).collect())),
+            ("v", Array::from_f64((0..n).map(|i| i as f64).collect())),
+        ])
+        .unwrap();
+        let aggs = [AggSpec::new("v", RAgg::Sum), AggSpec::new("v", RAgg::Count)];
+        for spec in [
+            WindowSpec::tumbling_time("ts", 10).with_ordinal("w"),
+            WindowSpec::sliding_time("ts", 12, 5).with_ordinal("w"),
+        ] {
+            let wins = windowed_groupby(&t, &["k"], &aggs, &spec).unwrap();
+            let ts = t.column_by_name("ts").unwrap().ts_values().unwrap().to_vec();
+            let spans = spec.time_spans(5, 5 + 3 * (n as i64 - 1));
+            let manual: Vec<(i64, Table)> = spans
+                .iter()
+                .filter_map(|&(j, a, b)| {
+                    let idx: Vec<usize> =
+                        (0..n).filter(|&i| a <= ts[i] && ts[i] < b).collect();
+                    if idx.is_empty() {
+                        return None;
+                    }
+                    Some((j, groupby_aggregate(&t.take(&idx), &["k"], &aggs).unwrap()))
+                })
+                .collect();
+            assert_eq!(wins.len(), manual.len(), "{spec:?}");
+            for (win, (j, want)) in wins.iter().zip(&manual) {
+                assert_eq!(win.num_rows(), want.num_rows());
+                assert_eq!(win.cell(0, win.num_columns() - 1), Scalar::Int64(*j));
+            }
+            // batching must not matter for event time
+            let batches = [t.slice(0, 7), t.slice(7, 1), t.slice(8, 12)];
+            let wins_b = windowed_groupby_stream(&batches, &["k"], &aggs, &spec).unwrap();
+            assert_eq!(wins.len(), wins_b.len());
+            for (a, b) in wins.iter().zip(&wins_b) {
+                assert_eq!(a, b, "batched oracle differs: {spec:?}");
+            }
+        }
+        // non-timestamp column and null timestamps are rejected
+        let spec = WindowSpec::tumbling_time("v", 10);
+        let m = format!("{:#}", windowed_groupby(&t, &["k"], &aggs, &spec).err().unwrap());
+        assert!(m.contains("expected timestamp"), "unactionable: {m}");
+        let tn = Table::from_columns(vec![
+            ("k", Array::from_i64(vec![1, 2])),
+            ("ts", Array::from_opt_ts(vec![Some(3), None])),
+            ("v", Array::from_f64(vec![1.0, 2.0])),
+        ])
+        .unwrap();
+        let spec = WindowSpec::tumbling_time("ts", 10);
+        let m = format!("{:#}", windowed_groupby(&tn, &["k"], &aggs, &spec).err().unwrap());
+        assert!(m.contains("null timestamp"), "unactionable: {m}");
     }
 }

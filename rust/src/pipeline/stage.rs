@@ -300,6 +300,157 @@ impl WindowMachine {
     }
 }
 
+/// Per-shard state machine for an event-time windowed keyed-aggregate
+/// stage ([`WindowUnit::Time`]).
+///
+/// Rows are routed by timestamp value into the epoch-aligned absolute
+/// spans of [`WindowSpec::time_spans`], each span holding an
+/// independent partial — no segment ring and no retraction, since a
+/// sliding row simply lands in every span containing it. The machine
+/// is watermark-free but demands the per-shard contract that
+/// timestamps arrive non-decreasing (and non-null): span `j` emits as
+/// soon as a timestamp at or past its end boundary is seen, and close
+/// flushes the rest in span order. Because the ordinal is the absolute
+/// span index `j`, shards agree on window identity regardless of how
+/// rows were partitioned — which is what lets the conformance tests
+/// compare the merged stream against the batch oracle byte-for-byte.
+struct TimeWindowMachine {
+    spec: WindowSpec,
+    plan: Arc<PartialAggPlan>,
+    /// Highest timestamp seen so far (per-shard order contract).
+    high: Option<i64>,
+    /// Open spans: absolute index `j` -> partial state.
+    open: std::collections::BTreeMap<i64, Table>,
+}
+
+impl TimeWindowMachine {
+    fn new(spec: WindowSpec, plan: Arc<PartialAggPlan>) -> TimeWindowMachine {
+        TimeWindowMachine { spec, plan, high: None, open: std::collections::BTreeMap::new() }
+    }
+
+    /// Absorb one received batch, pushing every span it completes.
+    fn ingest(&mut self, batch: &Table, keys: &[&str], outs: &mut Vec<Table>) -> Result<()> {
+        if batch.num_rows() == 0 {
+            return Ok(());
+        }
+        let col_name = self.spec.time_column.as_deref().expect("validated");
+        let col = batch.column_by_name(col_name)?;
+        let Some(ts) = col.ts_values() else {
+            bail!(
+                "event-time window: column {col_name:?} is {}, expected timestamp",
+                col.data_type()
+            );
+        };
+        let mut prev = self.high;
+        for (i, &t) in ts.iter().enumerate() {
+            if !col.is_valid(i) {
+                bail!("event-time window: null timestamp in column {col_name:?}");
+            }
+            if prev.is_some_and(|p| t < p) {
+                bail!(
+                    "event-time window: timestamp regressed ({} after {}) — \
+                     per-shard input must be time-ordered",
+                    crate::table::time::format_timestamp_ms(t),
+                    crate::table::time::format_timestamp_ms(prev.unwrap()),
+                );
+            }
+            prev = Some(t);
+        }
+        let (bmin, bmax) = (ts[0], ts[ts.len() - 1]);
+        for (j, start, end) in self.spec.time_spans(bmin, bmax) {
+            let idx: Vec<usize> =
+                (0..ts.len()).filter(|&i| start <= ts[i] && ts[i] < end).collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let p = self.plan.partial(&batch.take(&idx), keys)?;
+            let merged = self.plan.merge(self.open.remove(&j), &p, keys)?;
+            self.open.insert(j, merged);
+        }
+        self.high = prev;
+        // A span is complete once a timestamp at or past its end has
+        // been seen: later rows can only be >= that, hence outside it.
+        let high = self.high.unwrap();
+        let (s, p) = (self.spec.size as i64, self.spec.step as i64);
+        while let Some((&j, _)) = self.open.first_key_value() {
+            if j * p + s > high {
+                break;
+            }
+            let st = self.open.remove(&j).unwrap();
+            if st.num_rows() > 0 {
+                outs.push(self.finish_window(j, &st, keys)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Upstream closed: flush every still-open span in span order.
+    fn flush(&mut self, keys: &[&str], outs: &mut Vec<Table>) -> Result<()> {
+        while let Some((j, st)) = self.open.pop_first() {
+            if st.num_rows() > 0 {
+                outs.push(self.finish_window(j, &st, keys)?);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish_window(&self, j: i64, st: &Table, keys: &[&str]) -> Result<Table> {
+        let mut out = self.plan.finish(keys, st)?;
+        if let Some(name) = &self.spec.ordinal {
+            out = out.with_column(name, Array::from_i64(vec![j; out.num_rows()]))?;
+        }
+        Ok(out)
+    }
+
+    /// Buffered state rows across open spans.
+    fn state_rows(&self) -> u64 {
+        self.open.values().map(|t| t.num_rows() as u64).sum()
+    }
+
+    /// Buffered state bytes across open spans.
+    fn state_bytes(&self) -> u64 {
+        self.open.values().map(|t| t.nbytes() as u64).sum()
+    }
+}
+
+/// Trigger dispatch for the windowed keyed-aggregate shard loop: count
+/// triggers drive a [`WindowMachine`], event time a
+/// [`TimeWindowMachine`], same ingest/flush surface.
+enum AnyWindowMachine {
+    Count(WindowMachine),
+    Time(TimeWindowMachine),
+}
+
+impl AnyWindowMachine {
+    fn ingest(&mut self, batch: &Table, keys: &[&str], outs: &mut Vec<Table>) -> Result<()> {
+        match self {
+            AnyWindowMachine::Count(m) => m.ingest(batch, keys, outs),
+            AnyWindowMachine::Time(m) => m.ingest(batch, keys, outs),
+        }
+    }
+
+    fn flush(&mut self, keys: &[&str], outs: &mut Vec<Table>) -> Result<()> {
+        match self {
+            AnyWindowMachine::Count(m) => m.flush(keys, outs),
+            AnyWindowMachine::Time(m) => m.flush(keys, outs),
+        }
+    }
+
+    fn state_rows(&self) -> u64 {
+        match self {
+            AnyWindowMachine::Count(m) => m.state_rows(),
+            AnyWindowMachine::Time(m) => m.state_rows(),
+        }
+    }
+
+    fn state_bytes(&self) -> u64 {
+        match self {
+            AnyWindowMachine::Count(m) => m.state_bytes(),
+            AnyWindowMachine::Time(m) => m.state_bytes(),
+        }
+    }
+}
+
 impl Pipeline {
     /// Start building a pipeline with the given display name.
     pub fn new(name: impl Into<String>) -> Pipeline {
@@ -371,19 +522,29 @@ impl Pipeline {
     /// Windowed variant of [`keyed_aggregate`](Self::keyed_aggregate):
     /// instead of one flush on close, each shard emits an aggregate
     /// table per [`WindowSpec`] window of its routed input — the
-    /// continuous-dashboard operator, no watermark machinery, count
-    /// triggers only.
+    /// continuous-dashboard operator, no watermark machinery; count
+    /// triggers ([`WindowUnit::Rows`]/[`WindowUnit::Batches`]) and
+    /// event-time triggers ([`WindowUnit::Time`]).
     ///
-    /// Tumbling windows reset their state at every boundary and accept
-    /// any decomposable aggregation. Sliding windows shed expired input
-    /// per the spec's [`Eviction`] policy: sum/count/mean subtract
-    /// exactly (the retractable [`PartialAggPlan`]), min/max rebuild
-    /// each window from a bounded segment ring, and requesting
-    /// [`Eviction::Retract`] for a non-subtractable aggregation fails
-    /// when the pipeline is built — before any thread spawns — as do
-    /// zero sizes and `step > size` (see [`WindowSpec::validate`]).
-    /// Stream close flushes the oldest still-open window truncated at
-    /// the final unit.
+    /// Count windows: tumbling windows reset their state at every
+    /// boundary and accept any decomposable aggregation. Sliding
+    /// windows shed expired input per the spec's [`Eviction`] policy:
+    /// sum/count/mean subtract exactly (the retractable
+    /// [`PartialAggPlan`]), min/max rebuild each window from a bounded
+    /// segment ring, and requesting [`Eviction::Retract`] for a
+    /// non-subtractable aggregation fails when the pipeline is built —
+    /// before any thread spawns — as do zero sizes and `step > size`
+    /// (see [`WindowSpec::validate`]). Stream close flushes the oldest
+    /// still-open window truncated at the final unit.
+    ///
+    /// Event-time windows (built with [`WindowSpec::tumbling_time`] /
+    /// [`WindowSpec::sliding_time`]) cut the epoch-aligned absolute
+    /// spans `[j·step, j·step + size)` ms on the spec's Timestamp
+    /// column instead of counting arrival; each shard's routed input
+    /// must be non-null and time-ordered, a span emits once a
+    /// timestamp at or past its end is seen, and the ordinal column
+    /// (when requested) carries the absolute span index `j` so shards
+    /// agree on window identity (see [`WindowSpec::time_spans`]).
     pub fn keyed_aggregate_windowed(
         self,
         name: impl Into<String>,
@@ -648,7 +809,10 @@ impl Pipeline {
                             None => Ok((PartialAggPlan::new(&aggs)?, false)),
                             Some(w) => {
                                 w.validate(&aggs)?;
-                                let retract = !w.is_tumbling()
+                                // Event time keeps independent per-span
+                                // partials; nothing ever retracts.
+                                let retract = w.unit != WindowUnit::Time
+                                    && !w.is_tumbling()
                                     && match w.eviction {
                                         Eviction::Retract => true,
                                         Eviction::Rebuild => false,
@@ -750,11 +914,21 @@ impl Pipeline {
                                             // Windowed: emit continuously at
                                             // window boundaries, flush the
                                             // open tail at close.
-                                            let mut machine = WindowMachine::new(
-                                                wspec,
-                                                plan.clone(),
-                                                retract,
-                                            );
+                                            let mut machine =
+                                                if wspec.unit == WindowUnit::Time {
+                                                    AnyWindowMachine::Time(
+                                                        TimeWindowMachine::new(
+                                                            wspec,
+                                                            plan.clone(),
+                                                        ),
+                                                    )
+                                                } else {
+                                                    AnyWindowMachine::Count(WindowMachine::new(
+                                                        wspec,
+                                                        plan.clone(),
+                                                        retract,
+                                                    ))
+                                                };
                                             let mut outs: Vec<Table> = Vec::new();
                                             while let Some(batch) = recv_next(&my_shared, &my_rx)
                                             {
@@ -1108,6 +1282,135 @@ mod tests {
             let got = windowed_run(batches, &aggs, spec.clone());
             assert_eq!(got, want, "stream windows != batch oracle for {spec:?}");
         }
+    }
+
+    /// Like [`keyed_batch`] plus a non-decreasing Timestamp column:
+    /// row `offset + i` carries `ts = 5 + 3·(offset + i)` ms, so window
+    /// boundaries land mid-batch and between batches.
+    fn keyed_ts_batch(offset: usize, n: usize) -> Table {
+        let k: Vec<i64> = (0..n).map(|i| ((offset + i) % 7) as i64).collect();
+        let ts: Vec<i64> = (0..n).map(|i| 5 + 3 * (offset + i) as i64).collect();
+        let v: Vec<f64> = (0..n).map(|i| ((offset + i) % 13) as f64).collect();
+        Table::from_columns(vec![
+            ("k", Array::from_i64(k)),
+            ("ts", Array::from_ts(ts)),
+            ("v", Array::from_f64(v)),
+        ])
+        .unwrap()
+    }
+
+    fn ts_stream_batches() -> Vec<Table> {
+        [(0usize, 13usize), (13, 7), (20, 22), (42, 5), (47, 30)]
+            .iter()
+            .map(|&(off, n)| keyed_ts_batch(off, n))
+            .collect()
+    }
+
+    #[test]
+    fn event_time_windows_match_the_batch_oracle() {
+        use crate::ops::local::window::windowed_groupby_stream;
+        let aggs = [
+            AggSpec::new("v", Agg::Sum),
+            AggSpec::new("v", Agg::Count),
+            AggSpec::new("v", Agg::Mean),
+            AggSpec::new("v", Agg::Min),
+            AggSpec::new("v", Agg::Max),
+        ];
+        let specs = [
+            WindowSpec::tumbling_time("ts", 60),
+            WindowSpec::sliding_time("ts", 90, 30),
+            WindowSpec::sliding_time("ts", 70, 30), // step does not divide size
+        ];
+        for spec in specs {
+            let spec = spec.with_ordinal("w");
+            let batches = ts_stream_batches();
+            let want: Vec<Vec<String>> =
+                windowed_groupby_stream(&batches, &["k"], &aggs, &spec)
+                    .unwrap()
+                    .iter()
+                    .map(|t| {
+                        let mut rows: Vec<String> =
+                            (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect();
+                        rows.sort();
+                        rows
+                    })
+                    .collect();
+            assert!(want.len() > 1, "oracle must emit multiple windows: {spec:?}");
+            let got = windowed_run(batches, &aggs, spec.clone());
+            assert_eq!(got, want, "event-time stream != batch oracle for {spec:?}");
+        }
+    }
+
+    #[test]
+    fn event_time_sharded_windows_cover_the_oracle() {
+        // With 3 agg shards the ordinal is the absolute span index, so
+        // the merged emissions equal the oracle's rows regardless of
+        // how keys were partitioned.
+        use crate::ops::local::window::windowed_groupby_stream;
+        let aggs = [AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)];
+        let spec = WindowSpec::sliding_time("ts", 90, 30).with_ordinal("w");
+        let batches = ts_stream_batches();
+        let mut want: Vec<String> = windowed_groupby_stream(&batches, &["k"], &aggs, &spec)
+            .unwrap()
+            .iter()
+            .flat_map(|t| (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect::<Vec<_>>())
+            .collect();
+        want.sort();
+        let run = Pipeline::new("t")
+            .source("gen", 1, move |_, emit| {
+                for b in &batches {
+                    emit(b.clone())?;
+                }
+                Ok(())
+            })
+            .keyed_aggregate_windowed("win", 3, &["k"], &aggs, spec)
+            .run(4)
+            .unwrap();
+        let mut got: Vec<String> = run
+            .output
+            .iter()
+            .flat_map(|t| (0..t.num_rows()).map(|i| format!("{:?}", t.row(i))).collect::<Vec<_>>())
+            .collect();
+        got.sort();
+        assert_eq!(got, want, "merged sharded emissions != oracle rows");
+    }
+
+    #[test]
+    fn event_time_guards_reject_bad_streams() {
+        let aggs = vec![AggSpec::new("v", Agg::Sum)];
+        // timestamps regress between batches
+        let res = Pipeline::new("t")
+            .source("gen", 1, |_, emit| {
+                emit(keyed_ts_batch(10, 5))?;
+                emit(keyed_ts_batch(0, 5))
+            })
+            .keyed_aggregate_windowed("win", 1, &["k"], &aggs, WindowSpec::tumbling_time("ts", 60))
+            .run(2);
+        let m = format!("{:#}", res.err().expect("regression must fail"));
+        assert!(m.contains("regressed"), "unactionable: {m}");
+        // window column is not a timestamp
+        let res = Pipeline::new("t")
+            .source("gen", 1, |_, emit| emit(keyed_ts_batch(0, 5)))
+            .keyed_aggregate_windowed("win", 1, &["k"], &aggs, WindowSpec::tumbling_time("v", 60))
+            .run(2);
+        let m = format!("{:#}", res.err().expect("type mismatch must fail"));
+        assert!(m.contains("expected timestamp"), "unactionable: {m}");
+        // null timestamps are rejected
+        let res = Pipeline::new("t")
+            .source("gen", 1, |_, emit| {
+                emit(
+                    Table::from_columns(vec![
+                        ("k", Array::from_i64(vec![1, 2])),
+                        ("ts", Array::from_opt_ts(vec![Some(3), None])),
+                        ("v", Array::from_f64(vec![1.0, 2.0])),
+                    ])
+                    .unwrap(),
+                )
+            })
+            .keyed_aggregate_windowed("win", 1, &["k"], &aggs, WindowSpec::tumbling_time("ts", 60))
+            .run(2);
+        let m = format!("{:#}", res.err().expect("null ts must fail"));
+        assert!(m.contains("null timestamp"), "unactionable: {m}");
     }
 
     #[test]

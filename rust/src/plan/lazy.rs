@@ -510,6 +510,69 @@ mod tests {
         assert!(frame.collect_stream(2, 0, 2).is_err(), "zero batch rows");
     }
 
+    fn ts_df() -> DataFrame {
+        let n = 240usize;
+        DataFrame::from_columns(vec![
+            ("k", Array::from_i64((0..n).map(|i| (i % 7) as i64).collect())),
+            ("ts", Array::from_ts((0..n as i64).map(|i| 1000 + 10 * i).collect())),
+            ("v", Array::from_f64((0..n).map(|i| (i % 11) as f64).collect())),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn explain_pushes_timestamp_filter_below_the_shuffle() {
+        // The HAVING-style filter on the Timestamp group key must sink
+        // below the group-by, landing under the shuffle edge the
+        // lowering inserts.
+        let frame = ts_df()
+            .lazy()
+            .groupby(&["ts"], &[AggSpec::new("v", Agg::Sum)])
+            .filter("ts", Cmp::Ge, Scalar::Timestamp(2200));
+        let ex = frame.explain();
+        let shuffle_line = ex.lines().position(|l| l.contains("Shuffle")).unwrap();
+        let filter_line = ex
+            .lines()
+            .position(|l| l.contains("filter ts"))
+            .unwrap_or_else(|| panic!("no timestamp filter in plan:\n{ex}"));
+        assert!(
+            filter_line > shuffle_line,
+            "timestamp filter must sit below the shuffle:\n{ex}"
+        );
+        // and the literal renders as ISO-8601, not raw ms
+        assert!(ex.contains("1970-01-01T00:00:02.200Z"), "{ex}");
+        let opt = frame.collect().unwrap();
+        let naive = frame.collect_unoptimized().unwrap();
+        assert_eq!(canon(opt.table()), canon(naive.table()));
+    }
+
+    #[test]
+    fn always_true_timestamp_filter_vanishes_from_explain() {
+        let frame = ts_df().lazy().filter("ts", Cmp::Ge, Scalar::Timestamp(0));
+        let ex = frame.explain();
+        assert!(!ex.contains("filter"), "total time filter must be pruned:\n{ex}");
+        assert_eq!(
+            canon(frame.collect().unwrap().table()),
+            canon(frame.collect_unoptimized().unwrap().table())
+        );
+    }
+
+    #[test]
+    fn event_time_window_plan_matches_unoptimized() {
+        // 240 rows spaced 10 ms starting at 1000 → tumbling 600 ms spans
+        let spec = WindowSpec::tumbling_time("ts", 600).with_ordinal("__w");
+        let frame = ts_df()
+            .lazy()
+            .window(&["k"], &[AggSpec::new("v", Agg::Sum)], spec);
+        let out = frame.collect().unwrap();
+        let naive = frame.collect_unoptimized().unwrap();
+        assert_eq!(canon(out.table()), canon(naive.table()));
+        assert!(out.num_rows() > 7, "multiple windows × keys expected");
+        // explain names the trigger column
+        let ex = frame.explain();
+        assert!(ex.contains("Time on ts"), "{ex}");
+    }
+
     #[test]
     fn window_plan_collects_per_window_aggregates() {
         let spec = WindowSpec::tumbling_rows(60).with_ordinal("__w");

@@ -283,12 +283,16 @@ impl LogicalPlan {
                 Some(s) => format!("DropDuplicates[{}]", s.join(",")),
             },
             LogicalPlan::Window { keys, aggs, spec, .. } => format!(
-                "Window[{}; {}; size={} step={} {:?}]",
+                "Window[{}; {}; size={} step={} {:?}{}]",
                 keys.join(","),
                 agg_list(aggs),
                 spec.size,
                 spec.step,
-                spec.unit
+                spec.unit,
+                match &spec.time_column {
+                    Some(c) => format!(" on {c}"),
+                    None => String::new(),
+                }
             ),
         }
     }

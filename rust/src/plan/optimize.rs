@@ -7,6 +7,13 @@
 //!    with (projection, map on another column, sort, set ops, group-by
 //!    on a key column, dedup, and the legal join sides), moving row
 //!    reduction below the shuffle edges the lowering will insert.
+//!    A sub-pass then prunes Timestamp comparison filters the scan's
+//!    time range already decides: scans carry min/max ms column stats
+//!    ([`time_range`]), an always-true temporal filter disappears from
+//!    the plan, and an always-false one drives the size estimate to
+//!    zero. Only the filter node itself is ever removed — subtrees stay
+//!    intact, so the plan *shape* every rank derives independently is
+//!    unaffected (see [`join_strategy_bytes`]).
 //! 2. **Projection pruning** — a top-down required-column walk narrows
 //!    every `Scan` to the columns some narrowing ancestor (Select,
 //!    GroupBy, Unique, join keys…) actually observes, so shuffles move
@@ -24,6 +31,7 @@ use crate::comm::profile::{LinkCost, LinkProfile};
 use crate::ops::local::groupby::PartialAggPlan;
 use crate::ops::local::join::JoinType;
 use crate::ops::local::Cmp;
+use crate::table::Scalar;
 use std::collections::{BTreeSet, HashMap};
 
 /// Inputs the cost-based rules see: the execution world size and the
@@ -178,9 +186,17 @@ fn compute_stats(plan: &LogicalPlan, memo: &mut Memo) -> Stats {
             let keep = (columns.len() as f64 / ncols as f64).min(1.0);
             Stats { rows: s.rows, bytes: s.bytes * keep }
         }
-        LogicalPlan::Filter { input, op, .. } => {
+        LogicalPlan::Filter { input, column, op, lit } => {
             let s = memo.stats(input);
-            let sel = selectivity(*op);
+            let sel = match lit {
+                // Range-aware estimate when the scan's time range is
+                // known; generic heuristic otherwise.
+                Scalar::Timestamp(t) => match time_range(input, column) {
+                    Some((lo, hi)) => time_selectivity(lo, hi, *op, *t),
+                    None => selectivity(*op),
+                },
+                _ => selectivity(*op),
+            };
             Stats { rows: s.rows * sel, bytes: s.bytes * sel }
         }
         LogicalPlan::MapF64 { input, .. } | LogicalPlan::MapUtf8 { input, .. } => {
@@ -232,10 +248,185 @@ pub fn optimize(plan: &LogicalPlan, env: &CostEnv) -> LogicalPlan {
             break;
         }
     }
+    let p = prune_time_filters(p);
     // One memo per pass (see `Memo` for why they cannot be shared
     // across passes).
     let p = prune(p, None, &mut Memo::new());
     resolve(p, env)
+}
+
+// ---- temporal range stats ----------------------------------------------
+
+/// Conservative `[min, max]` ms bound on a Timestamp column's values at
+/// this node, traced through value-preserving operators down to the
+/// scan(s) producing the column. `None` when the column cannot be
+/// traced, is not a Timestamp, has nulls, or the scan is empty —
+/// callers then fall back to the generic heuristics. Sound as a
+/// *superset* bound: intermediate filters can only shrink the true
+/// range, never widen it.
+fn time_range(plan: &LogicalPlan, column: &str) -> Option<(i64, i64)> {
+    use LogicalPlan as LP;
+    match plan {
+        LP::Scan { table, projection } => {
+            if let Some(cols) = projection {
+                if !cols.iter().any(|c| c == column) {
+                    return None;
+                }
+            }
+            let col = table.column_by_name(column).ok()?;
+            let vals = col.ts_values()?;
+            if vals.is_empty() || (0..vals.len()).any(|i| !col.is_valid(i)) {
+                return None;
+            }
+            let (mut lo, mut hi) = (i64::MAX, i64::MIN);
+            for &v in vals {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            Some((lo, hi))
+        }
+        // Row-subset and column-preserving operators keep every
+        // surviving value inside the input's bound.
+        LP::Select { input, columns } if columns.iter().any(|c| c == column) => {
+            time_range(input, column)
+        }
+        LP::Filter { input, .. } | LP::Sort { input, .. } | LP::DropDuplicates { input, .. } => {
+            time_range(input, column)
+        }
+        LP::MapF64 { input, column: mc, .. } | LP::MapUtf8 { input, column: mc, .. }
+            if mc != column =>
+        {
+            time_range(input, column)
+        }
+        LP::Unique { input, keys } if keys.iter().any(|k| k == column) => {
+            time_range(input, column)
+        }
+        LP::GroupBy { input, keys, .. } if keys.iter().any(|k| k == column) => {
+            time_range(input, column)
+        }
+        // A set operation's survivors each come from one side.
+        LP::SetOp { left, right, .. } => {
+            let (a, b) = (time_range(left, column)?, time_range(right, column)?);
+            Some((a.0.min(b.0), a.1.max(b.1)))
+        }
+        // Joins (renaming), windows and aggregate outputs: untraced.
+        _ => None,
+    }
+}
+
+/// Whether `value <op> t` is decided by the bound alone: `Some(true)`
+/// when every value in `[lo, hi]` satisfies it, `Some(false)` when none
+/// does, `None` when the range straddles the cut.
+fn range_verdict(lo: i64, hi: i64, op: Cmp, t: i64) -> Option<bool> {
+    let (all, none) = match op {
+        Cmp::Eq => (lo == t && hi == t, t < lo || t > hi),
+        Cmp::Ne => (t < lo || t > hi, lo == t && hi == t),
+        Cmp::Lt => (hi < t, lo >= t),
+        Cmp::Le => (hi <= t, lo > t),
+        Cmp::Gt => (lo > t, hi <= t),
+        Cmp::Ge => (lo >= t, hi < t),
+    };
+    match (all, none) {
+        (true, _) => Some(true),
+        (_, true) => Some(false),
+        _ => None,
+    }
+}
+
+/// Range-aware selectivity for a Timestamp comparison: the fraction of
+/// the traced `[lo, hi]` ms span the predicate's accepting interval
+/// covers, under a uniform-density assumption. Exact 0 and 1 at the
+/// extremes, so disjoint time filters cost like empty inputs.
+fn time_selectivity(lo: i64, hi: i64, op: Cmp, t: i64) -> f64 {
+    let (lo_f, hi_f, t_f) = (lo as f64, hi as f64, t as f64);
+    let span = hi_f - lo_f + 1.0;
+    let frac = match op {
+        Cmp::Lt => (t_f - lo_f) / span,
+        Cmp::Le => (t_f - lo_f + 1.0) / span,
+        Cmp::Gt => (hi_f - t_f) / span,
+        Cmp::Ge => (hi_f - t_f + 1.0) / span,
+        Cmp::Eq => {
+            if t < lo || t > hi {
+                0.0
+            } else {
+                1.0 / span
+            }
+        }
+        Cmp::Ne => {
+            if t < lo || t > hi {
+                1.0
+            } else {
+                1.0 - 1.0 / span
+            }
+        }
+    };
+    frac.clamp(0.0, 1.0)
+}
+
+/// Sub-pass of filter pushdown: drop every Timestamp filter the traced
+/// time range proves always-true (the column is also known null-free
+/// there, so dropping cannot resurrect null rows). Always-false filters
+/// are kept — removing whole subtrees would let rank-local data change
+/// the plan shape other ranks derived independently — but their
+/// estimated size collapses to zero via [`time_selectivity`], which is
+/// what the costed rules read.
+fn prune_time_filters(plan: LogicalPlan) -> LogicalPlan {
+    use LogicalPlan as LP;
+    let plan = match plan {
+        scan @ LP::Scan { .. } => return scan,
+        LP::Select { input, columns } => {
+            LP::Select { input: Box::new(prune_time_filters(*input)), columns }
+        }
+        LP::Filter { input, column, op, lit } => {
+            LP::Filter { input: Box::new(prune_time_filters(*input)), column, op, lit }
+        }
+        LP::MapF64 { input, column, f } => {
+            LP::MapF64 { input: Box::new(prune_time_filters(*input)), column, f }
+        }
+        LP::MapUtf8 { input, column, f } => {
+            LP::MapUtf8 { input: Box::new(prune_time_filters(*input)), column, f }
+        }
+        LP::Sort { input, keys } => {
+            LP::Sort { input: Box::new(prune_time_filters(*input)), keys }
+        }
+        LP::GroupBy { input, keys, aggs, strategy } => {
+            LP::GroupBy { input: Box::new(prune_time_filters(*input)), keys, aggs, strategy }
+        }
+        LP::Unique { input, keys } => {
+            LP::Unique { input: Box::new(prune_time_filters(*input)), keys }
+        }
+        LP::DropDuplicates { input, subset } => {
+            LP::DropDuplicates { input: Box::new(prune_time_filters(*input)), subset }
+        }
+        LP::Window { input, keys, aggs, spec } => {
+            LP::Window { input: Box::new(prune_time_filters(*input)), keys, aggs, spec }
+        }
+        LP::SetOp { kind, left, right } => LP::SetOp {
+            kind,
+            left: Box::new(prune_time_filters(*left)),
+            right: Box::new(prune_time_filters(*right)),
+        },
+        LP::Join { left, right, left_on, right_on, jt, algo, strategy } => LP::Join {
+            left: Box::new(prune_time_filters(*left)),
+            right: Box::new(prune_time_filters(*right)),
+            left_on,
+            right_on,
+            jt,
+            algo,
+            strategy,
+        },
+    };
+    if let LP::Filter { input, column, op, lit } = plan {
+        if let Scalar::Timestamp(t) = &lit {
+            if let Some((lo, hi)) = time_range(&input, &column) {
+                if range_verdict(lo, hi, op, *t) == Some(true) {
+                    return *input;
+                }
+            }
+        }
+        return LP::Filter { input, column, op, lit };
+    }
+    plan
 }
 
 // ---- pass 1: filter pushdown -------------------------------------------
@@ -1109,6 +1300,129 @@ mod tests {
         let mut bytes = Vec::new();
         join_strategy_bytes(&opt, &mut bytes);
         assert_eq!(bytes.len(), 2, "both joins resolved through the memoized pass");
+    }
+
+    /// Scan with a null-free Timestamp column spanning [1000, 1000+10n).
+    fn ts_scan(rows: usize) -> LogicalPlan {
+        let n = rows;
+        LogicalPlan::Scan {
+            table: Arc::new(
+                Table::from_columns(vec![
+                    ("k", Array::from_i64((0..n as i64).map(|i| i % 5).collect())),
+                    ("ts", Array::from_ts((0..n as i64).map(|i| 1000 + 10 * i).collect())),
+                    ("v", Array::from_f64((0..n).map(|i| i as f64).collect())),
+                ])
+                .unwrap(),
+            ),
+            projection: None,
+        }
+    }
+
+    fn ts_filter(input: LogicalPlan, op: Cmp, t: i64) -> LogicalPlan {
+        LogicalPlan::Filter {
+            input: Box::new(input),
+            column: "ts".into(),
+            op,
+            lit: Scalar::Timestamp(t),
+        }
+    }
+
+    #[test]
+    fn temporal_range_prunes_always_true_filters() {
+        // range is [1000, 1090]; ts >= 1000 keeps everything → pruned
+        let plan = ts_filter(ts_scan(10), Cmp::Ge, 1000);
+        let opt = optimize(&plan, &CostEnv::local());
+        assert!(
+            !opt.render().contains("Filter"),
+            "always-true time filter must be pruned:\n{}",
+            opt.render()
+        );
+        let want = plan.execute_naive().unwrap();
+        let got = opt.execute_naive().unwrap();
+        assert_eq!(
+            crate::table::ipc::serialize(&got),
+            crate::table::ipc::serialize(&want),
+            "pruning changed the result"
+        );
+        // a straddling cut stays
+        let opt = optimize(&ts_filter(ts_scan(10), Cmp::Ge, 1050), &CostEnv::local());
+        assert!(opt.render().contains("Filter"), "mid-range filter must stay:\n{}", opt.render());
+        // an always-false cut also stays (plan shape is rank-agreed),
+        // but its estimate collapses to zero rows
+        let dead = ts_filter(ts_scan(10), Cmp::Gt, 5000);
+        let opt = optimize(&dead, &CostEnv::local());
+        assert!(opt.render().contains("Filter"), "{}", opt.render());
+        assert_eq!(stats(&dead).rows, 0.0, "disjoint time filter must cost as empty");
+        // with nulls in the column the filter is load-bearing: kept
+        let nullable = LogicalPlan::Filter {
+            input: Box::new(LogicalPlan::Scan {
+                table: Arc::new(
+                    Table::from_columns(vec![(
+                        "ts",
+                        Array::from_opt_ts(vec![Some(1000), None, Some(2000)]),
+                    )])
+                    .unwrap(),
+                ),
+                projection: None,
+            }),
+            column: "ts".into(),
+            op: Cmp::Ge,
+            lit: Scalar::Timestamp(0),
+        };
+        let opt = optimize(&nullable, &CostEnv::local());
+        assert!(opt.render().contains("Filter"), "null-dropping filter must stay");
+        let want = nullable.execute_naive().unwrap();
+        assert_eq!(want.num_rows(), 2);
+        assert_eq!(
+            crate::table::ipc::serialize(&opt.execute_naive().unwrap()),
+            crate::table::ipc::serialize(&want)
+        );
+    }
+
+    #[test]
+    fn temporal_pruning_traces_through_pushdown_targets() {
+        // The filter sits above a sort over a union; after pushdown it
+        // lands on both scans, and the trace through Sort/SetOp still
+        // proves it total — both copies disappear.
+        let plan = ts_filter(
+            LogicalPlan::Sort {
+                input: Box::new(LogicalPlan::SetOp {
+                    kind: SetOpKind::UnionAll,
+                    left: Box::new(ts_scan(8)),
+                    right: Box::new(ts_scan(4)),
+                }),
+                keys: vec![SortKey::asc("ts")],
+            },
+            Cmp::Le,
+            9999,
+        );
+        let opt = optimize(&plan, &CostEnv::local());
+        assert!(!opt.render().contains("Filter"), "{}", opt.render());
+        assert_eq!(
+            crate::table::ipc::serialize(&opt.execute_naive().unwrap()),
+            crate::table::ipc::serialize(&plan.execute_naive().unwrap())
+        );
+    }
+
+    #[test]
+    fn time_selectivity_tracks_the_overlap_fraction() {
+        // range [0, 99]: ts < 50 keeps about half
+        assert!((time_selectivity(0, 99, Cmp::Lt, 50) - 0.5).abs() < 0.02);
+        assert_eq!(time_selectivity(0, 99, Cmp::Lt, 0), 0.0);
+        assert_eq!(time_selectivity(0, 99, Cmp::Ge, 0), 1.0);
+        assert_eq!(time_selectivity(0, 99, Cmp::Eq, 500), 0.0);
+        assert_eq!(time_selectivity(0, 99, Cmp::Ne, 500), 1.0);
+        // stats flow through: a narrow cut shrinks harder than the
+        // generic heuristic would
+        let narrow = stats(&ts_filter(ts_scan(100), Cmp::Ge, 1900));
+        let wide = stats(&ts_filter(ts_scan(100), Cmp::Ge, 1100));
+        assert!(narrow.rows < wide.rows, "{} !< {}", narrow.rows, wide.rows);
+        // verdicts at the boundaries
+        assert_eq!(range_verdict(10, 20, Cmp::Le, 20), Some(true));
+        assert_eq!(range_verdict(10, 20, Cmp::Lt, 20), None);
+        assert_eq!(range_verdict(10, 20, Cmp::Gt, 20), Some(false));
+        assert_eq!(range_verdict(10, 20, Cmp::Eq, 15), None);
+        assert_eq!(range_verdict(15, 15, Cmp::Eq, 15), Some(true));
     }
 
     #[test]

@@ -609,12 +609,16 @@ impl PhysicalPlan {
                     out,
                     indent,
                     format!(
-                        "WindowAgg[{}; {}; size={} step={} {:?}]",
+                        "WindowAgg[{}; {}; size={} step={} {:?}{}]",
                         keys.join(","),
                         agg_list(aggs),
                         spec.size,
                         spec.step,
-                        spec.unit
+                        spec.unit,
+                        match &spec.time_column {
+                            Some(c) => format!(" on {c}"),
+                            None => String::new(),
+                        }
                     ),
                 );
                 line(out, indent + 1, format!("Shuffle[hash {}]", keys.join(",")));

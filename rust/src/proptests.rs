@@ -23,11 +23,21 @@ pub fn arb_table(rng: &mut Rng, size: usize) -> Table {
         })
         .collect();
     let flag: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+    let ts: Vec<Option<i64>> = (0..n)
+        .map(|_| {
+            if rng.bool(0.1) {
+                None
+            } else {
+                Some(rng.gen_range(200_000) as i64 * 45_000 - 1_000_000_000)
+            }
+        })
+        .collect();
     Table::from_columns(vec![
         ("id", Array::from_opt_i64(id)),
         ("score", Array::from_opt_f64(score)),
         ("name", Array::from_strs(&name)),
         ("flag", Array::from_bools(flag)),
+        ("ts", Array::from_opt_ts(ts)),
     ])
     .unwrap()
 }
@@ -74,6 +84,52 @@ fn prop_csv_roundtrip_preserves_cells() {
                 if rt.cell(r, c) != t.cell(r, c) {
                     return Err(format!("cell ({r},{c}): {:?} != {:?}", rt.cell(r, c), t.cell(r, c)));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_timestamp_text_and_csv_roundtrip() {
+    use crate::table::time::{format_timestamp_ms, parse_timestamp_ms};
+    use crate::table::DataType;
+    // the civil range the 4-digit-year text format can express
+    const LO: i64 = -62_135_596_800_000; // 0001-01-01T00:00:00Z
+    const HI: i64 = 253_402_300_799_999; // 9999-12-31T23:59:59.999Z
+    check(Config::default().cases(40).max_size(60), "timestamp roundtrip", |rng, size| {
+        let span = (HI - LO) as u64;
+        // text: format → parse is the identity
+        for _ in 0..20 {
+            let ms = LO + rng.gen_range(span) as i64;
+            let s = format_timestamp_ms(ms);
+            if parse_timestamp_ms(&s) != Some(ms) {
+                return Err(format!("text roundtrip broke: {ms} → {s:?}"));
+            }
+        }
+        // CSV: write → read re-infers Timestamp and preserves cells
+        // (row 0 is always non-null so inference has a specimen)
+        let n = rng.usize_in(1, size + 2);
+        let ts: Vec<Option<i64>> = (0..n)
+            .map(|i| {
+                if i > 0 && rng.bool(0.2) {
+                    None
+                } else {
+                    Some(LO + rng.gen_range(span) as i64)
+                }
+            })
+            .collect();
+        let t = Table::from_columns(vec![("ts", Array::from_opt_ts(ts))]).unwrap();
+        let mut buf = Vec::new();
+        csv::write_csv_to(&t, &mut buf, &csv::CsvOptions::default()).map_err(|e| e.to_string())?;
+        let rt =
+            csv::read_csv_from(&buf[..], &csv::CsvOptions::default()).map_err(|e| e.to_string())?;
+        if rt.column(0).data_type() != DataType::Timestamp {
+            return Err(format!("CSV re-inference lost the type: {}", rt.column(0).data_type()));
+        }
+        for r in 0..t.num_rows() {
+            if rt.cell(r, 0) != t.cell(r, 0) {
+                return Err(format!("cell {r}: {:?} != {:?}", rt.cell(r, 0), t.cell(r, 0)));
             }
         }
         Ok(())
@@ -252,8 +308,12 @@ fn prop_morsel_sort_matches_whole_partition() {
     use crate::ops::local::sort::{sort_indices, sort_indices_morsel, SortKey};
     check(Config::default().cases(30).max_size(120), "morsel sort == whole sort", |rng, size| {
         let t = arb_table(rng, size);
-        let keys =
-            [SortKey::asc("name"), SortKey::desc("id"), SortKey::asc("score")];
+        let keys = [
+            SortKey::asc("name"),
+            SortKey::desc("id"),
+            SortKey::asc("score"),
+            SortKey::desc("ts"),
+        ];
         let whole = sort_indices(&t, &keys).map_err(|e| e.to_string())?;
         for (cfg, budget) in morsel_scenarios(rng) {
             let got =

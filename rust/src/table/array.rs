@@ -1,6 +1,6 @@
 //! Columnar arrays: the unit of vectorised execution.
 //!
-//! Five physical layouts over four logical [`DataType`]s:
+//! Six physical layouts over five logical [`DataType`]s:
 //! * `Int64`   — `Vec<i64>` values + optional validity bitmap
 //! * `Float64` — `Vec<f64>` values + optional validity bitmap
 //! * `Utf8`    — Arrow-style `offsets: Vec<u32>` + `bytes: Vec<u8>` + bitmap
@@ -11,6 +11,10 @@
 //!   it. Hot kernels (row hash, group-by/unique probes, shuffle wire)
 //!   stay in u32 code space instead of re-touching string bytes.
 //! * `Bool`    — `Vec<bool>` values + optional validity bitmap
+//! * `Timestamp` — `Vec<i64>` milliseconds since the Unix epoch (UTC)
+//!   + optional validity bitmap; same physical shape as `Int64` but a
+//!   distinct logical type (sorts and hashes like an `i64`, displays
+//!   and casts as ISO-8601 — see [`super::time`])
 //!
 //! Null slots hold a zero/empty payload (code 0 for `DictUtf8`);
 //! consumers must consult the bitmap. An absent bitmap means "all
@@ -209,6 +213,8 @@ pub enum Array {
     /// [`DataType::Utf8`]; see the module docs and [`DictUtf8Data`].
     DictUtf8(DictUtf8Data, Option<Bitmap>),
     Bool(Vec<bool>, Option<Bitmap>),
+    /// Milliseconds since the Unix epoch, UTC.
+    Timestamp(Vec<i64>, Option<Bitmap>),
 }
 
 impl Array {
@@ -228,6 +234,11 @@ impl Array {
 
     pub fn from_bools(v: Vec<bool>) -> Array {
         Array::Bool(v, None)
+    }
+
+    /// Timestamp column from ms-since-epoch values.
+    pub fn from_ts(v: Vec<i64>) -> Array {
+        Array::Timestamp(v, None)
     }
 
     /// From options; `None` entries become nulls.
@@ -267,6 +278,13 @@ impl Array {
             }
         }
         Array::Float64(vals, if any_null { Some(bm) } else { None })
+    }
+
+    pub fn from_opt_ts(v: Vec<Option<i64>>) -> Array {
+        match Array::from_opt_i64(v) {
+            Array::Int64(vals, bm) => Array::Timestamp(vals, bm),
+            _ => unreachable!(),
+        }
     }
 
     pub fn from_opt_strs(v: Vec<Option<&str>>) -> Array {
@@ -347,6 +365,7 @@ impl Array {
             DataType::Float64 => Array::Float64(Vec::new(), None),
             DataType::Utf8 => Array::Utf8(Utf8Data::empty(), None),
             DataType::Bool => Array::Bool(Vec::new(), None),
+            DataType::Timestamp => Array::Timestamp(Vec::new(), None),
         }
     }
 
@@ -360,6 +379,7 @@ impl Array {
             Array::Float64(..) => DataType::Float64,
             Array::Utf8(..) | Array::DictUtf8(..) => DataType::Utf8,
             Array::Bool(..) => DataType::Bool,
+            Array::Timestamp(..) => DataType::Timestamp,
         }
     }
 
@@ -370,6 +390,7 @@ impl Array {
             Array::Utf8(d, _) => d.len(),
             Array::DictUtf8(d, _) => d.len(),
             Array::Bool(v, _) => v.len(),
+            Array::Timestamp(v, _) => v.len(),
         }
     }
 
@@ -383,7 +404,8 @@ impl Array {
             | Array::Float64(_, b)
             | Array::Utf8(_, b)
             | Array::DictUtf8(_, b)
-            | Array::Bool(_, b) => b.as_ref(),
+            | Array::Bool(_, b)
+            | Array::Timestamp(_, b) => b.as_ref(),
         }
     }
 
@@ -415,6 +437,7 @@ impl Array {
             Array::Utf8(d, _) => Scalar::Utf8(d.value(i).to_string()),
             Array::DictUtf8(d, _) => Scalar::Utf8(d.value(i).to_string()),
             Array::Bool(v, _) => Scalar::Bool(v[i]),
+            Array::Timestamp(v, _) => Scalar::Timestamp(v[i]),
         }
     }
 
@@ -456,6 +479,14 @@ impl Array {
         }
     }
 
+    /// Raw ms-since-epoch view (`None` unless [`Array::Timestamp`]).
+    pub fn ts_values(&self) -> Option<&[i64]> {
+        match self {
+            Array::Timestamp(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
     /// Numeric view of cell `i`, widening ints; None when null or non-numeric.
     #[inline]
     pub fn f64_at(&self, i: usize) -> Option<f64> {
@@ -489,6 +520,10 @@ impl Array {
             Array::Bool(v, _) => {
                 let out: Vec<bool> = indices.iter().map(|&i| v[i]).collect();
                 Array::Bool(out, validity)
+            }
+            Array::Timestamp(v, _) => {
+                let out: Vec<i64> = indices.iter().map(|&i| v[i]).collect();
+                Array::Timestamp(out, validity)
             }
             Array::Utf8(d, _) => {
                 let total: usize = indices
@@ -583,6 +618,13 @@ impl Array {
                 }
                 Array::Bool(out, validity)
             }
+            DataType::Timestamp => {
+                let mut out = Vec::with_capacity(total);
+                for a in arrays {
+                    out.extend_from_slice(a.ts_values().unwrap());
+                }
+                Array::Timestamp(out, validity)
+            }
             DataType::Utf8 if arrays.iter().all(|a| a.is_dict()) => {
                 // All dictionary-encoded (the shuffle-ingest path):
                 // unify dictionaries and remap codes — string bytes are
@@ -634,6 +676,7 @@ impl Array {
             Array::Utf8(d, b) => Array::Utf8(d, norm(b)),
             Array::DictUtf8(d, b) => Array::DictUtf8(d, norm(b)),
             Array::Bool(v, b) => Array::Bool(v, norm(b)),
+            Array::Timestamp(v, b) => Array::Timestamp(v, norm(b)),
         }
     }
 
@@ -649,6 +692,7 @@ impl Array {
             Array::DictUtf8(d, _) => {
                 d.codes.len() * 4 + d.dict.iter().map(|s| s.len() + 4).sum::<usize>()
             }
+            Array::Timestamp(v, _) => v.len() * 8,
         }
     }
 }

@@ -17,6 +17,7 @@ pub enum ArrayBuilder {
     Float64(Vec<f64>, Bitmap, bool),
     Utf8(Utf8Data, Bitmap, bool),
     Bool(Vec<bool>, Bitmap, bool),
+    Timestamp(Vec<i64>, Bitmap, bool),
 }
 
 impl ArrayBuilder {
@@ -32,6 +33,9 @@ impl ArrayBuilder {
             }
             DataType::Utf8 => ArrayBuilder::Utf8(Utf8Data::empty(), Bitmap::new_null(0), false),
             DataType::Bool => ArrayBuilder::Bool(Vec::with_capacity(cap), Bitmap::new_null(0), false),
+            DataType::Timestamp => {
+                ArrayBuilder::Timestamp(Vec::with_capacity(cap), Bitmap::new_null(0), false)
+            }
         }
     }
 
@@ -41,6 +45,7 @@ impl ArrayBuilder {
             ArrayBuilder::Float64(..) => DataType::Float64,
             ArrayBuilder::Utf8(..) => DataType::Utf8,
             ArrayBuilder::Bool(..) => DataType::Bool,
+            ArrayBuilder::Timestamp(..) => DataType::Timestamp,
         }
     }
 
@@ -50,6 +55,7 @@ impl ArrayBuilder {
             ArrayBuilder::Float64(v, ..) => v.len(),
             ArrayBuilder::Utf8(d, ..) => d.len(),
             ArrayBuilder::Bool(v, ..) => v.len(),
+            ArrayBuilder::Timestamp(v, ..) => v.len(),
         }
     }
 
@@ -97,6 +103,16 @@ impl ArrayBuilder {
         }
     }
 
+    pub fn push_ts(&mut self, v: i64) {
+        match self {
+            ArrayBuilder::Timestamp(vals, bm, _) => {
+                vals.push(v);
+                bm.push(true);
+            }
+            _ => panic!("push_ts on {:?} builder", self.data_type()),
+        }
+    }
+
     pub fn push_null(&mut self) {
         match self {
             ArrayBuilder::Int64(vals, bm, n) => {
@@ -119,6 +135,11 @@ impl ArrayBuilder {
                 bm.push(false);
                 *n = true;
             }
+            ArrayBuilder::Timestamp(vals, bm, n) => {
+                vals.push(0);
+                bm.push(false);
+                *n = true;
+            }
         }
     }
 
@@ -133,6 +154,7 @@ impl ArrayBuilder {
             (b @ ArrayBuilder::Float64(..), Scalar::Int64(v)) => b.push_f64(*v as f64),
             (b @ ArrayBuilder::Utf8(..), Scalar::Utf8(v)) => b.push_str(v),
             (b @ ArrayBuilder::Bool(..), Scalar::Bool(v)) => b.push_bool(*v),
+            (b @ ArrayBuilder::Timestamp(..), Scalar::Timestamp(v)) => b.push_ts(*v),
             (b, s) => bail!("type mismatch: {} builder, {:?} scalar", b.data_type(), s),
         }
         Ok(())
@@ -153,6 +175,7 @@ impl ArrayBuilder {
             // preserve here.
             (b @ ArrayBuilder::Utf8(..), Array::DictUtf8(d, _)) => b.push_str(d.value(i)),
             (b @ ArrayBuilder::Bool(..), Array::Bool(v, _)) => b.push_bool(v[i]),
+            (b @ ArrayBuilder::Timestamp(..), Array::Timestamp(v, _)) => b.push_ts(v[i]),
             (b, s) => panic!("push_from type mismatch: {} vs {}", b.data_type(), s.data_type()),
         }
     }
@@ -170,6 +193,9 @@ impl ArrayBuilder {
             }
             ArrayBuilder::Bool(v, bm, any_null) => {
                 Array::Bool(v, if any_null { Some(bm) } else { None })
+            }
+            ArrayBuilder::Timestamp(v, bm, any_null) => {
+                Array::Timestamp(v, if any_null { Some(bm) } else { None })
             }
         }
     }

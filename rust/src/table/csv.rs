@@ -1,14 +1,20 @@
 //! CSV reader/writer with type inference.
 //!
 //! Covers what the UNOMT pipeline and the examples need: header row,
-//! configurable delimiter, RFC-4180 quoting, null tokens (empty string,
-//! "NA", "null", "NaN"), and two-pass type inference
-//! (int64 → float64 → bool → utf8 fallback).
+//! configurable delimiter, RFC-4180 quoting (including newlines inside
+//! quoted fields), null tokens (empty string, "NA", "null", "NaN"), and
+//! two-pass type inference. Each non-null cell classifies to the
+//! narrowest of int64 / float64 / bool / timestamp (ISO-8601, see
+//! [`super::time`]) and the column type is the lattice join: int64
+//! widens to float64, every other mix falls back to utf8 — mixed
+//! numeric/bool columns in particular must NOT infer bool, or numeric
+//! cells would silently parse as `false`.
 
 use super::builder::TableBuilder;
 use super::scalar::DataType;
 use super::schema::{Field, Schema};
 use super::table::Table;
+use super::time::parse_timestamp_ms;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
@@ -70,20 +76,43 @@ fn is_null_token(s: &str, opts: &CsvOptions) -> bool {
     s.is_empty() || opts.null_tokens.iter().any(|t| t == s)
 }
 
+/// Narrowest type of one non-null cell. The classes are disjoint:
+/// bool tokens and ISO-8601 dates never parse as numbers.
+fn infer_cell(s: &str) -> DataType {
+    if s.parse::<i64>().is_ok() {
+        DataType::Int64
+    } else if s.parse::<f64>().is_ok() {
+        DataType::Float64
+    } else if matches!(s, "true" | "false" | "True" | "False") {
+        DataType::Bool
+    } else if parse_timestamp_ms(s).is_some() {
+        DataType::Timestamp
+    } else {
+        DataType::Utf8
+    }
+}
+
+/// Lattice join of two cell types: the only widening is
+/// int64 → float64; any other mix is utf8. Bool and Timestamp are
+/// reachable only from themselves, so a column sampled as `[1, true]`
+/// falls back to utf8 instead of corrupting `1` into `false`.
+fn join_types(a: DataType, b: DataType) -> DataType {
+    use DataType::*;
+    match (a, b) {
+        _ if a == b => a,
+        (Int64, Float64) | (Float64, Int64) => Float64,
+        _ => Utf8,
+    }
+}
+
 /// Narrowest type that parses every non-null sample of a column.
 fn infer_type(samples: &[&str]) -> DataType {
-    let mut t = DataType::Int64;
-    for s in samples {
-        t = match t {
-            DataType::Int64 if s.parse::<i64>().is_ok() => DataType::Int64,
-            DataType::Int64 | DataType::Float64 if s.parse::<f64>().is_ok() => DataType::Float64,
-            DataType::Int64 | DataType::Float64 | DataType::Bool
-                if matches!(*s, "true" | "false" | "True" | "False") =>
-            {
-                DataType::Bool
-            }
-            _ => return DataType::Utf8,
-        };
+    let mut t = infer_cell(samples[0]);
+    for s in &samples[1..] {
+        if t == DataType::Utf8 {
+            break;
+        }
+        t = join_types(t, infer_cell(s));
     }
     t
 }
@@ -91,12 +120,30 @@ fn infer_type(samples: &[&str]) -> DataType {
 /// Read a CSV from any reader.
 pub fn read_csv_from<R: Read>(reader: R, opts: &CsvOptions) -> Result<Table> {
     let buf = BufReader::new(reader);
-    let mut lines = Vec::new();
+    // Assemble *logical* records: while a double quote is open, the
+    // record continues across physical lines (write_csv_to emits such
+    // fields whenever a cell contains '\n'). Quote parity per line is
+    // exact — an escaped `""` toggles twice, netting out.
+    let mut lines: Vec<String> = Vec::new();
+    let mut open = false;
     for line in buf.lines() {
         let line = line.context("csv: read error")?;
-        if !line.is_empty() {
+        let odd_quotes = line.bytes().filter(|&b| b == b'"').count() % 2 == 1;
+        if open {
+            let cur = lines.last_mut().expect("open quote implies a pending record");
+            cur.push('\n');
+            cur.push_str(&line);
+            open ^= odd_quotes;
+        } else {
+            if line.is_empty() {
+                continue;
+            }
             lines.push(line);
+            open = odd_quotes;
         }
+    }
+    if open {
+        bail!("csv: unterminated quoted field at end of input");
     }
     if lines.is_empty() {
         bail!("csv: empty input");
@@ -162,6 +209,10 @@ pub fn read_csv_from<R: Read>(reader: R, opts: &CsvOptions) -> Result<Table> {
                     Err(_) => b.push_null(),
                 },
                 DataType::Bool => b.push_bool(matches!(cell.as_str(), "true" | "True")),
+                DataType::Timestamp => match parse_timestamp_ms(cell) {
+                    Some(v) => b.push_ts(v),
+                    None => b.push_null(),
+                },
                 DataType::Utf8 => b.push_str(cell),
             }
         }
@@ -269,6 +320,64 @@ mod tests {
     #[test]
     fn ragged_rejected() {
         assert!(read_csv_from("a,b\n1\n".as_bytes(), &CsvOptions::default()).is_err());
+    }
+
+    #[test]
+    fn quoted_newlines_roundtrip() {
+        // Regression: write_csv_to quotes cells containing '\n', so the
+        // reader must assemble logical records across physical lines.
+        let t = Table::from_columns(vec![
+            ("id", crate::table::array::Array::from_i64(vec![1, 2])),
+            ("s", crate::table::array::Array::from_strs(&["line1\nline2", "a\n\nb,c"])),
+        ])
+        .unwrap();
+        let mut buf = Vec::new();
+        write_csv_to(&t, &mut buf, &CsvOptions::default()).unwrap();
+        let rt = read_csv_from(&buf[..], &CsvOptions::default()).unwrap();
+        assert_eq!(rt.num_rows(), 2);
+        assert_eq!(rt.cell(0, 1), Scalar::Utf8("line1\nline2".into()));
+        assert_eq!(rt.cell(1, 1), Scalar::Utf8("a\n\nb,c".into()));
+        // direct parse, with an escaped quote inside the multi-line field
+        let data = "a,b\n1,\"x\n\"\"y\"\"\nz\"\n2,w\n";
+        let t2 = read_csv_from(data.as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!(t2.num_rows(), 2);
+        assert_eq!(t2.cell(0, 1), Scalar::Utf8("x\n\"y\"\nz".into()));
+        // unterminated quote fails loudly instead of mis-assembling
+        assert!(read_csv_from("a\n\"oops\n".as_bytes(), &CsvOptions::default()).is_err());
+    }
+
+    #[test]
+    fn mixed_numeric_bool_infers_utf8() {
+        // Regression: [1, true] used to infer Bool, silently parsing the
+        // cell `1` as `false`. Both sample orders must fall back to Utf8.
+        let t = read_csv_from("x\n1\ntrue\n".as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!(t.schema().field(0).data_type, DataType::Utf8);
+        assert_eq!(t.cell(0, 0), Scalar::Utf8("1".into()));
+        assert_eq!(t.cell(1, 0), Scalar::Utf8("true".into()));
+        let t = read_csv_from("x\ntrue\n1\n".as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!(t.schema().field(0).data_type, DataType::Utf8);
+        assert_eq!(t.cell(1, 0), Scalar::Utf8("1".into()));
+        // pure bool columns still infer Bool
+        let t = read_csv_from("x\ntrue\nFalse\n".as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!(t.schema().field(0).data_type, DataType::Bool);
+    }
+
+    #[test]
+    fn timestamp_inference_and_roundtrip() {
+        let data = "ts,v\n2021-08-13,1\n2021-08-13T09:30:00.123Z,2\nNA,3\n";
+        let t = read_csv_from(data.as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!(t.schema().field(0).data_type, DataType::Timestamp);
+        assert_eq!(t.cell(1, 0), Scalar::Timestamp(1_628_847_000_123));
+        assert_eq!(t.cell(2, 0), Scalar::Null);
+        // write → read re-infers Timestamp (canonical format parses back)
+        let mut buf = Vec::new();
+        write_csv_to(&t, &mut buf, &CsvOptions::default()).unwrap();
+        let rt = read_csv_from(&buf[..], &CsvOptions::default()).unwrap();
+        assert_eq!(rt.schema().field(0).data_type, DataType::Timestamp);
+        assert_eq!(rt.column(0), t.column(0));
+        // mixed timestamp / int falls back to Utf8
+        let t = read_csv_from("x\n2021-08-13\n7\n".as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!(t.schema().field(0).data_type, DataType::Utf8);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //!   has_validity: u8
 //!   [validity bytes: ceil(nrows/8)]
 //!   payload:
-//!     int64/float64: nrows * 8 bytes
+//!     int64/float64/timestamp: nrows * 8 bytes
 //!     bool: nrows bytes
 //!     utf8: offsets (nrows+1)*4 bytes, byte_len u64, bytes
 //! ```
@@ -129,7 +129,7 @@ pub fn serialize(table: &Table) -> Vec<u8> {
             None => w.u8(0),
         }
         match col {
-            Array::Int64(v, _) => {
+            Array::Int64(v, _) | Array::Timestamp(v, _) => {
                 for x in v {
                     w.bytes(&x.to_le_bytes());
                 }
@@ -199,6 +199,14 @@ pub fn deserialize(buf: &[u8]) -> Result<Table> {
                     .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
                     .collect();
                 Array::Int64(v, validity)
+            }
+            DataType::Timestamp => {
+                let raw = r.take_n(nrows, 8)?;
+                let v = raw
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Array::Timestamp(v, validity)
             }
             DataType::Float64 => {
                 let raw = r.take_n(nrows, 8)?;
@@ -300,7 +308,7 @@ pub fn serialize_wire(table: &Table) -> Vec<u8> {
             None => w.u8(0),
         }
         match col {
-            Array::Int64(v, _) => {
+            Array::Int64(v, _) | Array::Timestamp(v, _) => {
                 for x in v {
                     w.bytes(&x.to_le_bytes());
                 }
@@ -379,6 +387,14 @@ pub fn deserialize_wire(buf: &[u8]) -> Result<Table> {
                     .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
                     .collect();
                 Array::Int64(v, validity)
+            }
+            DataType::Timestamp => {
+                let raw = r.take_n(nrows, 8)?;
+                let v = raw
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Array::Timestamp(v, validity)
             }
             DataType::Float64 => {
                 let raw = r.take_n(nrows, 8)?;
@@ -459,7 +475,7 @@ impl DictWireState {
                 None => w.u8(0),
             }
             match col {
-                Array::Int64(v, _) => {
+                Array::Int64(v, _) | Array::Timestamp(v, _) => {
                     for x in v {
                         w.bytes(&x.to_le_bytes());
                     }
@@ -560,6 +576,14 @@ impl DictWireState {
                         .collect();
                     Array::Int64(v, validity)
                 }
+                DataType::Timestamp => {
+                    let raw = r.take_n(nrows, 8)?;
+                    let v = raw
+                        .chunks_exact(8)
+                        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Array::Timestamp(v, validity)
+                }
                 DataType::Float64 => {
                     let raw = r.take_n(nrows, 8)?;
                     let v = raw
@@ -605,6 +629,7 @@ mod tests {
             ("name", Array::from_opt_strs(vec![Some("aa"), Some(""), None])),
             ("score", Array::from_f64(vec![0.5, 1.5, -2.5])),
             ("flag", Array::from_bools(vec![true, false, true])),
+            ("ts", Array::from_opt_ts(vec![Some(0), Some(1_628_847_000_123), None])),
         ])
         .unwrap()
     }
@@ -617,6 +642,8 @@ mod tests {
         assert_eq!(t, rt);
         assert_eq!(rt.cell(1, 0), Scalar::Null);
         assert_eq!(rt.cell(0, 1), Scalar::Utf8("aa".into()));
+        assert_eq!(rt.cell(1, 4), Scalar::Timestamp(1_628_847_000_123));
+        assert_eq!(rt.cell(2, 4), Scalar::Null);
     }
 
     #[test]
@@ -651,7 +678,7 @@ mod tests {
         let t = sample().slice(0, 0);
         let rt = deserialize(&serialize(&t)).unwrap();
         assert_eq!(rt.num_rows(), 0);
-        assert_eq!(rt.num_columns(), 4);
+        assert_eq!(rt.num_columns(), 5);
     }
 
     #[test]

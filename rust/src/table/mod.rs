@@ -19,6 +19,7 @@ pub mod scalar;
 pub mod schema;
 #[allow(clippy::module_inception)]
 pub mod table;
+pub mod time;
 
 pub use array::{Array, DictUtf8Data};
 pub use bitmap::Bitmap;

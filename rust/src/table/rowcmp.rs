@@ -47,6 +47,7 @@ pub fn cmp_cells_valid(a: &Array, i: usize, b: &Array, j: usize) -> Ordering {
         (Array::DictUtf8(x, _), Array::Utf8(y, _)) => x.value(i).cmp(y.value(j)),
         (Array::Utf8(x, _), Array::DictUtf8(y, _)) => x.value(i).cmp(y.value(j)),
         (Array::Bool(x, _), Array::Bool(y, _)) => x[i].cmp(&y[j]),
+        (Array::Timestamp(x, _), Array::Timestamp(y, _)) => x[i].cmp(&y[j]),
         _ => panic!("rowcmp: dtype mismatch {} vs {}", a.data_type(), b.data_type()),
     }
 }

@@ -73,6 +73,9 @@ fn hash_column_into(col: &Array, out: &mut [u64], first: bool) {
     }
     match col {
         Array::Int64(v, _) => body!(|i: usize| mix64(v[i] as u64)),
+        // Timestamps hash like an Int64 of the same ms value — key
+        // columns never mix the two types, so no cross-type collisions.
+        Array::Timestamp(v, _) => body!(|i: usize| mix64(v[i] as u64)),
         Array::Float64(v, _) => body!(|i: usize| mix64(canon_f64(v[i]))),
         Array::Bool(v, _) => body!(|i: usize| mix64(v[i] as u64 + 1)),
         Array::Utf8(d, _) => body!(|i: usize| hash_bytes(
@@ -139,6 +142,7 @@ pub fn cell_eq(a: &Array, i: usize, b: &Array, j: usize) -> bool {
             }
             (Array::DictUtf8(x, _), Array::Utf8(y, _)) => x.value(i) == y.value(j),
             (Array::Utf8(x, _), Array::DictUtf8(y, _)) => x.value(i) == y.value(j),
+            (Array::Timestamp(x, _), Array::Timestamp(y, _)) => x[i] == y[j],
             _ => false,
         },
         _ => false,

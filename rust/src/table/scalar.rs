@@ -13,6 +13,8 @@ pub enum DataType {
     Float64,
     Utf8,
     Bool,
+    /// Milliseconds since the Unix epoch, UTC (`i64` physical layout).
+    Timestamp,
 }
 
 impl DataType {
@@ -24,16 +26,19 @@ impl DataType {
             DataType::Float64 => "float64",
             DataType::Utf8 => "utf8",
             DataType::Bool => "bool",
+            DataType::Timestamp => "timestamp",
         }
     }
 
-    /// Stable one-byte tag for the IPC wire format.
+    /// Stable one-byte tag for the IPC wire format. Tag 4 is reserved
+    /// for the wire-only dictionary encoding (`ipc::DICT_TAG`).
     pub fn tag(&self) -> u8 {
         match self {
             DataType::Int64 => 0,
             DataType::Float64 => 1,
             DataType::Utf8 => 2,
             DataType::Bool => 3,
+            DataType::Timestamp => 5,
         }
     }
 
@@ -44,6 +49,7 @@ impl DataType {
             1 => DataType::Float64,
             2 => DataType::Utf8,
             3 => DataType::Bool,
+            5 => DataType::Timestamp,
             _ => return None,
         })
     }
@@ -71,6 +77,8 @@ pub enum Scalar {
     Float64(f64),
     Utf8(String),
     Bool(bool),
+    /// Milliseconds since the Unix epoch, UTC.
+    Timestamp(i64),
 }
 
 impl Scalar {
@@ -86,6 +94,7 @@ impl Scalar {
             Scalar::Float64(_) => DataType::Float64,
             Scalar::Utf8(_) => DataType::Utf8,
             Scalar::Bool(_) => DataType::Bool,
+            Scalar::Timestamp(_) => DataType::Timestamp,
         })
     }
 
@@ -118,6 +127,14 @@ impl Scalar {
             _ => None,
         }
     }
+
+    /// Milliseconds since epoch for timestamp scalars.
+    pub fn as_timestamp(&self) -> Option<i64> {
+        match self {
+            Scalar::Timestamp(ms) => Some(*ms),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for Scalar {
@@ -128,6 +145,9 @@ impl fmt::Display for Scalar {
             Scalar::Float64(v) => write!(f, "{v}"),
             Scalar::Utf8(s) => write!(f, "{s}"),
             Scalar::Bool(b) => write!(f, "{b}"),
+            Scalar::Timestamp(ms) => {
+                f.write_str(&super::time::format_timestamp_ms(*ms))
+            }
         }
     }
 }
@@ -164,10 +184,27 @@ mod tests {
 
     #[test]
     fn tag_roundtrip() {
-        for dt in [DataType::Int64, DataType::Float64, DataType::Utf8, DataType::Bool] {
+        for dt in [
+            DataType::Int64,
+            DataType::Float64,
+            DataType::Utf8,
+            DataType::Bool,
+            DataType::Timestamp,
+        ] {
             assert_eq!(DataType::from_tag(dt.tag()), Some(dt));
         }
         assert_eq!(DataType::from_tag(42), None);
+        // tag 4 stays reserved for the wire-only dict encoding
+        assert_eq!(DataType::from_tag(4), None);
+    }
+
+    #[test]
+    fn timestamp_scalar_displays_iso8601() {
+        assert_eq!(Scalar::Timestamp(0).to_string(), "1970-01-01T00:00:00Z");
+        assert_eq!(Scalar::Timestamp(0).data_type(), Some(DataType::Timestamp));
+        assert_eq!(Scalar::Timestamp(7).as_timestamp(), Some(7));
+        assert_eq!(Scalar::Timestamp(7).as_i64(), None, "timestamps are not ints");
+        assert!(!DataType::Timestamp.is_numeric());
     }
 
     #[test]

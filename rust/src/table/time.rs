@@ -1,0 +1,208 @@
+//! Civil-time conversion for the Timestamp column type.
+//!
+//! Timestamps are physical `i64` milliseconds since the Unix epoch,
+//! UTC, with no leap-second accounting (the POSIX convention Arrow and
+//! Pandas share). The parser accepts the ISO-8601 subset the CSV
+//! reader infers:
+//!
+//! * `YYYY-MM-DD` (midnight UTC)
+//! * `YYYY-MM-DDTHH:MM:SS` with optional `.m`/`.mm`/`.mmm` fraction
+//!   and optional trailing `Z`
+//!
+//! The formatter emits the canonical form `YYYY-MM-DDTHH:MM:SSZ`
+//! (with `.mmm` only when the millisecond part is nonzero), which the
+//! parser round-trips, so CSV write → read re-infers Timestamp.
+//!
+//! Date ↔ day-count conversion uses the proleptic-Gregorian civil
+//! algorithms (era/400-year cycle), exact over the whole `i64` ms
+//! range; negative timestamps (pre-1970) work through `div_euclid`.
+
+const MS_PER_DAY: i64 = 86_400_000;
+
+/// Days since 1970-01-01 of the civil date `(y, m, d)`; `m` is 1-based.
+fn days_from_civil(y: i64, m: u32, d: u32) -> i64 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = y - era * 400; // [0, 399]
+    let mp = if m > 2 { m - 3 } else { m + 9 } as i64; // [0, 11], Mar=0
+    let doy = (153 * mp + 2) / 5 + (d as i64 - 1); // [0, 365]
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy; // [0, 146096]
+    era * 146097 + doe - 719_468
+}
+
+/// Civil date `(y, m, d)` of the day `z` days after 1970-01-01.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+fn days_in_month(y: i64, m: u32) -> u32 {
+    match m {
+        1 | 3 | 5 | 7 | 8 | 10 | 12 => 31,
+        4 | 6 | 9 | 11 => 30,
+        2 => {
+            if y % 4 == 0 && (y % 100 != 0 || y % 400 == 0) {
+                29
+            } else {
+                28
+            }
+        }
+        _ => 0,
+    }
+}
+
+/// Parse a fixed-width run of ASCII digits.
+fn digits(s: &[u8], at: usize, width: usize) -> Option<u64> {
+    if at + width > s.len() {
+        return None;
+    }
+    let mut v = 0u64;
+    for &b in &s[at..at + width] {
+        if !b.is_ascii_digit() {
+            return None;
+        }
+        v = v * 10 + (b - b'0') as u64;
+    }
+    Some(v)
+}
+
+/// Parse the accepted ISO-8601 subset into ms since epoch (UTC), or
+/// `None` when `s` is not a timestamp (the CSV inference probe).
+pub fn parse_timestamp_ms(s: &str) -> Option<i64> {
+    let b = s.as_bytes();
+    // date part: YYYY-MM-DD
+    if b.len() < 10 || b[4] != b'-' || b[7] != b'-' {
+        return None;
+    }
+    let y = digits(b, 0, 4)? as i64;
+    let m = digits(b, 5, 2)? as u32;
+    let d = digits(b, 8, 2)? as u32;
+    if !(1..=12).contains(&m) || d < 1 || d > days_in_month(y, m) {
+        return None;
+    }
+    let mut ms = days_from_civil(y, m, d) * MS_PER_DAY;
+    let mut at = 10;
+    if at < b.len() && b[at] == b'T' {
+        // time part: HH:MM:SS
+        if b.len() < at + 9 || b[at + 3] != b':' || b[at + 6] != b':' {
+            return None;
+        }
+        let hh = digits(b, at + 1, 2)?;
+        let mm = digits(b, at + 4, 2)?;
+        let ss = digits(b, at + 7, 2)?;
+        if hh > 23 || mm > 59 || ss > 59 {
+            return None;
+        }
+        ms += ((hh * 3600 + mm * 60 + ss) * 1000) as i64;
+        at += 9;
+        if at < b.len() && b[at] == b'.' {
+            // 1-3 fraction digits, scaled to milliseconds
+            let start = at + 1;
+            let mut end = start;
+            while end < b.len() && b[end].is_ascii_digit() && end - start < 3 {
+                end += 1;
+            }
+            if end == start {
+                return None;
+            }
+            let frac = digits(b, start, end - start)?;
+            ms += (frac * 10u64.pow(3 - (end - start) as u32)) as i64;
+            at = end;
+        }
+    }
+    if at < b.len() && b[at] == b'Z' {
+        at += 1;
+    }
+    if at != b.len() {
+        return None;
+    }
+    Some(ms)
+}
+
+/// Format ms since epoch as canonical ISO-8601 UTC
+/// (`YYYY-MM-DDTHH:MM:SS[.mmm]Z`); inverse of [`parse_timestamp_ms`].
+pub fn format_timestamp_ms(ms: i64) -> String {
+    let days = ms.div_euclid(MS_PER_DAY);
+    let msod = ms.rem_euclid(MS_PER_DAY);
+    let (y, m, d) = civil_from_days(days);
+    let (hh, mm) = (msod / 3_600_000, (msod / 60_000) % 60);
+    let (ss, frac) = ((msod / 1000) % 60, msod % 1000);
+    if frac == 0 {
+        format!("{y:04}-{m:02}-{d:02}T{hh:02}:{mm:02}:{ss:02}Z")
+    } else {
+        format!("{y:04}-{m:02}-{d:02}T{hh:02}:{mm:02}:{ss:02}.{frac:03}Z")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_subset() {
+        assert_eq!(parse_timestamp_ms("1970-01-01"), Some(0));
+        assert_eq!(parse_timestamp_ms("1970-01-02"), Some(MS_PER_DAY));
+        assert_eq!(parse_timestamp_ms("1969-12-31"), Some(-MS_PER_DAY));
+        assert_eq!(
+            parse_timestamp_ms("2021-08-13T09:30:00"),
+            Some(1_628_847_000_000)
+        );
+        assert_eq!(
+            parse_timestamp_ms("2021-08-13T09:30:00Z"),
+            parse_timestamp_ms("2021-08-13T09:30:00")
+        );
+        assert_eq!(
+            parse_timestamp_ms("2021-08-13T09:30:00.123Z"),
+            Some(1_628_847_000_123)
+        );
+        // short fractions scale: .5 = 500 ms
+        assert_eq!(
+            parse_timestamp_ms("1970-01-01T00:00:00.5"),
+            Some(500)
+        );
+    }
+
+    #[test]
+    fn rejects_non_timestamps() {
+        for s in [
+            "", "7", "2021", "2021-08", "2021-13-01", "2021-02-30",
+            "2021-08-13T25:00:00", "2021-08-13T09:61:00", "2021-08-13 09:30:00",
+            "2021-08-13T09:30", "2021-08-13T09:30:00.", "2021-08-13x",
+            "2021-08-13T09:30:00Zx", "true", "12.5",
+        ] {
+            assert_eq!(parse_timestamp_ms(s), None, "{s:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn format_parse_roundtrip() {
+        for ms in [
+            0i64, 1, 999, 1000, -1, -999, -1000, 1_628_847_000_123,
+            -62_135_596_800_000, 253_402_300_799_999,
+        ] {
+            let s = format_timestamp_ms(ms);
+            assert_eq!(parse_timestamp_ms(&s), Some(ms), "{ms} → {s}");
+        }
+        assert_eq!(format_timestamp_ms(0), "1970-01-01T00:00:00Z");
+        assert_eq!(format_timestamp_ms(1_628_847_000_000), "2021-08-13T09:30:00Z");
+    }
+
+    #[test]
+    fn leap_years_and_month_ends() {
+        assert!(parse_timestamp_ms("2020-02-29").is_some());
+        assert!(parse_timestamp_ms("2021-02-29").is_none());
+        assert!(parse_timestamp_ms("2000-02-29").is_some());
+        assert!(parse_timestamp_ms("1900-02-29").is_none());
+        // day arithmetic agrees with the formatter across a leap day
+        let feb29 = parse_timestamp_ms("2020-02-29T12:00:00").unwrap();
+        assert_eq!(format_timestamp_ms(feb29 + MS_PER_DAY), "2020-03-01T12:00:00Z");
+    }
+}

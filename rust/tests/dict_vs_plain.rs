@@ -341,3 +341,55 @@ fn planned_path_on_dict_inputs_is_byte_identical_to_eager() {
         }
     }
 }
+
+/// ISO-8601 date strings from a small domain (so the dictionary
+/// dedups), ~10% null, with a nullable numeric key and an exact
+/// integer-in-f64 payload determined by the keys — the input for the
+/// Timestamp cast parity wall.
+fn global_iso_table(rows: usize, domain: u64, stream: u64) -> Table {
+    let mut rng = Rng::new(seed()).fork(stream);
+    let mut isos: Vec<Option<String>> = Vec::with_capacity(rows);
+    let mut ks: Vec<Option<i64>> = Vec::with_capacity(rows);
+    let mut vs: Vec<f64> = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let day = 1 + rng.gen_range(domain.min(27)) as u32;
+        let iso = if rng.bool(0.1) { None } else { Some(format!("2021-08-{day:02}")) };
+        let k = if rng.bool(0.1) { None } else { Some(rng.gen_range(domain) as i64) };
+        let v = (iso.as_deref().map_or(7i64, |x| x.bytes().map(i64::from).sum::<i64>()) * 31
+            + k.unwrap_or(-1))
+            % 997;
+        isos.push(iso);
+        ks.push(k);
+        vs.push(v as f64);
+    }
+    Table::from_columns(vec![
+        ("iso", Array::from_opt_strs(isos.iter().map(|o| o.as_deref()).collect())),
+        ("k", Array::from_opt_i64(ks)),
+        ("v", Array::from_f64(vs)),
+    ])
+    .unwrap()
+}
+
+/// Timestamp cast parity: casting a dict-encoded ISO-8601 Utf8 column
+/// to Timestamp (the cast decodes first) and then sorting or grouping
+/// on the casted key must be byte-identical per rank to the plain-input
+/// twin at every world size.
+#[test]
+fn timestamp_cast_from_dict_utf8_is_dict_invariant() {
+    use hptmt::ops::local::cast_columns;
+    use hptmt::table::DataType;
+    let g = global_iso_table(280, 14, 43);
+    assert_unary_dict_invisible("cast(iso→ts) → dist_sort", &g, |comm, t| {
+        let t = cast_columns(t, &[("iso", DataType::Timestamp)])?;
+        dist_sort(comm, &t, &[SortKey::asc("iso"), SortKey::desc("k")])
+    });
+    let aggs = [
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Min),
+    ];
+    assert_unary_dict_invisible("cast(iso→ts) → dist_groupby", &g, move |comm, t| {
+        let t = cast_columns(t, &[("iso", DataType::Timestamp)])?;
+        dist_groupby(comm, &t, &["iso"], &aggs)
+    });
+}

@@ -24,8 +24,8 @@ use hptmt::ops::dist::{
     rebalance,
 };
 use hptmt::ops::local::{
-    self, windowed_groupby_stream, Agg, AggSpec, Cmp, Eviction, JoinAlgorithm, JoinType, SortKey,
-    WindowSpec,
+    self, windowed_groupby, windowed_groupby_stream, Agg, AggSpec, Cmp, Eviction, JoinAlgorithm,
+    JoinType, SortKey, WindowSpec,
 };
 use hptmt::pipeline::Pipeline;
 use hptmt::plan::{GroupStrategy, JoinStrategy, LazyFrame};
@@ -812,6 +812,261 @@ fn planned_pushdown_chain_matches_local_oracle() {
             want,
             "planned pushdown chain != local oracle at w={w} (seed {})",
             seed()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Temporal cases: the Timestamp column as a sort / group-by key across
+// every world size, and event-time windows differentially against the
+// batch oracle at canonical-byte granularity.
+// ---------------------------------------------------------------------------
+
+/// Globally time-ordered keyed table for the temporal cases: the
+/// Utf8/i64 keys of [`global_table`] (null with probability `null_p` —
+/// pass 0.0 where byte-exact machine-vs-oracle comparison needs every
+/// column bitmap-free, since `take` keeps an all-valid bitmap while
+/// `concat` drops it and the two differential paths mix them
+/// differently), plus a non-null, non-decreasing Timestamp `ts`
+/// (duplicates whenever the increment draws 0 — multi-key sorts and
+/// group-bys on `ts` are non-trivial) and an exact integer-in-f64
+/// payload `v` determined by `(s, k, ts)`.
+fn global_ts_table(rows: usize, domain: u64, stream: u64, null_p: f64) -> Table {
+    let mut rng = Rng::new(seed()).fork(stream);
+    let mut ss: Vec<Option<String>> = Vec::with_capacity(rows);
+    let mut ks: Vec<Option<i64>> = Vec::with_capacity(rows);
+    let mut ts: Vec<i64> = Vec::with_capacity(rows);
+    let mut vs: Vec<f64> = Vec::with_capacity(rows);
+    let mut now = 1_000i64;
+    for _ in 0..rows {
+        let s = if rng.bool(null_p) { None } else { Some(format!("g{}", rng.gen_range(domain))) };
+        let k = if rng.bool(null_p) { None } else { Some(rng.gen_range(domain) as i64) };
+        now += rng.gen_range(4) as i64 * 5; // 0/5/10/15 ms steps
+        let v = (s.as_deref().map_or(7i64, |x| x.bytes().map(i64::from).sum::<i64>()) * 31
+            + k.unwrap_or(-1)
+            + now)
+            % 997;
+        ss.push(s);
+        ks.push(k);
+        ts.push(now);
+        vs.push(v as f64);
+    }
+    Table::from_columns(vec![
+        ("s", Array::from_opt_strs(ss.iter().map(|o| o.as_deref()).collect())),
+        ("k", Array::from_opt_i64(ks)),
+        ("ts", Array::from_ts(ts)),
+        ("v", Array::from_f64(vs)),
+    ])
+    .unwrap()
+}
+
+#[test]
+fn dist_sort_matches_local_timestamp_plus_numeric_keys() {
+    // Two-key (Timestamp asc, nullable numeric desc) sort at every
+    // world size. The generator emits `ts` pre-sorted, so gather
+    // through a stride coprime to the row count first — the sort must
+    // actually move rows.
+    let n = 300usize;
+    let g = global_ts_table(n, 12, 15, 0.1);
+    let perm: Vec<usize> = (0..n).map(|i| (i * 131) % n).collect();
+    let g = g.take(&perm);
+    let keys = || [SortKey::asc("ts"), SortKey::desc("k")];
+    assert!(!local::is_sorted(&g, &keys()).unwrap(), "permutation left input sorted");
+    let oracle = local::sort(&g, &keys()).unwrap();
+    let per_world =
+        assert_matches("dist_sort(ts,k)", &g, &oracle, move |comm, t| dist_sort(comm, t, &keys()));
+    for (w, parts) in WORLDS.iter().zip(per_world) {
+        let cat = Table::concat_tables(&parts.iter().collect::<Vec<_>>()).unwrap();
+        assert!(
+            local::is_sorted(&cat, &keys()).unwrap(),
+            "rank concatenation not globally sorted at w={w}"
+        );
+    }
+}
+
+#[test]
+fn dist_groupby_on_timestamp_key_matches_local() {
+    let g = global_ts_table(300, 10, 16, 0.1);
+    let aggs = [
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Mean),
+        AggSpec::new("v", Agg::Min),
+        AggSpec::new("v", Agg::Max),
+    ];
+    let oracle = local::groupby_aggregate(&g, &["ts"], &aggs).unwrap();
+    assert!(
+        oracle.num_rows() < g.num_rows(),
+        "degenerate: no duplicate timestamps to collapse (seed {})",
+        seed()
+    );
+    let aggs_full = aggs.clone();
+    assert_matches("dist_groupby(ts)", &g, &oracle, move |comm, t| {
+        dist_groupby(comm, t, &["ts"], &aggs_full)
+    });
+    assert_matches("dist_groupby_partial(ts)", &g, &oracle, move |comm, t| {
+        dist_groupby_partial(comm, t, &["ts"], &aggs)
+    });
+}
+
+/// The event-time acceptance case: the streaming pipeline's emitted
+/// windows, per agg shard and in span order, must be BYTE-identical
+/// (canonical `ipc::serialize`) to the batch oracle run over that
+/// shard's routed sub-stream — tumbling and sliding, at every world
+/// size. Byte equality (not canonical row sets) is the right bar here
+/// because both sides fold partials in arrival order: group order and
+/// every integer-valued aggregate match bit for bit, and the ordinal is
+/// the absolute span index on both paths.
+#[test]
+fn event_time_windowed_stream_is_byte_identical_to_batch_oracle() {
+    // null-free keys: byte-level equality must not hinge on whether an
+    // all-valid bitmap physically survives a take-vs-concat mix
+    let g = global_ts_table(260, 10, 17, 0.0);
+    let keys = ["s", "k"];
+    let aggs = [
+        AggSpec::new("v", Agg::Sum),
+        AggSpec::new("v", Agg::Count),
+        AggSpec::new("v", Agg::Mean),
+        AggSpec::new("v", Agg::Min),
+        AggSpec::new("v", Agg::Max),
+    ];
+    // chop the stream exactly like the pipeline source below
+    let source_batches = |g: &Table| -> Vec<Table> {
+        let mut out = Vec::new();
+        let (mut start, mut step) = (0usize, 17usize);
+        while start < g.num_rows() {
+            let len = step.min(g.num_rows() - start);
+            out.push(g.slice(start, len));
+            start += len;
+            step = if step == 17 { 29 } else { 17 };
+        }
+        out
+    };
+    for spec in [WindowSpec::tumbling_time("ts", 240), WindowSpec::sliding_time("ts", 360, 150)] {
+        let spec = spec.with_ordinal("__w");
+        for w in WORLDS {
+            // expected: replay the keyed edge's routing per shard, then
+            // run the batch oracle over each shard's sub-stream and
+            // concatenate its windows in emission (= span) order
+            let partitioner = HashPartitioner::new(keys, w);
+            let mut shard_streams: Vec<Vec<Table>> = vec![Vec::new(); w];
+            for batch in source_batches(&g) {
+                let parts = partitioner.partition_indices(&batch).unwrap();
+                for (shard, idx) in parts.iter().enumerate() {
+                    if !idx.is_empty() {
+                        shard_streams[shard].push(batch.take(idx));
+                    }
+                }
+            }
+            let mut want: Vec<Option<Vec<u8>>> = Vec::with_capacity(w);
+            let mut total = 0usize;
+            for stream in &shard_streams {
+                let wins = windowed_groupby_stream(stream, &keys, &aggs, &spec)
+                    .unwrap_or_else(|e| panic!("oracle {spec:?} w={w}: {e:#}"));
+                total += wins.len();
+                want.push(if wins.is_empty() {
+                    None
+                } else {
+                    let cat = Table::concat_tables(&wins.iter().collect::<Vec<_>>()).unwrap();
+                    Some(ipc::serialize(&cat))
+                });
+            }
+            assert!(total > w, "degenerate: oracle emits ≤1 window per shard for {spec:?} at w={w}");
+            // actual: one time-ordered source, w windowed agg shards
+            let gg = g.clone();
+            let run = Pipeline::new(format!("event-time-w{w}"))
+                .source("gen", 1, move |_, emit| {
+                    let (mut start, mut step) = (0usize, 17usize);
+                    while start < gg.num_rows() {
+                        let len = step.min(gg.num_rows() - start);
+                        emit(gg.slice(start, len))?;
+                        start += len;
+                        step = if step == 17 { 29 } else { 17 };
+                    }
+                    Ok(())
+                })
+                .keyed_aggregate_windowed("agg", w, &keys, &aggs, spec.clone())
+                .run(4)
+                .unwrap_or_else(|e| panic!("event-time stream {spec:?} w={w}: {e:#}"));
+            // group emissions by owning shard, order by span ordinal
+            let mut got: Vec<Vec<(i64, &Table)>> = vec![Vec::new(); w];
+            for t in &run.output {
+                assert!(t.num_rows() > 0, "empty windows must not be emitted");
+                let parts = partitioner.partition_indices(t).unwrap();
+                let shard =
+                    parts.iter().position(|idx| !idx.is_empty()).expect("window has rows");
+                assert_eq!(
+                    parts.iter().filter(|idx| !idx.is_empty()).count(),
+                    1,
+                    "keys of one emitted window span shards at w={w}"
+                );
+                let c = t.schema().index_of("__w").unwrap();
+                let ord = t.cell(0, c).as_i64().unwrap();
+                for i in 1..t.num_rows() {
+                    assert_eq!(t.cell(i, c).as_i64().unwrap(), ord, "mixed ordinals");
+                }
+                got[shard].push((ord, t));
+            }
+            for (shard, wins) in got.iter_mut().enumerate() {
+                wins.sort_by_key(|(o, _)| *o);
+                assert!(
+                    wins.windows(2).all(|p| p[0].0 != p[1].0),
+                    "span emitted twice on shard {shard} at w={w}"
+                );
+                let bytes = if wins.is_empty() {
+                    None
+                } else {
+                    let refs: Vec<&Table> = wins.iter().map(|(_, t)| *t).collect();
+                    Some(ipc::serialize(&Table::concat_tables(&refs).unwrap()))
+                };
+                assert_eq!(
+                    bytes,
+                    want[shard],
+                    "event-time stream != batch oracle bytes on shard {shard} at w={w} \
+                     ({spec:?}, seed {})",
+                    seed()
+                );
+            }
+        }
+    }
+}
+
+/// The planned event-time window must lower onto the same hash shuffle
+/// + batch-oracle composition the count-window plan uses, byte-for-byte
+/// per rank — this is what ties `LazyFrame::window` with a time spec to
+/// the conformance wall above on every communicator backend.
+#[test]
+fn planned_event_time_window_is_byte_identical_to_eager_composition() {
+    let g = global_ts_table(220, 10, 18, 0.1);
+    let spec = WindowSpec::tumbling_time("ts", 240).with_ordinal("__w");
+    let aggs = [AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)];
+    for w in WORLDS {
+        let gp = g.split(w);
+        let (ge, gl) = (gp.clone(), gp.clone());
+        let (spec_e, spec_l) = (spec.clone(), spec.clone());
+        let (ae, al) = (aggs.clone(), aggs.clone());
+        assert_planned_eager_bytes(
+            "event-time window",
+            w,
+            move |comm, rank| {
+                // the eager composition the Window node lowers to; the
+                // shuffled partition is NOT time-ordered, which the
+                // batch oracle tolerates (membership is by value)
+                let shuffled = hptmt::comm::shuffle_by_hash(comm, &ge[rank], &["s", "k"])?;
+                let wins = windowed_groupby(&shuffled, &["s", "k"], &ae, &spec_e)?;
+                if wins.is_empty() {
+                    let empty =
+                        local::groupby_aggregate(&shuffled.slice(0, 0), &["s", "k"], &ae)?;
+                    return empty.with_column("__w", Array::from_i64(Vec::new()));
+                }
+                Table::concat_tables(&wins.iter().collect::<Vec<_>>())
+            },
+            move |comm, rank| {
+                Ok(LazyFrame::from_table(gl[rank].clone())
+                    .window(&["s", "k"], &al, spec_l.clone())
+                    .collect_comm(comm)?
+                    .into_table())
+            },
         );
     }
 }
