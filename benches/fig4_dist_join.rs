@@ -131,7 +131,17 @@ fn wide_shard(rows: usize, key_domain: usize, seed: u64) -> Table {
 /// measured on real rank processes exchanging socket frames, making the
 /// shuffled-bytes columns a cross-backend invariant (asserted by
 /// `rust/tests/comm_conformance.rs`), not a thread-backend artifact.
-fn chain_run(total_rows: usize, key_domain: usize, w: usize, planned: bool) -> anyhow::Result<(u64, f64)> {
+/// Cross-rank aggregates of one `fig4_chain` run: total wire bytes,
+/// slowest-rank seconds, total final group-by rows (metrics-registry
+/// delta), total `comm.shuffle.bytes_sent` registry delta.
+struct ChainRun {
+    bytes: u64,
+    secs: f64,
+    group_rows: u64,
+    shuffle_bytes: u64,
+}
+
+fn chain_run(total_rows: usize, key_domain: usize, w: usize, planned: bool) -> anyhow::Result<ChainRun> {
     let rows_per_rank = total_rows / w;
     let arg = if planned {
         format!("{rows_per_rank},{key_domain},planned")
@@ -145,15 +155,17 @@ fn chain_run(total_rows: usize, key_domain: usize, w: usize, planned: bool) -> a
         &arg,
         Some(std::path::Path::new(env!("CARGO_BIN_EXE_hptmt_rank"))),
     )?;
-    // Per-rank result: bytes_sent u64 LE, then cpu+sim_comm f64 LE.
-    let mut bytes = 0u64;
-    let mut secs = 0.0f64;
+    // Per-rank result: bytes_sent u64, cpu+sim_comm f64, group-by
+    // rows-out delta u64, shuffle-bytes registry delta u64 (all LE).
+    let mut run = ChainRun { bytes: 0, secs: 0.0, group_rows: 0, shuffle_bytes: 0 };
     for r in &results {
-        anyhow::ensure!(r.len() == 16, "fig4_chain rank result must be 16 bytes, got {}", r.len());
-        bytes += u64::from_le_bytes(r[..8].try_into().unwrap());
-        secs = secs.max(f64::from_le_bytes(r[8..16].try_into().unwrap()));
+        anyhow::ensure!(r.len() == 32, "fig4_chain rank result must be 32 bytes, got {}", r.len());
+        run.bytes += u64::from_le_bytes(r[..8].try_into().unwrap());
+        run.secs = run.secs.max(f64::from_le_bytes(r[8..16].try_into().unwrap()));
+        run.group_rows += u64::from_le_bytes(r[16..24].try_into().unwrap());
+        run.shuffle_bytes += u64::from_le_bytes(r[24..32].try_into().unwrap());
     }
-    Ok((bytes, secs))
+    Ok(run)
 }
 
 /// The planner-pushdown report: shuffled-bytes cells, eager vs planned,
@@ -171,33 +183,54 @@ fn planner_pushdown_report(total_rows: usize, key_domain: usize) -> anyhow::Resu
 
     let mut report = Report::new(
         "fig4_planner_pushdown",
-        &["workers", "eager_MB", "planned_MB", "bytes_ratio", "bytes_win", "eager_s", "planned_s"],
+        &[
+            "workers", "eager_MB", "planned_MB", "bytes_ratio", "bytes_win", "rows", "bytes",
+            "eager_s", "planned_s",
+        ],
     );
     for &w in &[2usize, 4, 8, 16] {
-        let mut eager_bytes = 0u64;
+        let mut eager_run = ChainRun { bytes: 0, secs: 0.0, group_rows: 0, shuffle_bytes: 0 };
         let eager = measure(0, 3, || {
-            let (b, s) = chain_run(total_rows, key_domain, w, false)?;
-            eager_bytes = b;
+            let r = chain_run(total_rows, key_domain, w, false)?;
+            let s = r.secs;
+            eager_run = r;
             Ok(s)
         })?;
-        let mut planned_bytes = 0u64;
+        let mut planned_run = ChainRun { bytes: 0, secs: 0.0, group_rows: 0, shuffle_bytes: 0 };
         let planned = measure(0, 3, || {
-            let (b, s) = chain_run(total_rows, key_domain, w, true)?;
-            planned_bytes = b;
+            let r = chain_run(total_rows, key_domain, w, true)?;
+            let s = r.secs;
+            planned_run = r;
             Ok(s)
         })?;
         let mb = |b: u64| b as f64 / (1024.0 * 1024.0);
         report.row(&[
             w.to_string(),
-            format!("{:.2}", mb(eager_bytes)),
-            format!("{:.2}", mb(planned_bytes)),
+            format!("{:.2}", mb(eager_run.bytes)),
+            format!("{:.2}", mb(planned_run.bytes)),
             format!(
                 "{:.2}x",
-                if planned_bytes > 0 { eager_bytes as f64 / planned_bytes as f64 } else { f64::NAN }
+                if planned_run.bytes > 0 {
+                    eager_run.bytes as f64 / planned_run.bytes as f64
+                } else {
+                    f64::NAN
+                }
             ),
-            // Deterministic cell (strict in CI): the planner must ship
-            // fewer bytes than eager execution at every world size.
-            (if planned_bytes < eager_bytes { "yes" } else { "no" }).to_string(),
+            // Deterministic cells (strict in CI), all sourced from the
+            // obs::metrics registry inside the rank job: the planner
+            // must ship fewer bytes than eager execution at every world
+            // size; pushing the filter below the join must not change
+            // the final aggregate's cardinality ("eq"); and the
+            // shuffle-layer registry bytes must agree with the win
+            // ("win").
+            (if planned_run.bytes < eager_run.bytes { "yes" } else { "no" }).to_string(),
+            if eager_run.group_rows == planned_run.group_rows {
+                "eq".to_string()
+            } else {
+                format!("{}!={}", eager_run.group_rows, planned_run.group_rows)
+            },
+            (if planned_run.shuffle_bytes < eager_run.shuffle_bytes { "win" } else { "lose" })
+                .to_string(),
             format!("{:.4}", eager.median),
             format!("{:.4}", planned.median),
         ]);

@@ -8,7 +8,9 @@
 
 use anyhow::{Context, Result};
 use hptmt::comm::{run_job, Communicator, ProcComm, ProfileSpec};
+use hptmt::obs;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn env(name: &str) -> Result<String> {
@@ -35,12 +37,39 @@ fn main() -> Result<()> {
     // whatever HPTMT_COMM says in the inherited environment.
     std::env::remove_var("HPTMT_COMM");
 
+    // Per-rank observability scope (the process-backend counterpart of
+    // what `spawn_world` installs on rank threads). `HPTMT_TRACE` is
+    // inherited from the launcher's environment, so tracing a
+    // multiprocess world needs no extra plumbing.
+    let rank_obs = Arc::new(obs::RankObs::for_rank(rank));
+    let _obs_scope = obs::install_scope(rank_obs.clone());
+
     let mut comm = ProcComm::connect_with(rank, world, &dir, profile, timeout)
         .with_context(|| format!("rank {rank}/{world} joining the mesh at {}", dir.display()))?;
     let out = run_job(&job, &arg, &mut comm)
         .with_context(|| format!("rank {rank}/{world} running job {job:?}"))?;
     std::fs::write(dir.join(format!("out-{rank}.bin")), &out)
         .with_context(|| format!("rank {rank} writing result"))?;
+
+    // Export this rank's trace next to its result when an exporter
+    // format was requested (deterministic fields + timing per span).
+    let trace_mode = obs::trace::mode();
+    if matches!(trace_mode, obs::TraceMode::Chrome | obs::TraceMode::Jsonl) {
+        obs::trace::flush_thread_events();
+        let events = rank_obs.take_events();
+        let (name, body) = match trace_mode {
+            obs::TraceMode::Chrome => (
+                format!("trace-{rank}.json"),
+                obs::trace::export_chrome(rank, &events),
+            ),
+            _ => (
+                format!("trace-{rank}.jsonl"),
+                obs::trace::export_jsonl(rank, &events),
+            ),
+        };
+        std::fs::write(dir.join(name), body)
+            .with_context(|| format!("rank {rank} writing trace"))?;
+    }
     // Everyone's result is on disk before anyone tears down its socket.
     comm.barrier()?;
     Ok(())

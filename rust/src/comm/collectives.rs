@@ -8,7 +8,41 @@
 //! gradient-sync path the DDP trainer exercises).
 
 use super::communicator::Communicator;
+use crate::obs;
 use anyhow::Result;
+
+/// Wrap a collective body with its observability surface: a
+/// `{name}.calls` counter, a [`SpanKind::Comm`] span, and
+/// `{name}.bytes_sent` / `{name}.frames_sent` counters derived from the
+/// communicator's own [`CommStats`] delta — so the registry can never
+/// disagree with the byte counters the differential walls assert on.
+///
+/// Composed collectives (allgather = gather + broadcast, allreduce_i64 =
+/// tree reduce + broadcast) count at *every* level they pass through:
+/// `comm.allgather_bytes.bytes_sent` includes the bytes its inner
+/// broadcast also books under `comm.broadcast_bytes.bytes_sent`. Metrics
+/// are call-level, not exclusive.
+///
+/// [`SpanKind::Comm`]: crate::obs::SpanKind::Comm
+/// [`CommStats`]: super::communicator::CommStats
+fn with_comm_span<C: Communicator + ?Sized, T>(
+    name: &'static str,
+    comm: &mut C,
+    f: impl FnOnce(&mut C) -> Result<T>,
+) -> Result<T> {
+    obs::metrics::incr(&format!("{name}.calls"), 1);
+    let before = comm.stats();
+    let mut sp = obs::span(name, obs::SpanKind::Comm);
+    let out = f(&mut *comm)?;
+    let after = comm.stats();
+    let bytes = after.bytes_sent.saturating_sub(before.bytes_sent);
+    let frames = after.msgs_sent.saturating_sub(before.msgs_sent);
+    obs::metrics::incr(&format!("{name}.bytes_sent"), bytes);
+    obs::metrics::incr(&format!("{name}.frames_sent"), frames);
+    sp.field("bytes_sent", bytes);
+    sp.field("frames_sent", frames);
+    Ok(out)
+}
 
 /// Element-wise reduction operator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,6 +106,14 @@ pub fn bytes_to_i64s(b: &[u8]) -> Vec<i64> {
 
 /// Binomial-tree broadcast of raw bytes from `root`.
 pub fn broadcast_bytes<C: Communicator + ?Sized>(
+    comm: &mut C,
+    root: usize,
+    data: Option<Vec<u8>>,
+) -> Result<Vec<u8>> {
+    with_comm_span("comm.broadcast_bytes", comm, |c| broadcast_bytes_inner(c, root, data))
+}
+
+fn broadcast_bytes_inner<C: Communicator + ?Sized>(
     comm: &mut C,
     root: usize,
     data: Option<Vec<u8>>,
@@ -178,6 +220,14 @@ pub fn allreduce_f64<C: Communicator + ?Sized>(
     data: &[f64],
     op: ReduceOp,
 ) -> Result<Vec<f64>> {
+    with_comm_span("comm.allreduce_f64", comm, |c| allreduce_f64_inner(c, data, op))
+}
+
+fn allreduce_f64_inner<C: Communicator + ?Sized>(
+    comm: &mut C,
+    data: &[f64],
+    op: ReduceOp,
+) -> Result<Vec<f64>> {
     let (rank, size) = (comm.rank(), comm.world_size());
     let mut buf = data.to_vec();
     if size == 1 {
@@ -274,6 +324,14 @@ pub fn allreduce_i64<C: Communicator + ?Sized>(
     data: &[i64],
     op: ReduceOp,
 ) -> Result<Vec<i64>> {
+    with_comm_span("comm.allreduce_i64", comm, |c| allreduce_i64_inner(c, data, op))
+}
+
+fn allreduce_i64_inner<C: Communicator + ?Sized>(
+    comm: &mut C,
+    data: &[i64],
+    op: ReduceOp,
+) -> Result<Vec<i64>> {
     // piggyback on f64 tree logic via a dedicated small tree
     let (rank, size) = (comm.rank(), comm.world_size());
     let tag = comm.next_collective_tag();
@@ -316,6 +374,14 @@ pub fn gather_bytes<C: Communicator + ?Sized>(
     root: usize,
     data: Vec<u8>,
 ) -> Result<Option<Vec<Vec<u8>>>> {
+    with_comm_span("comm.gather_bytes", comm, |c| gather_bytes_inner(c, root, data))
+}
+
+fn gather_bytes_inner<C: Communicator + ?Sized>(
+    comm: &mut C,
+    root: usize,
+    data: Vec<u8>,
+) -> Result<Option<Vec<Vec<u8>>>> {
     let (rank, size) = (comm.rank(), comm.world_size());
     let tag = comm.next_collective_tag();
     if rank == root {
@@ -337,6 +403,13 @@ pub fn gather_bytes<C: Communicator + ?Sized>(
 /// Allgather: every rank gets every rank's blob (gather to 0 + bcast of
 /// a length-prefixed frame).
 pub fn allgather_bytes<C: Communicator + ?Sized>(
+    comm: &mut C,
+    data: Vec<u8>,
+) -> Result<Vec<Vec<u8>>> {
+    with_comm_span("comm.allgather_bytes", comm, |c| allgather_bytes_inner(c, data))
+}
+
+fn allgather_bytes_inner<C: Communicator + ?Sized>(
     comm: &mut C,
     data: Vec<u8>,
 ) -> Result<Vec<Vec<u8>>> {
@@ -370,6 +443,14 @@ pub fn scatter_bytes<C: Communicator + ?Sized>(
     root: usize,
     data: Option<Vec<Vec<u8>>>,
 ) -> Result<Vec<u8>> {
+    with_comm_span("comm.scatter_bytes", comm, |c| scatter_bytes_inner(c, root, data))
+}
+
+fn scatter_bytes_inner<C: Communicator + ?Sized>(
+    comm: &mut C,
+    root: usize,
+    data: Option<Vec<Vec<u8>>>,
+) -> Result<Vec<u8>> {
     let (rank, size) = (comm.rank(), comm.world_size());
     let tag = comm.next_collective_tag();
     if rank == root {
@@ -391,6 +472,13 @@ pub fn scatter_bytes<C: Communicator + ?Sized>(
 /// result. The table shuffle (Table 4's "Shuffle") is this plus
 /// serialisation — see [`super::shuffle`].
 pub fn alltoall_bytes<C: Communicator + ?Sized>(
+    comm: &mut C,
+    data: Vec<Vec<u8>>,
+) -> Result<Vec<Vec<u8>>> {
+    with_comm_span("comm.alltoall_bytes", comm, |c| alltoall_bytes_inner(c, data))
+}
+
+fn alltoall_bytes_inner<C: Communicator + ?Sized>(
     comm: &mut C,
     mut data: Vec<Vec<u8>>,
 ) -> Result<Vec<Vec<u8>>> {

@@ -52,6 +52,7 @@ pub const JOB_NAMES: &[&str] = &[
     "streaming_shuffle",
     "dict_wire_shuffle",
     "empty_partitions",
+    "comm_stats_probe",
     "budget_shuffle",
     "fig4_chain",
     "unomt_pipeline",
@@ -59,7 +60,20 @@ pub const JOB_NAMES: &[&str] = &[
 
 /// Run the named job on this rank. `arg` is job-specific (usually
 /// `"seed"` or `"seed,rows"`; see each job), identical on every rank.
+///
+/// Every dispatch opens a `comm.jobs.{name}` span and bumps the
+/// matching `.calls` counter, so a traced rank process emits exactly
+/// one job-kind span per job it ran (asserted by
+/// `rust/tests/obs_wall.rs` and the CI `observability` job).
 pub fn run_job(name: &str, arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
+    crate::obs::metrics::incr(&format!("comm.jobs.{name}.calls"), 1);
+    let mut sp = crate::obs::span(format!("comm.jobs.{name}"), crate::obs::SpanKind::Job);
+    let out = run_job_inner(name, arg, comm)?;
+    sp.field("result_bytes", out.len() as u64);
+    Ok(out)
+}
+
+fn run_job_inner(name: &str, arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
     match name {
         "p2p_ring" => p2p_ring(arg, comm),
         "collectives" => collectives_digest(arg, comm),
@@ -135,6 +149,7 @@ pub fn run_job(name: &str, arg: &str, comm: &mut dyn Communicator) -> Result<Vec
             let a = input(arg, comm, 0, rows);
             table_bytes(shuffle_by_hash(comm, &a, &["k"]))
         }
+        "comm_stats_probe" => comm_stats_probe(arg, comm),
         "budget_shuffle" => {
             // Tight byte budget: shuffle staging spills to disk, result
             // bytes must not change (the spill wall's contract, here
@@ -294,10 +309,35 @@ fn streaming_shuffle_job(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u
     Ok(out)
 }
 
+/// CommStats parity probe: reset the counters, run one shuffle and one
+/// allreduce, and return this rank's data-message statistics as 32
+/// bytes (`msgs_sent, bytes_sent, msgs_recv, bytes_recv`, u64 LE).
+/// Both backends count only data frames (barrier control frames are
+/// uncounted by design), so the conformance wall's byte comparison
+/// makes the accounting itself a cross-backend contract.
+fn comm_stats_probe(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
+    comm.reset_stats();
+    let a = input(arg, comm, 0, rows_of(arg));
+    let shuffled = shuffle_by_hash(comm, &a, &["k"])?;
+    let summed =
+        allreduce_i64(comm, &[shuffled.num_rows() as i64], ReduceOp::Sum)?;
+    std::hint::black_box(summed);
+    let s = comm.stats();
+    let mut out = Vec::with_capacity(32);
+    for v in [s.msgs_sent, s.bytes_sent, s.msgs_recv, s.bytes_recv] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(out)
+}
+
 /// One run of the Fig-4 pushdown chain on this rank. `arg` is
-/// `"rows_per_rank,key_domain,planned"`; returns 16 bytes: this rank's
-/// `bytes_sent: u64` then `cpu+sim_comm seconds: f64`, little-endian
-/// (the bench harness aggregates across ranks).
+/// `"rows_per_rank,key_domain,planned"`; returns 32 bytes, all u64/f64
+/// little-endian: this rank's wire `bytes_sent`, `cpu+sim_comm
+/// seconds` (f64), the final group-by `rows_out` delta from the
+/// metrics registry, and the `comm.shuffle.bytes_sent` registry delta
+/// (the bench harness aggregates across ranks; the registry deltas
+/// feed the strict `rows`/`bytes` cells of the planner-pushdown
+/// report).
 fn fig4_chain(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
     let mut it = arg.split(',');
     let rows: usize = it.next().and_then(|s| s.trim().parse().ok()).unwrap_or(4096);
@@ -327,6 +367,13 @@ fn fig4_chain(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
     let left = wide_shard(rows, domain, 300 + rank as u64);
     let right = wide_shard(rows, domain, 700 + rank as u64);
     comm.reset_stats();
+    // Registry baselines: the group-by rows-out delta is the
+    // eager-vs-planned row invariant (join cardinality differs once the
+    // filter is pushed below it; the final aggregate's must not), and
+    // the shuffle-bytes delta isolates wire traffic from broadcasts.
+    let g0 = crate::obs::metrics::get("ops.dist.groupby.rows_out")
+        + crate::obs::metrics::get("ops.dist.groupby_partial.rows_out");
+    let s0 = crate::obs::metrics::get("comm.shuffle.bytes_sent");
     let sw = crate::util::time::CpuStopwatch::start();
     let out = if planned {
         LazyFrame::from_table(left)
@@ -343,9 +390,15 @@ fn fig4_chain(arg: &str, comm: &mut dyn Communicator) -> Result<Vec<u8>> {
     };
     let secs = sw.elapsed().as_secs_f64() + comm.stats().sim_comm_seconds;
     std::hint::black_box(out.num_rows());
-    let mut res = Vec::with_capacity(16);
+    let group_rows = crate::obs::metrics::get("ops.dist.groupby.rows_out")
+        + crate::obs::metrics::get("ops.dist.groupby_partial.rows_out")
+        - g0;
+    let shuffle_bytes = crate::obs::metrics::get("comm.shuffle.bytes_sent") - s0;
+    let mut res = Vec::with_capacity(32);
     res.extend_from_slice(&comm.stats().bytes_sent.to_le_bytes());
     res.extend_from_slice(&secs.to_le_bytes());
+    res.extend_from_slice(&group_rows.to_le_bytes());
+    res.extend_from_slice(&shuffle_bytes.to_le_bytes());
     Ok(res)
 }
 

@@ -405,6 +405,10 @@ where
             std::thread::Builder::new()
                 .name(format!("uds-rank-{rank}"))
                 .spawn(move || {
+                    // Same per-rank observability scope as the thread
+                    // backend's `spawn_world` installs.
+                    let obs = Arc::new(crate::obs::RankObs::for_rank(rank));
+                    let _g = crate::obs::install_scope(obs);
                     let mut comm =
                         ProcComm::connect_with(rank, world, &dir, profile, Duration::from_secs(30))?;
                     f(rank, &mut comm)

@@ -10,8 +10,22 @@ use super::collectives::alltoall_bytes;
 use super::communicator::Communicator;
 use super::partitioner::{pivot_partition_indices, HashPartitioner};
 use crate::exec::morsel::{self, MemBudget, SpillBytes};
+use crate::obs;
 use crate::table::{ipc, Table};
 use anyhow::{Context, Result};
+
+/// Record one outgoing shuffle blob in the metrics registry: total
+/// bytes/frames plus the per-peer breakdown (`comm.shuffle.to.{dst}.*`)
+/// the EXPLAIN ANALYZE skew view reads. The own partition never touches
+/// the wire and is never counted — matching [`CommStats`] exactly.
+///
+/// [`CommStats`]: super::communicator::CommStats
+fn count_shuffle_blob(dst: usize, nbytes: usize) {
+    obs::metrics::incr("comm.shuffle.bytes_sent", nbytes as u64);
+    obs::metrics::incr("comm.shuffle.frames_sent", 1);
+    obs::metrics::incr(&format!("comm.shuffle.to.{dst}.bytes"), nbytes as u64);
+    obs::metrics::incr(&format!("comm.shuffle.to.{dst}.frames"), 1);
+}
 
 /// One staged shuffle blob: in memory while the staging set fits the
 /// ambient [`MemBudget`], on disk (byte-exact, dictionary encoding
@@ -66,6 +80,8 @@ pub fn shuffle_tables<C: Communicator + ?Sized>(
     parts: Vec<Table>,
 ) -> Result<Table> {
     assert_eq!(parts.len(), comm.world_size(), "shuffle: one partition per rank");
+    obs::metrics::incr("comm.shuffle.calls", 1);
+    let _sp = obs::span("comm.shuffle", obs::SpanKind::Comm);
     let rank = comm.rank();
     let w = comm.world_size();
     let schema = parts[rank].schema().clone();
@@ -86,7 +102,9 @@ pub fn shuffle_tables<C: Communicator + ?Sized>(
     let tag = comm.next_collective_tag();
     for dst in 0..w {
         if let Some(staged) = outgoing[dst].take() {
-            comm.send(dst, tag, staged.unstage(&mut in_mem)?)?;
+            let blob = staged.unstage(&mut in_mem)?;
+            count_shuffle_blob(dst, blob.len());
+            comm.send(dst, tag, blob)?;
         }
     }
     let mut incoming: Vec<Option<Staged>> = Vec::with_capacity(w);
@@ -149,6 +167,8 @@ impl StreamingShuffle {
     ) -> Result<Table> {
         assert_eq!(parts.len(), comm.world_size(), "shuffle: one partition per rank");
         assert_eq!(parts.len(), self.tx.len(), "StreamingShuffle built for another world size");
+        obs::metrics::incr("comm.shuffle.stream.calls", 1);
+        let _sp = obs::span("comm.shuffle.stream", obs::SpanKind::Comm);
         let rank = comm.rank();
         let mut own: Option<Table> = None;
         let mut blobs: Vec<Vec<u8>> = Vec::with_capacity(parts.len());
@@ -157,7 +177,9 @@ impl StreamingShuffle {
                 own = Some(p);
                 blobs.push(Vec::new());
             } else {
-                blobs.push(self.tx[r].encode_batch(&p));
+                let blob = self.tx[r].encode_batch(&p);
+                count_shuffle_blob(r, blob.len());
+                blobs.push(blob);
             }
         }
         let received = alltoall_bytes(comm, blobs)?;

@@ -193,7 +193,13 @@ where
         handles.push(
             std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
-                .spawn(move || f(rank, &mut comm))
+                .spawn(move || {
+                    // Fresh per-rank observability scope: counters and
+                    // spans recorded inside `f` stay rank-local.
+                    let obs = std::sync::Arc::new(crate::obs::RankObs::for_rank(rank));
+                    let _g = crate::obs::install_scope(obs);
+                    f(rank, &mut comm)
+                })
                 .expect("spawn rank thread"),
         );
     }

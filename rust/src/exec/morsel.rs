@@ -164,7 +164,12 @@ static SPILL_BYTES: AtomicU64 = AtomicU64::new(0);
 static PEAK_STATE: AtomicU64 = AtomicU64::new(0);
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
-/// Snapshot of the process-global spill counters.
+/// Registry keys mirroring the spill counters (`obs::metrics`).
+const K_SPILL_FILES: &str = "exec.morsel.spill.files";
+const K_SPILL_BYTES: &str = "exec.morsel.spill.bytes";
+const K_PEAK_STATE: &str = "exec.morsel.spill.peak_state_bytes";
+
+/// Snapshot of the spill counters (see [`spill_stats`] for scoping).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SpillStats {
     /// Spill files written since the last [`reset_spill_stats`].
@@ -175,7 +180,24 @@ pub struct SpillStats {
     pub peak_state_bytes: u64,
 }
 
+/// Spill counters for the calling thread's rank scope.
+///
+/// Every spill increments both the installed `obs` rank scope's
+/// registry (`exec.morsel.spill.*`) and the process-global atomics.
+/// Inside a spawned world each rank therefore observes only its own
+/// spills — concurrent worlds in one test process no longer bleed into
+/// each other — while a caller with no scope installed (the main test
+/// thread, `collect()`) keeps the historical process-global view,
+/// which still aggregates across all ranks it spawned.
 pub fn spill_stats() -> SpillStats {
+    if let Some(obs) = crate::obs::current_scope() {
+        let reg = obs.registry();
+        return SpillStats {
+            files: reg.get(K_SPILL_FILES),
+            bytes: reg.get(K_SPILL_BYTES),
+            peak_state_bytes: reg.get(K_PEAK_STATE),
+        };
+    }
     SpillStats {
         files: SPILL_FILES.load(Ordering::Relaxed),
         bytes: SPILL_BYTES.load(Ordering::Relaxed),
@@ -183,15 +205,38 @@ pub fn spill_stats() -> SpillStats {
     }
 }
 
+/// Zero the counters [`spill_stats`] reads: the rank scope's registry
+/// keys when a scope is installed, the process-global atomics (and the
+/// global registry mirror) otherwise.
 pub fn reset_spill_stats() {
+    if let Some(obs) = crate::obs::current_scope() {
+        let reg = obs.registry();
+        reg.set(K_SPILL_FILES, 0);
+        reg.set(K_SPILL_BYTES, 0);
+        reg.set(K_PEAK_STATE, 0);
+        return;
+    }
     SPILL_FILES.store(0, Ordering::Relaxed);
     SPILL_BYTES.store(0, Ordering::Relaxed);
     PEAK_STATE.store(0, Ordering::Relaxed);
+    let reg = crate::obs::rank_obs();
+    let reg = reg.registry();
+    reg.set(K_SPILL_FILES, 0);
+    reg.set(K_SPILL_BYTES, 0);
+    reg.set(K_PEAK_STATE, 0);
+}
+
+fn count_spill(nbytes: usize) {
+    SPILL_FILES.fetch_add(1, Ordering::Relaxed);
+    SPILL_BYTES.fetch_add(nbytes as u64, Ordering::Relaxed);
+    crate::obs::metrics::incr(K_SPILL_FILES, 1);
+    crate::obs::metrics::incr(K_SPILL_BYTES, nbytes as u64);
 }
 
 /// Record `nbytes` of retained (post-enforcement) operator state.
 pub fn note_state_bytes(nbytes: usize) {
     PEAK_STATE.fetch_max(nbytes as u64, Ordering::Relaxed);
+    crate::obs::metrics::set_max(K_PEAK_STATE, nbytes as u64);
 }
 
 // ---- spill files -------------------------------------------------------
@@ -212,8 +257,7 @@ impl SpillFile {
         let bytes = ipc::serialize(t);
         std::fs::write(&path, &bytes)
             .with_context(|| format!("writing spill file {}", path.display()))?;
-        SPILL_FILES.fetch_add(1, Ordering::Relaxed);
-        SPILL_BYTES.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        count_spill(bytes.len());
         Ok(SpillFile { path })
     }
 
@@ -251,8 +295,7 @@ impl SpillBytes {
             .join(format!("hptmt-spill-{}-{}.bin", std::process::id(), seq));
         std::fs::write(&path, bytes)
             .with_context(|| format!("writing spill blob {}", path.display()))?;
-        SPILL_FILES.fetch_add(1, Ordering::Relaxed);
-        SPILL_BYTES.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        count_spill(bytes.len());
         Ok(SpillBytes { path, len: bytes.len() })
     }
 
@@ -318,7 +361,9 @@ where
         return Ok(Vec::new());
     }
     let workers = worker_count(n);
+    crate::obs::metrics::incr("exec.morsel.runs", 1);
     if n == 1 || workers <= 1 {
+        crate::obs::metrics::incr("exec.morsel.morsels", n as u64);
         return (0..n).map(&f).collect();
     }
 
@@ -334,36 +379,48 @@ where
 
     let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let failed = AtomicBool::new(false);
+    // Thread-locals do not cross `scope.spawn`, so hand each worker the
+    // spawning thread's obs rank scope: its morsel/steal/spill counters
+    // must land in the owning rank's registry, not the global fallback.
+    let obs_scope = crate::obs::current_scope();
     std::thread::scope(|scope| {
         for w in 0..workers {
             let deques = &deques;
             let slots = &slots;
             let failed = &failed;
             let f = &f;
-            scope.spawn(move || loop {
-                if failed.load(Ordering::Relaxed) {
-                    return;
-                }
-                // Own queue front first, then steal from siblings' backs.
-                let mut task = deques[w].lock().unwrap_or_else(|e| e.into_inner()).pop_front();
-                if task.is_none() {
-                    for off in 1..workers {
-                        let victim = (w + off) % workers;
-                        task = deques[victim]
-                            .lock()
-                            .unwrap_or_else(|e| e.into_inner())
-                            .pop_back();
-                        if task.is_some() {
-                            break;
+            let obs_scope = obs_scope.clone();
+            scope.spawn(move || {
+                let _obs = obs_scope.map(crate::obs::install_scope);
+                loop {
+                    if failed.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    // Own queue front first, then steal from siblings' backs.
+                    let mut task =
+                        deques[w].lock().unwrap_or_else(|e| e.into_inner()).pop_front();
+                    if task.is_none() {
+                        for off in 1..workers {
+                            let victim = (w + off) % workers;
+                            task = deques[victim]
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .pop_back();
+                            if task.is_some() {
+                                // Scheduling-dependent: never a strict cell.
+                                crate::obs::metrics::incr("exec.morsel.steals", 1);
+                                break;
+                            }
                         }
                     }
+                    let Some(i) = task else { return };
+                    crate::obs::metrics::incr("exec.morsel.morsels", 1);
+                    let r = f(i);
+                    if r.is_err() {
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                    *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
                 }
-                let Some(i) = task else { return };
-                let r = f(i);
-                if r.is_err() {
-                    failed.store(true, Ordering::Relaxed);
-                }
-                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
             });
         }
     });

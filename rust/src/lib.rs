@@ -13,6 +13,7 @@
 //! * `exec` — BSP executor + async central-scheduler baseline
 //! * `dataframe` — PyCylon-analog user API
 //! * [`plan`] — lazy, cost-based query planner over the operator layers
+//! * [`obs`] — per-rank metrics registry + span tracer
 //! * `pipeline` — streaming orchestrator
 //! * [`runtime`] — PJRT loader/executor for AOT-compiled JAX models
 //! * `dl` — distributed-data-parallel training driver
@@ -23,6 +24,7 @@ pub mod comm;
 pub mod dataframe;
 pub mod dl;
 pub mod exec;
+pub mod obs;
 pub mod ops;
 pub mod pipeline;
 pub mod plan;

@@ -1,0 +1,163 @@
+//! The unified metrics registry: named `u64` counters and peak gauges
+//! with a snapshot/reset API.
+//!
+//! Naming scheme (DESIGN.md §13): `layer.operator.metric`, e.g.
+//! `ops.dist.join.rows_out`, `comm.shuffle.bytes_sent`,
+//! `comm.shuffle.to.<rank>.frames`, `exec.morsel.spill.files`,
+//! `pipeline.stage.<name>.rows_in`, `plan.fuse.gathers`. Counters are
+//! created on first touch; reads of untouched names return 0.
+//!
+//! The registry is always on. Every recorded value is an integer
+//! derived from data the instrumented code already computes (row
+//! counts, payload byte lengths, file counts), so for a deterministic
+//! program the registry contents are deterministic too — which is what
+//! lets strict bench cells and the cross-backend `obs_wall` assert on
+//! them. Wall-clock measurement lives in [`super::trace`], never here.
+//!
+//! The free functions ([`incr`], [`set_max`], [`get`], [`snapshot`],
+//! [`reset`]) operate on the current rank scope (see
+//! [`super::install_scope`]), falling back to the process-global
+//! registry when no scope is installed.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// A named-counter registry. One per [`super::RankObs`].
+///
+/// Backed by a `Mutex<BTreeMap>` rather than per-counter atomics:
+/// instrumentation points fire per operator / per morsel / per shuffle
+/// edge (never per row), and the ordered map gives [`snapshot`] a
+/// deterministic iteration order for free.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `delta` to the named counter (creating it at 0).
+    pub fn incr(&self, name: &str, delta: u64) {
+        if delta == 0 {
+            return;
+        }
+        let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        match m.get_mut(name) {
+            Some(v) => *v = v.saturating_add(delta),
+            None => {
+                m.insert(name.to_string(), delta);
+            }
+        }
+    }
+
+    /// Raise the named gauge to `value` if it is below it (peak
+    /// semantics, like `fetch_max`).
+    pub fn set_max(&self, name: &str, value: u64) {
+        let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        match m.get_mut(name) {
+            Some(v) => *v = (*v).max(value),
+            None => {
+                m.insert(name.to_string(), value);
+            }
+        }
+    }
+
+    /// Overwrite the named counter (used by back-compat reset shims).
+    pub fn set(&self, name: &str, value: u64) {
+        self.counters
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(name.to_string(), value);
+    }
+
+    /// Current value of the named counter (0 if never touched).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Every counter, in name order.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Drop every counter.
+    pub fn reset(&self) {
+        self.counters.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+}
+
+/// Add `delta` to `name` in the current rank scope's registry.
+pub fn incr(name: &str, delta: u64) {
+    super::rank_obs().registry().incr(name, delta);
+}
+
+/// Peak-update `name` in the current rank scope's registry.
+pub fn set_max(name: &str, value: u64) {
+    super::rank_obs().registry().set_max(name, value);
+}
+
+/// Read `name` from the current rank scope's registry.
+pub fn get(name: &str) -> u64 {
+    super::rank_obs().registry().get(name)
+}
+
+/// Snapshot the current rank scope's registry.
+pub fn snapshot() -> BTreeMap<String, u64> {
+    super::rank_obs().registry().snapshot()
+}
+
+/// Clear the current rank scope's registry.
+pub fn reset() {
+    super::rank_obs().registry().reset();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_incr_peak_and_snapshot_in_name_order() {
+        let r = Registry::new();
+        r.incr("b.two", 2);
+        r.incr("a.one", 1);
+        r.incr("b.two", 3);
+        r.set_max("c.peak", 10);
+        r.set_max("c.peak", 7);
+        assert_eq!(r.get("b.two"), 5);
+        assert_eq!(r.get("c.peak"), 10);
+        assert_eq!(r.get("never.touched"), 0);
+        let names: Vec<String> = r.snapshot().keys().cloned().collect();
+        assert_eq!(names, vec!["a.one", "b.two", "c.peak"]);
+        r.reset();
+        assert!(r.snapshot().is_empty());
+    }
+
+    #[test]
+    fn scope_isolates_ranks_from_the_global_fallback() {
+        // Unscoped writes land in the process-global registry under a
+        // key no other test touches.
+        incr("test.metrics.scope_demo", 1);
+        let global_before = get("test.metrics.scope_demo");
+        {
+            let obs = Arc::new(crate::obs::RankObs::for_rank(3));
+            let _g = crate::obs::install_scope(obs.clone());
+            incr("test.metrics.scope_demo", 10);
+            assert_eq!(get("test.metrics.scope_demo"), 10, "scope starts fresh");
+            assert_eq!(obs.registry().get("test.metrics.scope_demo"), 10);
+        }
+        assert_eq!(
+            get("test.metrics.scope_demo"),
+            global_before,
+            "scoped increments must not leak into the global registry"
+        );
+    }
+}

@@ -1,0 +1,182 @@
+//! `obs` — the observability layer: one metrics registry + one span
+//! tracer, shared by every other layer (DESIGN.md §13).
+//!
+//! Before this module, runtime measurement was scattered across four
+//! unrelated surfaces: [`crate::comm::CommStats`] (per-communicator
+//! wire counters), [`crate::pipeline::StageMetrics`] (per-stage
+//! throughput), the process-global `exec::morsel::spill_stats()`
+//! atomics, and the thread-local `plan::fuse_gathers()` cell. Each had
+//! its own snapshot/reset idiom and none composed into a per-operator,
+//! per-rank view. `obs` unifies them:
+//!
+//! * **[`metrics`]** — a named counter/gauge registry
+//!   (`layer.operator.metric` naming, e.g. `ops.dist.join.rows_out`,
+//!   `comm.shuffle.to.3.bytes`, `exec.morsel.spill.files`). Counters
+//!   are *always on*: they are plain integer bumps keyed off data the
+//!   operators already compute, so they are deterministic for a
+//!   deterministic program and never perturb the byte-identity walls.
+//! * **[`trace`]** — `obs::span(name, kind)` RAII guards recording
+//!   wall-clock time plus integer fields, buffered per thread and
+//!   drained per rank. Tracing is **off by default**
+//!   (`HPTMT_TRACE={0,1,chrome,jsonl}`, or a runtime override for
+//!   tests) and records timestamps only when enabled, so the default
+//!   configuration does no clock reads on the data path.
+//!
+//! **Rank scoping.** Every rank-spawn site
+//! ([`crate::comm::spawn_world`], [`crate::comm::spawn_uds_world`],
+//! and the `hptmt_rank` launcher binary) installs a fresh [`RankObs`]
+//! as the current thread's scope via [`install_scope`]. All counter
+//! bumps and drained spans on that thread (and on morsel workers,
+//! which re-install the spawning thread's scope) land in the rank's
+//! own registry, so concurrently running worlds in one test process
+//! never bleed into each other. Code running with no scope installed
+//! (unit tests, `collect()` on the main thread) falls back to a
+//! process-global [`RankObs`], preserving the old process-wide
+//! semantics of `spill_stats()`.
+//!
+//! The planner's `LazyFrame::explain_analyze()` /
+//! [`crate::plan::PlanAnalysis`] ride on the same seams: per-node
+//! actuals are captured during execution and aggregated across ranks
+//! with `allgather_bytes`.
+
+pub mod metrics;
+pub mod trace;
+
+use crate::table::Table;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex, OnceLock};
+
+pub use trace::{span, SpanGuard, SpanKind, TraceMode};
+
+/// One rank's observability state: its metrics registry plus the sink
+/// that per-thread span buffers drain into.
+#[derive(Debug)]
+pub struct RankObs {
+    rank: usize,
+    registry: metrics::Registry,
+    events: Mutex<Vec<trace::SpanEvent>>,
+}
+
+impl RankObs {
+    /// Fresh, empty state for `rank`.
+    pub fn for_rank(rank: usize) -> RankObs {
+        RankObs {
+            rank,
+            registry: metrics::Registry::new(),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The rank this state was installed for (0 for the process-global
+    /// fallback).
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The rank's counter registry.
+    pub fn registry(&self) -> &metrics::Registry {
+        &self.registry
+    }
+
+    /// Drain every span event flushed to this rank so far, in flush
+    /// order. Call [`drain_events`] instead to also flush the calling
+    /// thread's buffer first.
+    pub fn take_events(&self) -> Vec<trace::SpanEvent> {
+        std::mem::take(&mut self.events.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    pub(crate) fn append_events(&self, mut events: Vec<trace::SpanEvent>) {
+        self.events
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .append(&mut events);
+    }
+}
+
+thread_local! {
+    static SCOPE: RefCell<Option<Arc<RankObs>>> = const { RefCell::new(None) };
+}
+
+fn global() -> &'static Arc<RankObs> {
+    static GLOBAL: OnceLock<Arc<RankObs>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(RankObs::for_rank(0)))
+}
+
+/// The scope installed on the current thread, if any — `None` means
+/// counters go to the process-global fallback.
+pub fn current_scope() -> Option<Arc<RankObs>> {
+    SCOPE.with(|s| s.borrow().clone())
+}
+
+/// The [`RankObs`] all instrumentation on this thread records into:
+/// the installed scope, or the process-global fallback.
+pub fn rank_obs() -> Arc<RankObs> {
+    current_scope().unwrap_or_else(|| global().clone())
+}
+
+/// Install `obs` as the current thread's scope until the returned
+/// guard drops. On drop, the thread's buffered span events are flushed
+/// into `obs` and the previous scope (if any) is restored.
+pub fn install_scope(obs: Arc<RankObs>) -> ScopeGuard {
+    let prev = SCOPE.with(|s| s.borrow_mut().replace(obs));
+    ScopeGuard { prev }
+}
+
+/// RAII guard returned by [`install_scope`].
+#[must_use = "dropping the guard immediately uninstalls the scope"]
+pub struct ScopeGuard {
+    prev: Option<Arc<RankObs>>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        // Flush while the scope is still installed so the buffered
+        // events land in *this* scope's sink, then restore.
+        trace::flush_thread_events();
+        SCOPE.with(|s| *s.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Flush the calling thread's span buffer and drain every event
+/// recorded for the current rank scope.
+pub fn drain_events() -> Vec<trace::SpanEvent> {
+    trace::flush_thread_events();
+    rank_obs().take_events()
+}
+
+/// Operator instrumentation helper for the `ops::dist` layer: bumps
+/// `<name>.calls` / `<name>.rows_in` and opens an operator span. Pass
+/// the result of the operator's local kernel through
+/// [`OpSpan::done`] to record `rows_out` (both per operator and in the
+/// shared `ops.dist.rows_out` aggregate).
+pub fn op_span(name: &'static str, rows_in: usize) -> OpSpan {
+    metrics::incr(&format!("{name}.calls"), 1);
+    metrics::incr(&format!("{name}.rows_in"), rows_in as u64);
+    let mut span = trace::span(name, SpanKind::Operator);
+    span.field("rows_in", rows_in as u64);
+    OpSpan { name, span }
+}
+
+/// In-flight distributed-operator span (see [`op_span`]). If the
+/// operator errors out through `?` before [`done`](OpSpan::done), the
+/// span still records its elapsed time on drop; only `rows_out` is
+/// skipped.
+pub struct OpSpan {
+    name: &'static str,
+    span: SpanGuard,
+}
+
+impl OpSpan {
+    /// Record the operator's output row count and pass the result
+    /// through unchanged.
+    pub fn done(mut self, r: Result<Table>) -> Result<Table> {
+        if let Ok(t) = &r {
+            let rows = t.num_rows() as u64;
+            metrics::incr(&format!("{}.rows_out", self.name), rows);
+            metrics::incr("ops.dist.rows_out", rows);
+            self.span.field("rows_out", rows);
+        }
+        r
+    }
+}

@@ -1,0 +1,356 @@
+//! The per-rank span tracer and its exporters.
+//!
+//! A span is one timed region of rank-local work — an operator, a
+//! collective, a job — opened with [`span`] and closed by dropping the
+//! returned guard. Spans record wall-clock microseconds plus any
+//! integer fields the instrumented code attaches
+//! ([`SpanGuard::field`]: row counts, byte counts). Completed spans
+//! are buffered in a plain thread-local `Vec` (no locks on the data
+//! path) and flushed into the current rank scope's sink when the
+//! scope guard drops, or explicitly via [`super::drain_events`].
+//!
+//! Tracing is **off by default**: [`mode`] reads `HPTMT_TRACE`
+//! (`0`/unset = off, `1` = collect, `chrome` / `jsonl` = collect for
+//! that exporter), and tests or `explain_analyze` can force it with
+//! [`set_mode_override`] without touching the process environment.
+//! When off, [`span`] returns an inert guard that reads no clock and
+//! buffers nothing, so the byte-identity walls run unperturbed — which
+//! `rust/tests/obs_wall.rs` asserts by re-running differential slices
+//! traced and untraced.
+//!
+//! Exporter formats (DESIGN.md §13):
+//! * [`export_chrome`] — one `chrome://tracing` / Perfetto JSON array
+//!   of complete (`"ph":"X"`) events, `pid` = rank;
+//! * [`export_jsonl`] — one JSON object per line, with deterministic
+//!   integer fields under `"det"` kept separate from wall-clock
+//!   fields under `"timing"`, so consumers can diff the deterministic
+//!   projection across runs and backends.
+
+use std::cell::RefCell;
+use std::fmt::Write as _;
+use std::sync::{OnceLock, RwLock};
+use std::time::Instant;
+
+/// What the tracer does with spans this process records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Record nothing (the default — zero overhead on the data path).
+    Off,
+    /// Collect spans for programmatic draining (`HPTMT_TRACE=1`).
+    On,
+    /// Collect spans for the Chrome-trace exporter.
+    Chrome,
+    /// Collect spans for the JSONL exporter.
+    Jsonl,
+}
+
+impl TraceMode {
+    /// Parse the `HPTMT_TRACE` grammar; unknown values mean off.
+    fn from_env() -> TraceMode {
+        match std::env::var("HPTMT_TRACE").as_deref() {
+            Ok("1") => TraceMode::On,
+            Ok("chrome") => TraceMode::Chrome,
+            Ok("jsonl") => TraceMode::Jsonl,
+            _ => TraceMode::Off,
+        }
+    }
+
+    /// Whether spans are collected at all under this mode.
+    pub fn enabled(self) -> bool {
+        self != TraceMode::Off
+    }
+}
+
+fn mode_override() -> &'static RwLock<Option<TraceMode>> {
+    static OVERRIDE: OnceLock<RwLock<Option<TraceMode>>> = OnceLock::new();
+    OVERRIDE.get_or_init(|| RwLock::new(None))
+}
+
+/// The active trace mode: the runtime override if one is installed,
+/// otherwise `HPTMT_TRACE`.
+pub fn mode() -> TraceMode {
+    if let Some(m) = *mode_override().read().unwrap_or_else(|e| e.into_inner()) {
+        return m;
+    }
+    TraceMode::from_env()
+}
+
+/// Install (`Some`) or clear (`None`) a process-wide trace-mode
+/// override. Tests use this instead of mutating the environment;
+/// `analyze` uses it so `explain_analyze` can time spans without the
+/// caller exporting anything.
+pub fn set_mode_override(m: Option<TraceMode>) {
+    *mode_override().write().unwrap_or_else(|e| e.into_inner()) = m;
+}
+
+/// Span taxonomy — which layer opened the span (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A distributed or local relational operator (`ops.*`).
+    Operator,
+    /// A communication primitive (`comm.shuffle`, `comm.collectives.*`).
+    Comm,
+    /// Executor work (`exec.morsel.*`).
+    Exec,
+    /// A streaming pipeline stage (`pipeline.*`).
+    Pipeline,
+    /// A registered `comm::jobs` entry point (`comm.jobs.*`).
+    Job,
+    /// A physical plan node timed by `explain_analyze`.
+    Plan,
+}
+
+impl SpanKind {
+    /// Stable lower-case name used by the exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Operator => "operator",
+            SpanKind::Comm => "comm",
+            SpanKind::Exec => "exec",
+            SpanKind::Pipeline => "pipeline",
+            SpanKind::Job => "job",
+            SpanKind::Plan => "plan",
+        }
+    }
+}
+
+/// One completed span.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Registry-style span name (`layer.operator`).
+    pub name: String,
+    /// Taxonomy kind ([`SpanKind::name`]).
+    pub kind: &'static str,
+    /// Start, in microseconds since the process trace epoch.
+    pub ts_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Deterministic integer fields, in attachment order.
+    pub fields: Vec<(&'static str, u64)>,
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static BUFFER: RefCell<Vec<SpanEvent>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Move the calling thread's buffered spans into the current rank
+/// scope's sink (the process-global fallback when no scope is
+/// installed). Called automatically when a scope guard drops.
+pub fn flush_thread_events() {
+    let events = BUFFER.with(|b| std::mem::take(&mut *b.borrow_mut()));
+    if !events.is_empty() {
+        super::rank_obs().append_events(events);
+    }
+}
+
+/// Open a span. When tracing is off this is inert: no clock read, no
+/// allocation beyond the (unused) name, no buffering.
+pub fn span(name: impl Into<String>, kind: SpanKind) -> SpanGuard {
+    if !mode().enabled() {
+        return SpanGuard { rec: None };
+    }
+    let start = Instant::now();
+    let ts_us = start.duration_since(epoch()).as_micros() as u64;
+    SpanGuard {
+        rec: Some(SpanRec {
+            name: name.into(),
+            kind,
+            start,
+            ts_us,
+            fields: Vec::new(),
+        }),
+    }
+}
+
+struct SpanRec {
+    name: String,
+    kind: SpanKind,
+    start: Instant,
+    ts_us: u64,
+    fields: Vec<(&'static str, u64)>,
+}
+
+/// RAII span handle returned by [`span`]; records the event when
+/// dropped (if tracing was enabled when it was opened).
+pub struct SpanGuard {
+    rec: Option<SpanRec>,
+}
+
+impl SpanGuard {
+    /// Attach a deterministic integer field (no-op when tracing is
+    /// off). Re-attaching a key appends; exporters keep order.
+    pub fn field(&mut self, key: &'static str, value: u64) {
+        if let Some(rec) = &mut self.rec {
+            rec.fields.push((key, value));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(rec) = self.rec.take() {
+            let dur_us = rec.start.elapsed().as_micros() as u64;
+            BUFFER.with(|b| {
+                b.borrow_mut().push(SpanEvent {
+                    name: rec.name,
+                    kind: rec.kind.name(),
+                    ts_us: rec.ts_us,
+                    dur_us,
+                    fields: rec.fields,
+                })
+            });
+        }
+    }
+}
+
+/// Minimal JSON string escaping for span names (quotes, backslashes,
+/// control characters).
+fn esc(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Render `events` as JSONL: one object per line, shaped
+/// `{"name":…,"kind":…,"rank":…,"det":{…},"timing":{"ts_us":…,"dur_us":…}}`.
+/// Everything outside `"timing"` is deterministic for a deterministic
+/// program; strict consumers diff lines with `"timing"` stripped.
+pub fn export_jsonl(rank: usize, events: &[SpanEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str("{\"name\":\"");
+        esc(&e.name, &mut out);
+        let _ = write!(out, "\",\"kind\":\"{}\",\"rank\":{rank},\"det\":{{", e.kind);
+        for (i, (k, v)) in e.fields.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{k}\":{v}");
+        }
+        let _ = write!(
+            out,
+            "}},\"timing\":{{\"ts_us\":{},\"dur_us\":{}}}}}",
+            e.ts_us, e.dur_us
+        );
+        out.push('\n');
+    }
+    out
+}
+
+/// Render `events` as a `chrome://tracing` / Perfetto JSON array of
+/// complete events: `pid` is the rank, `tid` 0 (spans are flushed per
+/// thread but drained per rank), fields land in `args`.
+pub fn export_chrome(rank: usize, events: &[SpanEvent]) -> String {
+    let mut out = String::from("[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n{\"name\":\"");
+        esc(&e.name, &mut out);
+        let _ = write!(
+            out,
+            "\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":{rank},\"tid\":0,\"ts\":{},\"dur\":{},\"args\":{{",
+            e.kind, e.ts_us, e.dur_us
+        );
+        for (j, (k, v)) in e.fields.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{k}\":{v}");
+        }
+        out.push_str("}}");
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::sync::{Arc, Mutex, OnceLock};
+
+    /// The mode override is process-global; serialize tests that flip it.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+        GUARD
+            .get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn spans_are_inert_when_off_and_buffered_when_on() {
+        let _g = guard();
+        set_mode_override(Some(TraceMode::Off));
+        let obs = Arc::new(crate::obs::RankObs::for_rank(0));
+        {
+            let _s = crate::obs::install_scope(obs.clone());
+            let mut sp = span("test.off", SpanKind::Exec);
+            sp.field("n", 1);
+            drop(sp);
+        }
+        assert!(obs.take_events().is_empty(), "off mode must record nothing");
+
+        set_mode_override(Some(TraceMode::On));
+        let obs = Arc::new(crate::obs::RankObs::for_rank(2));
+        {
+            let _s = crate::obs::install_scope(obs.clone());
+            let mut sp = span("test.on", SpanKind::Operator);
+            sp.field("rows_out", 42);
+        }
+        let events = obs.take_events();
+        set_mode_override(None);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].name, "test.on");
+        assert_eq!(events[0].kind, "operator");
+        assert_eq!(events[0].fields, vec![("rows_out", 42)]);
+    }
+
+    #[test]
+    fn exporters_emit_parseable_json_with_split_fields() {
+        let events = vec![SpanEvent {
+            name: "ops.dist.join".into(),
+            kind: "operator",
+            ts_us: 5,
+            dur_us: 17,
+            fields: vec![("rows_in", 10), ("rows_out", 4)],
+        }];
+        let jsonl = export_jsonl(3, &events);
+        let line = jsonl.lines().next().unwrap();
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "ops.dist.join");
+        assert_eq!(v.get("rank").unwrap().as_usize().unwrap(), 3);
+        let det = v.get("det").unwrap();
+        assert_eq!(det.get("rows_out").unwrap().as_usize().unwrap(), 4);
+        let timing = v.get("timing").unwrap();
+        assert_eq!(timing.get("dur_us").unwrap().as_usize().unwrap(), 17);
+        assert!(
+            det.get("dur_us").is_err(),
+            "timing fields must not leak into the deterministic object"
+        );
+
+        let chrome = Json::parse(&export_chrome(3, &events)).unwrap();
+        let arr = chrome.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(arr[0].get("pid").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            arr[0].get("args").unwrap().get("rows_in").unwrap().as_usize().unwrap(),
+            10
+        );
+    }
+}

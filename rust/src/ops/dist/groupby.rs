@@ -4,6 +4,7 @@
 
 use crate::comm::{shuffle_by_hash, Communicator};
 use crate::exec::morsel::{self, morsel_ranges, run_morsels, SpilledState};
+use crate::obs;
 use crate::ops::local::groupby::{groupby_aggregate, AggSpec, PartialAggPlan};
 use crate::table::{Array, Bitmap, Table};
 use anyhow::{Context, Result};
@@ -19,11 +20,12 @@ pub fn dist_groupby<C: Communicator + ?Sized>(
     keys: &[&str],
     aggs: &[AggSpec],
 ) -> Result<Table> {
+    let sp = obs::op_span("ops.dist.groupby", table.num_rows());
     if comm.world_size() == 1 {
-        return groupby_aggregate(table, keys, aggs);
+        return sp.done(groupby_aggregate(table, keys, aggs));
     }
     let shuffled = shuffle_by_hash(comm, table, keys)?;
-    groupby_aggregate(&shuffled, keys, aggs)
+    sp.done(groupby_aggregate(&shuffled, keys, aggs))
 }
 
 /// Distributed group-by with a map-side combiner: aggregate locally
@@ -42,8 +44,9 @@ pub fn dist_groupby_partial<C: Communicator + ?Sized>(
     keys: &[&str],
     aggs: &[AggSpec],
 ) -> Result<Table> {
+    let sp = obs::op_span("ops.dist.groupby_partial", table.num_rows());
     if comm.world_size() == 1 {
-        return groupby_aggregate(table, keys, aggs);
+        return sp.done(groupby_aggregate(table, keys, aggs));
     }
 
     // Decompose before any communication: a non-decomposable request
@@ -56,7 +59,7 @@ pub fn dist_groupby_partial<C: Communicator + ?Sized>(
     let local_partial = local_partial_morsel(table, keys, &plan)?;
     let shuffled = shuffle_by_hash(comm, &local_partial, keys)?;
     let combined = groupby_aggregate(&shuffled, keys, plan.reduce_specs())?;
-    plan.finish(keys, &combined)
+    sp.done(plan.finish(keys, &combined))
 }
 
 /// The map-side combine, morsel-decomposed and budget-bounded: each

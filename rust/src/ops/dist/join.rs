@@ -2,6 +2,7 @@
 //! join", plus the broadcast variant for small dimension tables).
 
 use crate::comm::{allgather_bytes, shuffle_by_hash, Communicator};
+use crate::obs;
 use crate::ops::local::{self, JoinAlgorithm, JoinType};
 use crate::table::{ipc, Table};
 use anyhow::{bail, Context, Result};
@@ -30,12 +31,13 @@ pub fn dist_join<C: Communicator + ?Sized>(
             right_on.len()
         );
     }
+    let sp = obs::op_span("ops.dist.join", left.num_rows() + right.num_rows());
     if comm.world_size() == 1 {
-        return local::join(left, right, left_on, right_on, jt, algo);
+        return sp.done(local::join(left, right, left_on, right_on, jt, algo));
     }
     let l = shuffle_by_hash(comm, left, left_on)?;
     let r = shuffle_by_hash(comm, right, right_on)?;
-    local::join(&l, &r, left_on, right_on, jt, algo)
+    sp.done(local::join(&l, &r, left_on, right_on, jt, algo))
 }
 
 /// Broadcast join: allgather the (small) right side to every rank and
@@ -60,8 +62,9 @@ pub fn broadcast_join<C: Communicator + ?Sized>(
              use dist_join"
         );
     }
+    let sp = obs::op_span("ops.dist.broadcast_join", left.num_rows() + right.num_rows());
     if comm.world_size() == 1 {
-        return local::join(left, right, left_on, right_on, jt, JoinAlgorithm::Hash);
+        return sp.done(local::join(left, right, left_on, right_on, jt, JoinAlgorithm::Hash));
     }
     let rank = comm.rank();
     // Broadcast edges use the shuffle wire format too: a replicated
@@ -82,5 +85,5 @@ pub fn broadcast_join<C: Communicator + ?Sized>(
     }
     let refs: Vec<&Table> = parts.iter().collect();
     let gathered = Table::concat_tables(&refs)?;
-    local::join(left, &gathered, left_on, right_on, jt, JoinAlgorithm::Hash)
+    sp.done(local::join(left, &gathered, left_on, right_on, jt, JoinAlgorithm::Hash))
 }

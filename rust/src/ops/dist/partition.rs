@@ -3,12 +3,16 @@
 //! after skewed operators like filter or join).
 
 use crate::comm::{allreduce_i64, shuffle_tables, Communicator, ReduceOp};
+use crate::obs;
 use crate::table::Table;
 use anyhow::Result;
 
 /// Per-rank global row counts: `result[r]` is rank r's row count, the
 /// same vector on every rank (one small allreduce).
 pub fn global_counts<C: Communicator + ?Sized>(comm: &mut C, table: &Table) -> Result<Vec<usize>> {
+    // Returns counts, not a table: counter + plain span, no `op_span`.
+    obs::metrics::incr("ops.dist.global_counts.calls", 1);
+    let _sp = obs::span("ops.dist.global_counts", obs::SpanKind::Operator);
     if comm.world_size() == 1 {
         return Ok(vec![table.num_rows()]);
     }
@@ -29,9 +33,10 @@ pub fn global_counts<C: Communicator + ?Sized>(comm: &mut C, table: &Table) -> R
 /// with every target range, so only rows that must move cross the wire
 /// and the received runs concatenate back in global order.
 pub fn rebalance<C: Communicator + ?Sized>(comm: &mut C, table: &Table) -> Result<Table> {
+    let sp = obs::op_span("ops.dist.rebalance", table.num_rows());
     let w = comm.world_size();
     if w == 1 {
-        return Ok(table.clone());
+        return sp.done(Ok(table.clone()));
     }
     let counts = global_counts(comm, table)?;
     let total: usize = counts.iter().sum();
@@ -50,5 +55,5 @@ pub fn rebalance<C: Communicator + ?Sized>(comm: &mut C, table: &Table) -> Resul
             parts.push(table.slice(0, 0));
         }
     }
-    shuffle_tables(comm, parts)
+    sp.done(shuffle_tables(comm, parts))
 }

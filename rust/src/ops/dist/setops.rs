@@ -10,6 +10,7 @@
 //! per (rank, value).
 
 use crate::comm::{shuffle_by_hash, Communicator};
+use crate::obs;
 use crate::ops::local::setops::{check_union_compatible, difference, intersect, union_all};
 use crate::ops::local::unique::{drop_duplicates, unique};
 use crate::table::Table;
@@ -25,12 +26,13 @@ pub fn dist_unique<C: Communicator + ?Sized>(
     table: &Table,
     keys: &[&str],
 ) -> Result<Table> {
+    let sp = obs::op_span("ops.dist.unique", table.num_rows());
     if comm.world_size() == 1 {
-        return unique(table, keys);
+        return sp.done(unique(table, keys));
     }
     let pre = unique(table, keys)?;
     let shuffled = shuffle_by_hash(comm, &pre, keys)?;
-    unique(&shuffled, keys)
+    sp.done(unique(&shuffled, keys))
 }
 
 /// Drop duplicate rows across all ranks, keeping one full row per
@@ -52,12 +54,13 @@ pub fn dist_drop_duplicates<C: Communicator + ?Sized>(
             &all_names
         }
     };
+    let sp = obs::op_span("ops.dist.drop_duplicates", table.num_rows());
     if comm.world_size() == 1 {
-        return drop_duplicates(table, Some(keys));
+        return sp.done(drop_duplicates(table, Some(keys)));
     }
     let pre = drop_duplicates(table, Some(keys))?;
     let shuffled = shuffle_by_hash(comm, &pre, keys)?;
-    drop_duplicates(&shuffled, Some(keys))
+    sp.done(drop_duplicates(&shuffled, Some(keys)))
 }
 
 /// UNION ALL across ranks. With rows partitioned over ranks, the global
@@ -70,8 +73,9 @@ pub fn dist_union_all<C: Communicator + ?Sized>(
     a: &Table,
     b: &Table,
 ) -> Result<Table> {
+    let sp = obs::op_span("ops.dist.union_all", a.num_rows() + b.num_rows());
     let _ = comm.world_size(); // zero-wire by construction
-    union_all(a, b)
+    sp.done(union_all(a, b))
 }
 
 /// UNION across ranks (distinct rows of `a ⊎ b`, globally): concatenate
@@ -79,7 +83,10 @@ pub fn dist_union_all<C: Communicator + ?Sized>(
 /// composition as [`dist_drop_duplicates`], so each distinct row
 /// survives exactly once across all ranks.
 pub fn dist_union<C: Communicator + ?Sized>(comm: &mut C, a: &Table, b: &Table) -> Result<Table> {
-    dist_drop_duplicates(comm, &union_all(a, b)?, None)
+    // Note: the nested operators below record their own spans/counters
+    // too — per-operator metrics are call-level, not exclusive.
+    let sp = obs::op_span("ops.dist.union", a.num_rows() + b.num_rows());
+    sp.done(dist_drop_duplicates(comm, &union_all(a, b)?, None))
 }
 
 /// INTERSECT across ranks: deduplicate both sides locally (a combiner —
@@ -96,11 +103,12 @@ pub fn dist_intersect<C: Communicator + ?Sized>(
     // Check compatibility before any communication: a rank-local schema
     // mismatch must not desynchronise the collective sequence.
     check_union_compatible(a, b)?;
+    let sp = obs::op_span("ops.dist.intersect", a.num_rows() + b.num_rows());
     if comm.world_size() == 1 {
-        return intersect(a, b);
+        return sp.done(intersect(a, b));
     }
     let (sa, sb) = colocate_rows(comm, a, b)?;
-    intersect(&sa, &sb)
+    sp.done(intersect(&sa, &sb))
 }
 
 /// DIFFERENCE across ranks (EXCEPT): same co-locating composition as
@@ -113,11 +121,12 @@ pub fn dist_difference<C: Communicator + ?Sized>(
     b: &Table,
 ) -> Result<Table> {
     check_union_compatible(a, b)?;
+    let sp = obs::op_span("ops.dist.difference", a.num_rows() + b.num_rows());
     if comm.world_size() == 1 {
-        return difference(a, b);
+        return sp.done(difference(a, b));
     }
     let (sa, sb) = colocate_rows(comm, a, b)?;
-    difference(&sa, &sb)
+    sp.done(difference(&sa, &sb))
 }
 
 /// Shared exchange step of intersect/difference: local distinct on both

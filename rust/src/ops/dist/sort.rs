@@ -16,6 +16,7 @@
 //! comparator totally orders them.
 
 use crate::comm::{allgather_bytes, shuffle_tables, Communicator, RangePartitioner};
+use crate::obs;
 use crate::ops::local::sort::{sort, sort_morsel, SortKey};
 use crate::table::rowcmp::KeyOrder;
 use crate::table::{ipc, Array, Table};
@@ -44,8 +45,9 @@ pub fn dist_sort<C: Communicator + ?Sized>(
         // rank *before* any communication (collective lockstep).
         table.column_by_name(k)?;
     }
+    let sp = obs::op_span("ops.dist.sort", table.num_rows());
     if comm.world_size() == 1 {
-        return sort_morsel(table, keys);
+        return sp.done(sort_morsel(table, keys));
     }
     let w = comm.world_size();
     let orders: Vec<KeyOrder> = keys.iter().map(|k| k.order()).collect();
@@ -113,5 +115,5 @@ pub fn dist_sort<C: Communicator + ?Sized>(
     // 6. Exchange, then order the received (per-source sorted) runs
     //    (morsel runs + merge again; spills under a tight budget).
     let exchanged = shuffle_tables(comm, parts)?;
-    sort_morsel(&exchanged, keys)
+    sp.done(sort_morsel(&exchanged, keys))
 }

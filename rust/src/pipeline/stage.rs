@@ -603,6 +603,7 @@ impl Pipeline {
         if nstages == 0 {
             bail!("empty pipeline");
         }
+        let _sp = crate::obs::span(format!("pipeline.{}", self.name), crate::obs::SpanKind::Pipeline);
         let wall = Instant::now();
 
         // Shared metrics, one slot per stage.
@@ -1014,10 +1015,22 @@ impl Pipeline {
                 Err(_) => bail!("pipeline stage panicked"),
             }
         }
-        let stages = metrics
+        let stages: Vec<StageMetrics> = metrics
             .iter()
             .map(|m| m.lock().unwrap().clone())
             .collect();
+        // Fold the per-stage counters into the unified metrics registry
+        // (`pipeline.stage.<name>.*`). Only the deterministic integer
+        // fields go in; cpu/backpressure seconds stay on StageMetrics.
+        crate::obs::metrics::incr("pipeline.runs", 1);
+        for s in &stages {
+            let base = format!("pipeline.stage.{}", s.name);
+            crate::obs::metrics::incr(&format!("{base}.batches_in"), s.batches_in);
+            crate::obs::metrics::incr(&format!("{base}.rows_in"), s.rows_in);
+            crate::obs::metrics::incr(&format!("{base}.batches_out"), s.batches_out);
+            crate::obs::metrics::incr(&format!("{base}.rows_out"), s.rows_out);
+            crate::obs::metrics::set_max(&format!("{base}.state_bytes"), s.state_bytes);
+        }
         Ok(PipelineRun {
             name: self.name,
             stages,

@@ -1,0 +1,363 @@
+//! EXPLAIN ANALYZE: execute a physical plan with per-node recording and
+//! render the tree annotated with what actually happened — actual rows,
+//! wire bytes, spill activity, and per-rank min/median/max wall time —
+//! next to the optimizer's cardinality estimates.
+//!
+//! The split that makes this testable (DESIGN.md §13): every annotation
+//! except time is a deterministic integer, aggregated across ranks with
+//! one [`allgather_bytes`] so all ranks hold identical reports.
+//! [`PlanAnalysis::render_deterministic`] emits only those fields and
+//! must therefore be byte-identical across ranks *and* across
+//! `HPTMT_COMM` backends; [`PlanAnalysis::render`] adds the per-rank
+//! timing spread for humans. `rust/tests/obs_wall.rs` pins the former.
+
+use super::optimize::{stats, Stats};
+use super::physical::{NodeSample, PhysicalPlan};
+use crate::comm::{allgather_bytes, Communicator};
+use crate::table::Table;
+use anyhow::{bail, Result};
+
+/// One plan node's aggregated runtime report (preorder position).
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    /// Operator label, structural only (no partition-local numbers), so
+    /// every rank renders the same tree.
+    pub label: String,
+    /// Tree depth (indent units).
+    pub depth: usize,
+    /// Optimizer row estimate for this subtree (rank-local planner
+    /// numbers — estimates, not measurements).
+    pub est_rows: f64,
+    /// Optimizer byte estimate for this subtree.
+    pub est_bytes: f64,
+    /// Actual rows returned by this node, summed across ranks.
+    pub rows: u64,
+    /// Wire bytes sent during this subtree, summed across ranks.
+    pub bytes_sent: u64,
+    /// Spill files written during this subtree, summed across ranks.
+    pub spill_files: u64,
+    /// Spill bytes written during this subtree, summed across ranks.
+    pub spill_bytes: u64,
+    /// Fastest rank's wall seconds for this subtree.
+    pub secs_min: f64,
+    /// Median rank wall seconds.
+    pub secs_med: f64,
+    /// Slowest rank's wall seconds.
+    pub secs_max: f64,
+}
+
+/// A fully-aggregated EXPLAIN ANALYZE result: one [`NodeReport`] per
+/// physical node, preorder. Identical on every rank of the world.
+#[derive(Debug, Clone)]
+pub struct PlanAnalysis {
+    /// World size the plan executed on.
+    pub world: usize,
+    /// Per-node reports in preorder (parent before children).
+    pub nodes: Vec<NodeReport>,
+}
+
+impl PlanAnalysis {
+    /// Human rendering: the physical tree with measured rows/bytes/spill
+    /// next to the optimizer estimates, plus the per-rank wall-time
+    /// spread (`t=[min/med/max]`, milliseconds).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for n in &self.nodes {
+            out.push_str(&"  ".repeat(n.depth));
+            out.push_str(&n.label);
+            out.push_str(&format!(
+                "  (rows={} est_rows={:.0} bytes_sent={} est_bytes={:.0}{} t=[{:.2}/{:.2}/{:.2}ms])",
+                n.rows,
+                n.est_rows,
+                n.bytes_sent,
+                n.est_bytes,
+                spill_cell(n),
+                n.secs_min * 1e3,
+                n.secs_med * 1e3,
+                n.secs_max * 1e3,
+            ));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Deterministic rendering: labels and cross-rank counter sums only,
+    /// no wall time and no estimates. Byte-identical across ranks of a
+    /// world and across `HPTMT_COMM` backends for the same program —
+    /// the artifact the cross-backend wall compares.
+    pub fn render_deterministic(&self) -> String {
+        let mut out = String::new();
+        for n in &self.nodes {
+            out.push_str(&"  ".repeat(n.depth));
+            out.push_str(&n.label);
+            out.push_str(&format!(
+                "  (rows={} bytes_sent={}{})",
+                n.rows,
+                n.bytes_sent,
+                spill_cell(n),
+            ));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Spill annotation, omitted entirely when nothing spilled so the
+/// common case reads clean.
+fn spill_cell(n: &NodeReport) -> String {
+    if n.spill_files == 0 && n.spill_bytes == 0 {
+        String::new()
+    } else {
+        format!(" spill={}f/{}B", n.spill_files, n.spill_bytes)
+    }
+}
+
+/// Structural operator label — the `render()` vocabulary minus every
+/// partition-local number, so labels agree across ranks.
+fn node_label(plan: &PhysicalPlan) -> String {
+    use super::logical::{agg_list, sort_list};
+    match plan {
+        PhysicalPlan::Scan { table, projection } => match projection {
+            None => format!("Scan[{} cols]", table.num_columns()),
+            Some(cols) => format!("Scan[pruned to {}]", cols.join(",")),
+        },
+        PhysicalPlan::Fused { steps, .. } => {
+            let chain: Vec<String> = steps.iter().map(|s| s.label()).collect();
+            format!("Fused[{}]", chain.join(" → "))
+        }
+        PhysicalPlan::Join { left_on, right_on, jt, algo, broadcast, .. } => {
+            if *broadcast {
+                format!(
+                    "HashJoin[{jt:?} on {}={}; broadcast right]",
+                    left_on.join(","),
+                    right_on.join(",")
+                )
+            } else {
+                format!("{algo:?}Join[{jt:?} on {}={}]", left_on.join(","), right_on.join(","))
+            }
+        }
+        PhysicalPlan::Agg { keys, aggs, partial, .. } => {
+            if *partial {
+                format!("Reduce[{}; partial {}]", keys.join(","), agg_list(aggs))
+            } else {
+                format!("HashAgg[{}; {}]", keys.join(","), agg_list(aggs))
+            }
+        }
+        PhysicalPlan::SampleSort { keys, .. } => format!("SampleSort[{}]", sort_list(keys)),
+        PhysicalPlan::SetOp { kind, .. } => format!("SetOp[{}]", kind.name()),
+        PhysicalPlan::Unique { keys, .. } => format!("Unique[{}]", keys.join(",")),
+        PhysicalPlan::Distinct { subset, .. } => match subset {
+            None => "DropDuplicates[all columns]".to_string(),
+            Some(s) => format!("DropDuplicates[{}]", s.join(",")),
+        },
+        PhysicalPlan::WindowAgg { keys, aggs, .. } => {
+            format!("WindowAgg[{}; {}]", keys.join(","), agg_list(aggs))
+        }
+    }
+}
+
+/// Preorder skeleton walk in the exact order `execute_ref` claims
+/// recorder slots: node first, then children in execution order.
+fn skeleton(plan: &PhysicalPlan, depth: usize, out: &mut Vec<(String, usize, Stats)>) {
+    out.push((node_label(plan), depth, stats(&plan.to_logical())));
+    match plan {
+        PhysicalPlan::Scan { .. } => {}
+        PhysicalPlan::Fused { input, .. }
+        | PhysicalPlan::Agg { input, .. }
+        | PhysicalPlan::SampleSort { input, .. }
+        | PhysicalPlan::Unique { input, .. }
+        | PhysicalPlan::Distinct { input, .. }
+        | PhysicalPlan::WindowAgg { input, .. } => skeleton(input, depth + 1, out),
+        PhysicalPlan::Join { left, right, .. } | PhysicalPlan::SetOp { left, right, .. } => {
+            skeleton(left, depth + 1, out);
+            skeleton(right, depth + 1, out);
+        }
+    }
+}
+
+/// 40 bytes per node: four u64 counters + one f64, all LE.
+fn encode_samples(samples: &[NodeSample]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + samples.len() * 40);
+    out.extend_from_slice(&(samples.len() as u32).to_le_bytes());
+    for s in samples {
+        out.extend_from_slice(&s.rows_out.to_le_bytes());
+        out.extend_from_slice(&s.bytes_sent.to_le_bytes());
+        out.extend_from_slice(&s.spill_files.to_le_bytes());
+        out.extend_from_slice(&s.spill_bytes.to_le_bytes());
+        out.extend_from_slice(&s.secs.to_le_bytes());
+    }
+    out
+}
+
+fn decode_samples(blob: &[u8]) -> Result<Vec<NodeSample>> {
+    if blob.len() < 4 {
+        bail!("analyze: truncated sample frame ({} bytes)", blob.len());
+    }
+    let n = u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
+    if blob.len() != 4 + n * 40 {
+        bail!("analyze: sample frame length {} != {} nodes", blob.len(), n);
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 4;
+    let u64_at = |p: usize| u64::from_le_bytes(blob[p..p + 8].try_into().unwrap());
+    for _ in 0..n {
+        let s = NodeSample {
+            rows_out: u64_at(pos),
+            bytes_sent: u64_at(pos + 8),
+            spill_files: u64_at(pos + 16),
+            spill_bytes: u64_at(pos + 24),
+            secs: f64::from_le_bytes(blob[pos + 32..pos + 40].try_into().unwrap()),
+        };
+        pos += 40;
+        out.push(s);
+    }
+    Ok(out)
+}
+
+/// Execute `plan` on this rank with per-node recording, allgather every
+/// rank's samples, and build the aggregated [`PlanAnalysis`] all ranks
+/// share. Collective: every rank of the world must call it with the
+/// same plan.
+pub(crate) fn analyze_plan<C: Communicator + ?Sized>(
+    plan: &PhysicalPlan,
+    comm: &mut C,
+) -> Result<(Table, PlanAnalysis)> {
+    let (out, samples) = plan.execute_recorded(comm)?;
+    let mut shape = Vec::new();
+    skeleton(plan, 0, &mut shape);
+    if shape.len() != samples.len() {
+        bail!(
+            "analyze: skeleton walk found {} nodes but execution recorded {}",
+            shape.len(),
+            samples.len()
+        );
+    }
+    let blobs = allgather_bytes(comm, encode_samples(&samples))?;
+    let mut per_rank = Vec::with_capacity(blobs.len());
+    for blob in &blobs {
+        let decoded = decode_samples(blob)?;
+        if decoded.len() != shape.len() {
+            bail!("analyze: rank sample count mismatch (did all ranks run the same plan?)");
+        }
+        per_rank.push(decoded);
+    }
+
+    let nodes = shape
+        .into_iter()
+        .enumerate()
+        .map(|(i, (label, depth, est))| {
+            let mut secs: Vec<f64> = per_rank.iter().map(|r| r[i].secs).collect();
+            secs.sort_by(|a, b| a.total_cmp(b));
+            let med = if secs.len() % 2 == 1 {
+                secs[secs.len() / 2]
+            } else {
+                (secs[secs.len() / 2 - 1] + secs[secs.len() / 2]) / 2.0
+            };
+            NodeReport {
+                label,
+                depth,
+                est_rows: est.rows,
+                est_bytes: est.bytes,
+                rows: per_rank.iter().map(|r| r[i].rows_out).sum(),
+                bytes_sent: per_rank.iter().map(|r| r[i].bytes_sent).sum(),
+                spill_files: per_rank.iter().map(|r| r[i].spill_files).sum(),
+                spill_bytes: per_rank.iter().map(|r| r[i].spill_bytes).sum(),
+                secs_min: secs[0],
+                secs_med: med,
+                secs_max: secs[secs.len() - 1],
+            }
+        })
+        .collect();
+    Ok((out, PlanAnalysis { world: comm.world_size(), nodes }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::local::groupby::{Agg, AggSpec};
+    use crate::ops::local::Cmp;
+    use crate::plan::logical::{GroupStrategy, LogicalPlan};
+    use crate::plan::optimize::{optimize, CostEnv};
+    use crate::plan::physical::lower;
+    use crate::table::{Array, Scalar, Table};
+    use std::sync::Arc;
+
+    fn demo_plan() -> PhysicalPlan {
+        let t = Table::from_columns(vec![
+            ("k", Array::from_i64((0..32i64).map(|i| i % 4).collect())),
+            ("v", Array::from_f64((0..32).map(|i| i as f64).collect())),
+        ])
+        .unwrap();
+        let plan = LogicalPlan::GroupBy {
+            input: Box::new(LogicalPlan::Filter {
+                input: Box::new(LogicalPlan::Scan { table: Arc::new(t), projection: None }),
+                column: "v".into(),
+                op: Cmp::Ge,
+                lit: Scalar::Float64(8.0),
+            }),
+            keys: vec!["k".into()],
+            aggs: vec![AggSpec::new("v", Agg::Sum)],
+            strategy: GroupStrategy::Auto,
+        };
+        lower(&optimize(&plan, &CostEnv::local()))
+    }
+
+    #[test]
+    fn skeleton_walk_matches_recorded_node_count() {
+        use crate::plan::physical::SoloComm;
+        let plan = demo_plan();
+        let mut shape = Vec::new();
+        skeleton(&plan, 0, &mut shape);
+        let (_, analysis) = analyze_plan(&plan, &mut SoloComm::default()).unwrap();
+        assert_eq!(analysis.nodes.len(), shape.len());
+        assert_eq!(analysis.world, 1);
+        // Preorder: root at depth 0 first, every child one deeper than
+        // some earlier node.
+        assert_eq!(analysis.nodes[0].depth, 0);
+        for w in analysis.nodes.windows(2) {
+            assert!(w[1].depth <= w[0].depth + 1, "preorder depth jump");
+        }
+    }
+
+    #[test]
+    fn renders_annotate_every_node() {
+        use crate::plan::physical::SoloComm;
+        let plan = demo_plan();
+        let (out, analysis) = analyze_plan(&plan, &mut SoloComm::default()).unwrap();
+        assert_eq!(out.num_rows(), 4, "four groups survive");
+        let full = analysis.render();
+        let det = analysis.render_deterministic();
+        assert_eq!(full.lines().count(), analysis.nodes.len());
+        assert_eq!(det.lines().count(), analysis.nodes.len());
+        for line in full.lines() {
+            assert!(line.contains("rows="), "{line}");
+            assert!(line.contains("est_rows="), "{line}");
+            assert!(line.contains("t=["), "{line}");
+        }
+        for line in det.lines() {
+            assert!(line.contains("rows="), "{line}");
+            assert!(!line.contains("t=["), "timing must stay out of the deterministic render");
+            assert!(!line.contains("est_"), "estimates stay out of the deterministic render");
+        }
+        // The root (group-by reduce) actually returned 4 rows.
+        assert_eq!(analysis.nodes[0].rows, 4);
+        // Solo execution moves zero wire bytes on every node.
+        assert!(analysis.nodes.iter().all(|n| n.bytes_sent == 0));
+    }
+
+    #[test]
+    fn sample_frames_round_trip() {
+        let samples = vec![
+            NodeSample { rows_out: 7, bytes_sent: 1024, spill_files: 1, spill_bytes: 512, secs: 0.25 },
+            NodeSample::default(),
+        ];
+        let decoded = decode_samples(&encode_samples(&samples)).unwrap();
+        assert_eq!(decoded.len(), 2);
+        assert_eq!(decoded[0].rows_out, 7);
+        assert_eq!(decoded[0].bytes_sent, 1024);
+        assert_eq!(decoded[0].spill_bytes, 512);
+        assert_eq!(decoded[0].secs, 0.25);
+        assert_eq!(decoded[1].rows_out, 0);
+        assert!(decode_samples(&[1, 2]).is_err());
+    }
+}

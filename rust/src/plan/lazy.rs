@@ -302,6 +302,44 @@ impl LazyFrame {
         self.collect_comm(env.comm())
     }
 
+    /// EXPLAIN ANALYZE, single-rank: optimize and execute the plan with
+    /// per-node recording, and return the annotated analysis (actual
+    /// rows, wire bytes — zero here, every shuffle short-circuits —
+    /// spill activity, and wall time per node, next to the optimizer's
+    /// estimates). Render with [`super::PlanAnalysis::render`].
+    pub fn explain_analyze(&self) -> Result<super::PlanAnalysis> {
+        let phys = self.physical_plan(&CostEnv::local());
+        let (_, analysis) =
+            super::analyze::analyze_plan(&phys, &mut super::physical::SoloComm::default())?;
+        Ok(analysis)
+    }
+
+    /// EXPLAIN ANALYZE on a live world: execute this rank's share with
+    /// per-node recording, allgather every rank's samples, and return
+    /// the result alongside the aggregated [`super::PlanAnalysis`]
+    /// (identical on every rank). Collective — all ranks must call it
+    /// with the same plan, like [`collect_comm`](Self::collect_comm),
+    /// whose join-strategy agreement step this mirrors exactly.
+    pub fn analyze_comm<C: Communicator + ?Sized>(
+        &self,
+        comm: &mut C,
+    ) -> Result<(DataFrame, super::PlanAnalysis)> {
+        let env = CostEnv::new(comm.world_size(), LinkProfile::zero());
+        let mut optimized = optimize(&self.plan, &env);
+        if comm.world_size() > 1 {
+            let mut mine = Vec::new();
+            super::optimize::join_strategy_bytes(&optimized, &mut mine);
+            if !mine.is_empty() {
+                let agreed = crate::comm::broadcast_bytes(comm, 0, Some(mine))?;
+                let mut idx = 0;
+                optimized =
+                    super::optimize::with_join_strategies(optimized, &agreed, &mut idx);
+            }
+        }
+        let (out, analysis) = super::analyze::analyze_plan(&lower(&optimized), comm)?;
+        Ok((out.into(), analysis))
+    }
+
     /// Retarget a keyed-aggregate plan onto the streaming
     /// [`Pipeline`] engine: the scan is replayed as `batch_rows`-row
     /// batches, fused per-partition steps run in a `map` stage, and the

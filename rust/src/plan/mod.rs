@@ -26,6 +26,10 @@
 //! communication edges, so both headline rewrites are observable: the
 //! pruned scan lists its surviving columns, and the combined group-by
 //! shows its `PartialAgg` node *below* the `Shuffle` edge.
+//! `explain_analyze()` goes one step further: it executes the plan with
+//! per-node recording and renders actual rows, wire bytes, spill, and
+//! per-rank wall-time spread next to the optimizer's estimates
+//! ([`PlanAnalysis`], DESIGN.md §13).
 //!
 //! Every plan executed via `collect_comm`/`collect_dist` is
 //! differential-tested against the eager operator path (byte-identical
@@ -34,6 +38,7 @@
 //! (`proptests` below). DESIGN.md §8 documents the node taxonomy,
 //! rewrite rules, costing inputs and lowering rules.
 
+mod analyze;
 mod lazy;
 mod logical;
 pub mod optimize;
@@ -41,6 +46,7 @@ mod physical;
 #[cfg(test)]
 mod proptests;
 
+pub use analyze::{NodeReport, PlanAnalysis};
 pub use lazy::LazyFrame;
 pub use logical::{
     GroupStrategy, JoinStrategy, LogicalPlan, MapF64Udf, MapUtf8Udf, SetOpKind,

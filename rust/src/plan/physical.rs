@@ -43,8 +43,9 @@ use crate::ops::local::Cmp;
 use crate::table::{Array, Field, Scalar, Schema, Table};
 use anyhow::{bail, Result};
 use std::borrow::Cow;
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// One step of a fused per-partition pass.
 #[derive(Clone)]
@@ -60,7 +61,7 @@ pub enum LocalStep {
 }
 
 impl LocalStep {
-    fn label(&self) -> String {
+    pub(crate) fn label(&self) -> String {
         match self {
             LocalStep::Project(cols) => format!("project {}", cols.join(",")),
             LocalStep::Filter { column, op, lit } => {
@@ -368,6 +369,7 @@ fn apply_steps_whole(input: &Table, steps: &[LocalStep]) -> Result<Table> {
     // Fuse boundary: one gather of every surviving base column.
     if sel.is_some() {
         FUSE_GATHERS.with(|c| c.set(c.get() + 1));
+        crate::obs::metrics::incr("plan.fuse.gathers", 1);
     }
     if cols.is_empty() {
         // Zero-column projection: `Table::new` cannot carry a row count
@@ -392,21 +394,104 @@ fn apply_steps_whole(input: &Table, steps: &[LocalStep]) -> Result<Table> {
     Table::new(Schema::new(fields), arrays)
 }
 
+/// One executed plan node's runtime sample, inclusive of its subtree
+/// (the node's enter/exit window spans its children's execution).
+/// Indexed by preorder position — the same order
+/// [`super::analyze`] walks the plan skeleton in, which is how samples
+/// pair back up with nodes without the plan carrying IDs.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct NodeSample {
+    /// Rows this node returned on this rank.
+    pub rows_out: u64,
+    /// Wire bytes sent during the subtree (CommStats delta).
+    pub bytes_sent: u64,
+    /// Spill files written during the subtree.
+    pub spill_files: u64,
+    /// Spill bytes written during the subtree.
+    pub spill_bytes: u64,
+    /// Wall seconds for the subtree on this rank (timing only — never
+    /// part of the deterministic rendering).
+    pub secs: f64,
+}
+
+/// Preorder sample collector for one plan execution on one rank.
+#[derive(Debug, Default)]
+pub(crate) struct Recorder {
+    samples: Vec<NodeSample>,
+}
+
+impl Recorder {
+    /// Claim the next preorder slot (called on node entry, before the
+    /// children run, so slot order equals the preorder skeleton walk).
+    fn enter(&mut self) -> usize {
+        self.samples.push(NodeSample::default());
+        self.samples.len() - 1
+    }
+
+    fn exit(&mut self, id: usize, s: NodeSample) {
+        self.samples[id] = s;
+    }
+}
+
 impl PhysicalPlan {
     /// Execute on this rank. All ranks of `comm`'s world must execute
     /// the same plan (the `ops::dist` collective contract); a world of
     /// one runs fully local with zero wire bytes.
     pub fn execute<C: Communicator + ?Sized>(&self, comm: &mut C) -> Result<Table> {
-        Ok(self.execute_ref(comm)?.into_owned())
+        Ok(self.execute_ref(comm, None)?.into_owned())
+    }
+
+    /// Execute with per-node recording: returns the result table plus
+    /// one [`NodeSample`] per plan node in preorder. Backs
+    /// `LazyFrame::explain_analyze` via [`super::analyze`].
+    pub(crate) fn execute_recorded<C: Communicator + ?Sized>(
+        &self,
+        comm: &mut C,
+    ) -> Result<(Table, Vec<NodeSample>)> {
+        let rec = RefCell::new(Recorder::default());
+        let out = self.execute_ref(comm, Some(&rec))?.into_owned();
+        Ok((out, rec.into_inner().samples))
     }
 
     /// Internal execution returning `Cow`: a bare scan is handed to its
     /// consumer by reference (every operator takes `&Table`), so
     /// planned execution never deep-copies a partition the eager path
     /// would have passed by reference.
+    ///
+    /// `rec` is the optional per-node sample collector; `None` (the
+    /// plain `execute` path) adds no work per node beyond one branch.
     fn execute_ref<'a, C: Communicator + ?Sized>(
         &'a self,
         comm: &mut C,
+        rec: Option<&RefCell<Recorder>>,
+    ) -> Result<Cow<'a, Table>> {
+        let mark = rec.map(|r| {
+            // Claim the preorder slot before the children run; baseline
+            // the cumulative counters so exit can take subtree deltas.
+            (r.borrow_mut().enter(), comm.stats(), morsel::spill_stats(), Instant::now())
+        });
+        let out = self.execute_node(comm, rec)?;
+        if let (Some(r), Some((id, stats0, spill0, t0))) = (rec, mark) {
+            let stats1 = comm.stats();
+            let spill1 = morsel::spill_stats();
+            r.borrow_mut().exit(
+                id,
+                NodeSample {
+                    rows_out: out.num_rows() as u64,
+                    bytes_sent: stats1.bytes_sent.saturating_sub(stats0.bytes_sent),
+                    spill_files: spill1.files.saturating_sub(spill0.files),
+                    spill_bytes: spill1.bytes.saturating_sub(spill0.bytes),
+                    secs: t0.elapsed().as_secs_f64(),
+                },
+            );
+        }
+        Ok(out)
+    }
+
+    fn execute_node<'a, C: Communicator + ?Sized>(
+        &'a self,
+        comm: &mut C,
+        rec: Option<&RefCell<Recorder>>,
     ) -> Result<Cow<'a, Table>> {
         Ok(match self {
             PhysicalPlan::Scan { table, projection } => match projection {
@@ -414,12 +499,12 @@ impl PhysicalPlan {
                 Some(cols) => Cow::Owned(table.select_columns(&as_strs(cols))?),
             },
             PhysicalPlan::Fused { input, steps } => {
-                let t = input.execute_ref(comm)?;
+                let t = input.execute_ref(comm, rec)?;
                 Cow::Owned(apply_steps(&t, steps)?)
             }
             PhysicalPlan::Join { left, right, left_on, right_on, jt, algo, broadcast } => {
-                let l = left.execute_ref(comm)?;
-                let r = right.execute_ref(comm)?;
+                let l = left.execute_ref(comm, rec)?;
+                let r = right.execute_ref(comm, rec)?;
                 Cow::Owned(if *broadcast {
                     dist::broadcast_join(
                         comm,
@@ -442,7 +527,7 @@ impl PhysicalPlan {
                 })
             }
             PhysicalPlan::Agg { input, keys, aggs, partial } => {
-                let t = input.execute_ref(comm)?;
+                let t = input.execute_ref(comm, rec)?;
                 Cow::Owned(if *partial {
                     dist::dist_groupby_partial(comm, &t, &as_strs(keys), aggs)?
                 } else {
@@ -450,12 +535,12 @@ impl PhysicalPlan {
                 })
             }
             PhysicalPlan::SampleSort { input, keys } => {
-                let t = input.execute_ref(comm)?;
+                let t = input.execute_ref(comm, rec)?;
                 Cow::Owned(dist::dist_sort(comm, &t, keys)?)
             }
             PhysicalPlan::SetOp { kind, left, right } => {
-                let l = left.execute_ref(comm)?;
-                let r = right.execute_ref(comm)?;
+                let l = left.execute_ref(comm, rec)?;
+                let r = right.execute_ref(comm, rec)?;
                 Cow::Owned(match kind {
                     SetOpKind::Union => dist::dist_union(comm, &l, &r)?,
                     SetOpKind::UnionAll => dist::dist_union_all(comm, &l, &r)?,
@@ -464,16 +549,16 @@ impl PhysicalPlan {
                 })
             }
             PhysicalPlan::Unique { input, keys } => {
-                let t = input.execute_ref(comm)?;
+                let t = input.execute_ref(comm, rec)?;
                 Cow::Owned(dist::dist_unique(comm, &t, &as_strs(keys))?)
             }
             PhysicalPlan::Distinct { input, subset } => {
-                let t = input.execute_ref(comm)?;
+                let t = input.execute_ref(comm, rec)?;
                 let strs = subset.as_ref().map(|s| as_strs(s));
                 Cow::Owned(dist::dist_drop_duplicates(comm, &t, strs.as_deref())?)
             }
             PhysicalPlan::WindowAgg { input, keys, aggs, spec } => {
-                let t = input.execute_ref(comm)?;
+                let t = input.execute_ref(comm, rec)?;
                 let shuffled = crate::comm::shuffle_by_hash(comm, &t, &as_strs(keys))?;
                 Cow::Owned(windowed_concat(&shuffled, keys, aggs, spec)?)
             }
@@ -484,6 +569,93 @@ impl PhysicalPlan {
     /// path): every shuffle short-circuits, nothing touches a wire.
     pub fn execute_local(&self) -> Result<Table> {
         self.execute(&mut SoloComm::default())
+    }
+
+    /// Reconstruct the logical subtree this physical node computes, so
+    /// EXPLAIN ANALYZE can put the optimizer's [`super::optimize::stats`]
+    /// estimate next to each node's measured sample. Inverse of
+    /// [`lower`] up to strategy resolution: `broadcast`/`partial` map
+    /// back to the concrete strategies, and a fused chain unfolds into
+    /// the Select/Filter/Map nodes it was built from.
+    pub(crate) fn to_logical(&self) -> LogicalPlan {
+        match self {
+            PhysicalPlan::Scan { table, projection } => LogicalPlan::Scan {
+                table: table.clone(),
+                projection: projection.clone(),
+            },
+            PhysicalPlan::Fused { input, steps } => {
+                let mut node = input.to_logical();
+                for step in steps {
+                    node = match step {
+                        LocalStep::Project(columns) => LogicalPlan::Select {
+                            input: Box::new(node),
+                            columns: columns.clone(),
+                        },
+                        LocalStep::Filter { column, op, lit } => LogicalPlan::Filter {
+                            input: Box::new(node),
+                            column: column.clone(),
+                            op: *op,
+                            lit: lit.clone(),
+                        },
+                        LocalStep::MapF64 { column, f } => LogicalPlan::MapF64 {
+                            input: Box::new(node),
+                            column: column.clone(),
+                            f: f.clone(),
+                        },
+                        LocalStep::MapUtf8 { column, f } => LogicalPlan::MapUtf8 {
+                            input: Box::new(node),
+                            column: column.clone(),
+                            f: f.clone(),
+                        },
+                    };
+                }
+                node
+            }
+            PhysicalPlan::Join { left, right, left_on, right_on, jt, algo, broadcast } => {
+                LogicalPlan::Join {
+                    left: Box::new(left.to_logical()),
+                    right: Box::new(right.to_logical()),
+                    left_on: left_on.clone(),
+                    right_on: right_on.clone(),
+                    jt: *jt,
+                    algo: *algo,
+                    strategy: if *broadcast { JoinStrategy::Broadcast } else { JoinStrategy::Hash },
+                }
+            }
+            PhysicalPlan::Agg { input, keys, aggs, partial } => LogicalPlan::GroupBy {
+                input: Box::new(input.to_logical()),
+                keys: keys.clone(),
+                aggs: aggs.clone(),
+                strategy: if *partial {
+                    GroupStrategy::PartialShuffle
+                } else {
+                    GroupStrategy::FullShuffle
+                },
+            },
+            PhysicalPlan::SampleSort { input, keys } => LogicalPlan::Sort {
+                input: Box::new(input.to_logical()),
+                keys: keys.clone(),
+            },
+            PhysicalPlan::SetOp { kind, left, right } => LogicalPlan::SetOp {
+                kind: *kind,
+                left: Box::new(left.to_logical()),
+                right: Box::new(right.to_logical()),
+            },
+            PhysicalPlan::Unique { input, keys } => LogicalPlan::Unique {
+                input: Box::new(input.to_logical()),
+                keys: keys.clone(),
+            },
+            PhysicalPlan::Distinct { input, subset } => LogicalPlan::DropDuplicates {
+                input: Box::new(input.to_logical()),
+                subset: subset.clone(),
+            },
+            PhysicalPlan::WindowAgg { input, keys, aggs, spec } => LogicalPlan::Window {
+                input: Box::new(input.to_logical()),
+                keys: keys.clone(),
+                aggs: aggs.clone(),
+                spec: spec.clone(),
+            },
+        }
     }
 
     /// Indented operator-tree rendering — the `explain()` output.

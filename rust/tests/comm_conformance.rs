@@ -99,9 +99,11 @@ fn uds_transport_matches_thread_backend_for_every_job() {
 
 #[test]
 fn fig4_chain_shuffled_bytes_identical_across_backends() {
-    // Result layout: bytes_sent u64 LE, then elapsed-seconds f64 LE.
-    // Only the byte counter is deterministic — it is exactly the strict
-    // cell of BENCH_fig4_planner_pushdown.json.
+    // Result layout: bytes_sent u64, elapsed-seconds f64, group-by
+    // rows-out registry delta u64, comm.shuffle.bytes_sent registry
+    // delta u64 (all LE). Every word but the elapsed seconds is
+    // deterministic — the wire counter and the two registry deltas feed
+    // the strict cells of BENCH_fig4_planner_pushdown.json.
     for world in [1usize, 2, 4] {
         for variant in ["1500,160", "1500,160,planned"] {
             let threads = run_threads(world, "fig4_chain", variant);
@@ -112,6 +114,36 @@ fn fig4_chain_shuffled_bytes_identical_across_backends() {
                     procs[rank][..8],
                     "fig4_chain {variant:?}, w={world}, rank {rank}: shuffled-bytes word differs"
                 );
+                assert_eq!(
+                    threads[rank][16..32],
+                    procs[rank][16..32],
+                    "fig4_chain {variant:?}, w={world}, rank {rank}: registry-delta words differ"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn comm_stats_accounting_identical_across_backends() {
+    // `comm_stats_probe` returns this rank's (msgs_sent, bytes_sent,
+    // msgs_recv, bytes_recv) after one shuffle + one allreduce, as four
+    // u64 LE words. The generic sweep above already byte-compares it;
+    // this names the contract — CommStats *accounting* (which frames
+    // count, at what size) is itself cross-backend conformant — and
+    // checks the probe measured real traffic at w > 1.
+    for world in [1usize, 2, 4] {
+        let threads = run_threads(world, "comm_stats_probe", "11,96");
+        let procs = run_process(world, "comm_stats_probe", "11,96");
+        assert_eq!(threads, procs, "CommStats accounting diverged, w={world}");
+        for (rank, bytes) in threads.iter().enumerate() {
+            assert_eq!(bytes.len(), 32, "w={world}, rank {rank}");
+            let word = |i: usize| {
+                u64::from_le_bytes(bytes[i * 8..(i + 1) * 8].try_into().unwrap())
+            };
+            if world > 1 {
+                assert!(word(0) > 0, "w={world}, rank {rank}: no messages counted");
+                assert!(word(1) > 0, "w={world}, rank {rank}: no bytes counted");
             }
         }
     }

@@ -1,0 +1,246 @@
+//! Observability wall (DESIGN.md §13).
+//!
+//! Three contracts, each enforced at w ∈ {1, 2, 4} where world size
+//! matters:
+//!
+//! 1. **EXPLAIN ANALYZE determinism** — `LazyFrame::analyze_comm` on
+//!    the Fig-4 chain (join → filter → group-by) yields a
+//!    [`hptmt::plan::PlanAnalysis`] whose deterministic rendering
+//!    (actual rows, wire bytes, spill — no timing, no rank-local
+//!    estimates) is byte-identical on every rank of a world *and*
+//!    across the thread and socket backends.
+//! 2. **Trace neutrality** — re-running differential slices
+//!    (dist chain; spilling group-by) with tracing forced on must
+//!    reproduce the untraced result bytes exactly: spans read clocks,
+//!    they never touch data.
+//! 3. **Exporter validity** — with `TraceMode::Jsonl`, running every
+//!    registered `comm::jobs` operator leaves exactly one
+//!    `comm.jobs.{name}` job-kind span per job per rank, and every
+//!    exported JSONL line parses.
+//!
+//! The trace-mode override and the morsel runtime are process-global,
+//! so every test serializes on one mutex.
+
+use hptmt::comm::{
+    spawn_backend_world, spawn_uds_world, spawn_world, Communicator, LinkProfile, JOB_NAMES,
+};
+use hptmt::exec::morsel::{self, MemBudget, MorselConfig};
+use hptmt::obs;
+use hptmt::obs::trace::{export_jsonl, set_mode_override};
+use hptmt::obs::TraceMode;
+use hptmt::ops::dist::{dist_groupby, dist_groupby_partial, dist_join};
+use hptmt::ops::local::{filter_cmp, Agg, AggSpec, Cmp, JoinAlgorithm, JoinType};
+use hptmt::plan::LazyFrame;
+use hptmt::table::{ipc, Array, Scalar, Table};
+use hptmt::util::json::Json;
+use hptmt::util::Rng;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+fn guard() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    GUARD.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restore the process-global knobs even when an assertion panics.
+struct Restore;
+impl Drop for Restore {
+    fn drop(&mut self) {
+        set_mode_override(None);
+        morsel::clear_runtime();
+    }
+}
+
+/// Deterministic equal-size rank shard: small-domain int key, integral
+/// float payload (re-associated partial sums stay exact).
+fn shard(rank: usize, rows: usize, domain: u64, seed: u64) -> Table {
+    let mut rng = Rng::new(seed).fork(rank as u64);
+    let k: Vec<i64> = (0..rows).map(|_| rng.gen_range(domain) as i64).collect();
+    let v: Vec<f64> = (0..rows).map(|_| rng.gen_range(1000) as f64).collect();
+    Table::from_columns(vec![("k", Array::from_i64(k)), ("v", Array::from_f64(v))]).unwrap()
+}
+
+/// The Fig-4 chain through `analyze_comm`; returns both renderings.
+fn analyzed_chain<C: Communicator + ?Sized>(
+    rank: usize,
+    comm: &mut C,
+) -> anyhow::Result<(String, String)> {
+    let left = shard(rank, 96, 16, 300);
+    let right = shard(rank, 96, 16, 700);
+    let lf = LazyFrame::from_table(left)
+        .join(&LazyFrame::from_table(right), &["k"], &["k"])
+        .filter("v", Cmp::Ge, 500.0f64)
+        .groupby(&["k"], &[AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)]);
+    let (_, analysis) = lf.analyze_comm(comm)?;
+    Ok((analysis.render_deterministic(), analysis.render()))
+}
+
+#[test]
+fn explain_analyze_deterministic_fields_agree_across_ranks_and_backends() {
+    let _g = guard();
+    for world in [1usize, 2, 4] {
+        let threads =
+            spawn_world(world, LinkProfile::zero(), |rank, comm| analyzed_chain(rank, comm))
+                .unwrap();
+        let uds =
+            spawn_uds_world(world, LinkProfile::zero(), |rank, comm| analyzed_chain(rank, comm))
+                .unwrap();
+        for rank in 0..world {
+            assert_eq!(
+                threads[0].0, threads[rank].0,
+                "w={world}: thread ranks 0 and {rank} render different deterministic fields"
+            );
+            assert_eq!(
+                uds[0].0, uds[rank].0,
+                "w={world}: uds ranks 0 and {rank} render different deterministic fields"
+            );
+        }
+        assert_eq!(
+            threads[0].0, uds[0].0,
+            "w={world}: thread and socket backends disagree on deterministic fields"
+        );
+
+        // Every node line of the full rendering carries actuals next to
+        // the planner's estimates plus the per-rank time spread.
+        let full = &threads[0].1;
+        for line in full.lines() {
+            assert!(line.contains("rows="), "w={world}: node line lacks actual rows: {line}");
+            assert!(line.contains("est_rows="), "w={world}: node line lacks estimate: {line}");
+            assert!(line.contains("t=["), "w={world}: node line lacks time spread: {line}");
+        }
+        assert_eq!(
+            full.lines().count(),
+            threads[0].0.lines().count(),
+            "w={world}: renderings must annotate the same node tree"
+        );
+        // Something actually moved over the wire at w > 1.
+        if world > 1 {
+            let some_bytes = threads[0].0.lines().any(|l| {
+                l.split("bytes_sent=")
+                    .nth(1)
+                    .is_some_and(|rest| !rest.starts_with('0'))
+            });
+            assert!(some_bytes, "w={world}: no node recorded wire bytes:\n{}", threads[0].0);
+        }
+    }
+}
+
+#[test]
+fn explain_analyze_runs_without_a_world() {
+    let _g = guard();
+    let t = shard(0, 64, 8, 42);
+    let analysis = LazyFrame::from_table(t)
+        .filter("v", Cmp::Ge, 200.0f64)
+        .groupby(&["k"], &[AggSpec::new("v", Agg::Sum)])
+        .explain_analyze()
+        .unwrap();
+    assert_eq!(analysis.world, 1);
+    let render = analysis.render();
+    assert!(render.contains("rows="), "{render}");
+    assert!(render.contains("t=["), "{render}");
+    for node in &analysis.nodes {
+        assert_eq!(node.bytes_sent, 0, "solo execution must not ship bytes: {}", node.label);
+    }
+}
+
+#[test]
+fn tracing_is_byte_neutral_on_the_dist_slice() {
+    let _g = guard();
+    let _restore = Restore;
+    let run = || {
+        spawn_backend_world(2, LinkProfile::zero(), |rank, comm| {
+            let left = shard(rank, 64, 8, 11);
+            let right = shard(rank, 64, 8, 12);
+            let joined = dist_join(
+                comm,
+                &left,
+                &right,
+                &["k"],
+                &["k"],
+                JoinType::Inner,
+                JoinAlgorithm::Hash,
+            )?;
+            let filtered = filter_cmp(&joined, "v", Cmp::Ge, &Scalar::Float64(500.0))?;
+            let grouped = dist_groupby(comm, &filtered, &["k"], &[AggSpec::new("v", Agg::Sum)])?;
+            Ok(ipc::serialize(&grouped))
+        })
+        .unwrap()
+    };
+    set_mode_override(Some(TraceMode::Off));
+    let untraced = run();
+    set_mode_override(Some(TraceMode::On));
+    let traced = run();
+    assert_eq!(untraced, traced, "tracing changed dist-slice result bytes");
+}
+
+#[test]
+fn tracing_is_byte_neutral_under_spill() {
+    let _g = guard();
+    let _restore = Restore;
+    // Tight budget + forced morsel split: the combiner spills merge
+    // state between rounds, with spans open across the spill path.
+    morsel::set_runtime(MorselConfig::fixed(4), MemBudget::bytes(256));
+    let run = || {
+        spawn_world(2, LinkProfile::zero(), |rank, comm| {
+            let t = shard(rank, 512, 6, 21);
+            let out = dist_groupby_partial(
+                comm,
+                &t,
+                &["k"],
+                &[AggSpec::new("v", Agg::Sum), AggSpec::new("v", Agg::Count)],
+            )?;
+            Ok(ipc::serialize(&out))
+        })
+        .unwrap()
+    };
+    set_mode_override(Some(TraceMode::Off));
+    let untraced = run();
+    set_mode_override(Some(TraceMode::Chrome));
+    let traced = run();
+    assert_eq!(untraced, traced, "tracing changed spilled group-by result bytes");
+}
+
+#[test]
+fn jsonl_export_parses_with_one_job_span_per_job() {
+    let _g = guard();
+    let _restore = Restore;
+    set_mode_override(Some(TraceMode::Jsonl));
+    // unomt_pipeline is the one heavyweight job; its span plumbing is
+    // identical to every other registry entry (the shared run_job
+    // wrapper), so the sweep skips only it.
+    let swept: Vec<&'static str> =
+        JOB_NAMES.iter().copied().filter(|j| *j != "unomt_pipeline").collect();
+    let per_rank = spawn_backend_world(2, LinkProfile::zero(), |rank, comm| {
+        for job in JOB_NAMES.iter().copied().filter(|j| *j != "unomt_pipeline") {
+            // fig4_chain's arg grammar is "rows,domain[,planned]", not
+            // the table jobs' "seed,rows".
+            let arg = if job == "fig4_chain" { "64,16" } else { "7,24" };
+            hptmt::comm::run_job(job, arg, comm)?;
+        }
+        let events = obs::drain_events();
+        Ok(export_jsonl(rank, &events))
+    })
+    .unwrap();
+    for (rank, doc) in per_rank.iter().enumerate() {
+        let mut job_spans: BTreeMap<String, usize> = BTreeMap::new();
+        for line in doc.lines() {
+            let v = Json::parse(line)
+                .unwrap_or_else(|e| panic!("rank {rank}: unparseable JSONL line: {e:#}\n{line}"));
+            assert_eq!(v.get("rank").unwrap().as_usize().unwrap(), rank);
+            assert!(v.get("det").is_ok(), "rank {rank}: line lacks det object: {line}");
+            assert!(v.get("timing").is_ok(), "rank {rank}: line lacks timing object: {line}");
+            if v.get("kind").unwrap().as_str().unwrap() == "job" {
+                *job_spans
+                    .entry(v.get("name").unwrap().as_str().unwrap().to_string())
+                    .or_insert(0) += 1;
+            }
+        }
+        for job in &swept {
+            assert_eq!(
+                job_spans.get(&format!("comm.jobs.{job}")),
+                Some(&1),
+                "rank {rank}: expected exactly one job span for {job}; saw {job_spans:?}"
+            );
+        }
+    }
+}
